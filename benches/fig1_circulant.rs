@@ -1,0 +1,55 @@
+//! `cargo bench --bench fig1_circulant` — regenerates Figure 1 (and, with
+//! BENCH_FULL=1, the appendix A.3 sweeps): circulant log-det
+//! approximation quality, plus construction/evaluation timing per
+//! approximation kind.
+
+use std::time::Duration;
+
+use msgp::bench::{bench_fn, bench_header};
+use msgp::structure::circulant::{circulant_approx, CirculantKind};
+
+fn main() {
+    let full = std::env::var("BENCH_FULL").is_ok();
+    msgp::bench::experiments::fig1_circulant(full);
+
+    // Timing: building + logdet per approximation at m = 4096.
+    println!("\n# circulant construction + logdet timing, m = 4096, covSE ell = 16");
+    bench_header();
+    let m = 4096usize;
+    let ell = 16.0;
+    let col: Vec<f64> = (0..m).map(|i| (-0.5 * (i as f64 / ell).powi(2)).exp()).collect();
+    let tail = move |lag: usize| (-0.5 * (lag as f64 / ell).powi(2)).exp();
+    for kind in [CirculantKind::Strang, CirculantKind::Chan, CirculantKind::Helgason] {
+        let stats = bench_fn(
+            &format!("circulant/{}/m4096", kind.name()),
+            Duration::from_millis(200),
+            1000,
+            || {
+                let c = circulant_approx(kind, &col, 0, None);
+                std::hint::black_box(c.logdet(0.01));
+            },
+        );
+        println!("{}", stats.line());
+    }
+    let stats = bench_fn(
+        "circulant/whittle/m4096",
+        Duration::from_millis(200),
+        1000,
+        || {
+            let c = circulant_approx(CirculantKind::Whittle, &col, 3, Some(&tail));
+            std::hint::black_box(c.logdet(0.01));
+        },
+    );
+    println!("{}", stats.line());
+    // The O(m^2) reference the circulant approach replaces.
+    let t = msgp::structure::toeplitz::SymToeplitz::new(col.clone());
+    let stats = bench_fn(
+        "toeplitz-levinson-logdet/m4096",
+        Duration::from_millis(500),
+        50,
+        || {
+            std::hint::black_box(t.logdet_levinson(0.01));
+        },
+    );
+    println!("{}", stats.line());
+}

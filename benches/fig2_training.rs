@@ -1,0 +1,8 @@
+//! `cargo bench --bench fig2_training` — regenerates Figure 2: one
+//! marginal-likelihood + derivatives evaluation per method across n and
+//! m. BENCH_FULL=1 enables the larger sweeps (n up to 10^6).
+
+fn main() {
+    let full = std::env::var("BENCH_FULL").is_ok();
+    msgp::bench::experiments::fig2_training(full);
+}

@@ -1,0 +1,10 @@
+//! `cargo bench --bench fig3_prediction` — regenerates Figure 3
+//! (prediction runtime) and Figure 4 (fast-vs-slow prediction accuracy).
+//! BENCH_FULL=1 enables the larger sweeps.
+
+fn main() {
+    let full = std::env::var("BENCH_FULL").is_ok();
+    msgp::bench::experiments::fig3_prediction(full);
+    println!();
+    msgp::bench::experiments::fig4_accuracy(full);
+}

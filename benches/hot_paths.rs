@@ -1,0 +1,145 @@
+//! `cargo bench --bench hot_paths` — microbenchmarks of the primitives on
+//! the MSGP hot path, used by the performance pass (EXPERIMENTS.md §Perf):
+//! FFT, Toeplitz/BCCB MVM, sparse interpolation, one full SKI MVM, one CG
+//! training solve, and the end-to-end serving throughput of both engines.
+
+use std::time::Duration;
+
+use msgp::bench::{bench_fn, bench_header};
+use msgp::coordinator::EngineSpec;
+use msgp::data::gen_stress_1d;
+use msgp::gp::msgp::{KernelSpec, MsgpConfig, MsgpModel};
+use msgp::grid::{Grid, GridAxis};
+use msgp::interp::SparseInterp;
+use msgp::kernels::{KernelType, ProductKernel};
+use msgp::linalg::fft::plan;
+use msgp::linalg::C64;
+use msgp::structure::bttb::Bccb;
+use msgp::structure::toeplitz::SymToeplitz;
+
+fn main() {
+    bench_header();
+    let quick = Duration::from_millis(300);
+
+    // FFT at the serving grid sizes.
+    for &m in &[512usize, 4096, 65536] {
+        let p = plan(m);
+        let mut buf: Vec<C64> = (0..m).map(|i| C64::new((i as f64).sin(), 0.0)).collect();
+        let stats = bench_fn(&format!("fft/pow2/m{m}"), quick, 100_000, || {
+            p.forward(&mut buf);
+        });
+        println!("{}", stats.line());
+    }
+    // Bluestein (non-power-of-two).
+    {
+        let m = 1000usize;
+        let p = plan(m);
+        let mut buf: Vec<C64> = (0..m).map(|i| C64::new(i as f64, 0.0)).collect();
+        let stats = bench_fn("fft/bluestein/m1000", quick, 100_000, || {
+            p.forward(&mut buf);
+        });
+        println!("{}", stats.line());
+    }
+
+    // Toeplitz MVM (the inner K_UU multiply).
+    for &m in &[1_000usize, 10_000, 100_000] {
+        let col: Vec<f64> = (0..m).map(|i| (-0.5 * (i as f64 / 20.0).powi(2)).exp()).collect();
+        let t = SymToeplitz::new(col);
+        let v: Vec<f64> = (0..m).map(|i| (i as f64 * 0.1).cos()).collect();
+        let mut out = vec![0.0; m];
+        let mut scratch = Vec::new();
+        let stats = bench_fn(&format!("toeplitz-mvm/m{m}"), quick, 10_000, || {
+            t.matvec_into(&v, &mut out, &mut scratch);
+        });
+        println!("{}", stats.line());
+    }
+
+    // BCCB MVM (2-D grid).
+    {
+        let shape = [64usize, 64];
+        let b = Bccb::whittle(&shape, 2, &|lag: &[f64]| {
+            let r2: f64 = lag.iter().map(|l| l * l).sum();
+            (-0.5 * r2 / 49.0).exp()
+        });
+        let v: Vec<f64> = (0..4096).map(|i| (i as f64 * 0.01).sin()).collect();
+        let stats = bench_fn("bccb-mvm/64x64", quick, 10_000, || {
+            std::hint::black_box(b.matvec(&v));
+        });
+        println!("{}", stats.line());
+    }
+
+    // Sparse interpolation (gather + scatter) at serving scale.
+    {
+        let n = 100_000usize;
+        let m = 10_000usize;
+        let grid = Grid::new(vec![GridAxis::span(-12.0, 13.0, m)]);
+        let data = gen_stress_1d(n, 0.05, 3);
+        let w = SparseInterp::build(&data.x, &grid);
+        let gv: Vec<f64> = (0..m).map(|i| (i as f64 * 0.001).sin()).collect();
+        let nv: Vec<f64> = (0..n).map(|i| (i as f64 * 0.001).cos()).collect();
+        let mut out_n = vec![0.0; n];
+        let mut out_m = vec![0.0; m];
+        let stats = bench_fn("interp/W-gather/n1e5", quick, 10_000, || {
+            w.matvec_into(&gv, &mut out_n);
+        });
+        println!("{}", stats.line());
+        let stats = bench_fn("interp/Wt-scatter/n1e5", quick, 10_000, || {
+            w.tmatvec_into(&nv, &mut out_m);
+        });
+        println!("{}", stats.line());
+        let stats = bench_fn("interp/build-W/n1e5", quick, 100, || {
+            std::hint::black_box(SparseInterp::build(&data.x, &grid));
+        });
+        println!("{}", stats.line());
+    }
+
+    // Full SKI MVM + training solve.
+    {
+        let n = 50_000;
+        let m = 10_000;
+        let data = gen_stress_1d(n, 0.05, 4);
+        let kernel = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0));
+        let grid = Grid::new(vec![GridAxis::span(-12.0, 13.0, m)]);
+        let cfg = MsgpConfig { n_per_dim: vec![m], ..Default::default() };
+        let model =
+            MsgpModel::fit_with_grid(kernel.clone(), 0.01, data.clone(), grid.clone(), cfg.clone())
+                .unwrap();
+        let v: Vec<f64> = (0..n).map(|i| (i as f64 * 0.3).sin()).collect();
+        let stats = bench_fn("ski-mvm/n5e4-m1e4", quick, 1000, || {
+            std::hint::black_box(model.mvm_a(&v));
+        });
+        println!("{}", stats.line());
+        let stats = bench_fn("train-solve/n5e4-m1e4", Duration::from_secs(2), 20, || {
+            std::hint::black_box(
+                MsgpModel::fit_with_grid(kernel.clone(), 0.01, data.clone(), grid.clone(), cfg.clone())
+                    .unwrap(),
+            );
+        });
+        println!("{}", stats.line());
+        let stats = bench_fn("lml-grad/n5e4-m1e4", Duration::from_secs(1), 20, || {
+            std::hint::black_box(model.lml_grad());
+        });
+        println!("{}", stats.line());
+        // Fast predictions.
+        let test: Vec<f64> = (0..1000).map(|i| -9.0 + 0.018 * i as f64).collect();
+        let stats = bench_fn("predict-mean-fast/1000pts", quick, 10_000, || {
+            std::hint::black_box(model.predict_mean(&test));
+        });
+        println!("{}", stats.line());
+    }
+
+    // End-to-end serving throughput (both engines).
+    println!("\n# serving throughput (20k requests, 4 client threads)");
+    let art_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if art_dir.join("manifest.json").exists() {
+        let (thr, p50, p99, _) = msgp::bench::experiments::serving_benchmark(
+            EngineSpec::Pjrt(art_dir),
+            20_000,
+            4,
+        );
+        println!("serve/pjrt: {thr:.0} pred/s, p50<={p50}us p99<={p99}us");
+    }
+    let (thr, p50, p99, _) =
+        msgp::bench::experiments::serving_benchmark(EngineSpec::Native, 20_000, 4);
+    println!("serve/native: {thr:.0} pred/s, p50<={p50}us p99<={p99}us");
+}

@@ -1,0 +1,23 @@
+use msgp::coordinator::{BatcherConfig, EngineSpec, Server, ServingModel};
+use msgp::data::gen_stress_1d;
+use msgp::gp::msgp::{KernelSpec, MsgpConfig, MsgpModel};
+use msgp::kernels::{KernelType, ProductKernel};
+use std::time::Instant;
+
+fn main() {
+    let data = gen_stress_1d(2000, 0.05, 1);
+    let kernel = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0));
+    let cfg = MsgpConfig { n_per_dim: vec![512], n_var_samples: 5, ..Default::default() };
+    let mut model = MsgpModel::fit(kernel, 0.01, data, cfg).unwrap();
+    let sm = ServingModel::from_msgp(&mut model);
+    // Direct native batch cost:
+    let t0 = Instant::now();
+    for _ in 0..1000 { std::hint::black_box(sm.predict_batch(&[0.5, 1.0, -2.0, 3.0])); }
+    println!("native predict_batch(4): {:?}/call", t0.elapsed() / 1000);
+    // Through the server, single-threaded closed loop:
+    let server = Server::start(sm, EngineSpec::Native, BatcherConfig::default());
+    let t0 = Instant::now();
+    for i in 0..2000 { server.predict(vec![(i % 19) as f64 - 9.0]).unwrap(); }
+    println!("server round-trip (1 client): {:?}/call", t0.elapsed() / 2000);
+    println!("metrics: {}", server.metrics.summary());
+}

@@ -1,0 +1,62 @@
+//! Quickstart: train MSGP on the paper's 1-D stress function, learn the
+//! hyperparameters by marginal-likelihood ascent, and make fast O(1)
+//! predictions with uncertainty.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use msgp::data::{gen_stress_1d, smae, stress_fn};
+use msgp::gp::msgp::{KernelSpec, MsgpConfig, MsgpModel};
+use msgp::kernels::{KernelType, ProductKernel};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Data: n noisy samples of sin(x) exp(-x^2/50), x ~ U[-10, 10].
+    let n = 5_000;
+    let data = gen_stress_1d(n, 0.1, 42);
+
+    // 2. Model: SE kernel, m = 1024 inducing points on a grid (note
+    //    m ~ n/5 — far beyond what classical inducing-point methods
+    //    support), Whittle circulant log-det.
+    let kernel = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 0.5, 0.5));
+    let cfg = MsgpConfig { n_per_dim: vec![1024], ..Default::default() };
+    let mut model = MsgpModel::fit(kernel, 0.05, data, cfg)?;
+    println!(
+        "fitted: n = {}, m = {}, CG iters = {}, initial LML = {:.1}",
+        model.n(),
+        model.m(),
+        model.last_cg.iters,
+        model.lml()
+    );
+
+    // 3. Learn hyperparameters (lengthscale, signal variance, noise).
+    let trace = model.train(30, 0.1)?;
+    println!(
+        "trained 30 Adam steps: LML {:.1} -> {:.1}; ell = {:.3}, sigma2 = {:.4}",
+        trace[0],
+        model.lml(),
+        match &model.kernel {
+            KernelSpec::Product(k) => k.ell(0),
+            _ => unreachable!(),
+        },
+        model.sigma2
+    );
+
+    // 4. Fast predictions (O(1) per point) with uncertainty.
+    let test = gen_stress_1d(1_000, 0.0, 7);
+    let mean = model.predict_mean(&test.x);
+    let var = model.predict_var(&test.x);
+    println!("test SMAE = {:.4}", smae(&mean, &test.y));
+
+    // 5. Show a few predictions vs ground truth.
+    println!("{:>8} {:>10} {:>10} {:>10}", "x", "truth", "mean", "std");
+    for i in (0..test.n()).step_by(200) {
+        let x = test.x[i];
+        println!(
+            "{:>8.3} {:>10.4} {:>10.4} {:>10.4}",
+            x,
+            stress_fn(x),
+            mean[i],
+            var[i].sqrt()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! End-to-end serving driver (the DESIGN.md E2E validation): train an
+//! MSGP model on a real (synthetic) workload, freeze its O(1)-prediction
+//! state, load the AOT-compiled JAX/Pallas artifacts through PJRT, and
+//! serve a stream of batched prediction requests through the coordinator,
+//! reporting throughput and latency percentiles.
+//!
+//! Run after `make artifacts`:
+//! `cargo run --release --example serving`
+//!
+//! Without artifacts it degrades gracefully to the native Rust engine
+//! (same numerics; the comparison between the two is part of the output).
+
+use std::time::{Duration, Instant};
+
+use msgp::coordinator::{BatcherConfig, EngineSpec, Server, ServingModel};
+use msgp::data::gen_stress_1d;
+use msgp::gp::msgp::{KernelSpec, MsgpConfig, MsgpModel};
+use msgp::grid::{Grid, GridAxis};
+use msgp::kernels::{KernelType, ProductKernel};
+use msgp::util::Rng;
+
+/// Open-loop pipelined load generator: keeps `window` requests in flight.
+fn run_load(server: &std::sync::Arc<Server>, total: usize, window: usize) -> f64 {
+    let mut rng = Rng::new(100);
+    let t0 = Instant::now();
+    let mut inflight: std::collections::VecDeque<
+        std::sync::mpsc::Receiver<anyhow::Result<msgp::coordinator::Prediction>>,
+    > = std::collections::VecDeque::with_capacity(window);
+    for _ in 0..total {
+        if inflight.len() >= window {
+            let rx = inflight.pop_front().unwrap();
+            let p = rx.recv().expect("reply").expect("prediction");
+            assert!(p.mean.is_finite() && p.var >= 0.0);
+        }
+        let x = rng.uniform_in(-10.0, 10.0);
+        inflight.push_back(server.submit(vec![x]).expect("submit"));
+    }
+    for rx in inflight {
+        let p = rx.recv().expect("reply").expect("prediction");
+        assert!(p.mean.is_finite());
+    }
+    total as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() -> anyhow::Result<()> {
+    // --- Train (offline phase) ---
+    let n = 20_000;
+    println!("training MSGP: n = {n}, m = 512 (grid matches the AOT artifacts)...");
+    let data = gen_stress_1d(n, 0.05, 11);
+    let kernel = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0));
+    let grid = Grid::new(vec![GridAxis::span(-12.0, 13.0, 512)]);
+    let cfg = MsgpConfig { n_per_dim: vec![512], ..Default::default() };
+    let t0 = Instant::now();
+    let mut model = MsgpModel::fit_with_grid(kernel, 0.01, data, grid, cfg)?;
+    model.train(10, 0.1)?;
+    let serving = ServingModel::from_msgp(&mut model);
+    println!(
+        "trained + froze serving state in {:.2}s (LML {:.1}, CG iters {})",
+        t0.elapsed().as_secs_f64(),
+        model.lml(),
+        model.last_cg.iters
+    );
+
+    // --- Serve (online phase) ---
+    let total = 200_000;
+    let window = 256; // in-flight requests
+    let batch_cfg = BatcherConfig { max_wait: Duration::from_millis(1), max_batch: 256, eager: true };
+
+    // PJRT path (falls back to native if artifacts are missing).
+    let art_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let spec = if art_dir.join("manifest.json").exists() {
+        println!("serving via PJRT artifacts from {art_dir:?}");
+        EngineSpec::Pjrt(art_dir)
+    } else {
+        println!("no artifacts found; serving via the native engine");
+        EngineSpec::Native
+    };
+    let server = std::sync::Arc::new(Server::start(serving.clone(), spec, batch_cfg.clone()));
+    let thr = run_load(&server, total, window);
+    println!("-- PJRT/auto backend --");
+    println!("throughput: {thr:.0} predictions/s ({window} requests in flight)");
+    println!(
+        "latency: p50 <= {} us, p99 <= {} us",
+        server.metrics.latency_quantile_us(0.5),
+        server.metrics.latency_quantile_us(0.99)
+    );
+    println!("metrics: {}", server.metrics.summary());
+
+    // Native engine for comparison.
+    let native = std::sync::Arc::new(Server::start(serving, EngineSpec::Native, batch_cfg));
+    let thr_native = run_load(&native, total, window);
+    println!("-- native backend --");
+    println!("throughput: {thr_native:.0} predictions/s");
+    println!("metrics: {}", native.metrics.summary());
+    Ok(())
+}

@@ -1,0 +1,162 @@
+"""AOT lowering: JAX/Pallas graphs -> HLO *text* artifacts + manifest.
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the Rust `xla` crate binds) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+One artifact is produced per (graph, batch-bucket) pair; the manifest
+(`artifacts/manifest.json`) records shapes and input layouts so the Rust
+coordinator can route padded batches to the right executable.
+
+Run: `python -m compile.aot --out-dir ../artifacts` (from python/).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Batch buckets the dynamic batcher pads to (powers of four-ish; small
+# buckets keep p99 low at low load, big ones amortize at high load).
+BUCKETS = [8, 32, 128, 256]
+# Grid sizes compiled for serving.
+M_1D = 512
+M_2D = (32, 32)
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_entry(fn, args):
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"version": 1, "artifacts": []}
+
+    def emit(name, text, entry):
+        path = os.path.join(args.out_dir, name + ".hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entry = dict(entry)
+        entry["name"] = name
+        entry["file"] = name + ".hlo.txt"
+        manifest["artifacts"].append(entry)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    scalar = f32(())
+
+    for b in BUCKETS:
+        # 1-D fused mean+variance prediction.
+        text = lower_entry(
+            model.predict_meanvar_1d,
+            (f32((b,)), f32((M_1D,)), f32((M_1D,)), scalar, scalar),
+        )
+        emit(
+            f"predict_meanvar_1d_b{b}",
+            text,
+            {
+                "kind": "predict_meanvar",
+                "dim": 1,
+                "batch": b,
+                "m": M_1D,
+                "inputs": ["points[b]", "u_mean[m]", "nu_u[m]", "kss", "sigma2"],
+                "outputs": ["mean[b]", "var[b]"],
+            },
+        )
+        # Mean-only (cheaper; used when the request asks for no variance).
+        text = lower_entry(model.predict_mean_1d, (f32((b,)), f32((M_1D,))))
+        emit(
+            f"predict_mean_1d_b{b}",
+            text,
+            {
+                "kind": "predict_mean",
+                "dim": 1,
+                "batch": b,
+                "m": M_1D,
+                "inputs": ["points[b]", "u_mean[m]"],
+                "outputs": ["mean[b]"],
+            },
+        )
+
+    # One 2-D bucket set (smaller sweep; 16-tap stencils).
+    for b in [32, 128]:
+        text = lower_entry(
+            model.predict_meanvar_2d,
+            (f32((b, 2)), f32(M_2D), f32(M_2D), scalar, scalar),
+        )
+        emit(
+            f"predict_meanvar_2d_b{b}",
+            text,
+            {
+                "kind": "predict_meanvar",
+                "dim": 2,
+                "batch": b,
+                "m": list(M_2D),
+                "inputs": ["points[b,2]", "u_mean[m1,m2]", "nu_u[m1,m2]", "kss", "sigma2"],
+                "outputs": ["mean[b]", "var[b]"],
+            },
+        )
+
+    # Spectral log-det (section 5.2) at the serving grid size.
+    text = lower_entry(model.whittle_logdet, (f32((M_1D,)), scalar))
+    emit(
+        "whittle_logdet_m512",
+        text,
+        {
+            "kind": "whittle_logdet",
+            "dim": 1,
+            "batch": 1,
+            "m": M_1D,
+            "inputs": ["col[m]", "sigma2"],
+            "outputs": ["logdet"],
+        },
+    )
+
+    # SKI MVM demo graph (cross-validated against the Rust engine).
+    n_demo, m_demo, a_demo = 64, 32, 64
+    text = lower_entry(
+        model.make_kski_matvec_1d(m_demo),
+        (f32((n_demo,)), f32((n_demo,)), f32((a_demo,)), scalar),
+    )
+    emit(
+        f"kski_matvec_1d_n{n_demo}_m{m_demo}",
+        text,
+        {
+            "kind": "kski_matvec",
+            "dim": 1,
+            "batch": n_demo,
+            "m": m_demo,
+            "embed": a_demo,
+            "inputs": ["v[n]", "points[n]", "embed_col[a]", "sigma2"],
+            "outputs": ["av[n]"],
+        },
+    )
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""Layer-1 Pallas kernel: batched local cubic-convolution interpolation.
+
+This is MSGP's per-request compute hot-spot (paper section 5.1): a fast
+prediction is `W_* v` where `W_*` has 4 (1-D) or 16 (2-D) non-zeros per
+row — a weighted gather from a grid vector (`u_mean` for means, `nu_U`
+for variances).
+
+Hardware adaptation (DESIGN.md section 3): the batch of test points is
+tiled via ``BlockSpec`` so each tile's points and the grid vector live in
+VMEM; per tile we compute the four Keys weights per dimension and do a
+vectorized gather-multiply-accumulate. The kernel is gather-bound (no MXU
+work) — exactly the point of SKI, which replaces dense kernel algebra by
+sparse interpolation. ``interpret=True`` everywhere: the CPU PJRT plugin
+cannot execute Mosaic custom calls, and the paper's own testbed is a CPU.
+
+Points arrive in *grid units* (continuous index coordinates); the Rust
+coordinator converts physical coordinates using the grid's `lo`/`step`
+from the artifact manifest.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Keys (1981) cubic convolution coefficient a = -1/2 (the classical
+# choice, also used by the Rust engine and ref.py).
+
+
+def _keys_weight(s):
+    """Keys cubic kernel h(s) evaluated elementwise (|s| < 2 support)."""
+    t = jnp.abs(s)
+    w1 = (1.5 * t - 2.5) * t * t + 1.0  # |s| < 1
+    w2 = ((-0.5 * t + 2.5) * t - 4.0) * t + 2.0  # 1 <= |s| < 2
+    return jnp.where(t < 1.0, w1, jnp.where(t < 2.0, w2, 0.0))
+
+
+def _ski_gather_1d_kernel(u_ref, grid_ref, o_ref):
+    """One batch tile: o[b] = sum_j h(u[b] - (i0[b]+j)) * grid[i0[b]+j]."""
+    u = u_ref[...]  # (B,) continuous grid-unit coords
+    g = grid_ref[...]  # (M,) grid vector
+    m = g.shape[0]
+    i = jnp.floor(u).astype(jnp.int32)
+    i0 = jnp.clip(i - 1, 0, m - 4)
+    acc = jnp.zeros_like(u)
+    for j in range(4):
+        idx = i0 + j
+        s = u - idx.astype(u.dtype)
+        acc = acc + _keys_weight(s) * jnp.take(g, idx, axis=0)
+    o_ref[...] = acc
+
+
+def ski_gather_1d(points, grid_vec, *, block=None):
+    """`W_* grid_vec` for 1-D grids via the Pallas kernel.
+
+    Args:
+      points: (B,) f32 — test coordinates in grid units.
+      grid_vec: (M,) f32 — values on the grid (e.g. `u_mean`).
+      block: optional batch tile size (must divide B); defaults to B.
+
+    Returns:
+      (B,) f32 interpolated values.
+    """
+    b = points.shape[0]
+    blk = block or b
+    assert b % blk == 0, f"block {blk} must divide batch {b}"
+    return pl.pallas_call(
+        _ski_gather_1d_kernel,
+        out_shape=jax.ShapeDtypeStruct((b,), points.dtype),
+        grid=(b // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec(grid_vec.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        interpret=True,
+    )(points, grid_vec)
+
+
+def _ski_gather_2d_kernel(u_ref, grid_ref, o_ref):
+    """2-D tile: 16-tap tensor-product gather from a (M1, M2) grid."""
+    u = u_ref[...]  # (B, 2)
+    g = grid_ref[...]  # (M1, M2)
+    m1, m2 = g.shape
+    gflat = g.reshape(-1)
+    ua, ub = u[:, 0], u[:, 1]
+    ia0 = jnp.clip(jnp.floor(ua).astype(jnp.int32) - 1, 0, m1 - 4)
+    ib0 = jnp.clip(jnp.floor(ub).astype(jnp.int32) - 1, 0, m2 - 4)
+    acc = jnp.zeros_like(ua)
+    for ja in range(4):
+        idxa = ia0 + ja
+        wa = _keys_weight(ua - idxa.astype(ua.dtype))
+        for jb in range(4):
+            idxb = ib0 + jb
+            wb = _keys_weight(ub - idxb.astype(ub.dtype))
+            acc = acc + wa * wb * jnp.take(gflat, idxa * m2 + idxb, axis=0)
+    o_ref[...] = acc
+
+
+def ski_gather_2d(points, grid_vals, *, block=None):
+    """`W_* vec(grid_vals)` for 2-D grids via the Pallas kernel.
+
+    Args:
+      points: (B, 2) f32 — test coordinates in grid units per axis.
+      grid_vals: (M1, M2) f32 — values on the grid (row-major).
+      block: optional batch tile size (must divide B); defaults to B.
+
+    Returns:
+      (B,) f32 interpolated values.
+    """
+    b = points.shape[0]
+    blk = block or b
+    assert b % blk == 0, f"block {blk} must divide batch {b}"
+    return pl.pallas_call(
+        _ski_gather_2d_kernel,
+        out_shape=jax.ShapeDtypeStruct((b,), points.dtype),
+        grid=(b // blk,),
+        in_specs=[
+            pl.BlockSpec((blk, 2), lambda i: (i, 0)),
+            pl.BlockSpec(grid_vals.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        interpret=True,
+    )(points, grid_vals)

@@ -1,0 +1,86 @@
+"""Layer-2 JAX graphs: MSGP's serving-time compute, calling the Layer-1
+Pallas kernel, lowered AOT by `aot.py` and executed from Rust via PJRT.
+
+The graphs correspond to the O(1)-prediction paths of paper section 5.1:
+
+* ``predict_mean_1d``  — Eq. 7: `mu_* = W_* u_mean`.
+* ``predict_meanvar_1d`` — Eq. 7 + Eq. 10: mean and clipped variance
+  `max(0, k_ss - W_* nu_U) (+ sigma^2)` in one fused pass.
+* ``predict_meanvar_2d`` — 2-D grid variant (16-tap stencils).
+* ``whittle_logdet`` — section 5.2: `1^T log(max(F c, 0) + sigma^2 1)`
+  from a circulant first column (used by the serving health-check and as
+  an L2 demonstration of the spectral path).
+
+All shapes are static; `aot.py` lowers one artifact per batch bucket.
+Python never runs at serving time.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.ski_interp import ski_gather_1d, ski_gather_2d
+
+
+def predict_mean_1d(points, u_mean):
+    """Fast predictive mean on a 1-D grid (points in grid units)."""
+    return (ski_gather_1d(points, u_mean),)
+
+
+def predict_meanvar_1d(points, u_mean, nu_u, kss, sigma2):
+    """Fast predictive mean and observation variance on a 1-D grid.
+
+    Args:
+      points: (B,) grid-unit coordinates.
+      u_mean: (M,) `sf2 * K_UU W^T alpha` precompute.
+      nu_u: (M,) stochastic explained-variance precompute.
+      kss: scalar `k(x, x) = sf2`.
+      sigma2: scalar noise variance (added for y-space variance).
+
+    Returns:
+      (mean (B,), var (B,)).
+    """
+    mean = ski_gather_1d(points, u_mean)
+    explained = ski_gather_1d(points, nu_u)
+    var = jnp.maximum(kss - explained, 0.0) + sigma2
+    return (mean, var)
+
+
+def predict_meanvar_2d(points, u_mean, nu_u, kss, sigma2):
+    """2-D grid variant of `predict_meanvar_1d` (points: (B, 2))."""
+    mean = ski_gather_2d(points, u_mean)
+    explained = ski_gather_2d(points, nu_u)
+    var = jnp.maximum(kss - explained, 0.0) + sigma2
+    return (mean, var)
+
+
+def whittle_logdet(col, sigma2):
+    """`log|C + sigma2 I|` from the circulant first column (clipped)."""
+    eigs = jnp.real(jnp.fft.fft(col))
+    return (jnp.sum(jnp.log(jnp.maximum(eigs, 0.0) + sigma2)),)
+
+
+def make_kski_matvec_1d(m):
+    """Build a static-M SKI MVM graph:
+    `(sf2 W K_UU W^T + sigma2 I) v` on a 1-D grid with `K_UU` applied
+    through its circulant-embedding spectrum.
+
+    Demonstrates the L2 training-time compute graph (the Rust engine has
+    its own native implementation of the same operation; tests
+    cross-validate the two).
+
+    The returned `fn(v, w_points, grid_col, sigma2)` takes:
+      v: (N,) vector; w_points: (N,) coordinates in grid units;
+      grid_col: (A,) circulant-embedding first column of `sf2 * K_UU`
+      (A = power of two >= 2M - 1, wrapped layout); sigma2: scalar.
+    """
+    from compile.kernels.ref import dense_w_1d
+
+    def fn(v, w_points, grid_col, sigma2):
+        a = grid_col.shape[0]
+        spectrum = jnp.real(jnp.fft.fft(grid_col))
+        w = dense_w_1d(w_points, m)  # (N, M)
+        wt_v = w.T @ v  # (M,)
+        pad = jnp.zeros((a,), wt_v.dtype).at[:m].set(wt_v)
+        prod = jnp.fft.ifft(jnp.fft.fft(pad) * spectrum).real[:m]
+        return (w @ prod + sigma2 * v,)
+
+    return fn

@@ -1,0 +1,139 @@
+"""L1 kernel correctness: the Pallas SKI gather vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the compiled artifacts: the same
+numbers the Rust runtime will execute. Hypothesis sweeps shapes, dtypes
+and coordinate distributions; fixed tests pin the interpolation
+invariants (partition of unity, quadratic reproduction, boundary
+clamping).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.ski_interp import ski_gather_1d, ski_gather_2d
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand_points(rng, b, m, margin=1.5):
+    """Coordinates safely inside the grid (stencil never clamps)."""
+    return rng.uniform(margin, m - 1 - margin, size=b).astype(np.float32)
+
+
+class TestSkiGather1D:
+    @settings(max_examples=40, deadline=None)
+    @given(
+        b=st.integers(1, 64),
+        m=st.integers(8, 256),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_oracle(self, b, m, seed):
+        rng = np.random.default_rng(seed)
+        pts = rand_points(rng, b, m)
+        grid = rng.normal(size=m).astype(np.float32)
+        got = ski_gather_1d(jnp.asarray(pts), jnp.asarray(grid))
+        want = ref.ski_gather_1d_ref(jnp.asarray(pts), jnp.asarray(grid))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(b=st.integers(1, 32), m=st.integers(8, 128), seed=st.integers(0, 2**31 - 1))
+    def test_matches_dense_w_matmul(self, b, m, seed):
+        rng = np.random.default_rng(seed)
+        pts = rand_points(rng, b, m)
+        grid = rng.normal(size=m).astype(np.float32)
+        got = ski_gather_1d(jnp.asarray(pts), jnp.asarray(grid))
+        w = ref.dense_w_1d(jnp.asarray(pts), m)
+        want = w @ jnp.asarray(grid)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_partition_of_unity(self):
+        m = 64
+        pts = jnp.linspace(2.0, m - 3.0, 41, dtype=jnp.float32)
+        ones = jnp.ones((m,), jnp.float32)
+        out = ski_gather_1d(pts, ones)
+        np.testing.assert_allclose(out, np.ones(41), rtol=0, atol=1e-6)
+
+    def test_reproduces_quadratics(self):
+        m = 64
+        xs = jnp.arange(m, dtype=jnp.float32)
+        grid = 0.5 * xs**2 - 3.0 * xs + 1.0
+        pts = jnp.linspace(2.0, m - 3.0, 37, dtype=jnp.float32)
+        out = ski_gather_1d(pts, grid)
+        want = 0.5 * pts**2 - 3.0 * pts + 1.0
+        np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-3)
+
+    def test_exact_at_grid_nodes(self):
+        m = 32
+        rng = np.random.default_rng(0)
+        grid = rng.normal(size=m).astype(np.float32)
+        pts = jnp.arange(2, m - 2, dtype=jnp.float32)
+        out = ski_gather_1d(pts, jnp.asarray(grid))
+        np.testing.assert_allclose(out, grid[2 : m - 2], rtol=1e-5, atol=1e-5)
+
+    def test_boundary_clamping_matches_ref(self):
+        m = 16
+        rng = np.random.default_rng(1)
+        grid = rng.normal(size=m).astype(np.float32)
+        # Points near/at the boundary where the stencil shifts inward.
+        pts = jnp.asarray([0.0, 0.3, 0.9, 14.2, 14.9, 15.0], jnp.float32)
+        got = ski_gather_1d(pts, jnp.asarray(grid))
+        want = ref.ski_gather_1d_ref(pts, jnp.asarray(grid))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("block", [8, 16, 32])
+    def test_blocked_grid_matches_unblocked(self, block):
+        b, m = 64, 128
+        rng = np.random.default_rng(2)
+        pts = jnp.asarray(rand_points(rng, b, m))
+        grid = jnp.asarray(rng.normal(size=m).astype(np.float32))
+        got = ski_gather_1d(pts, grid, block=block)
+        want = ski_gather_1d(pts, grid)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+class TestSkiGather2D:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.integers(1, 32),
+        m1=st.integers(8, 48),
+        m2=st.integers(8, 48),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_oracle(self, b, m1, m2, seed):
+        rng = np.random.default_rng(seed)
+        pts = np.stack(
+            [rand_points(rng, b, m1), rand_points(rng, b, m2)], axis=1
+        )
+        grid = rng.normal(size=(m1, m2)).astype(np.float32)
+        got = ski_gather_2d(jnp.asarray(pts), jnp.asarray(grid))
+        want = ref.ski_gather_2d_ref(jnp.asarray(pts), jnp.asarray(grid))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_partition_of_unity(self):
+        m1, m2 = 24, 20
+        rng = np.random.default_rng(3)
+        pts = np.stack(
+            [rand_points(rng, 25, m1), rand_points(rng, 25, m2)], axis=1
+        )
+        ones = jnp.ones((m1, m2), jnp.float32)
+        out = ski_gather_2d(jnp.asarray(pts), ones)
+        np.testing.assert_allclose(out, np.ones(25), rtol=0, atol=1e-5)
+
+    def test_separable_function_reproduced(self):
+        # Bilinear functions are reproduced exactly by the tensor product.
+        m1, m2 = 20, 24
+        a = jnp.arange(m1, dtype=jnp.float32)[:, None]
+        bb = jnp.arange(m2, dtype=jnp.float32)[None, :]
+        grid = 2.0 * a - 0.5 * bb + 0.25 * a * bb
+        rng = np.random.default_rng(4)
+        pts = np.stack(
+            [rand_points(rng, 30, m1), rand_points(rng, 30, m2)], axis=1
+        )
+        out = ski_gather_2d(jnp.asarray(pts), grid)
+        pa, pb = pts[:, 0], pts[:, 1]
+        want = 2.0 * pa - 0.5 * pb + 0.25 * pa * pb
+        np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-3)

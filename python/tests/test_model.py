@@ -1,0 +1,130 @@
+"""L2 model-graph correctness: the graphs `aot.py` lowers, evaluated in
+JAX and compared against independent references (numpy dense algebra)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def keys_np(s):
+    t = np.abs(s)
+    w1 = (1.5 * t - 2.5) * t * t + 1.0
+    w2 = ((-0.5 * t + 2.5) * t - 4.0) * t + 2.0
+    return np.where(t < 1.0, w1, np.where(t < 2.0, w2, 0.0))
+
+
+def dense_w_np(points, m):
+    b = len(points)
+    w = np.zeros((b, m), dtype=np.float64)
+    for r, u in enumerate(points):
+        i0 = int(np.clip(np.floor(u) - 1, 0, m - 4))
+        for j in range(4):
+            w[r, i0 + j] = keys_np(u - (i0 + j))
+    return w
+
+
+class TestPredictGraphs:
+    def test_predict_mean_1d_matches_dense(self):
+        rng = np.random.default_rng(0)
+        m, b = 64, 16
+        pts = rng.uniform(2, m - 3, b).astype(np.float32)
+        um = rng.normal(size=m).astype(np.float32)
+        (got,) = model.predict_mean_1d(jnp.asarray(pts), jnp.asarray(um))
+        want = dense_w_np(pts, m) @ um
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_predict_meanvar_1d_variance_formula(self):
+        rng = np.random.default_rng(1)
+        m, b = 48, 8
+        pts = rng.uniform(2, m - 3, b).astype(np.float32)
+        um = rng.normal(size=m).astype(np.float32)
+        nu = rng.uniform(0.0, 0.8, size=m).astype(np.float32)
+        kss, s2 = np.float32(1.3), np.float32(0.05)
+        mean, var = model.predict_meanvar_1d(
+            jnp.asarray(pts), jnp.asarray(um), jnp.asarray(nu), kss, s2
+        )
+        w = dense_w_np(pts, m)
+        np.testing.assert_allclose(mean, w @ um, rtol=1e-4, atol=1e-4)
+        want_var = np.maximum(kss - w @ nu, 0.0) + s2
+        np.testing.assert_allclose(var, want_var, rtol=1e-4, atol=1e-4)
+
+    def test_variance_clipped_at_noise_floor(self):
+        # Explained variance larger than kss must clip to sigma2, not go
+        # negative (Eq. 10's max[0, .]).
+        m = 16
+        pts = jnp.asarray([5.0, 8.5], jnp.float32)
+        um = jnp.zeros((m,), jnp.float32)
+        nu = jnp.full((m,), 10.0, jnp.float32)  # hugely over-explained
+        _, var = model.predict_meanvar_1d(pts, um, nu, jnp.float32(1.0), jnp.float32(0.01))
+        np.testing.assert_allclose(var, [0.01, 0.01], rtol=1e-6)
+
+    def test_predict_meanvar_2d_matches_ref(self):
+        rng = np.random.default_rng(2)
+        m1, m2, b = 20, 24, 8
+        pts = np.stack(
+            [rng.uniform(2, m1 - 3, b), rng.uniform(2, m2 - 3, b)], axis=1
+        ).astype(np.float32)
+        um = rng.normal(size=(m1, m2)).astype(np.float32)
+        nu = rng.uniform(0, 0.5, size=(m1, m2)).astype(np.float32)
+        mean, var = model.predict_meanvar_2d(
+            jnp.asarray(pts), jnp.asarray(um), jnp.asarray(nu),
+            jnp.float32(1.0), jnp.float32(0.1),
+        )
+        want_mean = ref.ski_gather_2d_ref(jnp.asarray(pts), jnp.asarray(um))
+        want_expl = ref.ski_gather_2d_ref(jnp.asarray(pts), jnp.asarray(nu))
+        np.testing.assert_allclose(mean, want_mean, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(
+            var, np.maximum(1.0 - np.asarray(want_expl), 0.0) + 0.1, rtol=1e-4, atol=1e-4
+        )
+
+
+class TestWhittleLogdet:
+    @settings(max_examples=25, deadline=None)
+    @given(m=st.integers(4, 128), ell=st.floats(0.5, 8.0), s2=st.floats(5e-2, 1.0))
+    def test_matches_dense_circulant_logdet(self, m, ell, s2):
+        # Symmetric circulant column from a wrapped SE kernel. The graph
+        # clips eigenvalues at zero before shifting (Eq. in section 5.2),
+        # so the dense reference does too. sigma2 >= 0.05 keeps f32 FFT
+        # rounding from dominating the log at near-zero eigenvalues.
+        i = np.arange(m)
+        d = np.minimum(i, m - i).astype(np.float64)
+        col = np.exp(-0.5 * (d / ell) ** 2).astype(np.float32)
+        (got,) = model.whittle_logdet(jnp.asarray(col), jnp.float32(s2))
+        c_dense = np.empty((m, m))
+        for r in range(m):
+            c_dense[r] = np.roll(col, r)
+        eig = np.linalg.eigvalsh(c_dense.astype(np.float64))
+        want = np.sum(np.log(np.maximum(eig, 0.0) + s2))
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=5e-3 * m)
+
+
+class TestKskiMatvec:
+    def test_matches_dense_ski_operator(self):
+        rng = np.random.default_rng(3)
+        n, m = 64, 32
+        a = 64  # next_pow2(2m - 1)
+        pts = rng.uniform(2, m - 3, n).astype(np.float32)
+        v = rng.normal(size=n).astype(np.float32)
+        # SE kernel column and its circulant embedding (wrapped layout).
+        ell, sf2, s2 = 3.0, 1.2, 0.07
+        col = sf2 * np.exp(-0.5 * (np.arange(m) / ell) ** 2)
+        embed = np.zeros(a)
+        embed[:m] = col
+        for i in range(1, m):
+            embed[a - i] = col[i]
+        fn = model.make_kski_matvec_1d(m)
+        (got,) = fn(
+            jnp.asarray(v), jnp.asarray(pts), jnp.asarray(embed.astype(np.float32)),
+            jnp.float32(s2),
+        )
+        # Dense reference: W (sf2 K_UU) W^T v + s2 v.
+        w = dense_w_np(pts, m)
+        kuu = np.empty((m, m))
+        for r in range(m):
+            for c in range(m):
+                kuu[r, c] = col[abs(r - c)]
+        want = w @ (kuu @ (w.T @ v)) + s2 * v
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,14 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (section 6 + appendix A.3). Each `fig*` function prints the
+//! same rows/series the paper plots; `repro exp --fig N` and the cargo
+//! bench targets call into here.
+//!
+//! Scale notes: the paper's absolute axes (up to n = 10^7 on a 2014
+//! workstation MATLAB stack) are compressed to keep a full reproduction
+//! run in CI-scale time; pass `--full` for the larger sweeps. The *shape*
+//! of every comparison (who wins, crossovers, flatness in m) is the
+//! reproduction target — see EXPERIMENTS.md.
+
+pub mod experiments;
+
+pub use crate::util::timing::{bench_fn, bench_header, fmt_dur, BenchStats};

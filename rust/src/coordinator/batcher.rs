@@ -1,0 +1,256 @@
+//! Dynamic batching: requests are queued, collected up to a deadline or
+//! bucket capacity, executed as one padded batch, and fanned back out.
+//!
+//! The trade-off mirrors production model servers (e.g. the vLLM router):
+//! a short `max_wait` keeps tail latency low under light load; full
+//! buckets amortize per-batch overhead (PJRT dispatch, padding) at high
+//! load.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::metrics::Metrics;
+use super::router::{Backend, EngineSpec, Router};
+use super::state::ServingModel;
+
+/// A prediction reply.
+#[derive(Clone, Debug)]
+pub struct Prediction {
+    /// Predictive mean.
+    pub mean: f64,
+    /// Predictive variance (observation space).
+    pub var: f64,
+}
+
+/// A queued request: one test point plus its reply channel.
+pub struct Request {
+    /// Test point (length = model dim).
+    pub x: Vec<f64>,
+    /// Reply channel.
+    pub reply: SyncSender<anyhow::Result<Prediction>>,
+    /// Enqueue timestamp (for latency accounting).
+    pub t0: Instant,
+}
+
+/// Batcher configuration.
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// Maximum time the *oldest* queued request may wait before a flush.
+    pub max_wait: Duration,
+    /// Flush as soon as this many requests are queued (normally the
+    /// largest router bucket).
+    pub max_batch: usize,
+    /// Eager mode: flush as soon as the ingress queue is drained instead
+    /// of waiting out `max_wait`. Under closed-loop clients (every caller
+    /// blocked on its reply) waiting longer cannot grow the batch — it
+    /// only adds latency; new batches still form while the previous one
+    /// executes. Disable for open-loop traffic where arrivals are spread
+    /// out and larger buckets pay off.
+    pub eager: bool,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_wait: Duration::from_millis(1), max_batch: 256, eager: true }
+    }
+}
+
+/// The batcher loop: owns the request receiver; runs until the channel
+/// closes. Called on a dedicated thread by [`super::server::Server`].
+/// The engine (possibly a PJRT runtime, which is not `Send`) is built
+/// here, on the thread that uses it.
+pub fn run(
+    rx: Receiver<Request>,
+    engine: EngineSpec,
+    model: Arc<ServingModel>,
+    cfg: BatcherConfig,
+    metrics: Arc<Metrics>,
+) {
+    let router = Router::new(engine.build());
+    let mut pending: Vec<Request> = Vec::with_capacity(cfg.max_batch);
+    loop {
+        // Phase 1: block for the first request (or shutdown).
+        if pending.is_empty() {
+            match rx.recv() {
+                Ok(r) => pending.push(r),
+                Err(_) => return, // channel closed: drain done, exit
+            }
+        }
+        // Phase 2: drain whatever is already queued (free batching).
+        while pending.len() < cfg.max_batch {
+            match rx.try_recv() {
+                Ok(r) => pending.push(r),
+                Err(_) => break,
+            }
+        }
+        // Phase 3: unless eager, keep accumulating until the oldest
+        // request's deadline or capacity.
+        if !cfg.eager {
+            let deadline = pending[0].t0 + cfg.max_wait;
+            while pending.len() < cfg.max_batch {
+                let now = Instant::now();
+                let Some(left) = deadline.checked_duration_since(now) else { break };
+                match rx.recv_timeout(left) {
+                    Ok(r) => pending.push(r),
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        }
+        // Phase 4: execute and fan out.
+        flush(&mut pending, &router, &model, &metrics);
+    }
+}
+
+fn flush(
+    pending: &mut Vec<Request>,
+    router: &Router,
+    model: &ServingModel,
+    metrics: &Metrics,
+) {
+    if pending.is_empty() {
+        return;
+    }
+    let d = model.dim();
+    let k = pending.len();
+    let mut points = Vec::with_capacity(k * d);
+    for r in pending.iter() {
+        points.extend_from_slice(&r.x);
+    }
+    let result = router.execute(model, &points);
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    let bucket = router.pick_bucket(k).unwrap_or(k);
+    metrics
+        .padded_slots
+        .fetch_add(bucket.saturating_sub(k) as u64, Ordering::Relaxed);
+    match result {
+        Ok((means, vars, backend)) => {
+            match backend {
+                Backend::Pjrt => metrics.pjrt_batches.fetch_add(1, Ordering::Relaxed),
+                Backend::Native => metrics.native_batches.fetch_add(1, Ordering::Relaxed),
+            };
+            for (i, req) in pending.drain(..).enumerate() {
+                // Count + record *before* waking the caller so metrics are
+                // consistent the moment a reply is observable.
+                metrics.record_latency(req.t0.elapsed());
+                metrics.completed.fetch_add(1, Ordering::Relaxed);
+                let _ = req
+                    .reply
+                    .send(Ok(Prediction { mean: means[i], var: vars[i] }));
+            }
+        }
+        Err(e) => {
+            // Fan the error out to every caller (stringly, so it clones).
+            let msg = format!("batch execution failed: {e}");
+            for req in pending.drain(..) {
+                metrics.completed.fetch_add(1, Ordering::Relaxed);
+                let _ = req.reply.send(Err(anyhow::anyhow!(msg.clone())));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gen_stress_1d;
+    use crate::gp::msgp::{KernelSpec, MsgpConfig, MsgpModel};
+    use crate::kernels::{KernelType, ProductKernel};
+    use std::sync::mpsc;
+
+    fn serving_model() -> Arc<ServingModel> {
+        let data = gen_stress_1d(120, 0.05, 3);
+        let kernel = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0));
+        let cfg = MsgpConfig { n_per_dim: vec![64], n_var_samples: 8, ..Default::default() };
+        let mut model = MsgpModel::fit(kernel, 0.01, data, cfg).unwrap();
+        Arc::new(ServingModel::from_msgp(&mut model))
+    }
+
+    /// Property sweep (proptest substitute): across random request
+    /// counts, arrival patterns and batch configs, every request gets
+    /// exactly one reply and replies match the direct computation.
+    #[test]
+    fn property_no_request_dropped_and_results_exact() {
+        let model = serving_model();
+        let mut rng = crate::util::Rng::new(42);
+        for trial in 0..15 {
+            let (tx, rx) = mpsc::sync_channel::<Request>(1024);
+            let metrics = Arc::new(Metrics::new());
+            let cfg = BatcherConfig {
+                max_wait: Duration::from_micros(200 + 300 * (trial % 4) as u64),
+                max_batch: [1usize, 3, 8, 64][trial % 4],
+                eager: trial % 2 == 0,
+            };
+            let m2 = model.clone();
+            let met2 = metrics.clone();
+            let handle = std::thread::spawn(move || {
+                run(rx, EngineSpec::Native, m2, cfg, met2);
+            });
+            let k = 1 + rng.below(200);
+            let mut replies = Vec::new();
+            let mut xs = Vec::new();
+            for _ in 0..k {
+                let x = rng.uniform_in(-9.0, 9.0);
+                let (rtx, rrx) = mpsc::sync_channel(1);
+                tx.send(Request { x: vec![x], reply: rtx, t0: Instant::now() })
+                    .unwrap();
+                metrics.submitted.fetch_add(1, Ordering::Relaxed);
+                xs.push(x);
+                replies.push(rrx);
+                if rng.uniform() < 0.1 {
+                    std::thread::sleep(Duration::from_micros(300));
+                }
+            }
+            drop(tx); // close channel -> batcher drains and exits
+            let (want_mean, want_var) = model.predict_batch(&xs);
+            for (i, r) in replies.into_iter().enumerate() {
+                let p = r
+                    .recv_timeout(Duration::from_secs(10))
+                    .expect("reply delivered")
+                    .expect("no batch error");
+                assert!(
+                    (p.mean - want_mean[i]).abs() < 1e-9,
+                    "trial {trial} req {i}: {} vs {}",
+                    p.mean,
+                    want_mean[i]
+                );
+                assert!((p.var - want_var[i]).abs() < 1e-9);
+            }
+            handle.join().unwrap();
+            assert_eq!(
+                metrics.completed.load(Ordering::Relaxed),
+                k as u64,
+                "trial {trial}"
+            );
+        }
+    }
+
+    #[test]
+    fn max_batch_bounds_flush_size() {
+        let model = serving_model();
+        let (tx, rx) = mpsc::sync_channel::<Request>(1024);
+        let metrics = Arc::new(Metrics::new());
+        let cfg = BatcherConfig { max_wait: Duration::from_millis(50), max_batch: 4, eager: false };
+        let m2 = model.clone();
+        let met2 = metrics.clone();
+        let handle = std::thread::spawn(move || {
+            run(rx, EngineSpec::Native, m2, cfg, met2);
+        });
+        let mut replies = Vec::new();
+        for i in 0..16 {
+            let (rtx, rrx) = mpsc::sync_channel(1);
+            tx.send(Request { x: vec![i as f64 * 0.5 - 4.0], reply: rtx, t0: Instant::now() })
+                .unwrap();
+            replies.push(rrx);
+        }
+        drop(tx);
+        for r in replies {
+            r.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        }
+        handle.join().unwrap();
+        // 16 requests, max_batch 4 -> at least 4 batches.
+        assert!(metrics.batches.load(Ordering::Relaxed) >= 4);
+    }
+}

@@ -1,0 +1,117 @@
+//! Lightweight serving metrics: counters and a log-scale latency
+//! histogram, all lock-free on the hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of log-scale latency buckets (1us .. ~1000s).
+const NBUCKETS: usize = 64;
+
+/// Serving metrics. All methods are thread-safe and wait-free.
+#[derive(Debug)]
+pub struct Metrics {
+    /// Requests submitted.
+    pub submitted: AtomicU64,
+    /// Requests completed (replies delivered).
+    pub completed: AtomicU64,
+    /// Batches executed.
+    pub batches: AtomicU64,
+    /// Sum of padded slots (for padding-overhead accounting).
+    pub padded_slots: AtomicU64,
+    /// Batches executed on the PJRT backend.
+    pub pjrt_batches: AtomicU64,
+    /// Batches executed on the native backend.
+    pub native_batches: AtomicU64,
+    hist: [AtomicU64; NBUCKETS],
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            padded_slots: AtomicU64::new(0),
+            pjrt_batches: AtomicU64::new(0),
+            native_batches: AtomicU64::new(0),
+            hist: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+impl Metrics {
+    /// Fresh metrics.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bucket(d: Duration) -> usize {
+        let us = d.as_micros().max(1) as u64;
+        (63 - us.leading_zeros() as usize).min(NBUCKETS - 1)
+    }
+
+    /// Record one request latency.
+    pub fn record_latency(&self, d: Duration) {
+        self.hist[Self::bucket(d)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Approximate latency quantile (upper bucket edge), in microseconds.
+    pub fn latency_quantile_us(&self, q: f64) -> u64 {
+        let counts: Vec<u64> = self.hist.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, c) in counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return 1u64 << (i + 1).min(63);
+            }
+        }
+        u64::MAX
+    }
+
+    /// One-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "submitted={} completed={} batches={} (pjrt={} native={}) padding={} p50<={}us p99<={}us",
+            self.submitted.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.pjrt_batches.load(Ordering::Relaxed),
+            self.native_batches.load(Ordering::Relaxed),
+            self.padded_slots.load(Ordering::Relaxed),
+            self.latency_quantile_us(0.5),
+            self.latency_quantile_us(0.99),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_bracket_recorded_latencies() {
+        let m = Metrics::new();
+        for _ in 0..100 {
+            m.record_latency(Duration::from_micros(100));
+        }
+        for _ in 0..5 {
+            m.record_latency(Duration::from_millis(10));
+        }
+        let p50 = m.latency_quantile_us(0.5);
+        let p99 = m.latency_quantile_us(0.99);
+        assert!(p50 >= 100 && p50 < 1000, "p50 {p50}");
+        assert!(p99 >= 8_000, "p99 {p99}");
+        assert!(p50 <= p99);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.latency_quantile_us(0.99), 0);
+    }
+}

@@ -1,0 +1,30 @@
+//! Layer-3 serving coordinator.
+//!
+//! MSGP's O(1)-per-point predictions (paper section 5.1) make a trained GP
+//! servable like any other model: all request-time work is a sparse
+//! interpolation against two precomputed grid vectors. This module turns
+//! that into a serving system:
+//!
+//! * [`state`] — [`state::ServingModel`]: the frozen precomputes
+//!   (`u_mean`, `nu_U`, grid geometry, hypers) extracted from a trained
+//!   [`crate::gp::msgp::MsgpModel`], plus a versioned model store.
+//! * [`router`] — picks the execution backend per batch: a compiled PJRT
+//!   artifact for bucket sizes that were AOT-compiled (`make artifacts`),
+//!   or the native Rust engine otherwise.
+//! * [`batcher`] — dynamic batching: requests are collected up to a
+//!   deadline or bucket capacity, padded to the bucket size, executed,
+//!   and the replies fanned back out.
+//! * [`server`] — the front-end: a thread-backed queue with blocking and
+//!   async submission, graceful shutdown, and metrics.
+//! * [`metrics`] — latency histograms and throughput counters.
+
+pub mod state;
+pub mod router;
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::{BatcherConfig, Prediction, Request};
+pub use router::{Engine, EngineSpec, Router};
+pub use server::Server;
+pub use state::{ModelStore, ServingModel};

@@ -1,0 +1,199 @@
+//! Routing: choose the execution backend and batch bucket for each batch.
+//!
+//! Buckets mirror the AOT-compiled artifact shapes (`aot.py` BUCKETS). A
+//! batch of size `k` is padded to the smallest bucket `>= k`; if `k`
+//! exceeds the largest bucket the batch is chunked. Batches whose
+//! (dim, bucket) pair has a compiled PJRT artifact run there; everything
+//! else falls back to the native Rust engine, which handles any shape.
+
+use std::path::PathBuf;
+
+use super::state::ServingModel;
+use crate::runtime::Runtime;
+
+/// How to construct the execution backend. The PJRT client is not `Send`
+/// (it wraps `Rc` internals), so the spec crosses threads and the actual
+/// [`Engine`] is built *inside* the batcher thread.
+#[derive(Clone, Debug)]
+pub enum EngineSpec {
+    /// Pure-Rust sparse interpolation (any shape).
+    Native,
+    /// Load PJRT artifacts from this directory; native fallback for
+    /// shapes without a compiled executable.
+    Pjrt(PathBuf),
+}
+
+impl EngineSpec {
+    /// Materialize the engine (call on the thread that will use it).
+    /// PJRT load failures degrade to the native engine with a warning.
+    pub fn build(&self) -> Engine {
+        match self {
+            EngineSpec::Native => Engine::Native,
+            EngineSpec::Pjrt(dir) => match Runtime::load(dir) {
+                Ok(rt) => Engine::Pjrt(rt),
+                Err(e) => {
+                    eprintln!("PJRT unavailable ({e}); using native engine");
+                    Engine::Native
+                }
+            },
+        }
+    }
+}
+
+/// Execution backend (thread-local; see [`EngineSpec`]).
+pub enum Engine {
+    /// Pure-Rust sparse interpolation (any shape).
+    Native,
+    /// PJRT artifacts for compiled buckets, native fallback otherwise.
+    Pjrt(Runtime),
+}
+
+/// Batch router.
+pub struct Router {
+    /// Backend.
+    pub engine: Engine,
+    /// Ascending bucket sizes used for padding.
+    pub buckets: Vec<usize>,
+}
+
+/// Outcome of one routed execution (for metrics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Ran on the native engine.
+    Native,
+    /// Ran on a PJRT executable.
+    Pjrt,
+}
+
+impl Router {
+    /// Router with the standard buckets (must match `aot.py`).
+    pub fn new(engine: Engine) -> Self {
+        Router { engine, buckets: vec![8, 32, 128, 256] }
+    }
+
+    /// Smallest bucket `>= k`, or `None` if `k` exceeds the largest.
+    pub fn pick_bucket(&self, k: usize) -> Option<usize> {
+        self.buckets.iter().copied().find(|&b| b >= k)
+    }
+
+    /// Execute a batch of points (row-major `k x dim`, physical
+    /// coordinates) against `model`. Handles padding, chunking, backend
+    /// selection, and un-padding. Returns `(means, vars, backend_used)`.
+    pub fn execute(
+        &self,
+        model: &ServingModel,
+        points: &[f64],
+    ) -> anyhow::Result<(Vec<f64>, Vec<f64>, Backend)> {
+        let d = model.dim();
+        let k = points.len() / d;
+        let max_bucket = *self.buckets.last().unwrap();
+        if k > max_bucket {
+            // Chunk recursively.
+            let mut means = Vec::with_capacity(k);
+            let mut vars = Vec::with_capacity(k);
+            let mut used = Backend::Native;
+            for chunk in points.chunks(max_bucket * d) {
+                let (m, v, b) = self.execute(model, chunk)?;
+                means.extend(m);
+                vars.extend(v);
+                used = b;
+            }
+            return Ok((means, vars, used));
+        }
+        let bucket = self.pick_bucket(k).unwrap_or(max_bucket);
+        if let Engine::Pjrt(rt) = &self.engine {
+            let name = format!("predict_meanvar_{}d_b{}", d, bucket);
+            if let Some(art) = rt.get(&name) {
+                if art.meta.m == model.grid.shape() {
+                    return self.execute_pjrt(rt, &name, model, points, bucket);
+                }
+            }
+        }
+        let (mean, var) = model.predict_batch(points);
+        Ok((mean, var, Backend::Native))
+    }
+
+    fn execute_pjrt(
+        &self,
+        rt: &Runtime,
+        name: &str,
+        model: &ServingModel,
+        points: &[f64],
+        bucket: usize,
+    ) -> anyhow::Result<(Vec<f64>, Vec<f64>, Backend)> {
+        let d = model.dim();
+        let k = points.len() / d;
+        // Pad by repeating the last point (harmless: results discarded).
+        let mut padded = points.to_vec();
+        let last = points[(k - 1) * d..k * d].to_vec();
+        for _ in k..bucket {
+            padded.extend_from_slice(&last);
+        }
+        let units = model.to_grid_units_f32(&padded);
+        let (um, nu) = model.grid_vecs_f32();
+        let (mean32, var32) = rt.predict_meanvar(
+            name,
+            &units,
+            &um,
+            &nu,
+            model.kss as f32,
+            model.sigma2 as f32,
+        )?;
+        let means = mean32[..k].iter().map(|&v| v as f64).collect();
+        let vars = var32[..k].iter().map(|&v| v as f64).collect();
+        Ok((means, vars, Backend::Pjrt))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::state::ServingModel;
+    use crate::data::gen_stress_1d;
+    use crate::gp::msgp::{KernelSpec, MsgpConfig, MsgpModel};
+    use crate::kernels::{KernelType, ProductKernel};
+
+    fn serving_model() -> ServingModel {
+        let data = gen_stress_1d(150, 0.05, 9);
+        let kernel = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0));
+        let cfg = MsgpConfig { n_per_dim: vec![96], n_var_samples: 10, ..Default::default() };
+        let mut model = MsgpModel::fit(kernel, 0.01, data, cfg).unwrap();
+        ServingModel::from_msgp(&mut model)
+    }
+
+    #[test]
+    fn bucket_selection_is_minimal_cover() {
+        let r = Router::new(Engine::Native);
+        assert_eq!(r.pick_bucket(1), Some(8));
+        assert_eq!(r.pick_bucket(8), Some(8));
+        assert_eq!(r.pick_bucket(9), Some(32));
+        assert_eq!(r.pick_bucket(256), Some(256));
+        assert_eq!(r.pick_bucket(257), None);
+    }
+
+    #[test]
+    fn native_execution_matches_direct_predict() {
+        let sm = serving_model();
+        let r = Router::new(Engine::Native);
+        let xs: Vec<f64> = (0..13).map(|i| -7.0 + i as f64).collect();
+        let (mean, var, backend) = r.execute(&sm, &xs).unwrap();
+        assert_eq!(backend, Backend::Native);
+        let (wm, wv) = sm.predict_batch(&xs);
+        assert_eq!(mean, wm);
+        assert_eq!(var, wv);
+    }
+
+    #[test]
+    fn oversized_batches_are_chunked() {
+        let sm = serving_model();
+        let r = Router::new(Engine::Native);
+        let xs: Vec<f64> = (0..600).map(|i| -9.0 + 0.03 * i as f64).collect();
+        let (mean, var, _) = r.execute(&sm, &xs).unwrap();
+        assert_eq!(mean.len(), 600);
+        assert_eq!(var.len(), 600);
+        let (wm, _) = sm.predict_batch(&xs);
+        for (a, b) in mean.iter().zip(&wm) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! The serving front-end: a thread-backed request queue with blocking and
+//! asynchronous submission, metrics, and graceful shutdown.
+
+use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::batcher::{self, BatcherConfig, Prediction, Request};
+use super::metrics::Metrics;
+use super::router::EngineSpec;
+use super::state::ServingModel;
+
+/// A running prediction server for one model.
+pub struct Server {
+    tx: Option<SyncSender<Request>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    /// Shared metrics.
+    pub metrics: Arc<Metrics>,
+    dim: usize,
+}
+
+impl Server {
+    /// Start the batcher thread.
+    pub fn start(model: ServingModel, engine: EngineSpec, cfg: BatcherConfig) -> Server {
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = mpsc::sync_channel::<Request>(4096);
+        let dim = model.dim();
+        let model = Arc::new(model);
+        let met2 = metrics.clone();
+        let handle = std::thread::Builder::new()
+            .name("msgp-batcher".into())
+            .spawn(move || batcher::run(rx, engine, model, cfg, met2))
+            .expect("spawn batcher");
+        Server { tx: Some(tx), handle: Some(handle), metrics, dim }
+    }
+
+    /// Submit a point; returns a receiver for the reply.
+    pub fn submit(&self, x: Vec<f64>) -> anyhow::Result<Receiver<anyhow::Result<Prediction>>> {
+        anyhow::ensure!(x.len() == self.dim, "point dim {} vs model dim {}", x.len(), self.dim);
+        let (rtx, rrx) = mpsc::sync_channel(1);
+        self.metrics.submitted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.tx
+            .as_ref()
+            .expect("server running")
+            .send(Request { x, reply: rtx, t0: Instant::now() })
+            .map_err(|_| anyhow::anyhow!("server shut down"))?;
+        Ok(rrx)
+    }
+
+    /// Blocking predict.
+    pub fn predict(&self, x: Vec<f64>) -> anyhow::Result<Prediction> {
+        self.submit(x)?
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server dropped reply"))?
+    }
+
+    /// Graceful shutdown: close the queue, drain, join the thread.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.tx.take(); // closing the channel stops the batcher loop
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gen_stress_1d;
+    use crate::gp::msgp::{KernelSpec, MsgpConfig, MsgpModel};
+    use crate::kernels::{KernelType, ProductKernel};
+
+    fn serving_model() -> ServingModel {
+        let data = gen_stress_1d(150, 0.05, 5);
+        let kernel = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0));
+        let cfg = MsgpConfig { n_per_dim: vec![64], n_var_samples: 8, ..Default::default() };
+        let mut model = MsgpModel::fit(kernel, 0.01, data, cfg).unwrap();
+        ServingModel::from_msgp(&mut model)
+    }
+
+    #[test]
+    fn blocking_predict_roundtrip() {
+        let model = serving_model();
+        let direct = model.predict_batch(&[1.5]);
+        let server = Server::start(model, EngineSpec::Native, BatcherConfig::default());
+        let p = server.predict(vec![1.5]).unwrap();
+        assert!((p.mean - direct.0[0]).abs() < 1e-12);
+        assert!((p.var - direct.1[0]).abs() < 1e-12);
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_submitters_all_get_replies() {
+        let model = serving_model();
+        let server = Arc::new(Server::start(model, EngineSpec::Native, BatcherConfig::default()));
+        let mut joins = Vec::new();
+        for t in 0..8 {
+            let s = server.clone();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..50 {
+                    let x = -9.0 + (t * 50 + i) as f64 * 0.04;
+                    let p = s.predict(vec![x]).unwrap();
+                    assert!(p.mean.is_finite() && p.var >= 0.0);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(
+            server.metrics.completed.load(std::sync::atomic::Ordering::Relaxed),
+            400
+        );
+    }
+
+    #[test]
+    fn wrong_dim_rejected_eagerly() {
+        let model = serving_model();
+        let server = Server::start(model, EngineSpec::Native, BatcherConfig::default());
+        assert!(server.submit(vec![0.0, 1.0]).is_err());
+    }
+}

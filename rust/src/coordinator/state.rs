@@ -1,0 +1,189 @@
+//! Serving-time model state: the O(1)-prediction precomputes frozen out
+//! of a trained MSGP model, and a versioned store for hot-swapping.
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use crate::gp::msgp::MsgpModel;
+use crate::grid::Grid;
+use crate::interp::SparseInterp;
+
+/// Frozen state needed to serve predictions from a trained MSGP model:
+/// everything request-time is a sparse gather against these vectors
+/// (paper section 5.1).
+#[derive(Clone, Debug)]
+pub struct ServingModel {
+    /// Inducing grid geometry.
+    pub grid: Grid,
+    /// `sf2 * K_UU W^T alpha` (mean precompute), length `m`.
+    pub u_mean: Vec<f64>,
+    /// Stochastic explained-variance grid vector, length `m`.
+    pub nu_u: Vec<f64>,
+    /// `k(x, x) = sf2`.
+    pub kss: f64,
+    /// Noise variance (added to the latent variance for y-space bands).
+    pub sigma2: f64,
+    /// f32 copies of the grid vectors, precomputed once for the PJRT
+    /// path (avoids a per-batch conversion on the hot path).
+    u_mean_f32: Vec<f32>,
+    nu_u_f32: Vec<f32>,
+}
+
+impl ServingModel {
+    /// Extract the serving state from a trained model (computes the
+    /// variance precompute if it has not been built yet).
+    pub fn from_msgp(model: &mut MsgpModel) -> Self {
+        if model.nu_u.is_none() {
+            model.precompute_variance();
+        }
+        let u_mean = model.u_mean.clone();
+        let nu_u = model.nu_u.clone().unwrap();
+        ServingModel {
+            grid: model.grid.clone(),
+            u_mean_f32: u_mean.iter().map(|&v| v as f32).collect(),
+            nu_u_f32: nu_u.iter().map(|&v| v as f32).collect(),
+            u_mean,
+            nu_u,
+            kss: model.kernel.sf2(),
+            sigma2: model.sigma2,
+        }
+    }
+
+    /// Input dimensionality.
+    pub fn dim(&self) -> usize {
+        self.grid.dim()
+    }
+
+    /// Grid size.
+    pub fn m(&self) -> usize {
+        self.grid.m()
+    }
+
+    /// Native-engine batched prediction: sparse `W_*` gather on the CPU.
+    /// Returns `(means, variances)`; variances are observation-space
+    /// (`+ sigma2`) to match the PJRT artifacts.
+    pub fn predict_batch(&self, points: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let w = SparseInterp::build(points, &self.grid);
+        let mean = w.matvec(&self.u_mean);
+        let explained = w.matvec(&self.nu_u);
+        let var = explained
+            .iter()
+            .map(|&e| (self.kss - e).max(0.0) + self.sigma2)
+            .collect();
+        (mean, var)
+    }
+
+    /// Convert physical coordinates to f32 grid units (the layout the
+    /// PJRT artifacts expect), clamping one cell inside the boundary.
+    pub fn to_grid_units_f32(&self, points: &[f64]) -> Vec<f32> {
+        let d = self.dim();
+        let mut out = Vec::with_capacity(points.len());
+        for (i, &x) in points.iter().enumerate() {
+            let ax = &self.grid.axes[i % d];
+            let u = ax.to_units(x).clamp(1.0, (ax.n - 2) as f64);
+            out.push(u as f32);
+        }
+        out
+    }
+
+    /// Grid vectors as f32 (precomputed; for the PJRT path).
+    pub fn grid_vecs_f32(&self) -> (&[f32], &[f32]) {
+        (&self.u_mean_f32, &self.nu_u_f32)
+    }
+}
+
+/// A versioned, hot-swappable store of serving models.
+#[derive(Default)]
+pub struct ModelStore {
+    inner: RwLock<HashMap<String, Arc<ServingModel>>>,
+}
+
+impl ModelStore {
+    /// Empty store.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Install (or replace) a model under a name. Readers holding the old
+    /// `Arc` finish their batches on the old version — swap is atomic.
+    pub fn install(&self, name: &str, model: ServingModel) {
+        self.inner.write().unwrap().insert(name.to_string(), Arc::new(model));
+    }
+
+    /// Fetch a model by name.
+    pub fn get(&self, name: &str) -> Option<Arc<ServingModel>> {
+        self.inner.read().unwrap().get(name).cloned()
+    }
+
+    /// Remove a model.
+    pub fn remove(&self, name: &str) -> bool {
+        self.inner.write().unwrap().remove(name).is_some()
+    }
+
+    /// Installed model names.
+    pub fn names(&self) -> Vec<String> {
+        self.inner.read().unwrap().keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gen_stress_1d;
+    use crate::gp::msgp::{KernelSpec, MsgpConfig};
+    use crate::kernels::{KernelType, ProductKernel};
+
+    fn serving_model() -> ServingModel {
+        let data = gen_stress_1d(200, 0.05, 7);
+        let kernel = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0));
+        let cfg = MsgpConfig { n_per_dim: vec![128], n_var_samples: 20, ..Default::default() };
+        let mut model = MsgpModel::fit(kernel, 0.01, data, cfg).unwrap();
+        ServingModel::from_msgp(&mut model)
+    }
+
+    #[test]
+    fn predict_batch_matches_model_fast_paths() {
+        let data = gen_stress_1d(200, 0.05, 7);
+        let kernel = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0));
+        let cfg = MsgpConfig { n_per_dim: vec![128], n_var_samples: 20, ..Default::default() };
+        let mut model = MsgpModel::fit(kernel, 0.01, data, cfg).unwrap();
+        let sm = ServingModel::from_msgp(&mut model);
+        let xs: Vec<f64> = (0..20).map(|i| -8.0 + 0.8 * i as f64).collect();
+        let (mean, var) = sm.predict_batch(&xs);
+        let want_mean = model.predict_mean(&xs);
+        let want_var = model.predict_var(&xs);
+        for (a, b) in mean.iter().zip(&want_mean) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        for (a, b) in var.iter().zip(&want_var) {
+            assert!((a - (b + model.sigma2)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn grid_units_roundtrip_and_clamp() {
+        let sm = serving_model();
+        let ax = &sm.grid.axes[0];
+        let mid = ax.coord(ax.n / 2);
+        let u = sm.to_grid_units_f32(&[mid, 1e9, -1e9]);
+        assert!((u[0] as f64 - ax.n as f64 / 2.0).abs() < 1e-3);
+        assert!(u[1] as f64 <= (ax.n - 2) as f64);
+        assert!(u[2] >= 1.0);
+    }
+
+    #[test]
+    fn store_swap_is_atomic_for_readers() {
+        let store = ModelStore::new();
+        let sm = serving_model();
+        store.install("prod", sm.clone());
+        let held = store.get("prod").unwrap();
+        let mut sm2 = sm;
+        sm2.sigma2 = 99.0;
+        store.install("prod", sm2);
+        // Old handle still serves the old version.
+        assert!(held.sigma2 < 1.0);
+        assert!((store.get("prod").unwrap().sigma2 - 99.0).abs() < 1e-12);
+        assert!(store.remove("prod"));
+        assert!(store.get("prod").is_none());
+    }
+}

@@ -1,0 +1,180 @@
+//! Synthetic workload generators matching the paper's experiments
+//! (section 6): the 1-D stress-test function, random projections for the
+//! section-6.2 consistency study, and GP samples on low-dimensional
+//! subspaces.
+
+use crate::linalg::cholesky::Chol;
+use crate::linalg::Mat;
+use crate::kernels::ProductKernel;
+use crate::util::Rng;
+
+/// The paper's 1-D stress-test target: `f(x) = sin(x) exp(-x^2 / (2*5^2))`.
+pub fn stress_fn(x: f64) -> f64 {
+    x.sin() * (-x * x / 50.0).exp()
+}
+
+/// A regression dataset: row-major inputs and targets.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Inputs, row-major `n x d`.
+    pub x: Vec<f64>,
+    /// Input dimensionality.
+    pub d: usize,
+    /// Targets, length `n`.
+    pub y: Vec<f64>,
+}
+
+impl Dataset {
+    /// Number of points.
+    pub fn n(&self) -> usize {
+        self.y.len()
+    }
+
+    /// Input row `i`.
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+}
+
+/// Section 6.1 workload: `n` inputs uniform in `[-10, 10]` (no grid
+/// structure), targets `stress_fn(x) + N(0, noise^2)`.
+pub fn gen_stress_1d(n: usize, noise: f64, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut x = Vec::with_capacity(n);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let xi = rng.uniform_in(-10.0, 10.0);
+        let eps = rng.normal();
+        x.push(xi);
+        y.push(stress_fn(xi) + noise * eps);
+    }
+    Dataset { x, d: 1, y }
+}
+
+/// 2-D variant for the BTTB experiments: inputs uniform in a box, targets
+/// from a smooth non-separable function plus noise.
+pub fn gen_stress_2d(n: usize, noise: f64, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut x = Vec::with_capacity(2 * n);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let a = rng.uniform_in(-5.0, 5.0);
+        let b = rng.uniform_in(-5.0, 5.0);
+        let r = (a * a + b * b).sqrt();
+        let eps = rng.normal();
+        x.push(a);
+        x.push(b);
+        y.push(r.cos() * (-r / 6.0).exp() + noise * eps);
+    }
+    Dataset { x, d: 2, y }
+}
+
+/// Standard-normal matrix (row-major `rows x cols`).
+pub fn randn_mat(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+    Mat::from_vec(rows, cols, rng.normal_vec(rows * cols))
+}
+
+/// Section 6.2 workload: sample a `d x bigd` projection `P`, draw `n`
+/// inputs `x ~ N(0, I_bigd)`, project to `x' = P x`, and sample targets
+/// from a GP with kernel `kern` on the projected inputs (exact sampling
+/// via dense Cholesky — used at n <= a few thousand as in the paper).
+pub struct ProjectionData {
+    /// Ground-truth projection (`d x bigd`).
+    pub p_true: Mat,
+    /// High-dimensional inputs (`n x bigd`).
+    pub data: Dataset,
+    /// Low-dimensional projected inputs (`n x d`).
+    pub x_low: Vec<f64>,
+}
+
+/// Generate the projection-consistency dataset of section 6.2.
+pub fn gen_projection_data(
+    n: usize,
+    bigd: usize,
+    d: usize,
+    kern: &ProductKernel,
+    noise: f64,
+    seed: u64,
+) -> ProjectionData {
+    let mut rng = Rng::new(seed);
+    let p_true = randn_mat(d, bigd, &mut rng);
+    let x = rng.normal_vec(n * bigd);
+    // Project.
+    let mut x_low = vec![0.0; n * d];
+    for i in 0..n {
+        for r in 0..d {
+            let mut s = 0.0;
+            for c in 0..bigd {
+                s += p_true[(r, c)] * x[i * bigd + c];
+            }
+            x_low[i * d + r] = s;
+        }
+    }
+    // Exact GP sample on the projected inputs.
+    let mut kmat = Mat::from_fn(n, n, |i, j| {
+        kern.eval(&x_low[i * d..(i + 1) * d], &x_low[j * d..(j + 1) * d])
+    });
+    for i in 0..n {
+        kmat[(i, i)] += 1e-8;
+    }
+    let ch = Chol::new(&kmat).expect("kernel matrix PSD");
+    let z = rng.normal_vec(n);
+    let f = ch.l.matvec(&z);
+    let y: Vec<f64> = f.iter().map(|&fi| fi + noise * rng.normal()).collect();
+    ProjectionData { p_true, data: Dataset { x, d: bigd, y }, x_low }
+}
+
+/// Standardized mean absolute error: `MAE(pred, y) / MAE(mean(y), y)` —
+/// the paper's accuracy metric (section 6.1).
+pub fn smae(pred: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(pred.len(), y.len());
+    let n = y.len() as f64;
+    let mean = y.iter().sum::<f64>() / n;
+    let mae: f64 = pred.iter().zip(y).map(|(p, t)| (p - t).abs()).sum::<f64>() / n;
+    let base: f64 = y.iter().map(|t| (t - mean).abs()).sum::<f64>() / n;
+    mae / base
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::KernelType;
+
+    #[test]
+    fn stress_data_in_range() {
+        let ds = gen_stress_1d(500, 0.1, 42);
+        assert_eq!(ds.n(), 500);
+        for i in 0..ds.n() {
+            assert!(ds.row(i)[0] >= -10.0 && ds.row(i)[0] <= 10.0);
+            assert!(ds.y[i].abs() < 2.0);
+        }
+    }
+
+    #[test]
+    fn projection_data_shapes() {
+        let kern = ProductKernel::iso(KernelType::SE, 2, 1.0, 1.0);
+        let pd = gen_projection_data(50, 7, 2, &kern, 0.05, 1);
+        assert_eq!(pd.p_true.rows, 2);
+        assert_eq!(pd.p_true.cols, 7);
+        assert_eq!(pd.data.n(), 50);
+        assert_eq!(pd.data.d, 7);
+        assert_eq!(pd.x_low.len(), 100);
+    }
+
+    #[test]
+    fn smae_of_perfect_prediction_is_zero() {
+        let y = vec![1.0, 2.0, 3.0];
+        assert!(smae(&y, &y) < 1e-15);
+        // Predicting the mean gives SMAE 1.
+        let mean = vec![2.0, 2.0, 2.0];
+        assert!((smae(&mean, &y) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = gen_stress_1d(10, 0.1, 7);
+        let b = gen_stress_1d(10, 0.1, 7);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+}

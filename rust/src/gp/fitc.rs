@@ -1,0 +1,261 @@
+//! FITC (Snelson & Ghahramani, 2006) — the classical inducing-point
+//! baseline of Figures 2–3. O(n m^2) training, O(m)/O(m^2) predictions.
+//!
+//! The marginal likelihood and predictions use the standard
+//! Quiñonero-Candela & Rasmussen (2005) formulation:
+//! `Q_ab = K_aU K_UU^{-1} K_Ub`, train covariance
+//! `Q_XX + diag(K_XX - Q_XX) + sigma^2 I`.
+
+use crate::data::Dataset;
+use crate::kernels::ProductKernel;
+use crate::linalg::cholesky::Chol;
+use crate::linalg::Mat;
+
+/// A fitted FITC model.
+pub struct Fitc {
+    /// Kernel.
+    pub kernel: ProductKernel,
+    /// Noise variance.
+    pub sigma2: f64,
+    /// Inducing inputs, row-major `m x d`.
+    pub u: Vec<f64>,
+    /// Training data.
+    pub data: Dataset,
+    /// `Lambda^{-1}` diagonal (per-point).
+    lam_inv: Vec<f64>,
+    /// Cholesky of `A = K_UU + K_UX Lambda^{-1} K_XU`.
+    chol_a: Chol,
+    /// Cholesky of `K_UU` (jittered).
+    chol_kuu: Chol,
+    /// `A^{-1} K_UX Lambda^{-1} y` — the m-dimensional predictive weights.
+    beta: Vec<f64>,
+    /// Cached log marginal likelihood.
+    lml: f64,
+}
+
+impl Fitc {
+    /// Fit with given inducing inputs.
+    pub fn fit(
+        kernel: ProductKernel,
+        sigma2: f64,
+        data: Dataset,
+        u: Vec<f64>,
+    ) -> anyhow::Result<Self> {
+        let d = data.d;
+        let n = data.n();
+        let m = u.len() / d;
+        anyhow::ensure!(m >= 1 && u.len() % d == 0, "bad inducing inputs");
+        let jitter = 1e-8 * kernel.sf2();
+        let mut kuu = Mat::from_fn(m, m, |i, j| {
+            kernel.eval(&u[i * d..(i + 1) * d], &u[j * d..(j + 1) * d])
+        });
+        for i in 0..m {
+            kuu[(i, i)] += jitter;
+        }
+        let chol_kuu =
+            Chol::new(&kuu).ok_or_else(|| anyhow::anyhow!("K_UU not PD"))?;
+        // K_XU (n x m).
+        let kxu = Mat::from_fn(n, m, |i, j| {
+            kernel.eval(data.row(i), &u[j * d..(j + 1) * d])
+        });
+        // q_ii = k_iU K_UU^{-1} k_Ui ; Lambda_ii = k_ii - q_ii + sigma2.
+        let mut lam_inv = vec![0.0; n];
+        let kss = kernel.sf2();
+        for i in 0..n {
+            let v = chol_kuu.forward(kxu.row(i));
+            let qii: f64 = v.iter().map(|x| x * x).sum();
+            let lam = (kss - qii).max(0.0) + sigma2;
+            lam_inv[i] = 1.0 / lam;
+        }
+        // A = K_UU + K_UX Lambda^{-1} K_XU.
+        let mut a = kuu.clone();
+        for i in 0..n {
+            let li = lam_inv[i];
+            let row = kxu.row(i);
+            for p in 0..m {
+                let rp = row[p] * li;
+                for q in 0..m {
+                    a[(p, q)] += rp * row[q];
+                }
+            }
+        }
+        let chol_a = Chol::new(&a).ok_or_else(|| anyhow::anyhow!("FITC A not PD"))?;
+        // beta = A^{-1} K_UX Lambda^{-1} y.
+        let mut kux_liy = vec![0.0; m];
+        for i in 0..n {
+            let w = lam_inv[i] * data.y[i];
+            let row = kxu.row(i);
+            for p in 0..m {
+                kux_liy[p] += row[p] * w;
+            }
+        }
+        let beta = chol_a.solve(&kux_liy);
+        // LML: -1/2 [ y^T Sigma^{-1} y + log|Sigma| + n log 2pi ],
+        // Sigma^{-1} y = Lambda^{-1} y - Lambda^{-1} K_XU beta (Woodbury),
+        // log|Sigma| = log|A| - log|K_UU| + sum log Lambda_ii.
+        let mut fit = 0.0;
+        for i in 0..n {
+            let row = kxu.row(i);
+            let pred: f64 = row.iter().zip(&beta).map(|(a, b)| a * b).sum();
+            fit += data.y[i] * lam_inv[i] * (data.y[i] - pred);
+        }
+        let logdet = chol_a.logdet() - chol_kuu.logdet()
+            - lam_inv.iter().map(|l| l.ln()).sum::<f64>();
+        let lml = -0.5 * (fit + logdet + n as f64 * (2.0 * std::f64::consts::PI).ln());
+        Ok(Fitc { kernel, sigma2, u, data, lam_inv, chol_a, chol_kuu, beta, lml })
+    }
+
+    /// Fit with inducing inputs on a regular 1-D grid over `[lo, hi]`
+    /// (the paper's setup).
+    pub fn fit_grid_1d(
+        kernel: ProductKernel,
+        sigma2: f64,
+        data: Dataset,
+        m: usize,
+        lo: f64,
+        hi: f64,
+    ) -> anyhow::Result<Self> {
+        let u: Vec<f64> = (0..m).map(|i| lo + (hi - lo) * i as f64 / (m - 1) as f64).collect();
+        Self::fit(kernel, sigma2, data, u)
+    }
+
+    /// Log marginal likelihood.
+    pub fn lml(&self) -> f64 {
+        self.lml
+    }
+
+    /// LML and a central-finite-difference gradient over
+    /// `[log_ell.., log_sf2, log_sigma2]` (keeps FITC's O(n m^2) shape up
+    /// to a constant; the Figure-2 timing includes this).
+    pub fn lml_fd_grad(&self) -> super::exact::NlmlGrad {
+        let mut p0 = self.kernel.params();
+        p0.push(self.sigma2.ln());
+        let data = &self.data;
+        let u = &self.u;
+        let grad = crate::opt::fd_gradient(
+            |p| {
+                let mut k = self.kernel.clone();
+                let nk = k.n_params();
+                k.set_params(&p[..nk]);
+                Fitc::fit(k, p[nk].exp(), data.clone(), u.clone())
+                    .map(|f| f.lml())
+                    .unwrap_or(f64::NEG_INFINITY)
+            },
+            &p0,
+            1e-5,
+        );
+        super::exact::NlmlGrad { lml: self.lml, grad }
+    }
+
+    /// Predictive mean: O(m) per test point.
+    pub fn predict_mean(&self, xs: &[f64]) -> Vec<f64> {
+        let d = self.data.d;
+        let m = self.u.len() / d;
+        let ns = xs.len() / d;
+        let mut out = vec![0.0; ns];
+        for (s, o) in out.iter_mut().enumerate() {
+            let xstar = &xs[s * d..(s + 1) * d];
+            let mut acc = 0.0;
+            for j in 0..m {
+                acc += self.kernel.eval(xstar, &self.u[j * d..(j + 1) * d]) * self.beta[j];
+            }
+            *o = acc;
+        }
+        out
+    }
+
+    /// Latent predictive variance: O(m^2) per test point.
+    pub fn predict_var(&self, xs: &[f64]) -> Vec<f64> {
+        let d = self.data.d;
+        let m = self.u.len() / d;
+        let ns = xs.len() / d;
+        let kss = self.kernel.sf2();
+        let mut out = vec![0.0; ns];
+        let mut kxs = vec![0.0; m];
+        for (s, o) in out.iter_mut().enumerate() {
+            let xstar = &xs[s * d..(s + 1) * d];
+            for j in 0..m {
+                kxs[j] = self.kernel.eval(xstar, &self.u[j * d..(j + 1) * d]);
+            }
+            // var = k** - k*U K_UU^{-1} kU* + k*U A^{-1} kU*
+            let v1 = self.chol_kuu.forward(&kxs);
+            let q: f64 = v1.iter().map(|x| x * x).sum();
+            let a_inv_k = self.chol_a.solve(&kxs);
+            let corr: f64 = kxs.iter().zip(&a_inv_k).map(|(a, b)| a * b).sum();
+            *o = (kss - q + corr).max(0.0);
+        }
+        out
+    }
+
+    /// Number of inducing points.
+    pub fn m(&self) -> usize {
+        self.u.len() / self.data.d
+    }
+
+    /// Access the per-point `Lambda^{-1}` (for tests).
+    pub fn lam_inv(&self) -> &[f64] {
+        &self.lam_inv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gen_stress_1d, smae};
+    use crate::gp::exact::ExactGp;
+    use crate::kernels::KernelType;
+
+    #[test]
+    fn with_inducing_equal_training_matches_exact_gp() {
+        let data = gen_stress_1d(80, 0.05, 2);
+        let kernel = ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0);
+        // Inducing = training inputs -> FITC == exact GP (its fixed point).
+        let fitc = Fitc::fit(kernel.clone(), 0.01, data.clone(), data.x.clone()).unwrap();
+        let exact = ExactGp::fit(kernel, 0.01, data).unwrap();
+        assert!(
+            (fitc.lml() - exact.lml()).abs() < 0.5,
+            "fitc {} vs exact {}",
+            fitc.lml(),
+            exact.lml()
+        );
+        let xs: Vec<f64> = (0..60).map(|i| -9.0 + 0.3 * i as f64).collect();
+        let pf = fitc.predict_mean(&xs);
+        let pe = exact.predict_mean(&xs);
+        assert!(smae(&pf, &pe) < 0.05, "smae {}", smae(&pf, &pe));
+    }
+
+    #[test]
+    fn grid_inducing_points_give_sensible_fit() {
+        let data = gen_stress_1d(300, 0.05, 14);
+        let kernel = ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0);
+        let fitc = Fitc::fit_grid_1d(kernel, 0.01, data.clone(), 60, -11.0, 11.0).unwrap();
+        let test = gen_stress_1d(150, 0.0, 99);
+        let pred = fitc.predict_mean(&test.x);
+        let err = smae(&pred, &test.y);
+        assert!(err < 0.25, "SMAE {err}");
+        // Variance positive and bounded by prior + slack.
+        for v in fitc.predict_var(&test.x) {
+            assert!(v >= 0.0 && v < 1.5);
+        }
+    }
+
+    #[test]
+    fn fd_gradient_is_finite_and_ascendable() {
+        let data = gen_stress_1d(100, 0.1, 3);
+        let kernel = ProductKernel::iso(KernelType::SE, 1, 0.5, 0.8);
+        let fitc = Fitc::fit_grid_1d(kernel.clone(), 0.05, data.clone(), 30, -11.0, 11.0).unwrap();
+        let g = fitc.lml_fd_grad();
+        assert!(g.grad.iter().all(|x| x.is_finite()));
+        // One small ascent step improves the LML.
+        let mut p = fitc.kernel.params();
+        p.push(fitc.sigma2.ln());
+        let norm: f64 = g.grad.iter().map(|x| x * x).sum::<f64>().sqrt();
+        for (pi, gi) in p.iter_mut().zip(&g.grad) {
+            *pi += 1e-3 * gi / norm.max(1e-12);
+        }
+        let mut k2 = kernel;
+        k2.set_params(&p[..2]);
+        let f2 = Fitc::fit_grid_1d(k2, p[2].exp(), data, 30, -11.0, 11.0).unwrap();
+        assert!(f2.lml() >= fitc.lml(), "{} < {}", f2.lml(), fitc.lml());
+    }
+}

@@ -1,0 +1,8 @@
+//! Gaussian-process models: the MSGP contribution (section 5) and the
+//! baselines it is compared against in section 6 (exact GP, FITC, SSGP,
+//! and the Big-Data GP / SVI).
+pub mod exact;
+pub mod msgp;
+pub mod fitc;
+pub mod ssgp;
+pub mod svigp;

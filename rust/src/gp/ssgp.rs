@@ -1,0 +1,235 @@
+//! Sparse Spectrum GP (Lázaro-Gredilla et al., 2010) — the finite-basis
+//! baseline of Figures 2–3.
+//!
+//! The kernel is approximated by `m/2` random spectral frequencies
+//! `w_r ~ N(0, diag(1/ell^2))`, giving the feature map
+//! `phi(x) = sqrt(sf2 / (m/2)) [cos(w_r^T x); sin(w_r^T x)]_r` and a
+//! Bayesian linear model whose evidence needs an `m x m` solve:
+//! O(n m^2) training, O(m)/O(m^2) per-test-point predictions.
+
+use crate::data::Dataset;
+use crate::kernels::ProductKernel;
+use crate::linalg::cholesky::Chol;
+use crate::linalg::Mat;
+use crate::util::Rng;
+
+/// A fitted sparse-spectrum GP.
+pub struct Ssgp {
+    /// Kernel whose spectrum is sampled.
+    pub kernel: ProductKernel,
+    /// Noise variance.
+    pub sigma2: f64,
+    /// Spectral frequencies, row-major `(m/2) x d` (unit-lengthscale;
+    /// scaled by `1/ell` at feature time so hypers can change without
+    /// resampling).
+    pub freqs: Vec<f64>,
+    /// Training data.
+    pub data: Dataset,
+    /// Cholesky of `Phi^T Phi + sigma2 I` (m x m).
+    chol: Chol,
+    /// Posterior weight mean (m).
+    wmean: Vec<f64>,
+    /// Cached LML.
+    lml: f64,
+}
+
+impl Ssgp {
+    /// Number of basis functions (2 x number of frequencies).
+    pub fn m(&self) -> usize {
+        2 * self.freqs.len() / self.data.d
+    }
+
+    /// Sample `m/2` frequencies and fit.
+    pub fn fit(
+        kernel: ProductKernel,
+        sigma2: f64,
+        data: Dataset,
+        m: usize,
+        seed: u64,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(m % 2 == 0 && m >= 2, "m must be even");
+        let d = data.d;
+        let mut rng = Rng::new(seed);
+        let freqs = rng.normal_vec(m / 2 * d);
+        Self::fit_with_freqs(kernel, sigma2, data, freqs)
+    }
+
+    /// Fit with fixed (unit-lengthscale) frequencies.
+    pub fn fit_with_freqs(
+        kernel: ProductKernel,
+        sigma2: f64,
+        data: Dataset,
+        freqs: Vec<f64>,
+    ) -> anyhow::Result<Self> {
+        let d = data.d;
+        let n = data.n();
+        let half = freqs.len() / d;
+        let m = 2 * half;
+        // Phi: n x m.
+        let phi = features(&kernel, &freqs, &data.x, d);
+        // A = Phi^T Phi + sigma2 I (scaled formulation: weights have unit
+        // prior; the sf2/(m/2) scaling is inside phi).
+        let mut a = Mat::zeros(m, m);
+        for i in 0..n {
+            let row = phi.row(i);
+            for p in 0..m {
+                let rp = row[p];
+                if rp == 0.0 {
+                    continue;
+                }
+                for q in p..m {
+                    a[(p, q)] += rp * row[q];
+                }
+            }
+        }
+        for p in 0..m {
+            for q in 0..p {
+                a[(p, q)] = a[(q, p)];
+            }
+            a[(p, p)] += sigma2;
+        }
+        let chol = Chol::new(&a).ok_or_else(|| anyhow::anyhow!("SSGP A not PD"))?;
+        let phity = phi.tmatvec(&data.y);
+        let wmean = chol.solve(&phity);
+        // Evidence (Lázaro-Gredilla Eq. 10):
+        // lml = -1/2sigma2 (y^T y - y^T Phi A^{-1} Phi^T y)
+        //       - 1/2 log|A| + m/2 log sigma2 - n/2 log(2 pi sigma2)
+        let yty: f64 = data.y.iter().map(|v| v * v).sum();
+        let expl: f64 = phity.iter().zip(&wmean).map(|(a, b)| a * b).sum();
+        let lml = -0.5 / sigma2 * (yty - expl) - 0.5 * chol.logdet()
+            + 0.5 * m as f64 * sigma2.ln()
+            - 0.5 * n as f64 * (2.0 * std::f64::consts::PI * sigma2).ln();
+        Ok(Ssgp { kernel, sigma2, freqs, data, chol, wmean, lml })
+    }
+
+    /// Log marginal likelihood (evidence).
+    pub fn lml(&self) -> f64 {
+        self.lml
+    }
+
+    /// LML + finite-difference gradient over `[log_ell.., log_sf2,
+    /// log_sigma2]`, holding the sampled frequencies fixed (as the SSGP
+    /// paper does during optimization).
+    pub fn lml_fd_grad(&self) -> super::exact::NlmlGrad {
+        let mut p0 = self.kernel.params();
+        p0.push(self.sigma2.ln());
+        let grad = crate::opt::fd_gradient(
+            |p| {
+                let mut k = self.kernel.clone();
+                let nk = k.n_params();
+                k.set_params(&p[..nk]);
+                Ssgp::fit_with_freqs(k, p[nk].exp(), self.data.clone(), self.freqs.clone())
+                    .map(|s| s.lml())
+                    .unwrap_or(f64::NEG_INFINITY)
+            },
+            &p0,
+            1e-5,
+        );
+        super::exact::NlmlGrad { lml: self.lml, grad }
+    }
+
+    /// Predictive mean: O(m) per point.
+    pub fn predict_mean(&self, xs: &[f64]) -> Vec<f64> {
+        let phi = features(&self.kernel, &self.freqs, xs, self.data.d);
+        phi.matvec(&self.wmean)
+    }
+
+    /// Latent predictive variance: O(m^2) per point.
+    pub fn predict_var(&self, xs: &[f64]) -> Vec<f64> {
+        let phi = features(&self.kernel, &self.freqs, xs, self.data.d);
+        let ns = phi.rows;
+        let mut out = vec![0.0; ns];
+        for s in 0..ns {
+            let row = phi.row(s);
+            let ainv_row = self.chol.solve(row);
+            let v: f64 = row.iter().zip(&ainv_row).map(|(a, b)| a * b).sum();
+            out[s] = (self.sigma2 * v).max(0.0);
+        }
+        out
+    }
+}
+
+/// Feature matrix `Phi` (`n x m`): scaled cos/sin pairs of the projected
+/// frequencies. Lengthscales divide the frequencies; `sqrt(sf2/(m/2))`
+/// scales the amplitude so `phi(x)^T phi(x') ~ k(x, x')`.
+fn features(kernel: &ProductKernel, freqs: &[f64], xs: &[f64], d: usize) -> Mat {
+    let half = freqs.len() / d;
+    let m = 2 * half;
+    let n = xs.len() / d;
+    let amp = (kernel.sf2() / half as f64).sqrt();
+    let ells: Vec<f64> = (0..d).map(|p| kernel.ell(p)).collect();
+    let mut phi = Mat::zeros(n, m);
+    for i in 0..n {
+        let x = &xs[i * d..(i + 1) * d];
+        for r in 0..half {
+            let mut arg = 0.0;
+            for p in 0..d {
+                arg += freqs[r * d + p] / ells[p] * x[p];
+            }
+            phi[(i, 2 * r)] = amp * arg.cos();
+            phi[(i, 2 * r + 1)] = amp * arg.sin();
+        }
+    }
+    phi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gen_stress_1d, smae};
+    use crate::gp::exact::ExactGp;
+    use crate::kernels::KernelType;
+
+    #[test]
+    fn feature_covariance_approximates_kernel() {
+        // phi(x)^T phi(z) -> k(x, z) as m grows (Monte Carlo average of
+        // cos(w^T(x - z)) over w ~ N(0, 1/ell^2)).
+        let kernel = ProductKernel::iso(KernelType::SE, 1, 1.3, 0.9);
+        let mut rng = Rng::new(5);
+        let freqs = rng.normal_vec(4000);
+        let xs = [0.0f64, 0.7, 2.0];
+        let phi = features(&kernel, &freqs, &xs, 1);
+        for i in 0..3 {
+            for j in 0..3 {
+                let approx: f64 =
+                    phi.row(i).iter().zip(phi.row(j)).map(|(a, b)| a * b).sum();
+                let exact = kernel.eval(&xs[i..i + 1], &xs[j..j + 1]);
+                assert!((approx - exact).abs() < 0.05, "({i},{j}): {approx} vs {exact}");
+            }
+        }
+    }
+
+    #[test]
+    fn large_m_matches_exact_gp_predictions() {
+        let data = gen_stress_1d(150, 0.05, 8);
+        let kernel = ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0);
+        let ssgp = Ssgp::fit(kernel.clone(), 0.01, data.clone(), 400, 11).unwrap();
+        let exact = ExactGp::fit(kernel, 0.01, data).unwrap();
+        let xs: Vec<f64> = (0..80).map(|i| -9.0 + 0.225 * i as f64).collect();
+        let ps = ssgp.predict_mean(&xs);
+        let pe = exact.predict_mean(&xs);
+        assert!(smae(&ps, &pe) < 0.1, "smae {}", smae(&ps, &pe));
+    }
+
+    #[test]
+    fn lml_is_finite_and_grad_ascendable() {
+        let data = gen_stress_1d(120, 0.1, 4);
+        let kernel = ProductKernel::iso(KernelType::SE, 1, 0.6, 0.7);
+        let ssgp = Ssgp::fit(kernel, 0.05, data, 100, 2).unwrap();
+        assert!(ssgp.lml().is_finite());
+        let g = ssgp.lml_fd_grad();
+        assert!(g.grad.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn variance_grows_away_from_data() {
+        let data = gen_stress_1d(200, 0.05, 6);
+        let kernel = ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0);
+        let ssgp = Ssgp::fit(kernel, 0.01, data, 200, 3).unwrap();
+        let near = ssgp.predict_var(&[0.0])[0];
+        // SSGP is periodic-ish far away, so compare against a moderately
+        // extrapolated point rather than a far one.
+        let off = ssgp.predict_var(&[14.0])[0];
+        assert!(off > near, "off {off} near {near}");
+    }
+}

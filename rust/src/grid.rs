@@ -1,0 +1,156 @@
+//! Rectilinear inducing-point grids `U = U_1 x ... x U_D`.
+//!
+//! MSGP places the inducing points on a regularly spaced Cartesian product
+//! grid so that `K_{U,U}` inherits Kronecker-of-Toeplitz (or BTTB)
+//! structure, while the *data* inputs remain arbitrary (section 5.2).
+
+/// One regularly spaced axis of a product grid.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GridAxis {
+    /// Left edge (coordinate of the first grid point).
+    pub lo: f64,
+    /// Spacing between consecutive points.
+    pub step: f64,
+    /// Number of points.
+    pub n: usize,
+}
+
+impl GridAxis {
+    /// Build an axis spanning `[lo, hi]` with `n` points.
+    pub fn span(lo: f64, hi: f64, n: usize) -> Self {
+        assert!(n >= 2, "grid axis needs at least 2 points");
+        assert!(hi > lo);
+        GridAxis { lo, step: (hi - lo) / (n - 1) as f64, n }
+    }
+
+    /// Coordinate of grid point `i`.
+    #[inline]
+    pub fn coord(&self, i: usize) -> f64 {
+        self.lo + self.step * i as f64
+    }
+
+    /// Map a coordinate to continuous grid units (`0 .. n-1`).
+    #[inline]
+    pub fn to_units(&self, x: f64) -> f64 {
+        (x - self.lo) / self.step
+    }
+}
+
+/// A D-dimensional rectilinear grid.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Grid {
+    /// Per-dimension axes.
+    pub axes: Vec<GridAxis>,
+}
+
+impl Grid {
+    /// Build from axes.
+    pub fn new(axes: Vec<GridAxis>) -> Self {
+        assert!(!axes.is_empty());
+        Grid { axes }
+    }
+
+    /// Build a grid covering the bounding box of `points` (rows of `dim`
+    /// coordinates), expanded by `margin_cells` grid cells on each side so
+    /// that the cubic interpolation stencil never leaves the grid.
+    pub fn covering(points: &[f64], dim: usize, n_per_dim: &[usize], margin_cells: usize) -> Self {
+        assert_eq!(n_per_dim.len(), dim);
+        assert!(points.len() % dim == 0);
+        let npts = points.len() / dim;
+        assert!(npts > 0);
+        let mut axes = Vec::with_capacity(dim);
+        for d in 0..dim {
+            let mut lo = f64::INFINITY;
+            let mut hi = f64::NEG_INFINITY;
+            for p in 0..npts {
+                let v = points[p * dim + d];
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            if hi - lo < 1e-12 {
+                hi = lo + 1.0;
+            }
+            let n = n_per_dim[d];
+            assert!(n > 2 * margin_cells + 1, "grid too small for margin");
+            let inner = (n - 1 - 2 * margin_cells) as f64;
+            let step = (hi - lo) / inner;
+            axes.push(GridAxis { lo: lo - margin_cells as f64 * step, step, n });
+        }
+        Grid { axes }
+    }
+
+    /// Dimensionality.
+    pub fn dim(&self) -> usize {
+        self.axes.len()
+    }
+
+    /// Per-dimension sizes.
+    pub fn shape(&self) -> Vec<usize> {
+        self.axes.iter().map(|a| a.n).collect()
+    }
+
+    /// Total number of grid points `m`.
+    pub fn m(&self) -> usize {
+        self.axes.iter().map(|a| a.n).product()
+    }
+
+    /// Flatten a multi-index (row-major: last axis fastest).
+    pub fn flat(&self, idx: &[usize]) -> usize {
+        let mut f = 0usize;
+        for (a, &i) in self.axes.iter().zip(idx) {
+            debug_assert!(i < a.n);
+            f = f * a.n + i;
+        }
+        f
+    }
+
+    /// Coordinates of the flat grid point `f` (row-major).
+    pub fn point(&self, mut f: usize) -> Vec<f64> {
+        let d = self.dim();
+        let mut out = vec![0.0; d];
+        for a in (0..d).rev() {
+            let n = self.axes[a].n;
+            out[a] = self.axes[a].coord(f % n);
+            f /= n;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axis_units_roundtrip() {
+        let a = GridAxis::span(-2.0, 3.0, 11);
+        assert!((a.step - 0.5).abs() < 1e-12);
+        assert!((a.to_units(a.coord(7)) - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn covering_has_margin() {
+        let pts = vec![0.0, 0.0, 1.0, 2.0, -1.0, 4.0]; // 3 points in 2-D
+        let g = Grid::covering(&pts, 2, &[10, 12], 2);
+        assert_eq!(g.shape(), vec![10, 12]);
+        // Every data coordinate must be at least margin cells inside.
+        for p in 0..3 {
+            for d in 0..2 {
+                let u = g.axes[d].to_units(pts[p * 2 + d]);
+                assert!(u >= 2.0 - 1e-9 && u <= (g.axes[d].n - 3) as f64 + 1e-9, "u={u}");
+            }
+        }
+    }
+
+    #[test]
+    fn flat_and_point_roundtrip() {
+        let g = Grid::new(vec![GridAxis::span(0.0, 1.0, 3), GridAxis::span(0.0, 1.0, 4)]);
+        assert_eq!(g.m(), 12);
+        for f in 0..12 {
+            let p = g.point(f);
+            let i0 = (0..3).min_by_key(|&i| ((g.axes[0].coord(i) - p[0]).abs() * 1e6) as i64).unwrap();
+            let i1 = (0..4).min_by_key(|&i| ((g.axes[1].coord(i) - p[1]).abs() * 1e6) as i64).unwrap();
+            assert_eq!(g.flat(&[i0, i1]), f);
+        }
+    }
+}

@@ -1,0 +1,373 @@
+//! Local cubic kernel interpolation (KISS-GP's sparse `W`, section 4).
+//!
+//! Each data/test point is expressed as a cubic-convolution interpolation
+//! (Keys, 1981) of the `4^D` surrounding grid points, giving extremely
+//! sparse interpolation matrices `W` with exactly `4^D` non-zeros per row.
+//! MVMs `W v` (gather) and `W^T v` (scatter) cost O(n 4^D).
+//!
+//! The interpolation weights are differentiable in the (projected) input
+//! coordinates — the derivative rows are what makes supervised projection
+//! learning (section 5.4) tractable under SKI.
+
+use crate::grid::Grid;
+
+/// Keys cubic-convolution kernel with `a = -1/2` (the classical choice).
+#[inline]
+pub fn keys_h(s: f64) -> f64 {
+    let t = s.abs();
+    if t < 1.0 {
+        (1.5 * t - 2.5) * t * t + 1.0
+    } else if t < 2.0 {
+        ((-0.5 * t + 2.5) * t - 4.0) * t + 2.0
+    } else {
+        0.0
+    }
+}
+
+/// Derivative of [`keys_h`] with respect to `s`.
+#[inline]
+pub fn keys_dh(s: f64) -> f64 {
+    let t = s.abs();
+    let sign = if s >= 0.0 { 1.0 } else { -1.0 };
+    if t < 1.0 {
+        sign * ((4.5 * t - 5.0) * t)
+    } else if t < 2.0 {
+        sign * ((-1.5 * t + 5.0) * t - 4.0)
+    } else {
+        0.0
+    }
+}
+
+/// Per-dimension stencil: 4 grid indices and their weights (and weight
+/// derivatives with respect to the coordinate, in *grid units*).
+#[derive(Clone, Copy, Debug)]
+pub struct Stencil1D {
+    /// Leftmost grid index of the 4-point stencil.
+    pub i0: usize,
+    /// Weights for taps `i0 .. i0+3`.
+    pub w: [f64; 4],
+    /// `dw/du` (u in grid units) for each tap.
+    pub dw: [f64; 4],
+}
+
+/// Compute the 1-D cubic stencil for a coordinate `u` in grid units on an
+/// axis with `n` points. The stencil is shifted inward near the boundary
+/// (callers should build grids with >= 2 cells of margin so this never
+/// matters for training data).
+pub fn stencil_1d(u: f64, n: usize) -> Stencil1D {
+    assert!(n >= 4, "cubic interpolation needs >= 4 grid points per axis");
+    let i = u.floor() as isize;
+    let i0 = (i - 1).clamp(0, n as isize - 4) as usize;
+    let mut w = [0.0; 4];
+    let mut dw = [0.0; 4];
+    for j in 0..4 {
+        let s = u - (i0 + j) as f64;
+        w[j] = keys_h(s);
+        dw[j] = keys_dh(s);
+    }
+    Stencil1D { i0, w, dw }
+}
+
+/// A sparse interpolation matrix `W` (`rows x m`) with exactly `4^D`
+/// non-zeros per row, stored row-compressed with fixed row width.
+#[derive(Clone, Debug)]
+pub struct SparseInterp {
+    /// Number of rows (data/test points).
+    pub rows: usize,
+    /// Number of columns (grid points `m`).
+    pub cols: usize,
+    /// Non-zeros per row (`4^D`).
+    pub nnz_per_row: usize,
+    /// Column indices, `rows * nnz_per_row`.
+    pub col_idx: Vec<u32>,
+    /// Values, `rows * nnz_per_row`.
+    pub vals: Vec<f64>,
+}
+
+impl SparseInterp {
+    /// Build the interpolation matrix for `points` (row-major `rows x D`)
+    /// against `grid`.
+    pub fn build(points: &[f64], grid: &Grid) -> Self {
+        let d = grid.dim();
+        assert!(points.len() % d == 0);
+        let rows = points.len() / d;
+        let nnz = 4usize.pow(d as u32);
+        let m = grid.m();
+        let shape = grid.shape();
+        let mut col_idx = vec![0u32; rows * nnz];
+        let mut vals = vec![0.0f64; rows * nnz];
+        let mut stencils = vec![
+            Stencil1D { i0: 0, w: [0.0; 4], dw: [0.0; 4] };
+            d
+        ];
+        for r in 0..rows {
+            for (a, st) in stencils.iter_mut().enumerate() {
+                let u = grid.axes[a].to_units(points[r * d + a]);
+                *st = stencil_1d(u, shape[a]);
+            }
+            // Tensor product over the D stencils.
+            let base = r * nnz;
+            for t in 0..nnz {
+                let mut flat = 0usize;
+                let mut w = 1.0f64;
+                for (a, st) in stencils.iter().enumerate() {
+                    let j = (t >> (2 * (d - 1 - a))) & 3;
+                    flat = flat * shape[a] + (st.i0 + j);
+                    w *= st.w[j];
+                }
+                debug_assert!(flat < m);
+                col_idx[base + t] = flat as u32;
+                vals[base + t] = w;
+            }
+        }
+        SparseInterp { rows, cols: m, nnz_per_row: nnz, col_idx, vals }
+    }
+
+    /// Build both `W` and, for each input dimension `a`, the derivative
+    /// matrix `dW/du_a` (coordinate in physical units — the grid-unit
+    /// derivative is scaled by `1/step_a`). Returns `(W, [dW_a])`.
+    pub fn build_with_grad(points: &[f64], grid: &Grid) -> (Self, Vec<Self>) {
+        let d = grid.dim();
+        let rows = points.len() / d;
+        let nnz = 4usize.pow(d as u32);
+        let m = grid.m();
+        let shape = grid.shape();
+        let mut w_mat = SparseInterp {
+            rows,
+            cols: m,
+            nnz_per_row: nnz,
+            col_idx: vec![0u32; rows * nnz],
+            vals: vec![0.0f64; rows * nnz],
+        };
+        let mut grads: Vec<SparseInterp> = (0..d).map(|_| w_mat.clone()).collect();
+        let mut stencils = vec![Stencil1D { i0: 0, w: [0.0; 4], dw: [0.0; 4] }; d];
+        for r in 0..rows {
+            for (a, st) in stencils.iter_mut().enumerate() {
+                let u = grid.axes[a].to_units(points[r * d + a]);
+                *st = stencil_1d(u, shape[a]);
+            }
+            let base = r * nnz;
+            for t in 0..nnz {
+                let mut flat = 0usize;
+                let mut w = 1.0f64;
+                let mut taps = [0usize; 8];
+                for (a, st) in stencils.iter().enumerate() {
+                    let j = (t >> (2 * (d - 1 - a))) & 3;
+                    taps[a] = j;
+                    flat = flat * shape[a] + (st.i0 + j);
+                    w *= st.w[j];
+                }
+                w_mat.col_idx[base + t] = flat as u32;
+                w_mat.vals[base + t] = w;
+                for (g, grad) in grads.iter_mut().enumerate() {
+                    // Product rule: replace factor g's weight by its
+                    // derivative; scale to physical units.
+                    let mut dw = 1.0f64;
+                    for (a, st) in stencils.iter().enumerate() {
+                        let j = taps[a];
+                        dw *= if a == g { st.dw[j] } else { st.w[j] };
+                    }
+                    grad.col_idx[base + t] = flat as u32;
+                    grad.vals[base + t] = dw / grid.axes[g].step;
+                }
+            }
+        }
+        (w_mat, grads)
+    }
+
+    /// Gather MVM: `out = W v`, `v` of length `cols`.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.rows];
+        self.matvec_into(v, &mut out);
+        out
+    }
+
+    /// Allocation-free gather MVM.
+    pub fn matvec_into(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.cols);
+        assert_eq!(out.len(), self.rows);
+        let nnz = self.nnz_per_row;
+        for (r, o) in out.iter_mut().enumerate() {
+            let base = r * nnz;
+            let mut s = 0.0;
+            for t in 0..nnz {
+                s += self.vals[base + t] * v[self.col_idx[base + t] as usize];
+            }
+            *o = s;
+        }
+    }
+
+    /// Scatter MVM: `out = W^T v`, `v` of length `rows`.
+    pub fn tmatvec(&self, v: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.cols];
+        self.tmatvec_into(v, &mut out);
+        out
+    }
+
+    /// Allocation-free scatter MVM (zeroes `out` first).
+    pub fn tmatvec_into(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        out.fill(0.0);
+        let nnz = self.nnz_per_row;
+        for (r, &vr) in v.iter().enumerate() {
+            let base = r * nnz;
+            for t in 0..nnz {
+                out[self.col_idx[base + t] as usize] += self.vals[base + t] * vr;
+            }
+        }
+    }
+
+    /// Dot product of row `r` with a dense vector.
+    pub fn row_dot(&self, r: usize, v: &[f64]) -> f64 {
+        let base = r * self.nnz_per_row;
+        let mut s = 0.0;
+        for t in 0..self.nnz_per_row {
+            s += self.vals[base + t] * v[self.col_idx[base + t] as usize];
+        }
+        s
+    }
+
+    /// Sum of each row's weights (should be ~1 away from boundaries —
+    /// cubic convolution is a partition of unity).
+    pub fn row_sums(&self) -> Vec<f64> {
+        (0..self.rows)
+            .map(|r| {
+                let base = r * self.nnz_per_row;
+                self.vals[base..base + self.nnz_per_row].iter().sum()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::GridAxis;
+
+    #[test]
+    fn keys_partition_of_unity() {
+        for i in 0..50 {
+            let s = i as f64 * 0.02; // fractional offset in [0, 1)
+            let sum = keys_h(s + 1.0) + keys_h(s) + keys_h(s - 1.0) + keys_h(s - 2.0);
+            assert!((sum - 1.0).abs() < 1e-12, "s={s} sum={sum}");
+        }
+    }
+
+    #[test]
+    fn keys_interpolates_exactly_at_nodes() {
+        assert!((keys_h(0.0) - 1.0).abs() < 1e-15);
+        assert!(keys_h(1.0).abs() < 1e-15);
+        assert!(keys_h(2.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn keys_dh_is_derivative() {
+        for &s in &[-1.7, -0.9, -0.3, 0.2, 0.7, 1.4, 1.9] {
+            let eps = 1e-6;
+            let fd = (keys_h(s + eps) - keys_h(s - eps)) / (2.0 * eps);
+            assert!((keys_dh(s) - fd).abs() < 1e-8, "s={s}");
+        }
+    }
+
+    #[test]
+    fn cubic_reproduces_quadratics_1d() {
+        // Keys cubic convolution (a = -1/2) is third-order accurate: it
+        // reproduces polynomials up to degree 2 exactly (away from
+        // boundaries), and cubics to O(h^3).
+        let grid = Grid::new(vec![GridAxis::span(0.0, 10.0, 21)]);
+        let f = |x: f64| -0.7 * x * x + 2.0 * x - 5.0;
+        let gv: Vec<f64> = (0..21).map(|i| f(grid.axes[0].coord(i))).collect();
+        let pts: Vec<f64> = (0..40).map(|i| 1.5 + i as f64 * 0.17).collect();
+        let w = SparseInterp::build(&pts, &grid);
+        let got = w.matvec(&gv);
+        for (g, &x) in got.iter().zip(&pts) {
+            assert!((g - f(x)).abs() < 1e-9, "x={x}: {g} vs {}", f(x));
+        }
+    }
+
+    #[test]
+    fn cubic_interp_error_is_third_order() {
+        // Halving the grid step must shrink the interpolation error of a
+        // smooth function by ~8x (O(h^3) convergence).
+        let f = |x: f64| (1.3 * x).sin();
+        let err_at = |n: usize| -> f64 {
+            let grid = Grid::new(vec![GridAxis::span(0.0, 10.0, n)]);
+            let gv: Vec<f64> = (0..n).map(|i| f(grid.axes[0].coord(i))).collect();
+            let pts: Vec<f64> = (0..50).map(|i| 2.0 + i as f64 * 0.12).collect();
+            let w = SparseInterp::build(&pts, &grid);
+            w.matvec(&gv)
+                .iter()
+                .zip(&pts)
+                .map(|(g, &x)| (g - f(x)).abs())
+                .fold(0.0f64, f64::max)
+        };
+        let e1 = err_at(41);
+        let e2 = err_at(81);
+        assert!(e2 < e1 / 5.0, "e1={e1} e2={e2}");
+    }
+
+    #[test]
+    fn cubic_reproduces_bilinear_2d() {
+        let grid = Grid::new(vec![GridAxis::span(0.0, 4.0, 9), GridAxis::span(0.0, 4.0, 9)]);
+        let f = |x: f64, y: f64| 2.0 * x - y + 0.5 * x * y + 1.0;
+        let mut gv = vec![0.0; grid.m()];
+        for (i, g) in gv.iter_mut().enumerate() {
+            let p = grid.point(i);
+            *g = f(p[0], p[1]);
+        }
+        let pts = vec![1.3, 2.7, 2.05, 1.15, 3.0, 3.0, 1.0, 2.5];
+        let w = SparseInterp::build(&pts, &grid);
+        assert_eq!(w.nnz_per_row, 16);
+        let got = w.matvec(&gv);
+        for (r, g) in got.iter().enumerate() {
+            let (x, y) = (pts[r * 2], pts[r * 2 + 1]);
+            assert!((g - f(x, y)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn tmatvec_is_transpose_of_matvec() {
+        let grid = Grid::new(vec![GridAxis::span(-1.0, 1.0, 8)]);
+        let pts: Vec<f64> = (0..5).map(|i| -0.6 + 0.3 * i as f64).collect();
+        let w = SparseInterp::build(&pts, &grid);
+        // <W v, u> == <v, W^T u> for random v, u.
+        let v: Vec<f64> = (0..8).map(|i| (i as f64).sin()).collect();
+        let u: Vec<f64> = (0..5).map(|i| (i as f64).cos()).collect();
+        let wv = w.matvec(&v);
+        let wtu = w.tmatvec(&u);
+        let lhs: f64 = wv.iter().zip(&u).map(|(a, b)| a * b).sum();
+        let rhs: f64 = v.iter().zip(&wtu).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gradient_rows_match_finite_differences() {
+        let grid = Grid::new(vec![GridAxis::span(0.0, 5.0, 12), GridAxis::span(0.0, 5.0, 12)]);
+        let gv: Vec<f64> = (0..grid.m()).map(|i| ((i * 13 % 17) as f64) * 0.1).collect();
+        let pt = [2.3f64, 1.7];
+        let (_, grads) = SparseInterp::build_with_grad(&pt, &grid);
+        for a in 0..2 {
+            let eps = 1e-6;
+            let mut pp = pt;
+            pp[a] += eps;
+            let mut pm = pt;
+            pm[a] -= eps;
+            let wp = SparseInterp::build(&pp, &grid).matvec(&gv)[0];
+            let wm = SparseInterp::build(&pm, &grid).matvec(&gv)[0];
+            let fd = (wp - wm) / (2.0 * eps);
+            let an = grads[a].matvec(&gv)[0];
+            assert!((an - fd).abs() < 1e-6, "dim {a}: {an} vs {fd}");
+        }
+    }
+
+    #[test]
+    fn row_sums_are_one_in_interior() {
+        let grid = Grid::new(vec![GridAxis::span(0.0, 1.0, 16)]);
+        let pts: Vec<f64> = (0..20).map(|i| 0.2 + 0.03 * i as f64).collect();
+        let w = SparseInterp::build(&pts, &grid);
+        for s in w.row_sums() {
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,278 @@
+//! Covariance functions: SE (RBF), Matérn 1/2, 3/2, 5/2, and Rational
+//! Quadratic — the `covSE`, `covMatern` and `covRQ` families benchmarked
+//! in Figure 1 of the paper — with closed-form hyperparameter gradients.
+//!
+//! Two compositions are provided:
+//!
+//! * [`ProductKernel`] — a product across input dimensions (one stationary
+//!   1-D kernel per dimension) scaled by a signal variance. This is what
+//!   gives `K_{U,U}` its Kronecker-of-Toeplitz structure (Eq. 11).
+//! * [`IsoKernel`] — an isotropic kernel of the Euclidean lag norm; it
+//!   does *not* factorize, exercising the BTTB/BCCB path (section 5.3).
+
+/// The stationary kernel families.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum KernelType {
+    /// Squared exponential `exp(-r^2 / (2 l^2))`.
+    SE,
+    /// Matérn nu = 1/2 (exponential) `exp(-r/l)`.
+    Matern12,
+    /// Matérn nu = 3/2.
+    Matern32,
+    /// Matérn nu = 5/2.
+    Matern52,
+    /// Rational quadratic `(1 + r^2/(2 a l^2))^{-a}` with fixed shape `a`.
+    RQ {
+        /// Shape parameter `alpha` (fixed, not learned).
+        alpha_milli: u32,
+    },
+}
+
+impl KernelType {
+    /// RQ with shape `alpha` (stored in milli-units so the enum stays `Eq`-friendly).
+    pub fn rq(alpha: f64) -> Self {
+        KernelType::RQ { alpha_milli: (alpha * 1000.0).round() as u32 }
+    }
+
+    fn alpha(self) -> f64 {
+        match self {
+            KernelType::RQ { alpha_milli } => alpha_milli as f64 / 1000.0,
+            _ => 0.0,
+        }
+    }
+
+    /// Unit-variance correlation at distance `r >= 0` with lengthscale `ell`.
+    pub fn corr(self, r: f64, ell: f64) -> f64 {
+        let r = r.abs();
+        match self {
+            KernelType::SE => (-0.5 * (r / ell).powi(2)).exp(),
+            KernelType::Matern12 => (-r / ell).exp(),
+            KernelType::Matern32 => {
+                let s = 3.0f64.sqrt() * r / ell;
+                (1.0 + s) * (-s).exp()
+            }
+            KernelType::Matern52 => {
+                let s = 5.0f64.sqrt() * r / ell;
+                (1.0 + s + s * s / 3.0) * (-s).exp()
+            }
+            KernelType::RQ { .. } => {
+                let a = self.alpha();
+                (1.0 + r * r / (2.0 * a * ell * ell)).powf(-a)
+            }
+        }
+    }
+
+    /// Derivative of [`Self::corr`] with respect to `log ell`.
+    pub fn dcorr_dlog_ell(self, r: f64, ell: f64) -> f64 {
+        let r = r.abs();
+        match self {
+            KernelType::SE => {
+                let q = (r / ell).powi(2);
+                (-0.5 * q).exp() * q
+            }
+            KernelType::Matern12 => {
+                let s = r / ell;
+                (-s).exp() * s
+            }
+            KernelType::Matern32 => {
+                let s = 3.0f64.sqrt() * r / ell;
+                s * s * (-s).exp()
+            }
+            KernelType::Matern52 => {
+                let s = 5.0f64.sqrt() * r / ell;
+                (s * s * (1.0 + s) / 3.0) * (-s).exp()
+            }
+            KernelType::RQ { .. } => {
+                let a = self.alpha();
+                let q = r * r / (2.0 * a * ell * ell);
+                let base = 1.0 + q;
+                // d/dlog ell of base^{-a} = -a base^{-a-1} * dq/dlog ell, dq/dlog ell = -2q
+                2.0 * a * q * base.powf(-a - 1.0)
+            }
+        }
+    }
+
+    /// Display name matching the paper's figure legends.
+    pub fn name(self) -> String {
+        match self {
+            KernelType::SE => "covSE".into(),
+            KernelType::Matern12 => "covMatern12".into(),
+            KernelType::Matern32 => "covMatern32".into(),
+            KernelType::Matern52 => "covMatern52".into(),
+            KernelType::RQ { .. } => format!("covRQ(alpha={})", self.alpha()),
+        }
+    }
+}
+
+/// A product kernel across input dimensions with a shared signal variance:
+/// `k(x, z) = sf2 * prod_d corr_d(|x_d - z_d|)`.
+#[derive(Clone, Debug)]
+pub struct ProductKernel {
+    /// Per-dimension kernel family.
+    pub types: Vec<KernelType>,
+    /// Per-dimension log lengthscale.
+    pub log_ell: Vec<f64>,
+    /// Log signal variance.
+    pub log_sf2: f64,
+}
+
+impl ProductKernel {
+    /// Isotropic constructor: the same family and lengthscale in each of
+    /// `d` dimensions.
+    pub fn iso(ktype: KernelType, d: usize, ell: f64, sf2: f64) -> Self {
+        ProductKernel {
+            types: vec![ktype; d],
+            log_ell: vec![ell.ln(); d],
+            log_sf2: sf2.ln(),
+        }
+    }
+
+    /// Input dimensionality.
+    pub fn dim(&self) -> usize {
+        self.types.len()
+    }
+
+    /// Signal variance.
+    pub fn sf2(&self) -> f64 {
+        self.log_sf2.exp()
+    }
+
+    /// Lengthscale of dimension `d`.
+    pub fn ell(&self, d: usize) -> f64 {
+        self.log_ell[d].exp()
+    }
+
+    /// Unit-variance correlation along dimension `d` at lag `r`.
+    pub fn corr_d(&self, d: usize, r: f64) -> f64 {
+        self.types[d].corr(r, self.ell(d))
+    }
+
+    /// Full kernel between two points.
+    pub fn eval(&self, x: &[f64], z: &[f64]) -> f64 {
+        let mut k = self.sf2();
+        for d in 0..self.dim() {
+            k *= self.corr_d(d, x[d] - z[d]);
+        }
+        k
+    }
+
+    /// Number of hyperparameters (`D` lengthscales + 1 signal variance).
+    pub fn n_params(&self) -> usize {
+        self.dim() + 1
+    }
+
+    /// Hyperparameters as a flat vector `[log_ell_0.., log_sf2]`.
+    pub fn params(&self) -> Vec<f64> {
+        let mut p = self.log_ell.clone();
+        p.push(self.log_sf2);
+        p
+    }
+
+    /// Set hyperparameters from a flat vector.
+    pub fn set_params(&mut self, p: &[f64]) {
+        assert_eq!(p.len(), self.n_params());
+        let d = self.dim();
+        self.log_ell.copy_from_slice(&p[..d]);
+        self.log_sf2 = p[d];
+    }
+}
+
+/// An isotropic (non-separable) kernel of the Euclidean lag:
+/// `k(x, z) = sf2 * corr(||x - z||)`. Exercises the BTTB path.
+#[derive(Clone, Debug)]
+pub struct IsoKernel {
+    /// Kernel family.
+    pub ktype: KernelType,
+    /// Log lengthscale.
+    pub log_ell: f64,
+    /// Log signal variance.
+    pub log_sf2: f64,
+}
+
+impl IsoKernel {
+    /// Construct from natural-scale parameters.
+    pub fn new(ktype: KernelType, ell: f64, sf2: f64) -> Self {
+        IsoKernel { ktype, log_ell: ell.ln(), log_sf2: sf2.ln() }
+    }
+
+    /// Evaluate at a lag vector.
+    pub fn eval_lag(&self, lag: &[f64]) -> f64 {
+        let r = lag.iter().map(|l| l * l).sum::<f64>().sqrt();
+        self.log_sf2.exp() * self.ktype.corr(r, self.log_ell.exp())
+    }
+
+    /// Evaluate between two points.
+    pub fn eval(&self, x: &[f64], z: &[f64]) -> f64 {
+        let lag: Vec<f64> = x.iter().zip(z).map(|(a, b)| a - b).collect();
+        self.eval_lag(&lag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TYPES: [KernelType; 5] = [
+        KernelType::SE,
+        KernelType::Matern12,
+        KernelType::Matern32,
+        KernelType::Matern52,
+        KernelType::RQ { alpha_milli: 2000 },
+    ];
+
+    #[test]
+    fn unit_variance_at_zero() {
+        for t in TYPES {
+            assert!((t.corr(0.0, 1.7) - 1.0).abs() < 1e-14, "{t:?}");
+        }
+    }
+
+    #[test]
+    fn monotone_decreasing() {
+        for t in TYPES {
+            let mut prev = 1.0;
+            for i in 1..40 {
+                let v = t.corr(i as f64 * 0.25, 2.0);
+                assert!(v <= prev + 1e-14, "{t:?} at {i}");
+                assert!(v >= 0.0);
+                prev = v;
+            }
+        }
+    }
+
+    #[test]
+    fn log_ell_gradient_matches_fd() {
+        for t in TYPES {
+            for &r in &[0.1, 0.7, 2.3, 5.0] {
+                let ell: f64 = 1.3;
+                let eps = 1e-6;
+                let fp = t.corr(r, (ell.ln() + eps).exp());
+                let fm = t.corr(r, (ell.ln() - eps).exp());
+                let fd = (fp - fm) / (2.0 * eps);
+                let an = t.dcorr_dlog_ell(r, ell);
+                assert!((an - fd).abs() < 1e-7, "{t:?} r={r}: {an} vs {fd}");
+            }
+        }
+    }
+
+    #[test]
+    fn product_kernel_eval_and_params() {
+        let mut k = ProductKernel::iso(KernelType::SE, 2, 1.5, 2.0);
+        let x = [0.0, 0.0];
+        let z = [1.0, 2.0];
+        let want = 2.0 * (-0.5 * (1.0f64 / 1.5).powi(2)).exp() * (-0.5 * (2.0f64 / 1.5).powi(2)).exp();
+        assert!((k.eval(&x, &z) - want).abs() < 1e-12);
+        let p = k.params();
+        assert_eq!(p.len(), 3);
+        k.set_params(&p);
+        assert!((k.eval(&x, &z) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn iso_kernel_depends_only_on_norm() {
+        let k = IsoKernel::new(KernelType::Matern32, 2.0, 1.0);
+        let a = k.eval(&[0.0, 0.0], &[3.0, 4.0]);
+        let b = k.eval(&[0.0, 0.0], &[5.0, 0.0]);
+        assert!((a - b).abs() < 1e-14);
+    }
+}

@@ -1,0 +1,39 @@
+//! # MSGP — Massively Scalable Gaussian Processes
+//!
+//! A Rust reproduction of *"Thoughts on Massively Scalable Gaussian
+//! Processes"* (Wilson, Dann & Nickisch, 2015), built as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! The crate provides:
+//!
+//! * **Structure-exploiting linear algebra** ([`structure`]): Toeplitz,
+//!   circulant (with Strang / T. Chan / Tyrtyshnikov / Helgason / Whittle
+//!   approximations), Kronecker, and BTTB/BCCB operators, all built on an
+//!   in-crate FFT ([`linalg::fft`]).
+//! * **Local cubic kernel interpolation** ([`interp`]) à la KISS-GP:
+//!   sparse interpolation matrices `W` with `4^D` entries per row.
+//! * **GP models** ([`gp`]): the MSGP model itself (SKI kernel, CG
+//!   inference, Whittle log-determinant kernel learning, O(1) fast
+//!   predictive mean/variance, supervised projections) plus exact-GP,
+//!   FITC, SSGP and SVI (Big-Data-GP) baselines.
+//! * **A serving coordinator** ([`coordinator`]): a tokio-based request
+//!   router and dynamic batcher that serves trained MSGP models, backed
+//!   either by the native Rust engine or by AOT-compiled JAX/Pallas
+//!   artifacts executed through PJRT ([`runtime`]).
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-reproduction results.
+
+pub mod linalg;
+pub mod structure;
+pub mod grid;
+pub mod interp;
+pub mod kernels;
+pub mod solver;
+pub mod opt;
+pub mod gp;
+pub mod coordinator;
+pub mod runtime;
+pub mod bench;
+pub mod data;
+pub mod util;

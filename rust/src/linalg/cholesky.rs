@@ -1,0 +1,174 @@
+//! Cholesky factorization of symmetric positive-definite matrices.
+//!
+//! This is the O(n^3) workhorse behind the exact-GP baseline (section 2 of
+//! the paper) and the m x m inducing blocks of FITC/SSGP/SVI. MSGP itself
+//! never calls this on an n x n matrix — that is the whole point.
+
+use super::dense::Mat;
+
+/// A lower-triangular Cholesky factor `L` with `L L^T = A`.
+#[derive(Clone, Debug)]
+pub struct Chol {
+    /// The factor, stored densely (upper triangle is zero).
+    pub l: Mat,
+}
+
+impl Chol {
+    /// Factor an SPD matrix. Returns `None` if a non-positive pivot is hit
+    /// (matrix not positive definite to working precision).
+    pub fn new(a: &Mat) -> Option<Chol> {
+        let n = a.rows;
+        assert_eq!(a.cols, n, "Cholesky needs a square matrix");
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                // s = A[i][j] - sum_k L[i][k] L[j][k]
+                let mut s = a[(i, j)];
+                let (ri, rj) = (l.row(i), l.row(j));
+                for k in 0..j {
+                    s -= ri[k] * rj[k];
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        return None;
+                    }
+                    l[(i, i)] = s.sqrt();
+                } else {
+                    l[(i, j)] = s / l[(j, j)];
+                }
+            }
+        }
+        Some(Chol { l })
+    }
+
+    /// Dimension of the factored matrix.
+    pub fn n(&self) -> usize {
+        self.l.rows
+    }
+
+    /// Solve `A x = b` via forward + back substitution.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let mut y = self.forward(b);
+        self.backward_in_place(&mut y);
+        y
+    }
+
+    /// Forward substitution: solve `L y = b`.
+    pub fn forward(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        assert_eq!(b.len(), n);
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let row = self.l.row(i);
+            let mut s = b[i];
+            for k in 0..i {
+                s -= row[k] * y[k];
+            }
+            y[i] = s / row[i];
+        }
+        y
+    }
+
+    /// Back substitution in place: solve `L^T x = y`.
+    pub fn backward_in_place(&self, y: &mut [f64]) {
+        let n = self.n();
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in i + 1..n {
+                s -= self.l[(k, i)] * y[k];
+            }
+            y[i] = s / self.l[(i, i)];
+        }
+    }
+
+    /// `log |A| = 2 sum_i log L_ii`.
+    pub fn logdet(&self) -> f64 {
+        (0..self.n()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+
+    /// Solve against a matrix RHS, column by column.
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        let n = self.n();
+        assert_eq!(b.rows, n);
+        let mut out = Mat::zeros(n, b.cols);
+        let mut col = vec![0.0; n];
+        for c in 0..b.cols {
+            for r in 0..n {
+                col[r] = b[(r, c)];
+            }
+            let x = self.solve(&col);
+            for r in 0..n {
+                out[(r, c)] = x[r];
+            }
+        }
+        out
+    }
+
+    /// Inverse of `A` (used only on small m x m blocks).
+    pub fn inverse(&self) -> Mat {
+        self.solve_mat(&Mat::eye(self.n()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spd(n: usize) -> Mat {
+        // A = B B^T + n I is SPD.
+        let b = Mat::from_fn(n, n, |r, c| ((r * 7 + c * 3) % 5) as f64 - 2.0);
+        let mut a = b.matmul(&b.t());
+        for i in 0..n {
+            a[(i, i)] += n as f64;
+        }
+        a
+    }
+
+    #[test]
+    fn factor_and_solve() {
+        let a = spd(8);
+        let ch = Chol::new(&a).unwrap();
+        let x_true: Vec<f64> = (0..8).map(|i| (i as f64 * 0.3).sin()).collect();
+        let b = a.matvec(&x_true);
+        let x = ch.solve(&b);
+        for (xi, ti) in x.iter().zip(&x_true) {
+            assert!((xi - ti).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn logdet_matches_lu_expansion() {
+        let a = spd(5);
+        let ch = Chol::new(&a).unwrap();
+        // Compare against determinant from solving e_i systems (product of
+        // pivots via recursion is messy; instead check exp(logdet) on a
+        // matrix with a known determinant).
+        let mut d = Mat::eye(4);
+        d[(0, 0)] = 2.0;
+        d[(1, 1)] = 3.0;
+        d[(2, 2)] = 4.0;
+        d[(3, 3)] = 5.0;
+        let chd = Chol::new(&d).unwrap();
+        assert!((chd.logdet() - (120.0f64).ln()).abs() < 1e-12);
+        assert!(ch.logdet().is_finite());
+    }
+
+    #[test]
+    fn non_spd_rejected() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(Chol::new(&a).is_none());
+    }
+
+    #[test]
+    fn inverse_times_a_is_identity() {
+        let a = spd(6);
+        let inv = Chol::new(&a).unwrap().inverse();
+        let prod = a.matmul(&inv);
+        for i in 0..6 {
+            for j in 0..6 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod[(i, j)] - want).abs() < 1e-8);
+            }
+        }
+    }
+}

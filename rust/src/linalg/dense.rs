@@ -1,0 +1,286 @@
+//! Row-major dense matrices with just enough functionality for the exact-GP
+//! baseline, the inducing-point baselines (FITC/SSGP/SVI) and the
+//! projection experiments.
+
+/// A row-major dense `rows x cols` matrix of `f64`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    /// Number of rows.
+    pub rows: usize,
+    /// Number of columns.
+    pub cols: usize,
+    /// Row-major storage, `data[r * cols + c]`.
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a row-major vector.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Borrow row `r` as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutably borrow row `r`.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Transpose.
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[(c, r)] = self[(r, c)];
+            }
+        }
+        out
+    }
+
+    /// Matrix product `self * other`.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        // ikj loop order: stream over `other`'s rows for cache friendliness.
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = other.row(k);
+                let out_row = out.row_mut(i);
+                for (o, &b) in out_row.iter_mut().zip(orow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows).map(|r| dot(self.row(r), v)).collect()
+    }
+
+    /// `self^T * v`.
+    pub fn tmatvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.rows, v.len());
+        let mut out = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            let row = self.row(r);
+            let s = v[r];
+            for (o, &a) in out.iter_mut().zip(row) {
+                *o += s * a;
+            }
+        }
+        out
+    }
+
+    /// Elementwise scaled addition: `self += s * other`.
+    pub fn axpy(&mut self, s: f64, other: &Mat) {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += s * b;
+        }
+    }
+
+    /// Scale every entry.
+    pub fn scale(&mut self, s: f64) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn frob(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Trace (square matrices).
+    pub fn trace(&self) -> f64 {
+        assert_eq!(self.rows, self.cols);
+        (0..self.rows).map(|i| self[(i, i)]).sum()
+    }
+
+    /// Solve `self * x = b` by Gaussian elimination with partial pivoting.
+    /// `self` is consumed as workspace. For SPD systems prefer
+    /// [`crate::linalg::cholesky::Chol`].
+    pub fn solve(mut self, b: &[f64]) -> Option<Vec<f64>> {
+        let n = self.rows;
+        assert_eq!(self.cols, n);
+        assert_eq!(b.len(), n);
+        let mut x = b.to_vec();
+        for col in 0..n {
+            // Pivot.
+            let mut piv = col;
+            let mut best = self[(col, col)].abs();
+            for r in col + 1..n {
+                let v = self[(r, col)].abs();
+                if v > best {
+                    best = v;
+                    piv = r;
+                }
+            }
+            if best < 1e-300 {
+                return None;
+            }
+            if piv != col {
+                for c in 0..n {
+                    let tmp = self[(col, c)];
+                    self[(col, c)] = self[(piv, c)];
+                    self[(piv, c)] = tmp;
+                }
+                x.swap(col, piv);
+            }
+            let d = self[(col, col)];
+            for r in col + 1..n {
+                let f = self[(r, col)] / d;
+                if f == 0.0 {
+                    continue;
+                }
+                for c in col..n {
+                    let v = self[(col, c)];
+                    self[(r, c)] -= f * v;
+                }
+                x[r] -= f * x[col];
+            }
+        }
+        // Back substitution.
+        for col in (0..n).rev() {
+            let mut s = x[col];
+            for c in col + 1..n {
+                s -= self[(col, c)] * x[c];
+            }
+            x[col] = s / self[(col, col)];
+        }
+        Some(x)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline(always)]
+    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline(always)]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+/// Dot product of two slices.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation; the compiler vectorizes this reliably.
+    let mut acc = [0.0f64; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc[0] += a[j] * b[j];
+        acc[1] += a[j + 1] * b[j + 1];
+        acc[2] += a[j + 2] * b[j + 2];
+        acc[3] += a[j + 3] * b[j + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `y += s * x`.
+#[inline]
+pub fn axpy(y: &mut [f64], s: f64, x: &[f64]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += s * xi;
+    }
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_fn(3, 3, |r, c| (r * 3 + c) as f64);
+        let i = Mat::eye(3);
+        assert_eq!(a.matmul(&i), a);
+        assert_eq!(i.matmul(&a), a);
+    }
+
+    #[test]
+    fn matvec_tmatvec() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.matvec(&[1., 0., -1.]), vec![-2., -2.]);
+        assert_eq!(a.tmatvec(&[1., -1.]), vec![-3., -3., -3.]);
+    }
+
+    #[test]
+    fn solve_random() {
+        let a = Mat::from_vec(3, 3, vec![4., 1., 0., 1., 3., 1., 0., 1., 2.]);
+        let x_true = [1., -2., 0.5];
+        let b = a.matvec(&x_true);
+        let x = a.solve(&b).unwrap();
+        for (xi, ti) in x.iter().zip(&x_true) {
+            assert!((xi - ti).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn solve_singular_returns_none() {
+        let a = Mat::from_vec(2, 2, vec![1., 2., 2., 4.]);
+        assert!(a.solve(&[1., 2.]).is_none());
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Mat::from_fn(2, 4, |r, c| (r + 10 * c) as f64);
+        assert_eq!(a.t().t(), a);
+    }
+}

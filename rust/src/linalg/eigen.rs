@@ -1,0 +1,150 @@
+//! Symmetric eigendecomposition via the cyclic Jacobi method.
+//!
+//! Used for (i) the per-factor eigendecompositions of Kronecker-structured
+//! `K_{U,U}` (section 3.1 of the paper), which are small (grid points per
+//! dimension), and (ii) the subspace-distance metric of the projection
+//! experiments (Eq. 13), which needs orthogonal projectors from `P P^T`.
+
+use super::dense::Mat;
+
+/// Result of a symmetric eigendecomposition `A = Q diag(vals) Q^T`.
+#[derive(Clone, Debug)]
+pub struct SymEig {
+    /// Eigenvalues in ascending order.
+    pub vals: Vec<f64>,
+    /// Orthonormal eigenvectors as *columns* of `q`.
+    pub q: Mat,
+}
+
+/// Jacobi eigendecomposition of a symmetric matrix. O(n^3) with a small
+/// constant; fine for the <= few-thousand sizes it is used at.
+pub fn sym_eig(a: &Mat) -> SymEig {
+    let n = a.rows;
+    assert_eq!(a.cols, n, "sym_eig needs a square matrix");
+    let mut m = a.clone();
+    let mut q = Mat::eye(n);
+    let max_sweeps = 64;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in i + 1..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-13 * (1.0 + m_frob(&m)) {
+            break;
+        }
+        for p in 0..n {
+            for r in p + 1..n {
+                let apq = m[(p, r)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(r, r)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Apply the rotation G(p, r, theta) to both sides.
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkr = m[(k, r)];
+                    m[(k, p)] = c * mkp - s * mkr;
+                    m[(k, r)] = s * mkp + c * mkr;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mrk = m[(r, k)];
+                    m[(p, k)] = c * mpk - s * mrk;
+                    m[(r, k)] = s * mpk + c * mrk;
+                }
+                for k in 0..n {
+                    let qkp = q[(k, p)];
+                    let qkr = q[(k, r)];
+                    q[(k, p)] = c * qkp - s * qkr;
+                    q[(k, r)] = s * qkp + c * qkr;
+                }
+            }
+        }
+    }
+    // Extract and sort ascending.
+    let mut idx: Vec<usize> = (0..n).collect();
+    let vals_raw: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    idx.sort_by(|&a, &b| vals_raw[a].partial_cmp(&vals_raw[b]).unwrap());
+    let vals: Vec<f64> = idx.iter().map(|&i| vals_raw[i]).collect();
+    let mut qs = Mat::zeros(n, n);
+    for (new_c, &old_c) in idx.iter().enumerate() {
+        for r in 0..n {
+            qs[(r, new_c)] = q[(r, old_c)];
+        }
+    }
+    SymEig { vals, q: qs }
+}
+
+fn m_frob(m: &Mat) -> f64 {
+    m.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+}
+
+/// Spectral (2-)norm of a symmetric matrix: max |eigenvalue|.
+pub fn sym_norm2(a: &Mat) -> f64 {
+    sym_eig(a).vals.iter().fold(0.0f64, |acc, v| acc.max(v.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diagonal_matrix() {
+        let mut a = Mat::zeros(3, 3);
+        a[(0, 0)] = 3.0;
+        a[(1, 1)] = 1.0;
+        a[(2, 2)] = 2.0;
+        let e = sym_eig(&a);
+        assert!((e.vals[0] - 1.0).abs() < 1e-12);
+        assert!((e.vals[1] - 2.0).abs() < 1e-12);
+        assert!((e.vals[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstruction() {
+        let n = 6;
+        let b = Mat::from_fn(n, n, |r, c| ((r as f64) - (c as f64) * 0.5).sin());
+        let mut a = b.matmul(&b.t());
+        for i in 0..n {
+            a[(i, i)] += 0.5;
+        }
+        let e = sym_eig(&a);
+        // Rebuild A = Q diag Q^T.
+        let mut rec = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += e.q[(i, k)] * e.vals[k] * e.q[(j, k)];
+                }
+                rec[(i, j)] = s;
+            }
+        }
+        for i in 0..n {
+            for j in 0..n {
+                assert!((rec[(i, j)] - a[(i, j)]).abs() < 1e-8, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn orthonormal_vectors() {
+        let n = 5;
+        let a = Mat::from_fn(n, n, |r, c| 1.0 / (1.0 + (r as f64 - c as f64).abs()));
+        let e = sym_eig(&a);
+        let qtq = e.q.t().matmul(&e.q);
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((qtq[(i, j)] - want).abs() < 1e-9);
+            }
+        }
+    }
+}

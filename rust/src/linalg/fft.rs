@@ -1,0 +1,392 @@
+//! Fast Fourier transforms: iterative radix-2 Cooley–Tukey for power-of-two
+//! lengths and Bluestein's chirp-z algorithm for arbitrary lengths, plus a
+//! multi-dimensional transform over the axes of a dense tensor.
+//!
+//! Circulant eigenvalue computations ([`crate::structure::circulant`]) need
+//! FFTs at the *exact* grid size `m` (which users choose freely), hence the
+//! Bluestein fallback; Toeplitz matrix–vector products are free to pad to
+//! the next power of two and always hit the radix-2 path.
+//!
+//! [`FftPlan`] caches twiddle factors and (for Bluestein) the transformed
+//! chirp so repeated transforms of one size — the common case inside CG
+//! iterations — do no trigonometry.
+
+use super::complex::C64;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Round `n` up to the next power of two.
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+/// A cached FFT plan for a fixed transform length.
+#[derive(Debug)]
+pub struct FftPlan {
+    n: usize,
+    /// Twiddles for the radix-2 kernel of size `work_len` (== `n` when `n`
+    /// is a power of two, else the Bluestein convolution length).
+    twiddles: Vec<C64>,
+    work_len: usize,
+    /// Bluestein state: chirp `w_k = e^{-i pi k^2 / n}` and the forward
+    /// FFT of the zero-padded conjugate chirp.
+    bluestein: Option<BluesteinState>,
+}
+
+#[derive(Debug)]
+struct BluesteinState {
+    chirp: Vec<C64>,
+    chirp_fft: Vec<C64>,
+}
+
+impl FftPlan {
+    /// Build a plan for length-`n` transforms.
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "FFT length must be >= 1");
+        if n.is_power_of_two() {
+            FftPlan { n, twiddles: make_twiddles(n), work_len: n, bluestein: None }
+        } else {
+            let m = next_pow2(2 * n - 1);
+            let twiddles = make_twiddles(m);
+            // chirp[k] = e^{-i pi k^2 / n}
+            let mut chirp = vec![C64::ZERO; n];
+            for k in 0..n {
+                // Reduce k^2 mod 2n to keep the angle argument small and
+                // the trigonometry accurate for large n.
+                let k2 = (k * k) % (2 * n);
+                chirp[k] = C64::cis(-std::f64::consts::PI * k2 as f64 / n as f64);
+            }
+            // b[k] = conj(chirp[|k|]) zero-padded to m, wrapped.
+            let mut b = vec![C64::ZERO; m];
+            b[0] = chirp[0].conj();
+            for k in 1..n {
+                b[k] = chirp[k].conj();
+                b[m - k] = chirp[k].conj();
+            }
+            fft_pow2(&mut b, &twiddles, false);
+            FftPlan { n, twiddles, work_len: m, bluestein: Some(BluesteinState { chirp, chirp_fft: b }) }
+        }
+    }
+
+    /// Transform length this plan was built for.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True if the plan length is zero (never; kept for clippy symmetry).
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// In-place forward DFT (no normalization): `X_k = sum_j x_j e^{-2 pi i jk/n}`.
+    pub fn forward(&self, x: &mut [C64]) {
+        self.transform(x, false)
+    }
+
+    /// In-place inverse DFT **with** `1/n` normalization.
+    pub fn inverse(&self, x: &mut [C64]) {
+        self.transform(x, true);
+        let s = 1.0 / self.n as f64;
+        for v in x.iter_mut() {
+            *v = v.scale(s);
+        }
+    }
+
+    fn transform(&self, x: &mut [C64], inverse: bool) {
+        assert_eq!(x.len(), self.n, "FFT length mismatch: plan {} vs input {}", self.n, x.len());
+        match &self.bluestein {
+            None => fft_pow2(x, &self.twiddles, inverse),
+            Some(bs) => self.bluestein_transform(x, bs, inverse),
+        }
+    }
+
+    fn bluestein_transform(&self, x: &mut [C64], bs: &BluesteinState, inverse: bool) {
+        let n = self.n;
+        let m = self.work_len;
+        // Inverse transform = conjugate trick: F^{-1}(x) * n = conj(F(conj(x))).
+        if inverse {
+            for v in x.iter_mut() {
+                *v = v.conj();
+            }
+        }
+        let mut a = vec![C64::ZERO; m];
+        for k in 0..n {
+            a[k] = x[k] * bs.chirp[k];
+        }
+        fft_pow2(&mut a, &self.twiddles, false);
+        for (av, bv) in a.iter_mut().zip(bs.chirp_fft.iter()) {
+            *av = *av * *bv;
+        }
+        fft_pow2(&mut a, &self.twiddles, true);
+        let s = 1.0 / m as f64;
+        for k in 0..n {
+            x[k] = a[k].scale(s) * bs.chirp[k];
+        }
+        if inverse {
+            for v in x.iter_mut() {
+                *v = v.conj();
+            }
+        }
+    }
+}
+
+fn make_twiddles(n: usize) -> Vec<C64> {
+    // Twiddles for the forward transform, one per element of the half-size
+    // butterfly at the largest stage; stages reuse strided prefixes.
+    let half = n / 2;
+    let mut tw = Vec::with_capacity(half.max(1));
+    for k in 0..half.max(1) {
+        tw.push(C64::cis(-2.0 * std::f64::consts::PI * k as f64 / n as f64));
+    }
+    tw
+}
+
+/// Iterative radix-2 Cooley–Tukey, `x.len()` must be a power of two.
+/// `twiddles` must be the table for exactly this length.
+fn fft_pow2(x: &mut [C64], twiddles: &[C64], inverse: bool) {
+    let n = x.len();
+    debug_assert!(n.is_power_of_two());
+    if n <= 1 {
+        return;
+    }
+    // Bit-reversal permutation.
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            x.swap(i, j);
+        }
+    }
+    // Butterflies. Twiddle for stage of length `len` at position k is
+    // twiddles[k * (n/len)] (stride-decimated main table).
+    let mut len = 2;
+    while len <= n {
+        let stride = n / len;
+        let half = len / 2;
+        for start in (0..n).step_by(len) {
+            for k in 0..half {
+                let mut w = twiddles[k * stride];
+                if inverse {
+                    w = w.conj();
+                }
+                let u = x[start + k];
+                let v = x[start + k + half] * w;
+                x[start + k] = u + v;
+                x[start + k + half] = u - v;
+            }
+        }
+        len <<= 1;
+    }
+}
+
+thread_local! {
+    static PLAN_CACHE: RefCell<HashMap<usize, Rc<FftPlan>>> = RefCell::new(HashMap::new());
+}
+
+/// Fetch (or build) a thread-local cached plan for length `n`.
+pub fn plan(n: usize) -> Rc<FftPlan> {
+    PLAN_CACHE.with(|c| {
+        c.borrow_mut()
+            .entry(n)
+            .or_insert_with(|| Rc::new(FftPlan::new(n)))
+            .clone()
+    })
+}
+
+/// Forward DFT of a real signal; returns the full complex spectrum.
+pub fn rfft(x: &[f64]) -> Vec<C64> {
+    let mut buf: Vec<C64> = x.iter().map(|&v| C64::real(v)).collect();
+    plan(x.len()).forward(&mut buf);
+    buf
+}
+
+/// Inverse DFT returning only the real parts (caller asserts the spectrum
+/// is conjugate-symmetric, e.g. eigenvalues of a symmetric circulant).
+pub fn irfft_real(spec: &[C64]) -> Vec<f64> {
+    let mut buf = spec.to_vec();
+    plan(spec.len()).inverse(&mut buf);
+    buf.into_iter().map(|z| z.re).collect()
+}
+
+/// Multi-dimensional FFT over a dense row-major tensor of shape `shape`.
+/// Transforms every axis in turn (`F = F_1 (x) ... (x) F_D`).
+pub fn fftn(data: &mut [C64], shape: &[usize], inverse: bool) {
+    let total: usize = shape.iter().product();
+    assert_eq!(data.len(), total, "fftn: data/shape mismatch");
+    let d = shape.len();
+    // Strides for row-major layout.
+    let mut strides = vec![1usize; d];
+    for i in (0..d.saturating_sub(1)).rev() {
+        strides[i] = strides[i + 1] * shape[i + 1];
+    }
+    let mut scratch: Vec<C64> = Vec::new();
+    for ax in 0..d {
+        let n = shape[ax];
+        if n == 1 {
+            continue;
+        }
+        let p = plan(n);
+        let stride = strides[ax];
+        scratch.resize(n, C64::ZERO);
+        // Iterate over all 1-D lines along axis `ax`.
+        let outer: usize = shape[..ax].iter().product();
+        let inner: usize = shape[ax + 1..].iter().product();
+        for o in 0..outer {
+            for i in 0..inner {
+                let base = o * stride * n + i;
+                if stride == 1 {
+                    let line = &mut data[base..base + n];
+                    if inverse {
+                        p.inverse(line);
+                    } else {
+                        p.forward(line);
+                    }
+                } else {
+                    for k in 0..n {
+                        scratch[k] = data[base + k * stride];
+                    }
+                    if inverse {
+                        p.inverse(&mut scratch);
+                    } else {
+                        p.forward(&mut scratch);
+                    }
+                    for k in 0..n {
+                        data[base + k * stride] = scratch[k];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Reference O(n^2) DFT used by the tests.
+#[doc(hidden)]
+pub fn dft_naive(x: &[C64], inverse: bool) -> Vec<C64> {
+    let n = x.len();
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut out = vec![C64::ZERO; n];
+    for (k, o) in out.iter_mut().enumerate() {
+        for (j, &v) in x.iter().enumerate() {
+            *o += v * C64::cis(sign * 2.0 * std::f64::consts::PI * (j * k % n) as f64 / n as f64);
+        }
+    }
+    if inverse {
+        for v in out.iter_mut() {
+            *v = v.scale(1.0 / n as f64);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: &[C64], b: &[C64], tol: f64) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert!((*x - *y).abs() < tol, "{x:?} vs {y:?}");
+        }
+    }
+
+    #[test]
+    fn pow2_matches_naive() {
+        for &n in &[1usize, 2, 4, 8, 64, 128] {
+            let x: Vec<C64> = (0..n).map(|i| C64::new((i as f64).sin(), (i as f64 * 0.7).cos())).collect();
+            let mut got = x.clone();
+            plan(n).forward(&mut got);
+            close(&got, &dft_naive(&x, false), 1e-9 * n as f64);
+        }
+    }
+
+    #[test]
+    fn bluestein_matches_naive() {
+        for &n in &[3usize, 5, 6, 7, 12, 100, 255] {
+            let x: Vec<C64> = (0..n).map(|i| C64::new((i as f64).cos(), (i as f64 * 1.3).sin())).collect();
+            let mut got = x.clone();
+            plan(n).forward(&mut got);
+            close(&got, &dft_naive(&x, false), 1e-8 * n as f64);
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        for &n in &[8usize, 12, 31, 128, 1000] {
+            let x: Vec<C64> = (0..n).map(|i| C64::new(i as f64, -(i as f64) * 0.5)).collect();
+            let mut y = x.clone();
+            let p = plan(n);
+            p.forward(&mut y);
+            p.inverse(&mut y);
+            close(&y, &x, 1e-8 * n as f64);
+        }
+    }
+
+    #[test]
+    fn rfft_symmetric_input_gives_real_spectrum() {
+        // Even (circularly symmetric) real input -> real spectrum.
+        let n = 16;
+        let mut x = vec![0.0f64; n];
+        for i in 0..n {
+            let d = i.min(n - i) as f64;
+            x[i] = (-d * d / 8.0).exp();
+        }
+        let spec = rfft(&x);
+        for z in &spec {
+            assert!(z.im.abs() < 1e-10, "{z:?}");
+        }
+    }
+
+    #[test]
+    fn fftn_matches_axiswise_naive() {
+        let shape = [3usize, 4, 5];
+        let total: usize = shape.iter().product();
+        let x: Vec<C64> = (0..total).map(|i| C64::new((i as f64).sin(), (i as f64).cos())).collect();
+        let mut got = x.clone();
+        fftn(&mut got, &shape, false);
+        let mut want = x;
+        // axis 2 (contiguous lines)
+        for o in 0..12 {
+            let line: Vec<C64> = want[o * 5..o * 5 + 5].to_vec();
+            let f = dft_naive(&line, false);
+            want[o * 5..o * 5 + 5].copy_from_slice(&f);
+        }
+        // axis 1
+        for a in 0..3 {
+            for c in 0..5 {
+                let line: Vec<C64> = (0..4).map(|b| want[a * 20 + b * 5 + c]).collect();
+                let f = dft_naive(&line, false);
+                for b in 0..4 {
+                    want[a * 20 + b * 5 + c] = f[b];
+                }
+            }
+        }
+        // axis 0
+        for b in 0..4 {
+            for c in 0..5 {
+                let line: Vec<C64> = (0..3).map(|a| want[a * 20 + b * 5 + c]).collect();
+                let f = dft_naive(&line, false);
+                for a in 0..3 {
+                    want[a * 20 + b * 5 + c] = f[a];
+                }
+            }
+        }
+        close(&got, &want, 1e-8);
+    }
+
+    #[test]
+    fn fftn_roundtrip() {
+        let shape = [4usize, 6];
+        let total = 24;
+        let x: Vec<C64> = (0..total).map(|i| C64::real(i as f64)).collect();
+        let mut y = x.clone();
+        fftn(&mut y, &shape, false);
+        fftn(&mut y, &shape, true);
+        close(&y, &x, 1e-9);
+    }
+}

@@ -1,0 +1,15 @@
+//! Dense linear-algebra substrate: complex scalars, FFTs, dense matrices,
+//! Cholesky and symmetric eigendecompositions.
+//!
+//! Everything here is written from scratch (no BLAS/LAPACK dependency) so
+//! the structure-exploiting fast paths in [`crate::structure`] are fully
+//! self-contained and portable.
+
+pub mod complex;
+pub mod fft;
+pub mod dense;
+pub mod cholesky;
+pub mod eigen;
+
+pub use complex::C64;
+pub use dense::Mat;

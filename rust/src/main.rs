@@ -1,0 +1,103 @@
+//! `repro` — the MSGP reproduction CLI.
+//!
+//! Subcommands:
+//!
+//! * `repro exp --fig <1|2|3|4|5|6> [--full]` — regenerate a paper figure
+//!   (6 = the appendix A.3 extended circulant benchmark).
+//! * `repro serve [--requests N] [--workers K] [--native]` — run the
+//!   serving benchmark through the coordinator (PJRT artifacts when
+//!   available, native otherwise).
+//! * `repro smoke` — train a small model end-to-end and print SMAE (quick
+//!   health check of the whole stack).
+
+use msgp::bench::experiments;
+use msgp::coordinator::EngineSpec;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage:\n  repro exp --fig <1|2|3|4|5|6> [--full]\n  repro serve [--requests N] [--workers K] [--native] [--artifacts DIR]\n  repro smoke"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut it = args.iter();
+    match it.next().map(String::as_str) {
+        Some("exp") => {
+            let mut fig = None;
+            let mut full = false;
+            let mut iter = args[1..].iter();
+            while let Some(a) = iter.next() {
+                match a.as_str() {
+                    "--fig" => fig = iter.next().and_then(|v| v.parse::<u32>().ok()),
+                    "--full" => full = true,
+                    _ => usage(),
+                }
+            }
+            match fig {
+                Some(1) => experiments::fig1_circulant(full),
+                Some(2) => experiments::fig2_training(full),
+                Some(3) => experiments::fig3_prediction(full),
+                Some(4) => experiments::fig4_accuracy(full),
+                Some(5) => experiments::fig5_projections(full),
+                Some(6) => experiments::fig1_circulant(true), // appendix sweep
+                _ => usage(),
+            }
+        }
+        Some("serve") => {
+            let mut requests = 20_000usize;
+            let mut workers = 4usize;
+            let mut native = false;
+            let mut artifacts = "artifacts".to_string();
+            let mut iter = args[1..].iter();
+            while let Some(a) = iter.next() {
+                match a.as_str() {
+                    "--requests" => {
+                        requests = iter.next().and_then(|v| v.parse().ok()).unwrap_or(requests)
+                    }
+                    "--workers" => {
+                        workers = iter.next().and_then(|v| v.parse().ok()).unwrap_or(workers)
+                    }
+                    "--native" => native = true,
+                    "--artifacts" => {
+                        artifacts = iter.next().cloned().unwrap_or(artifacts)
+                    }
+                    _ => usage(),
+                }
+            }
+            let engine = if native {
+                EngineSpec::Native
+            } else {
+                EngineSpec::Pjrt(artifacts.clone().into())
+            };
+            let (thr, p50, p99, metrics) =
+                experiments::serving_benchmark(engine, requests, workers);
+            println!("throughput: {thr:.0} predictions/s");
+            println!("latency: p50 <= {p50} us, p99 <= {p99} us");
+            println!("metrics: {}", metrics.summary());
+        }
+        Some("smoke") => {
+            use msgp::data::{gen_stress_1d, smae};
+            use msgp::gp::msgp::{KernelSpec, MsgpConfig, MsgpModel};
+            use msgp::kernels::{KernelType, ProductKernel};
+            let data = gen_stress_1d(2000, 0.05, 1);
+            let kernel =
+                KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 0.5, 0.5));
+            let cfg = MsgpConfig { n_per_dim: vec![512], ..Default::default() };
+            let mut model = MsgpModel::fit(kernel, 0.05, data, cfg)?;
+            let trace = model.train(20, 0.1)?;
+            let test = gen_stress_1d(500, 0.0, 99);
+            let pred = model.predict_mean(&test.x);
+            println!(
+                "smoke: n=2000 m=512, lml {:.1} -> {:.1}, test SMAE {:.4}, cg iters {}",
+                trace[0],
+                model.lml(),
+                smae(&pred, &test.y),
+                model.last_cg.iters
+            );
+        }
+        _ => usage(),
+    }
+    Ok(())
+}

@@ -1,0 +1,254 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and executes
+//! them on the CPU PJRT client from the Rust hot path.
+//!
+//! Python never runs at serving time: the HLO text is parsed and compiled
+//! by XLA inside this process (`HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`), one executable per (graph, batch
+//! bucket) pair as listed in `artifacts/manifest.json`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Metadata for one compiled artifact (a row of `manifest.json`).
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    /// Artifact name, e.g. `predict_meanvar_1d_b32`.
+    pub name: String,
+    /// Relative file name.
+    pub file: String,
+    /// Graph kind: `predict_meanvar`, `predict_mean`, `whittle_logdet`,
+    /// `kski_matvec`.
+    pub kind: String,
+    /// Input dimensionality (1 or 2).
+    pub dim: usize,
+    /// Batch bucket this executable was compiled for.
+    pub batch: usize,
+    /// Grid size(s).
+    pub m: Vec<usize>,
+}
+
+/// A loaded artifact: metadata + compiled PJRT executable.
+pub struct LoadedArtifact {
+    /// Manifest metadata.
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: a CPU client plus all compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts: HashMap<String, LoadedArtifact>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Load every artifact listed in `<dir>/manifest.json` and compile it
+    /// on a fresh CPU PJRT client.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .map_err(|e| anyhow::anyhow!("reading {manifest_path:?}: {e} (run `make artifacts`)"))?;
+        let manifest = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        let mut artifacts = HashMap::new();
+        for entry in manifest
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing artifacts[]"))?
+        {
+            let meta = parse_meta(entry)?;
+            let path = dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow::anyhow!("HLO parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("XLA compile {}: {e:?}", meta.name))?;
+            artifacts.insert(meta.name.clone(), LoadedArtifact { meta, exe });
+        }
+        Ok(Runtime { client, artifacts, dir })
+    }
+
+    /// Artifact directory this runtime was loaded from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of loaded artifacts.
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    /// True when no artifacts are loaded.
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+
+    /// Look up an artifact by name.
+    pub fn get(&self, name: &str) -> Option<&LoadedArtifact> {
+        self.artifacts.get(name)
+    }
+
+    /// All artifacts of a given kind and input dimension, sorted by batch.
+    pub fn by_kind(&self, kind: &str, dim: usize) -> Vec<&LoadedArtifact> {
+        let mut v: Vec<&LoadedArtifact> = self
+            .artifacts
+            .values()
+            .filter(|a| a.meta.kind == kind && a.meta.dim == dim)
+            .collect();
+        v.sort_by_key(|a| a.meta.batch);
+        v
+    }
+
+    /// Execute a fused mean+variance prediction artifact.
+    ///
+    /// `points` are grid-unit coordinates, length `batch * dim` (already
+    /// padded to the artifact's bucket); `u_mean`/`nu_u` are the grid
+    /// precomputes (f32, length `prod(m)`).
+    pub fn predict_meanvar(
+        &self,
+        name: &str,
+        points: &[f32],
+        u_mean: &[f32],
+        nu_u: &[f32],
+        kss: f32,
+        sigma2: f32,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let art = self
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name} not loaded"))?;
+        let b = art.meta.batch;
+        anyhow::ensure!(points.len() == b * art.meta.dim, "points len vs bucket");
+        let mtot: usize = art.meta.m.iter().product();
+        anyhow::ensure!(u_mean.len() == mtot && nu_u.len() == mtot, "grid vec len");
+        let points_lit = if art.meta.dim == 1 {
+            xla::Literal::vec1(points)
+        } else {
+            xla::Literal::vec1(points)
+                .reshape(&[b as i64, art.meta.dim as i64])
+                .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?
+        };
+        let grid_shape: Vec<i64> = art.meta.m.iter().map(|&v| v as i64).collect();
+        let um = xla::Literal::vec1(u_mean)
+            .reshape(&grid_shape)
+            .map_err(|e| anyhow::anyhow!("reshape u_mean: {e:?}"))?;
+        let nu = xla::Literal::vec1(nu_u)
+            .reshape(&grid_shape)
+            .map_err(|e| anyhow::anyhow!("reshape nu_u: {e:?}"))?;
+        let kss_lit = xla::Literal::from(kss);
+        let s2_lit = xla::Literal::from(sigma2);
+        let result = art
+            .exe
+            .execute::<xla::Literal>(&[points_lit, um, nu, kss_lit, s2_lit])
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        let (mean_l, var_l) = result
+            .to_tuple2()
+            .map_err(|e| anyhow::anyhow!("tuple2: {e:?}"))?;
+        let mean = mean_l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let var = var_l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        Ok((mean, var))
+    }
+
+    /// Execute a mean-only prediction artifact.
+    pub fn predict_mean(
+        &self,
+        name: &str,
+        points: &[f32],
+        u_mean: &[f32],
+    ) -> anyhow::Result<Vec<f32>> {
+        let art = self
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name} not loaded"))?;
+        anyhow::ensure!(points.len() == art.meta.batch * art.meta.dim, "points len");
+        let points_lit = xla::Literal::vec1(points);
+        let um = xla::Literal::vec1(u_mean);
+        let result = art
+            .exe
+            .execute::<xla::Literal>(&[points_lit, um])
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        let mean_l = result.to_tuple1().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        mean_l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))
+    }
+
+    /// Execute the spectral log-det artifact.
+    pub fn whittle_logdet(&self, name: &str, col: &[f32], sigma2: f32) -> anyhow::Result<f32> {
+        let art = self
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name} not loaded"))?;
+        let result = art
+            .exe
+            .execute::<xla::Literal>(&[xla::Literal::vec1(col), xla::Literal::from(sigma2)])
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let l = result.to_tuple1().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        l.get_first_element::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))
+    }
+
+    /// Execute the SKI-MVM demo artifact.
+    pub fn kski_matvec(
+        &self,
+        name: &str,
+        v: &[f32],
+        points: &[f32],
+        embed_col: &[f32],
+        sigma2: f32,
+    ) -> anyhow::Result<Vec<f32>> {
+        let art = self
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name} not loaded"))?;
+        let result = art
+            .exe
+            .execute::<xla::Literal>(&[
+                xla::Literal::vec1(v),
+                xla::Literal::vec1(points),
+                xla::Literal::vec1(embed_col),
+                xla::Literal::from(sigma2),
+            ])
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let l = result.to_tuple1().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))
+    }
+}
+
+fn parse_meta(entry: &Json) -> anyhow::Result<ArtifactMeta> {
+    let get_str = |k: &str| {
+        entry
+            .get(k)
+            .and_then(|v| v.as_str())
+            .map(str::to_string)
+            .ok_or_else(|| anyhow::anyhow!("manifest entry missing {k}"))
+    };
+    let name = get_str("name")?;
+    let file = get_str("file")?;
+    let kind = get_str("kind")?;
+    let dim = entry
+        .get("dim")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow::anyhow!("missing dim"))?;
+    let batch = entry
+        .get("batch")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow::anyhow!("missing batch"))?;
+    let m = match entry.get("m") {
+        Some(Json::Num(x)) => vec![*x as usize],
+        Some(Json::Arr(v)) => v.iter().filter_map(|x| x.as_usize()).collect(),
+        _ => anyhow::bail!("missing m"),
+    };
+    Ok(ArtifactMeta { name, file, kind, dim, batch, m })
+}

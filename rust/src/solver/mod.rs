@@ -1,0 +1,5 @@
+//! Iterative solvers.
+
+pub mod cg;
+
+pub use cg::{cg_solve, CgOptions, CgResult, CgWorkspace};

@@ -1,0 +1,19 @@
+//! Structure-exploiting operators: the fast algebra that makes MSGP
+//! massively scalable.
+//!
+//! * [`circulant`] — symmetric circulant matrices, their FFT
+//!   eigendecomposition, and the five circulant approximations to a
+//!   Toeplitz matrix compared in Figure 1 of the paper (Strang, T. Chan,
+//!   Tyrtyshnikov, Helgason, Whittle).
+//! * [`toeplitz`] — symmetric Toeplitz matrices with O(m log m)
+//!   matrix–vector products via circulant embedding (section 3.2).
+//! * [`kronecker`] — Kronecker products of small dense factors with fast
+//!   MVMs and factorized eigendecompositions (section 3.1).
+//! * [`bttb`] — block-Toeplitz-Toeplitz-block operators for
+//!   multi-dimensional grids without a factorizing kernel, and their BCCB
+//!   Whittle approximations (section 5.3).
+
+pub mod circulant;
+pub mod toeplitz;
+pub mod kronecker;
+pub mod bttb;

@@ -1,0 +1,12 @@
+//! Dependency-free utilities: a seedable RNG, a tiny JSON reader/writer
+//! for the artifact manifest, and timing helpers.
+//!
+//! The build environment is offline (only the `xla` crate's closure is
+//! vendored), so the usual `rand` / `serde_json` / `criterion` crates are
+//! replaced by these minimal in-tree equivalents.
+
+pub mod rng;
+pub mod json;
+pub mod timing;
+
+pub use rng::Rng;

@@ -1,0 +1,116 @@
+//! Timing helpers and a tiny benchmark harness (criterion is not available
+//! offline; `cargo bench` targets use [`bench_fn`] and print comparable
+//! median/mean statistics).
+
+use std::time::{Duration, Instant};
+
+/// Time a single invocation.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Summary statistics for a benchmark run.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    /// Label.
+    pub name: String,
+    /// Number of timed iterations.
+    pub iters: usize,
+    /// Median duration.
+    pub median: Duration,
+    /// Mean duration.
+    pub mean: Duration,
+    /// Minimum duration.
+    pub min: Duration,
+    /// Maximum duration.
+    pub max: Duration,
+}
+
+impl BenchStats {
+    /// One-line human-readable summary.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>10} {:>10} {:>10}   x{}",
+            self.name,
+            fmt_dur(self.median),
+            fmt_dur(self.mean),
+            fmt_dur(self.min),
+            self.iters
+        )
+    }
+}
+
+/// Format a duration compactly.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}us", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3}s", ns as f64 / 1e9)
+    }
+}
+
+/// Benchmark a closure: warm up, then run timed iterations until
+/// `min_time` has elapsed (at least 3, at most `max_iters`).
+pub fn bench_fn(name: &str, min_time: Duration, max_iters: usize, mut f: impl FnMut()) -> BenchStats {
+    // Warmup.
+    f();
+    let mut samples: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    while (start.elapsed() < min_time || samples.len() < 3) && samples.len() < max_iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let iters = samples.len();
+    let median = samples[iters / 2];
+    let mean = samples.iter().sum::<Duration>() / iters as u32;
+    BenchStats {
+        name: name.to_string(),
+        iters,
+        median,
+        mean,
+        min: samples[0],
+        max: samples[iters - 1],
+    }
+}
+
+/// Print the table header matching [`BenchStats::line`].
+pub fn bench_header() {
+    println!(
+        "{:<44} {:>10} {:>10} {:>10}   iters",
+        "benchmark", "median", "mean", "min"
+    );
+    println!("{}", "-".repeat(84));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_fn_runs_and_reports() {
+        let mut count = 0usize;
+        let stats = bench_fn("noop", Duration::from_millis(5), 10_000, || {
+            count += 1;
+        });
+        assert!(stats.iters >= 3);
+        assert!(count >= stats.iters); // warmup adds one
+        assert!(stats.min <= stats.median && stats.median <= stats.max);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert!(fmt_dur(Duration::from_nanos(500)).ends_with("ns"));
+        assert!(fmt_dur(Duration::from_micros(50)).ends_with("us"));
+        assert!(fmt_dur(Duration::from_millis(50)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+    }
+}

@@ -1,0 +1,123 @@
+//! Cross-model integration: all five GP implementations on the same
+//! workload, checking the relationships the paper's evaluation relies on
+//! (MSGP ~ exact at large m; baselines sane; BTTB path consistent with
+//! Kronecker path on separable problems).
+
+use msgp::data::{gen_stress_1d, gen_stress_2d, smae};
+use msgp::gp::exact::ExactGp;
+use msgp::gp::fitc::Fitc;
+use msgp::gp::msgp::{KernelSpec, MsgpConfig, MsgpModel};
+use msgp::gp::ssgp::Ssgp;
+use msgp::kernels::{KernelType, ProductKernel};
+
+#[test]
+fn all_methods_beat_the_mean_predictor_on_stress_data() {
+    let train = gen_stress_1d(400, 0.05, 1);
+    let test = gen_stress_1d(200, 0.0, 2);
+    let kernel = ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0);
+    let mut scores = Vec::new();
+    let exact = ExactGp::fit(kernel.clone(), 0.01, train.clone()).unwrap();
+    scores.push(("exact", smae(&exact.predict_mean(&test.x), &test.y)));
+    let fitc = Fitc::fit_grid_1d(kernel.clone(), 0.01, train.clone(), 64, -11.0, 11.0).unwrap();
+    scores.push(("fitc", smae(&fitc.predict_mean(&test.x), &test.y)));
+    let ssgp = Ssgp::fit(kernel.clone(), 0.01, train.clone(), 128, 3).unwrap();
+    scores.push(("ssgp", smae(&ssgp.predict_mean(&test.x), &test.y)));
+    let msgp = MsgpModel::fit(
+        KernelSpec::Product(kernel),
+        0.01,
+        train,
+        MsgpConfig { n_per_dim: vec![256], ..Default::default() },
+    )
+    .unwrap();
+    scores.push(("msgp", smae(&msgp.predict_mean(&test.x), &test.y)));
+    for (name, s) in &scores {
+        assert!(*s < 0.5, "{name} SMAE {s}");
+    }
+    // MSGP with large m should be within 20% relative SMAE of exact.
+    let exact_s = scores[0].1;
+    let msgp_s = scores[3].1;
+    assert!(msgp_s < exact_s * 1.3 + 0.02, "msgp {msgp_s} vs exact {exact_s}");
+}
+
+#[test]
+fn msgp_accuracy_improves_with_m() {
+    // The Figure-4 monotonicity claim: more inducing points, better mean.
+    let train = gen_stress_1d(800, 0.05, 4);
+    let kernel = ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0);
+    let exact = ExactGp::fit(kernel.clone(), 0.01, train.clone()).unwrap();
+    let test: Vec<f64> = (0..300).map(|i| -9.5 + 19.0 * i as f64 / 299.0).collect();
+    let gold = exact.predict_mean(&test);
+    let mut errs = Vec::new();
+    for m in [32usize, 64, 256] {
+        let model = MsgpModel::fit(
+            KernelSpec::Product(kernel.clone()),
+            0.01,
+            train.clone(),
+            MsgpConfig { n_per_dim: vec![m], ..Default::default() },
+        )
+        .unwrap();
+        errs.push(smae(&model.predict_mean(&test), &gold));
+    }
+    assert!(errs[2] < errs[0], "no improvement: {errs:?}");
+    assert!(errs[2] < 0.02, "large-m error vs exact too big: {errs:?}");
+}
+
+#[test]
+fn bttb_and_kronecker_paths_agree_on_separable_2d_kernel() {
+    // An isotropic SE kernel *is* separable (exp(-r^2) factorizes), so the
+    // BTTB path and the Kronecker path model the same prior and must give
+    // near-identical predictions.
+    let train = gen_stress_2d(250, 0.05, 5);
+    let ell = 1.2f64;
+    let kron = MsgpModel::fit(
+        KernelSpec::Product(ProductKernel::iso(KernelType::SE, 2, ell, 1.0)),
+        0.01,
+        train.clone(),
+        MsgpConfig { n_per_dim: vec![40, 40], ..Default::default() },
+    )
+    .unwrap();
+    let bttb = MsgpModel::fit(
+        KernelSpec::Iso {
+            ktype: KernelType::SE,
+            log_ell: ell.ln(),
+            log_sf2: 0.0,
+            dim: 2,
+        },
+        0.01,
+        train.clone(),
+        MsgpConfig { n_per_dim: vec![40, 40], ..Default::default() },
+    )
+    .unwrap();
+    let test = gen_stress_2d(100, 0.0, 6);
+    let pk = kron.predict_mean(&test.x);
+    let pb = bttb.predict_mean(&test.x);
+    for (a, b) in pk.iter().zip(&pb) {
+        assert!((a - b).abs() < 5e-3, "{a} vs {b}");
+    }
+    // Their marginal likelihoods agree too (same prior, same data).
+    assert!(
+        (kron.lml() - bttb.lml()).abs() < 0.05 * kron.lml().abs(),
+        "{} vs {}",
+        kron.lml(),
+        bttb.lml()
+    );
+}
+
+#[test]
+fn training_recovers_reasonable_hypers_from_misspecified_start() {
+    let train = gen_stress_1d(600, 0.1, 8);
+    let kernel = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 5.0, 3.0));
+    let mut model = MsgpModel::fit(
+        kernel,
+        1.0, // badly over-estimated noise
+        train,
+        MsgpConfig { n_per_dim: vec![256], ..Default::default() },
+    )
+    .unwrap();
+    model.train(40, 0.1).unwrap();
+    // Noise should come down towards the true 0.01 (= 0.1^2).
+    assert!(model.sigma2 < 0.2, "sigma2 {}", model.sigma2);
+    let test = gen_stress_1d(200, 0.0, 9);
+    let err = smae(&model.predict_mean(&test.x), &test.y);
+    assert!(err < 0.25, "SMAE {err}");
+}

@@ -1,0 +1,174 @@
+//! Integration: the AOT-compiled JAX/Pallas artifacts executed through
+//! PJRT must agree with the native Rust engine on the same inputs —
+//! the three-layer stack composing end to end.
+//!
+//! Requires `make artifacts`; tests are skipped (pass trivially) when the
+//! artifact directory is missing so `cargo test` works standalone.
+
+use msgp::coordinator::ServingModel;
+use msgp::data::gen_stress_1d;
+use msgp::gp::msgp::{KernelSpec, MsgpConfig, MsgpModel};
+use msgp::grid::{Grid, GridAxis};
+use msgp::kernels::{KernelType, ProductKernel};
+use msgp::runtime::Runtime;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn serving_model_m512() -> ServingModel {
+    let data = gen_stress_1d(2000, 0.05, 17);
+    let kernel = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0));
+    let grid = Grid::new(vec![GridAxis::span(-12.0, 13.0, 512)]);
+    let cfg = MsgpConfig { n_per_dim: vec![512], n_var_samples: 10, ..Default::default() };
+    let mut model = MsgpModel::fit_with_grid(kernel, 0.01, data, grid, cfg).unwrap();
+    ServingModel::from_msgp(&mut model)
+}
+
+#[test]
+fn manifest_loads_and_compiles_all_artifacts() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    };
+    let rt = Runtime::load(&dir).expect("runtime loads");
+    assert!(rt.len() >= 10, "expected >= 10 artifacts, got {}", rt.len());
+    assert!(!rt.by_kind("predict_meanvar", 1).is_empty());
+    assert!(!rt.by_kind("predict_meanvar", 2).is_empty());
+}
+
+#[test]
+fn pjrt_predictions_match_native_engine() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let rt = Runtime::load(&dir).unwrap();
+    let sm = serving_model_m512();
+    for bucket in [8usize, 32, 128, 256] {
+        let name = format!("predict_meanvar_1d_b{bucket}");
+        let xs: Vec<f64> = (0..bucket).map(|i| -9.0 + 18.0 * i as f64 / bucket as f64).collect();
+        let units = sm.to_grid_units_f32(&xs);
+        let (um, nu) = sm.grid_vecs_f32();
+        let (mean, var) = rt
+            .predict_meanvar(&name, &units, &um, &nu, sm.kss as f32, sm.sigma2 as f32)
+            .unwrap();
+        let (wm, wv) = sm.predict_batch(&xs);
+        for i in 0..bucket {
+            assert!(
+                (mean[i] as f64 - wm[i]).abs() < 2e-4,
+                "{name} mean[{i}]: {} vs {}",
+                mean[i],
+                wm[i]
+            );
+            assert!(
+                (var[i] as f64 - wv[i]).abs() < 2e-4,
+                "{name} var[{i}]: {} vs {}",
+                var[i],
+                wv[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_whittle_logdet_matches_rust_circulant() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let rt = Runtime::load(&dir).unwrap();
+    let m = 512usize;
+    // Wrapped SE column (symmetric circulant).
+    let col: Vec<f64> = (0..m)
+        .map(|i| {
+            let d = i.min(m - i) as f64;
+            (-0.5 * (d / 25.0).powi(2)).exp()
+        })
+        .collect();
+    let col32: Vec<f32> = col.iter().map(|&v| v as f32).collect();
+    let got = rt.whittle_logdet("whittle_logdet_m512", &col32, 0.1).unwrap() as f64;
+    let want = msgp::structure::circulant::Circulant::new(col).logdet(0.1);
+    assert!(
+        (got - want).abs() < 1e-2 * (1.0 + want.abs()),
+        "{got} vs {want}"
+    );
+}
+
+#[test]
+fn pjrt_kski_matvec_matches_rust_engine() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let rt = Runtime::load(&dir).unwrap();
+    let (n, m, a) = (64usize, 32usize, 64usize);
+    // Build the same operator in Rust: grid = unit steps 0..m.
+    let data = {
+        let mut rng = msgp::util::Rng::new(5);
+        let x: Vec<f64> = (0..n).map(|_| rng.uniform_in(2.0, m as f64 - 3.0)).collect();
+        msgp::data::Dataset { x, d: 1, y: vec![0.0; n] }
+    };
+    let kernel = ProductKernel::iso(KernelType::SE, 1, 3.0, 1.2);
+    let grid = Grid::new(vec![GridAxis::span(0.0, (m - 1) as f64, m)]);
+    let model = MsgpModel::fit_with_grid(
+        KernelSpec::Product(kernel.clone()),
+        0.07,
+        data.clone(),
+        grid,
+        MsgpConfig { n_per_dim: vec![m], ..Default::default() },
+    )
+    .unwrap();
+    let mut rng = msgp::util::Rng::new(7);
+    let v: Vec<f64> = rng.normal_vec(n);
+    let want = model.mvm_a(&v);
+    // PJRT side: embedding column of sf2 * K_UU.
+    let mut embed = vec![0.0f32; a];
+    for i in 0..m {
+        let k = 1.2 * (-0.5 * (i as f64 / 3.0).powi(2)).exp();
+        embed[i] = k as f32;
+        if i > 0 {
+            embed[a - i] = k as f32;
+        }
+    }
+    let v32: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+    let pts32: Vec<f32> = data.x.iter().map(|&x| x as f32).collect();
+    let got = rt
+        .kski_matvec("kski_matvec_1d_n64_m32", &v32, &pts32, &embed, 0.07)
+        .unwrap();
+    for i in 0..n {
+        assert!(
+            (got[i] as f64 - want[i]).abs() < 1e-3 * (1.0 + want[i].abs()),
+            "[{i}]: {} vs {}",
+            got[i],
+            want[i]
+        );
+    }
+}
+
+#[test]
+fn coordinator_uses_pjrt_backend_end_to_end() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    use msgp::coordinator::{BatcherConfig, EngineSpec, Server};
+    let sm = serving_model_m512();
+    let direct = sm.predict_batch(&[0.5]);
+    let server = Server::start(
+        sm,
+        EngineSpec::Pjrt(dir),
+        BatcherConfig::default(),
+    );
+    let p = server.predict(vec![0.5]).unwrap();
+    assert!((p.mean - direct.0[0]).abs() < 2e-4, "{} vs {}", p.mean, direct.0[0]);
+    assert!((p.var - direct.1[0]).abs() < 2e-4);
+    // The batch of 1 pads to bucket 8 and must run on PJRT.
+    assert!(
+        server.metrics.pjrt_batches.load(std::sync::atomic::Ordering::Relaxed) >= 1,
+        "expected PJRT batches; metrics: {}",
+        server.metrics.summary()
+    );
+    server.shutdown();
+}

@@ -1,0 +1,364 @@
+//! Property-style randomized sweeps over the numeric substrates
+//! (the offline proptest substitute): each test draws many seeded random
+//! instances and checks an exact mathematical invariant.
+
+use msgp::grid::{Grid, GridAxis};
+use msgp::interp::SparseInterp;
+use msgp::kernels::KernelType;
+use msgp::linalg::cholesky::Chol;
+use msgp::linalg::fft::{dft_naive, fftn, plan};
+use msgp::linalg::{C64, Mat};
+use msgp::solver::{cg_solve, CgOptions, CgWorkspace};
+use msgp::structure::bttb::{Bccb, Bttb};
+use msgp::structure::circulant::{circulant_approx, Circulant, CirculantKind};
+use msgp::structure::kronecker::{kron_dense, kron_matvec};
+use msgp::structure::toeplitz::SymToeplitz;
+use msgp::util::json::Json;
+use msgp::util::Rng;
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f64> {
+    rng.normal_vec(n)
+}
+
+#[test]
+fn prop_fft_roundtrip_many_sizes() {
+    let mut rng = Rng::new(101);
+    for trial in 0..60 {
+        let n = 1 + rng.below(300);
+        let p = plan(n);
+        let x: Vec<C64> = (0..n).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+        let mut y = x.clone();
+        p.forward(&mut y);
+        p.inverse(&mut y);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((*a - *b).abs() < 1e-8 * (n as f64), "trial {trial} n {n}");
+        }
+    }
+}
+
+#[test]
+fn prop_fft_linearity_and_parseval() {
+    let mut rng = Rng::new(7);
+    for _ in 0..20 {
+        let n = 2 + rng.below(128);
+        let p = plan(n);
+        let x: Vec<C64> = (0..n).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+        let mut fx = x.clone();
+        p.forward(&mut fx);
+        // Parseval: ||F x||^2 = n ||x||^2 (unnormalized forward DFT).
+        let ex: f64 = x.iter().map(|z| z.norm_sqr()).sum();
+        let ef: f64 = fx.iter().map(|z| z.norm_sqr()).sum();
+        assert!((ef - n as f64 * ex).abs() < 1e-6 * (1.0 + ef), "n={n}");
+    }
+}
+
+#[test]
+fn prop_fft_matches_naive_on_random_sizes() {
+    let mut rng = Rng::new(8);
+    for _ in 0..15 {
+        let n = 2 + rng.below(64);
+        let x: Vec<C64> = (0..n).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+        let mut got = x.clone();
+        plan(n).forward(&mut got);
+        let want = dft_naive(&x, false);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((*a - *b).abs() < 1e-7 * n as f64);
+        }
+    }
+}
+
+#[test]
+fn prop_toeplitz_mvm_matches_dense_sweep() {
+    let mut rng = Rng::new(21);
+    for _ in 0..25 {
+        let m = 2 + rng.below(80);
+        let ell = 0.5 + rng.uniform() * 10.0;
+        let kt = [KernelType::SE, KernelType::Matern32, KernelType::Matern12]
+            [rng.below(3)];
+        let col: Vec<f64> = (0..m).map(|i| kt.corr(i as f64, ell)).collect();
+        let t = SymToeplitz::new(col.clone());
+        let dense = Mat::from_fn(m, m, |i, j| col[i.abs_diff(j)]);
+        let v = rand_vec(&mut rng, m);
+        let got = t.matvec(&v);
+        let want = dense.matvec(&v);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-9 * (1.0 + b.abs()));
+        }
+    }
+}
+
+#[test]
+fn prop_circulant_solve_is_inverse_of_matvec() {
+    let mut rng = Rng::new(33);
+    for _ in 0..20 {
+        let m = 4 + rng.below(200);
+        let ell = 1.0 + rng.uniform() * 8.0;
+        let col: Vec<f64> = (0..m)
+            .map(|i| {
+                let d = i.min(m - i) as f64;
+                (-0.5 * (d / ell).powi(2)).exp()
+            })
+            .collect();
+        let c = Circulant::new(col);
+        let x = rand_vec(&mut rng, m);
+        let jitter = 0.1 + rng.uniform();
+        let y = {
+            let mut v = c.matvec(&x);
+            for (vi, xi) in v.iter_mut().zip(&x) {
+                *vi += jitter * xi;
+            }
+            v
+        };
+        let back = c.solve(&y, jitter);
+        for (a, b) in back.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-7 * (1.0 + b.abs()), "m={m}");
+        }
+    }
+}
+
+#[test]
+fn prop_whittle_logdet_error_decays_with_m() {
+    // Across kernels and lengthscales, doubling m from 256 to 1024 must
+    // not increase the Whittle relative error, and at m = 1024 it is
+    // below 1% (the paper's headline claim for the Whittle embedding).
+    for kt in [KernelType::SE, KernelType::Matern32, KernelType::rq(2.0)] {
+        for ell in [2.0, 8.0] {
+            let err_at = |m: usize| -> f64 {
+                let col: Vec<f64> = (0..m).map(|i| kt.corr(i as f64, ell)).collect();
+                let t = SymToeplitz::new(col.clone());
+                let exact = t.logdet_levinson(0.01).unwrap();
+                let tail = |lag: usize| kt.corr(lag as f64, ell);
+                let c = circulant_approx(CirculantKind::Whittle, &col, 3, Some(&tail));
+                (c.logdet(0.01) - exact).abs() / exact.abs()
+            };
+            let e256 = err_at(256);
+            let e1024 = err_at(1024);
+            assert!(e1024 <= e256 * 1.5, "{kt:?} ell={ell}: {e256} -> {e1024}");
+            assert!(e1024 < 0.01, "{kt:?} ell={ell}: err {e1024}");
+        }
+    }
+}
+
+#[test]
+fn prop_kron_matvec_matches_dense_sweep() {
+    let mut rng = Rng::new(55);
+    for _ in 0..15 {
+        let sizes = [2 + rng.below(4), 2 + rng.below(4), 1 + rng.below(3)];
+        let factors: Vec<Mat> = sizes
+            .iter()
+            .map(|&s| {
+                let b = Mat::from_vec(s, s, rng.normal_vec(s * s));
+                let mut a = b.matmul(&b.t());
+                for i in 0..s {
+                    a[(i, i)] += 1.0;
+                }
+                a
+            })
+            .collect();
+        let total: usize = sizes.iter().product();
+        let v = rand_vec(&mut rng, total);
+        let got = kron_matvec(&factors, &v);
+        let want = kron_dense(&factors).matvec(&v);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-8 * (1.0 + b.abs()));
+        }
+    }
+}
+
+#[test]
+fn prop_bttb_matvec_matches_dense_random_kernels() {
+    let mut rng = Rng::new(66);
+    for trial in 0..10 {
+        let shape = [2 + rng.below(5), 2 + rng.below(5)];
+        let ell = 1.0 + rng.uniform() * 4.0;
+        let anis = 0.5 + rng.uniform(); // anisotropic, non-separable
+        let kfn = move |lag: &[f64]| -> f64 {
+            let r = (lag[0] * lag[0] + anis * lag[1] * lag[1] + 0.3 * lag[0] * lag[1]).abs();
+            (-r / (ell * ell)).exp()
+        };
+        let b = Bttb::new(&shape, &kfn);
+        let m: usize = shape.iter().product();
+        let unflat = |mut f: usize| -> [i64; 2] {
+            let j = (f % shape[1]) as i64;
+            f /= shape[1];
+            [f as i64, j]
+        };
+        let dense = Mat::from_fn(m, m, |i, j| {
+            let a = unflat(i);
+            let c = unflat(j);
+            kfn(&[(a[0] - c[0]) as f64, (a[1] - c[1]) as f64])
+        });
+        let v = rand_vec(&mut rng, m);
+        let got = b.matvec(&v);
+        let want = dense.matvec(&v);
+        for (x, y) in got.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-8 * (1.0 + y.abs()), "trial {trial}");
+        }
+    }
+}
+
+#[test]
+fn prop_bccb_eigs_are_real_spectrum_of_dense() {
+    let mut rng = Rng::new(77);
+    for _ in 0..5 {
+        let shape = [3 + rng.below(4), 3 + rng.below(4)];
+        let ell = 2.0 + rng.uniform() * 3.0;
+        let kfn = move |lag: &[f64]| -> f64 {
+            let r2: f64 = lag.iter().map(|l| l * l).sum();
+            (-0.5 * r2 / (ell * ell)).exp()
+        };
+        let b = Bccb::whittle(&shape, 1, &kfn);
+        // Sum of eigenvalues = trace = m * c[0].
+        let m: usize = shape.iter().product();
+        let sum: f64 = b.eigs.iter().sum();
+        // c[0] = sum over wraps of k at lag (j1*n1, j2*n2), j in {-1,0,1}.
+        let mut c0 = 0.0;
+        for j1 in -1i64..=1 {
+            for j2 in -1i64..=1 {
+                c0 += kfn(&[(j1 * shape[0] as i64) as f64, (j2 * shape[1] as i64) as f64]);
+            }
+        }
+        assert!((sum - m as f64 * c0).abs() < 1e-6 * (1.0 + sum.abs()));
+    }
+}
+
+#[test]
+fn prop_interp_adjoint_identity_sweep() {
+    let mut rng = Rng::new(88);
+    for _ in 0..20 {
+        let d = 1 + rng.below(2);
+        let npd = 6 + rng.below(10);
+        let axes: Vec<GridAxis> = (0..d).map(|_| GridAxis::span(-1.0, 1.0, npd)).collect();
+        let grid = Grid::new(axes);
+        let npts = 1 + rng.below(40);
+        let pts: Vec<f64> = (0..npts * d).map(|_| rng.uniform_in(-0.8, 0.8)).collect();
+        let w = SparseInterp::build(&pts, &grid);
+        let u = rand_vec(&mut rng, grid.m());
+        let v = rand_vec(&mut rng, npts);
+        let lhs: f64 = w.matvec(&u).iter().zip(&v).map(|(a, b)| a * b).sum();
+        let rhs: f64 = u.iter().zip(&w.tmatvec(&v)).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-10 * (1.0 + lhs.abs()));
+    }
+}
+
+#[test]
+fn prop_cg_matches_cholesky_on_random_spd() {
+    let mut rng = Rng::new(99);
+    for _ in 0..15 {
+        let n = 3 + rng.below(40);
+        let b = Mat::from_vec(n, n, rng.normal_vec(n * n));
+        let mut a = b.matmul(&b.t());
+        for i in 0..n {
+            a[(i, i)] += n as f64 * 0.5;
+        }
+        let rhs = rand_vec(&mut rng, n);
+        let want = Chol::new(&a).unwrap().solve(&rhs);
+        let mut x = vec![0.0; n];
+        let mut ws = CgWorkspace::new(n);
+        let res = cg_solve(
+            |v, out| out.copy_from_slice(&a.matvec(v)),
+            |v, out| out.copy_from_slice(v),
+            &rhs,
+            &mut x,
+            CgOptions { tol: 1e-12, max_iter: 10 * n },
+            &mut ws,
+        );
+        assert!(res.converged);
+        for (p, q) in x.iter().zip(&want) {
+            assert!((p - q).abs() < 1e-7 * (1.0 + q.abs()));
+        }
+    }
+}
+
+#[test]
+fn prop_kernel_gradients_match_fd_sweep() {
+    let mut rng = Rng::new(111);
+    let types = [
+        KernelType::SE,
+        KernelType::Matern12,
+        KernelType::Matern32,
+        KernelType::Matern52,
+        KernelType::rq(1.0),
+        KernelType::rq(3.5),
+    ];
+    for _ in 0..60 {
+        let kt = types[rng.below(types.len())];
+        let r = rng.uniform() * 8.0;
+        let ell: f64 = 0.3 + rng.uniform() * 4.0;
+        let eps = 1e-6;
+        let fd = (kt.corr(r, (ell.ln() + eps).exp()) - kt.corr(r, (ell.ln() - eps).exp()))
+            / (2.0 * eps);
+        let an = kt.dcorr_dlog_ell(r, ell);
+        assert!((an - fd).abs() < 1e-6 * (1.0 + fd.abs()), "{kt:?} r={r} ell={ell}");
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_trees() {
+    let mut rng = Rng::new(123);
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.uniform() < 0.5),
+            2 => Json::Num((rng.normal() * 100.0 * 8.0).round() / 8.0),
+            3 => Json::Str(format!("s{}-\"x\"\n{}", rng.below(1000), rng.below(10))),
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for _ in 0..50 {
+        let v = gen(&mut rng, 3);
+        let s = v.to_string();
+        let back = Json::parse(&s).unwrap_or_else(|e| panic!("parse {s}: {e}"));
+        assert_eq!(v, back, "{s}");
+    }
+}
+
+#[test]
+fn prop_fftn_separable_equals_sequential_1d() {
+    let mut rng = Rng::new(141);
+    for _ in 0..8 {
+        let shape = [2 + rng.below(4), 2 + rng.below(5)];
+        let total = shape[0] * shape[1];
+        let x: Vec<C64> = (0..total).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+        let mut got = x.clone();
+        fftn(&mut got, &shape, false);
+        // rows then columns with 1-D plans.
+        let mut want = x;
+        for r in 0..shape[0] {
+            let mut row: Vec<C64> = want[r * shape[1]..(r + 1) * shape[1]].to_vec();
+            plan(shape[1]).forward(&mut row);
+            want[r * shape[1]..(r + 1) * shape[1]].copy_from_slice(&row);
+        }
+        for c in 0..shape[1] {
+            let mut colv: Vec<C64> = (0..shape[0]).map(|r| want[r * shape[1] + c]).collect();
+            plan(shape[0]).forward(&mut colv);
+            for r in 0..shape[0] {
+                want[r * shape[1] + c] = colv[r];
+            }
+        }
+        for (a, b) in got.iter().zip(&want) {
+            assert!((*a - *b).abs() < 1e-9);
+        }
+    }
+}
+
+#[test]
+fn prop_levinson_matches_cholesky_sweep() {
+    let mut rng = Rng::new(151);
+    for _ in 0..15 {
+        let m = 4 + rng.below(60);
+        let ell = 0.5 + rng.uniform() * 6.0;
+        let kt = [KernelType::SE, KernelType::Matern52][rng.below(2)];
+        let col: Vec<f64> = (0..m).map(|i| kt.corr(i as f64, ell)).collect();
+        let t = SymToeplitz::new(col);
+        let s2 = 0.01 + rng.uniform();
+        let lev = t.logdet_levinson(s2).unwrap();
+        let chol = t.logdet_exact(s2).unwrap();
+        assert!((lev - chol).abs() < 1e-7 * (1.0 + chol.abs()), "m={m}");
+    }
+}
