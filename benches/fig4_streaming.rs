@@ -1,0 +1,57 @@
+//! `cargo bench --bench fig4_streaming` — streaming subsystem benchmark:
+//! ingest throughput (points/s), refresh latency vs n (the O(m log m)
+//! claim: refresh cost must *not* grow with n), and staleness (time from
+//! an ingest ack to the refreshed snapshot being live). BENCH_FULL=1
+//! enables the larger sweep.
+
+use msgp::data::gen_stress_1d;
+use msgp::gp::msgp::{KernelSpec, MsgpConfig};
+use msgp::grid::{Grid, GridAxis};
+use msgp::kernels::{KernelType, ProductKernel};
+use msgp::stream::{StreamConfig, StreamTrainer};
+use std::time::Instant;
+
+fn main() {
+    let full = std::env::var("BENCH_FULL").is_ok();
+    let total: usize = if full { 500_000 } else { 50_000 };
+    let m = 512usize;
+    let kernel = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0));
+    let grid = Grid::new(vec![GridAxis::span(-12.0, 13.0, m)]);
+    let cfg = StreamConfig {
+        msgp: MsgpConfig { n_per_dim: vec![m], n_var_samples: 10, ..Default::default() },
+        ..Default::default()
+    };
+    let mut trainer = StreamTrainer::new(kernel, 0.01, grid, cfg);
+    let data = gen_stress_1d(total, 0.05, 7);
+
+    println!("# fig4_streaming: m = {m}, total = {total}");
+    println!("# n ingest_pts_per_s refresh_ms mean_iters staleness_ms");
+    let bs = 1024;
+    let mut next_report = total / 10;
+    let mut ingested = 0usize;
+    let mut ingest_secs = 0.0f64;
+    while ingested < total {
+        let hi = (ingested + bs).min(total);
+        let t0 = Instant::now();
+        trainer.ingest_batch(&data.x[ingested..hi], &data.y[ingested..hi]);
+        ingest_secs += t0.elapsed().as_secs_f64();
+        ingested = hi;
+        if ingested >= next_report {
+            next_report += total / 10;
+            // Staleness = one refresh + snapshot build (what a live swap
+            // costs between an ingest ack and the new model serving).
+            let t1 = Instant::now();
+            let stats = trainer.refresh();
+            let _sm = trainer.serving_model();
+            let staleness = t1.elapsed();
+            println!(
+                "{:>8} {:>12.0} {:>10.2} {:>10} {:>12.2}",
+                ingested,
+                ingested as f64 / ingest_secs,
+                stats.wall.as_secs_f64() * 1e3,
+                stats.mean_iters,
+                staleness.as_secs_f64() * 1e3,
+            );
+        }
+    }
+}

@@ -1,0 +1,61 @@
+//! Online streaming demo: start a coordinator with an *empty* model,
+//! stream observations through the `/ingest` route while predictions are
+//! being served, and watch the served model sharpen live.
+//!
+//! `cargo run --release --example streaming`
+
+use msgp::coordinator::{BatcherConfig, EngineSpec, Server};
+use msgp::data::{gen_stress_1d, stress_fn};
+use msgp::gp::msgp::{KernelSpec, MsgpConfig};
+use msgp::grid::{Grid, GridAxis};
+use msgp::kernels::{KernelType, ProductKernel};
+use msgp::stream::{StreamConfig, StreamTrainer};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let kernel = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0));
+    let grid = Grid::new(vec![GridAxis::span(-12.0, 13.0, 512)]);
+    let cfg = StreamConfig {
+        msgp: MsgpConfig { n_per_dim: vec![512], n_var_samples: 10, ..Default::default() },
+        refresh_every: 2048,
+        ..Default::default()
+    };
+    let trainer = StreamTrainer::new(kernel, 0.01, grid, cfg);
+    let server = Server::start_online(trainer, EngineSpec::Native, BatcherConfig::default());
+
+    let probe = 1.5;
+    let truth = stress_fn(probe);
+    let p0 = server.predict(vec![probe])?;
+    println!("prior:       mean {:+.4}  var {:.4}   (truth {truth:+.4})", p0.mean, p0.var);
+
+    // Stream 20k observations in 40 batches; the ingest thread refreshes
+    // and swaps the served snapshot every 2048 points.
+    let data = gen_stress_1d(20_000, 0.05, 11);
+    let bs = 500;
+    let t0 = Instant::now();
+    for c in 0..data.y.len() / bs {
+        let lo = c * bs;
+        let hi = lo + bs;
+        server.ingest(data.x[lo..hi].to_vec(), data.y[lo..hi].to_vec())?;
+        if (c + 1) % 8 == 0 {
+            let p = server.predict(vec![probe])?;
+            println!(
+                "n = {:>6}:  mean {:+.4}  var {:.4}",
+                (c + 1) * bs,
+                p.mean,
+                p.var
+            );
+        }
+    }
+    let ingest_wall = t0.elapsed();
+    server.flush_stream()?;
+    let p1 = server.predict(vec![probe])?;
+    println!("final:       mean {:+.4}  var {:.4}   (truth {truth:+.4})", p1.mean, p1.var);
+    println!(
+        "ingest throughput: {:.0} points/s",
+        data.y.len() as f64 / ingest_wall.as_secs_f64()
+    );
+    println!("metrics: {}", server.metrics.summary());
+    server.shutdown();
+    Ok(())
+}

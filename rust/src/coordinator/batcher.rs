@@ -7,13 +7,13 @@
 //! load.
 
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::metrics::Metrics;
 use super::router::{Backend, EngineSpec, Router};
-use super::state::ServingModel;
+use super::state::{ModelSlot, ServingModel};
 
 /// A prediction reply.
 #[derive(Clone, Debug)]
@@ -32,6 +32,29 @@ pub struct Request {
     pub reply: SyncSender<anyhow::Result<Prediction>>,
     /// Enqueue timestamp (for latency accounting).
     pub t0: Instant,
+}
+
+/// A batch of observations for the `/ingest` route.
+pub struct IngestBatch {
+    /// Inputs, row-major `k x D`.
+    pub xs: Vec<f64>,
+    /// Targets, length `k`.
+    pub ys: Vec<f64>,
+    /// Acked with the number of points applied once the stream trainer
+    /// has absorbed the batch.
+    pub reply: SyncSender<anyhow::Result<usize>>,
+    /// Force a cache refresh + model swap right after this batch
+    /// (deterministic cut-over for tests and admin flushes).
+    pub refresh_now: bool,
+}
+
+/// A queued coordinator job: the batcher's ingress carries both routes so
+/// ingestion observes the same arrival order as predictions.
+pub enum Job {
+    /// `/predict`: collected into padded prediction batches.
+    Predict(Request),
+    /// `/ingest`: forwarded to the stream-trainer thread.
+    Ingest(IngestBatch),
 }
 
 /// Batcher configuration.
@@ -57,31 +80,61 @@ impl Default for BatcherConfig {
     }
 }
 
-/// The batcher loop: owns the request receiver; runs until the channel
+/// The batcher loop: owns the job receiver; runs until the channel
 /// closes. Called on a dedicated thread by [`super::server::Server`].
 /// The engine (possibly a PJRT runtime, which is not `Send`) is built
 /// here, on the thread that uses it.
+///
+/// Prediction jobs are collected into padded batches and executed
+/// against the *current* [`ModelSlot`] snapshot (read once per batch, so
+/// a concurrent swap can never tear a batch). Ingest jobs are forwarded
+/// to the stream-trainer thread via `ingest_tx` in arrival order.
 pub fn run(
-    rx: Receiver<Request>,
+    rx: Receiver<Job>,
     engine: EngineSpec,
-    model: Arc<ServingModel>,
+    slot: Arc<ModelSlot>,
     cfg: BatcherConfig,
     metrics: Arc<Metrics>,
+    ingest_tx: Option<SyncSender<IngestBatch>>,
 ) {
     let router = Router::new(engine.build());
     let mut pending: Vec<Request> = Vec::with_capacity(cfg.max_batch);
+    let mut accept = |job: Job, pending: &mut Vec<Request>| match job {
+        Job::Predict(r) => pending.push(r),
+        Job::Ingest(b) => match &ingest_tx {
+            Some(tx) => {
+                if let Err(mpsc::TrySendError::Full(b)) | Err(mpsc::TrySendError::Disconnected(b)) =
+                    tx.try_send(b)
+                {
+                    // Back-pressure or a dead trainer: fail the batch
+                    // rather than stalling the predict path.
+                    let _ = b
+                        .reply
+                        .send(Err(anyhow::anyhow!("ingest queue unavailable (full or closed)")));
+                }
+            }
+            None => {
+                let _ = b
+                    .reply
+                    .send(Err(anyhow::anyhow!("server has no stream trainer (use start_online)")));
+            }
+        },
+    };
     loop {
-        // Phase 1: block for the first request (or shutdown).
+        // Phase 1: block for the first job (or shutdown).
         if pending.is_empty() {
             match rx.recv() {
-                Ok(r) => pending.push(r),
+                Ok(job) => accept(job, &mut pending),
                 Err(_) => return, // channel closed: drain done, exit
+            }
+            if pending.is_empty() {
+                continue; // the job was an ingest; keep waiting
             }
         }
         // Phase 2: drain whatever is already queued (free batching).
         while pending.len() < cfg.max_batch {
             match rx.try_recv() {
-                Ok(r) => pending.push(r),
+                Ok(job) => accept(job, &mut pending),
                 Err(_) => break,
             }
         }
@@ -93,13 +146,14 @@ pub fn run(
                 let now = Instant::now();
                 let Some(left) = deadline.checked_duration_since(now) else { break };
                 match rx.recv_timeout(left) {
-                    Ok(r) => pending.push(r),
+                    Ok(job) => accept(job, &mut pending),
                     Err(RecvTimeoutError::Timeout) => break,
                     Err(RecvTimeoutError::Disconnected) => break,
                 }
             }
         }
-        // Phase 4: execute and fan out.
+        // Phase 4: execute against the live snapshot and fan out.
+        let model = slot.get();
         flush(&mut pending, &router, &model, &metrics);
     }
 }
@@ -160,12 +214,12 @@ mod tests {
     use crate::kernels::{KernelType, ProductKernel};
     use std::sync::mpsc;
 
-    fn serving_model() -> Arc<ServingModel> {
+    fn serving_model() -> ServingModel {
         let data = gen_stress_1d(120, 0.05, 3);
         let kernel = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0));
         let cfg = MsgpConfig { n_per_dim: vec![64], n_var_samples: 8, ..Default::default() };
         let mut model = MsgpModel::fit(kernel, 0.01, data, cfg).unwrap();
-        Arc::new(ServingModel::from_msgp(&mut model))
+        ServingModel::from_msgp(&mut model)
     }
 
     /// Property sweep (proptest substitute): across random request
@@ -174,19 +228,20 @@ mod tests {
     #[test]
     fn property_no_request_dropped_and_results_exact() {
         let model = serving_model();
+        let slot = Arc::new(ModelSlot::new(model.clone()));
         let mut rng = crate::util::Rng::new(42);
         for trial in 0..15 {
-            let (tx, rx) = mpsc::sync_channel::<Request>(1024);
+            let (tx, rx) = mpsc::sync_channel::<Job>(1024);
             let metrics = Arc::new(Metrics::new());
             let cfg = BatcherConfig {
                 max_wait: Duration::from_micros(200 + 300 * (trial % 4) as u64),
                 max_batch: [1usize, 3, 8, 64][trial % 4],
                 eager: trial % 2 == 0,
             };
-            let m2 = model.clone();
+            let s2 = slot.clone();
             let met2 = metrics.clone();
             let handle = std::thread::spawn(move || {
-                run(rx, EngineSpec::Native, m2, cfg, met2);
+                run(rx, EngineSpec::Native, s2, cfg, met2, None);
             });
             let k = 1 + rng.below(200);
             let mut replies = Vec::new();
@@ -194,7 +249,7 @@ mod tests {
             for _ in 0..k {
                 let x = rng.uniform_in(-9.0, 9.0);
                 let (rtx, rrx) = mpsc::sync_channel(1);
-                tx.send(Request { x: vec![x], reply: rtx, t0: Instant::now() })
+                tx.send(Job::Predict(Request { x: vec![x], reply: rtx, t0: Instant::now() }))
                     .unwrap();
                 metrics.submitted.fetch_add(1, Ordering::Relaxed);
                 xs.push(x);
@@ -229,20 +284,24 @@ mod tests {
 
     #[test]
     fn max_batch_bounds_flush_size() {
-        let model = serving_model();
-        let (tx, rx) = mpsc::sync_channel::<Request>(1024);
+        let slot = Arc::new(ModelSlot::new(serving_model()));
+        let (tx, rx) = mpsc::sync_channel::<Job>(1024);
         let metrics = Arc::new(Metrics::new());
         let cfg = BatcherConfig { max_wait: Duration::from_millis(50), max_batch: 4, eager: false };
-        let m2 = model.clone();
+        let s2 = slot.clone();
         let met2 = metrics.clone();
         let handle = std::thread::spawn(move || {
-            run(rx, EngineSpec::Native, m2, cfg, met2);
+            run(rx, EngineSpec::Native, s2, cfg, met2, None);
         });
         let mut replies = Vec::new();
         for i in 0..16 {
             let (rtx, rrx) = mpsc::sync_channel(1);
-            tx.send(Request { x: vec![i as f64 * 0.5 - 4.0], reply: rtx, t0: Instant::now() })
-                .unwrap();
+            tx.send(Job::Predict(Request {
+                x: vec![i as f64 * 0.5 - 4.0],
+                reply: rtx,
+                t0: Instant::now(),
+            }))
+            .unwrap();
             replies.push(rrx);
         }
         drop(tx);
@@ -252,5 +311,29 @@ mod tests {
         handle.join().unwrap();
         // 16 requests, max_batch 4 -> at least 4 batches.
         assert!(metrics.batches.load(Ordering::Relaxed) >= 4);
+    }
+
+    #[test]
+    fn ingest_without_trainer_is_rejected() {
+        let slot = Arc::new(ModelSlot::new(serving_model()));
+        let (tx, rx) = mpsc::sync_channel::<Job>(16);
+        let metrics = Arc::new(Metrics::new());
+        let met2 = metrics.clone();
+        let s2 = slot.clone();
+        let handle = std::thread::spawn(move || {
+            run(rx, EngineSpec::Native, s2, BatcherConfig::default(), met2, None);
+        });
+        let (rtx, rrx) = mpsc::sync_channel(1);
+        tx.send(Job::Ingest(IngestBatch {
+            xs: vec![0.5],
+            ys: vec![1.0],
+            reply: rtx,
+            refresh_now: false,
+        }))
+        .unwrap();
+        let err = rrx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert!(err.is_err(), "ingest must fail on a non-streaming server");
+        drop(tx);
+        handle.join().unwrap();
     }
 }

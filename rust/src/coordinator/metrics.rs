@@ -22,6 +22,22 @@ pub struct Metrics {
     pub pjrt_batches: AtomicU64,
     /// Batches executed on the native backend.
     pub native_batches: AtomicU64,
+    /// Streaming: observations absorbed by the ingest pipeline.
+    pub ingested_points_total: AtomicU64,
+    /// Streaming: per-point trainer-admission rejections (grid
+    /// expansion cap; also non-finite values when the front-door batch
+    /// check in `Server::ingest` is bypassed — that check errors whole
+    /// batches before they reach the trainer, so those points are not
+    /// counted here).
+    pub ingest_rejected_total: AtomicU64,
+    /// Streaming: ingest batches applied.
+    pub ingest_batches: AtomicU64,
+    /// Streaming: cache refreshes + model swaps completed.
+    pub refresh_count: AtomicU64,
+    /// Streaming: wall-clock of the most recent refresh, microseconds.
+    pub last_refresh_us: AtomicU64,
+    /// Streaming: hyperparameter re-optimizations completed.
+    pub reopt_count: AtomicU64,
     hist: [AtomicU64; NBUCKETS],
 }
 
@@ -34,6 +50,12 @@ impl Default for Metrics {
             padded_slots: AtomicU64::new(0),
             pjrt_batches: AtomicU64::new(0),
             native_batches: AtomicU64::new(0),
+            ingested_points_total: AtomicU64::new(0),
+            ingest_rejected_total: AtomicU64::new(0),
+            ingest_batches: AtomicU64::new(0),
+            refresh_count: AtomicU64::new(0),
+            last_refresh_us: AtomicU64::new(0),
+            reopt_count: AtomicU64::new(0),
             hist: std::array::from_fn(|_| AtomicU64::new(0)),
         }
     }
@@ -73,10 +95,18 @@ impl Metrics {
         u64::MAX
     }
 
-    /// One-line summary.
+    /// Record a completed refresh (count + latency, one call so the two
+    /// stay consistent).
+    pub fn record_refresh(&self, d: Duration) {
+        self.last_refresh_us.store(d.as_micros() as u64, Ordering::Relaxed);
+        self.refresh_count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One-line summary (the `/metrics` endpoint payload).
     pub fn summary(&self) -> String {
         format!(
-            "submitted={} completed={} batches={} (pjrt={} native={}) padding={} p50<={}us p99<={}us",
+            "submitted={} completed={} batches={} (pjrt={} native={}) padding={} p50<={}us p99<={}us \
+             ingested_points_total={} ingest_rejected_total={} ingest_batches={} refresh_count={} last_refresh_us={} reopt_count={}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
@@ -85,6 +115,12 @@ impl Metrics {
             self.padded_slots.load(Ordering::Relaxed),
             self.latency_quantile_us(0.5),
             self.latency_quantile_us(0.99),
+            self.ingested_points_total.load(Ordering::Relaxed),
+            self.ingest_rejected_total.load(Ordering::Relaxed),
+            self.ingest_batches.load(Ordering::Relaxed),
+            self.refresh_count.load(Ordering::Relaxed),
+            self.last_refresh_us.load(Ordering::Relaxed),
+            self.reopt_count.load(Ordering::Relaxed),
         )
     }
 }
@@ -113,5 +149,16 @@ mod tests {
     fn empty_histogram_is_zero() {
         let m = Metrics::new();
         assert_eq!(m.latency_quantile_us(0.99), 0);
+    }
+
+    #[test]
+    fn streaming_counters_appear_in_summary() {
+        let m = Metrics::new();
+        m.ingested_points_total.fetch_add(123, Ordering::Relaxed);
+        m.record_refresh(Duration::from_micros(456));
+        let s = m.summary();
+        assert!(s.contains("ingested_points_total=123"), "{s}");
+        assert!(s.contains("refresh_count=1"), "{s}");
+        assert!(s.contains("last_refresh_us=456"), "{s}");
     }
 }

@@ -15,8 +15,13 @@
 //!   deadline or bucket capacity, padded to the bucket size, executed,
 //!   and the replies fanned back out.
 //! * [`server`] — the front-end: a thread-backed queue with blocking and
-//!   async submission, graceful shutdown, and metrics.
-//! * [`metrics`] — latency histograms and throughput counters.
+//!   async submission, graceful shutdown, and metrics. Online servers
+//!   ([`server::Server::start_online`]) add a background ingest/refresh
+//!   thread that absorbs streamed observations through the `/ingest`
+//!   route and hot-swaps refreshed snapshots into the live
+//!   [`state::ModelSlot`].
+//! * [`metrics`] — latency histograms, throughput counters, and the
+//!   streaming ingest/refresh counters.
 
 pub mod state;
 pub mod router;
@@ -24,7 +29,7 @@ pub mod batcher;
 pub mod metrics;
 pub mod server;
 
-pub use batcher::{BatcherConfig, Prediction, Request};
-pub use router::{Engine, EngineSpec, Router};
+pub use batcher::{BatcherConfig, IngestBatch, Job, Prediction, Request};
+pub use router::{Engine, EngineSpec, Route, Router};
 pub use server::Server;
-pub use state::{ModelStore, ServingModel};
+pub use state::{ModelSlot, ModelStore, ServingModel};

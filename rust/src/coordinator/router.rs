@@ -48,6 +48,37 @@ pub enum Engine {
     Pjrt(Runtime),
 }
 
+/// Coordinator front-door routes — the request surface a production
+/// deployment exposes over HTTP. [`Route::parse`] maps a path to the
+/// handler the [`super::server::Server`] implements: `/predict` and
+/// `/ingest` flow through the batcher queue, `/metrics` and `/models`
+/// are served from shared state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Route {
+    /// Prediction request (batched, answered from the live model slot).
+    Predict,
+    /// Streaming ingestion (batched, absorbed by the stream trainer).
+    Ingest,
+    /// Metrics summary.
+    Metrics,
+    /// Installed model listing.
+    Models,
+}
+
+impl Route {
+    /// Parse a request path (ignoring any query string).
+    pub fn parse(path: &str) -> Option<Route> {
+        let p = path.split('?').next().unwrap_or(path).trim_end_matches('/');
+        match p {
+            "/predict" | "predict" => Some(Route::Predict),
+            "/ingest" | "ingest" => Some(Route::Ingest),
+            "/metrics" | "metrics" => Some(Route::Metrics),
+            "/models" | "models" => Some(Route::Models),
+            _ => None,
+        }
+    }
+}
+
 /// Batch router.
 pub struct Router {
     /// Backend.
@@ -159,6 +190,16 @@ mod tests {
         let cfg = MsgpConfig { n_per_dim: vec![96], n_var_samples: 10, ..Default::default() };
         let mut model = MsgpModel::fit(kernel, 0.01, data, cfg).unwrap();
         ServingModel::from_msgp(&mut model)
+    }
+
+    #[test]
+    fn routes_parse() {
+        assert_eq!(Route::parse("/predict"), Some(Route::Predict));
+        assert_eq!(Route::parse("/ingest"), Some(Route::Ingest));
+        assert_eq!(Route::parse("/ingest?batch=64"), Some(Route::Ingest));
+        assert_eq!(Route::parse("/metrics/"), Some(Route::Metrics));
+        assert_eq!(Route::parse("/models"), Some(Route::Models));
+        assert_eq!(Route::parse("/nope"), None);
     }
 
     #[test]

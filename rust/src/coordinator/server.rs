@@ -1,48 +1,94 @@
-//! The serving front-end: a thread-backed request queue with blocking and
-//! asynchronous submission, metrics, and graceful shutdown.
+//! The serving front-end: a thread-backed job queue with blocking and
+//! asynchronous submission, metrics, graceful shutdown — and, for online
+//! servers, a background ingest/refresh thread that absorbs streamed
+//! observations and hot-swaps refreshed model snapshots into the live
+//! [`ModelSlot`].
 
+use std::sync::atomic::Ordering;
 use std::sync::mpsc::{self, Receiver, SyncSender};
 use std::sync::Arc;
 use std::time::Instant;
 
-use super::batcher::{self, BatcherConfig, Prediction, Request};
+use super::batcher::{self, BatcherConfig, IngestBatch, Job, Prediction, Request};
 use super::metrics::Metrics;
 use super::router::EngineSpec;
-use super::state::ServingModel;
+use super::state::{ModelSlot, ServingModel};
+use crate::stream::StreamTrainer;
 
-/// A running prediction server for one model.
+/// A running prediction (and optionally ingestion) server for one model.
 pub struct Server {
-    tx: Option<SyncSender<Request>>,
+    tx: Option<SyncSender<Job>>,
     handle: Option<std::thread::JoinHandle<()>>,
+    ingest_handle: Option<std::thread::JoinHandle<()>>,
     /// Shared metrics.
     pub metrics: Arc<Metrics>,
+    /// Live model slot (readable for diagnostics; swapped by the ingest
+    /// thread on refresh).
+    pub slot: Arc<ModelSlot>,
     dim: usize,
+    streaming: bool,
 }
 
 impl Server {
-    /// Start the batcher thread.
+    /// Start a static server: the batcher thread serves one frozen model.
     pub fn start(model: ServingModel, engine: EngineSpec, cfg: BatcherConfig) -> Server {
+        let slot = Arc::new(ModelSlot::new(model));
+        Self::start_with_slot(slot, engine, cfg, None, None)
+    }
+
+    /// Start an online server: the `/ingest` route feeds the stream
+    /// trainer on a background thread, which refreshes the prediction
+    /// caches every `trainer.cfg.refresh_every` ingested points (plus
+    /// hyper re-opts every `reopt_every`) and atomically swaps the new
+    /// snapshot into the live slot. Prediction batches always execute
+    /// against a consistent snapshot.
+    pub fn start_online(
+        mut trainer: StreamTrainer,
+        engine: EngineSpec,
+        cfg: BatcherConfig,
+    ) -> Server {
+        let slot = Arc::new(ModelSlot::new(trainer.serving_model()));
+        let (itx, irx) = mpsc::sync_channel::<IngestBatch>(1024);
+        Self::start_with_slot(slot, engine, cfg, Some(itx), Some((irx, trainer)))
+    }
+
+    fn start_with_slot(
+        slot: Arc<ModelSlot>,
+        engine: EngineSpec,
+        cfg: BatcherConfig,
+        ingest_tx: Option<SyncSender<IngestBatch>>,
+        ingest_loop: Option<(Receiver<IngestBatch>, StreamTrainer)>,
+    ) -> Server {
         let metrics = Arc::new(Metrics::new());
-        let (tx, rx) = mpsc::sync_channel::<Request>(4096);
-        let dim = model.dim();
-        let model = Arc::new(model);
+        let (tx, rx) = mpsc::sync_channel::<Job>(4096);
+        let dim = slot.get().dim();
+        let streaming = ingest_tx.is_some();
+        let slot2 = slot.clone();
         let met2 = metrics.clone();
         let handle = std::thread::Builder::new()
             .name("msgp-batcher".into())
-            .spawn(move || batcher::run(rx, engine, model, cfg, met2))
+            .spawn(move || batcher::run(rx, engine, slot2, cfg, met2, ingest_tx))
             .expect("spawn batcher");
-        Server { tx: Some(tx), handle: Some(handle), metrics, dim }
+        let ingest_handle = ingest_loop.map(|(irx, trainer)| {
+            let slot3 = slot.clone();
+            let met3 = metrics.clone();
+            std::thread::Builder::new()
+                .name("msgp-ingest".into())
+                .spawn(move || run_ingest(irx, trainer, slot3, met3))
+                .expect("spawn ingest")
+        });
+        Server { tx: Some(tx), handle: Some(handle), ingest_handle, metrics, slot, dim, streaming }
     }
 
     /// Submit a point; returns a receiver for the reply.
     pub fn submit(&self, x: Vec<f64>) -> anyhow::Result<Receiver<anyhow::Result<Prediction>>> {
         anyhow::ensure!(x.len() == self.dim, "point dim {} vs model dim {}", x.len(), self.dim);
         let (rtx, rrx) = mpsc::sync_channel(1);
-        self.metrics.submitted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         self.tx
             .as_ref()
             .expect("server running")
-            .send(Request { x, reply: rtx, t0: Instant::now() })
+            .send(Job::Predict(Request { x, reply: rtx, t0: Instant::now() }))
             .map_err(|_| anyhow::anyhow!("server shut down"))?;
         Ok(rrx)
     }
@@ -54,7 +100,48 @@ impl Server {
             .map_err(|_| anyhow::anyhow!("server dropped reply"))?
     }
 
-    /// Graceful shutdown: close the queue, drain, join the thread.
+    /// `/ingest`: absorb a batch of observations (row-major `k x D`
+    /// inputs). Blocks until the stream trainer has applied the batch;
+    /// returns the number of points absorbed. The serving model is
+    /// unaffected until the next refresh swap.
+    pub fn ingest(&self, xs: Vec<f64>, ys: Vec<f64>) -> anyhow::Result<usize> {
+        anyhow::ensure!(self.streaming, "server has no stream trainer (use start_online)");
+        anyhow::ensure!(
+            xs.len() == ys.len() * self.dim,
+            "ingest shape: xs {} vs {} points x dim {}",
+            xs.len(),
+            ys.len(),
+            self.dim
+        );
+        // Reject non-finite values at the front door: a NaN coordinate
+        // would silently corrupt the sufficient statistics (its stencil
+        // degenerates to cell 0) and a NaN target poisons `W^T y`.
+        anyhow::ensure!(
+            xs.iter().all(|v| v.is_finite()) && ys.iter().all(|v| v.is_finite()),
+            "ingest rejects non-finite coordinates/targets"
+        );
+        self.ingest_inner(xs, ys, false)
+    }
+
+    /// Force a refresh + model swap now (deterministic cut-over: after
+    /// this returns, new prediction batches see every previously acked
+    /// ingest).
+    pub fn flush_stream(&self) -> anyhow::Result<usize> {
+        anyhow::ensure!(self.streaming, "server has no stream trainer (use start_online)");
+        self.ingest_inner(Vec::new(), Vec::new(), true)
+    }
+
+    fn ingest_inner(&self, xs: Vec<f64>, ys: Vec<f64>, refresh_now: bool) -> anyhow::Result<usize> {
+        let (rtx, rrx) = mpsc::sync_channel(1);
+        self.tx
+            .as_ref()
+            .expect("server running")
+            .send(Job::Ingest(IngestBatch { xs, ys, reply: rtx, refresh_now }))
+            .map_err(|_| anyhow::anyhow!("server shut down"))?;
+        rrx.recv().map_err(|_| anyhow::anyhow!("server dropped ingest ack"))?
+    }
+
+    /// Graceful shutdown: close the queue, drain, join the threads.
     pub fn shutdown(mut self) {
         self.shutdown_inner();
     }
@@ -62,6 +149,11 @@ impl Server {
     fn shutdown_inner(&mut self) {
         self.tx.take(); // closing the channel stops the batcher loop
         if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        // The batcher owns the ingest sender; its exit closes the ingest
+        // channel, which stops the ingest thread.
+        if let Some(h) = self.ingest_handle.take() {
             let _ = h.join();
         }
     }
@@ -73,12 +165,90 @@ impl Drop for Server {
     }
 }
 
+/// The ingest/refresh loop (the online server's background thread): apply
+/// batches to the stream trainer, count them, and publish refreshed
+/// snapshots on the configured cadence.
+fn run_ingest(
+    rx: Receiver<IngestBatch>,
+    mut trainer: StreamTrainer,
+    slot: Arc<ModelSlot>,
+    metrics: Arc<Metrics>,
+) {
+    let refresh_every = trainer.cfg.refresh_every.max(1);
+    let reopt_every = trainer.cfg.reopt_every;
+    let mut since_reopt = 0usize;
+    // Swap cadence is tracked separately from `dirty_points`: a
+    // re-optimization refreshes the caches (zeroing `dirty_points`)
+    // and MUST publish, otherwise the automatic swap would starve
+    // whenever `reopt_every <= refresh_every`.
+    let mut since_swap = 0usize;
+    while let Ok(batch) = rx.recv() {
+        let k = batch.ys.len();
+        let rejected_before = trainer.rejected_points;
+        trainer.ingest_batch(&batch.xs, &batch.ys);
+        let rejected = trainer.rejected_points - rejected_before;
+        let applied = k - rejected;
+        if k > 0 {
+            metrics.ingested_points_total.fetch_add(applied as u64, Ordering::Relaxed);
+            metrics.ingest_rejected_total.fetch_add(rejected as u64, Ordering::Relaxed);
+            if applied > 0 {
+                metrics.ingest_batches.fetch_add(1, Ordering::Relaxed);
+            }
+            since_reopt += applied;
+            since_swap += applied;
+        }
+        // Ack as soon as the points are absorbed — a cadence-triggered
+        // refresh must not stall the ingest caller (and, transitively,
+        // overflow the ingest queue). `flush_stream` callers asked for a
+        // swap-before-ack guarantee, so they wait.
+        let mut reply = Some(batch.reply);
+        if !batch.refresh_now {
+            if let Some(r) = reply.take() {
+                let _ = r.send(Ok(applied));
+            }
+        }
+        let mut need_swap = batch.refresh_now;
+        if reopt_every > 0 && since_reopt >= reopt_every {
+            since_reopt = 0;
+            match trainer.reoptimize() {
+                Ok(Some(_)) => {
+                    metrics.reopt_count.fetch_add(1, Ordering::Relaxed);
+                    // reoptimize() ran a full refresh internally.
+                    metrics.record_refresh(trainer.last_refresh.wall);
+                    need_swap = true; // new hypers + refreshed caches: publish
+                }
+                Ok(None) => {}
+                Err(e) => eprintln!("stream re-optimization failed (keeping hypers): {e}"),
+            }
+        }
+        if since_swap >= refresh_every {
+            need_swap = true;
+        }
+        if need_swap {
+            let refreshes_before = trainer.refresh_count;
+            let sm = trainer.serving_model(); // refreshes if dirty
+            slot.swap(sm);
+            since_swap = 0;
+            // Only count a refresh when one actually ran (a flush on a
+            // clean trainer republishes the cached snapshot).
+            if trainer.refresh_count > refreshes_before {
+                metrics.record_refresh(trainer.last_refresh.wall);
+            }
+        }
+        if let Some(r) = reply {
+            let _ = r.send(Ok(applied));
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::gen_stress_1d;
     use crate::gp::msgp::{KernelSpec, MsgpConfig, MsgpModel};
+    use crate::grid::{Grid, GridAxis};
     use crate::kernels::{KernelType, ProductKernel};
+    use crate::stream::StreamConfig;
 
     fn serving_model() -> ServingModel {
         let data = gen_stress_1d(150, 0.05, 5);
@@ -128,5 +298,53 @@ mod tests {
         let model = serving_model();
         let server = Server::start(model, EngineSpec::Native, BatcherConfig::default());
         assert!(server.submit(vec![0.0, 1.0]).is_err());
+    }
+
+    #[test]
+    fn static_server_rejects_ingest() {
+        let server = Server::start(serving_model(), EngineSpec::Native, BatcherConfig::default());
+        assert!(server.ingest(vec![0.5], vec![1.0]).is_err());
+        assert!(server.flush_stream().is_err());
+    }
+
+    #[test]
+    fn online_server_learns_from_ingested_stream() {
+        let kernel = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0));
+        let grid = Grid::new(vec![GridAxis::span(-12.0, 13.0, 128)]);
+        let cfg = StreamConfig {
+            msgp: MsgpConfig { n_per_dim: vec![128], n_var_samples: 8, ..Default::default() },
+            refresh_every: 1_000_000, // only explicit flushes swap
+            ..Default::default()
+        };
+        let trainer = StreamTrainer::new(kernel, 0.01, grid, cfg);
+        let server = Server::start_online(trainer, EngineSpec::Native, BatcherConfig::default());
+        // Before any data: prior prediction (mean 0, var ~ kss + sigma2).
+        let prior = server.predict(vec![0.0]).unwrap();
+        assert!(prior.mean.abs() < 1e-9, "prior mean {}", prior.mean);
+        assert!(prior.var > 0.9, "prior var {}", prior.var);
+        // Stream the training set, then cut over.
+        let data = gen_stress_1d(800, 0.05, 5);
+        for chunk in 0..8 {
+            let lo = chunk * 100;
+            let hi = lo + 100;
+            let k = server
+                .ingest(data.x[lo..hi].to_vec(), data.y[lo..hi].to_vec())
+                .unwrap();
+            assert_eq!(k, 100);
+        }
+        server.flush_stream().unwrap();
+        // After the swap the model explains the stress function.
+        let p = server.predict(vec![1.5]).unwrap();
+        let want = crate::data::stress_fn(1.5);
+        assert!((p.mean - want).abs() < 0.1, "{} vs {want}", p.mean);
+        assert!(p.var < prior.var, "posterior var must shrink");
+        assert_eq!(
+            server.metrics.ingested_points_total.load(Ordering::Relaxed),
+            800
+        );
+        assert!(server.metrics.refresh_count.load(Ordering::Relaxed) >= 1);
+        let s = server.metrics.summary();
+        assert!(s.contains("ingested_points_total=800"), "{s}");
+        server.shutdown();
     }
 }

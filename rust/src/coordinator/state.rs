@@ -36,16 +36,34 @@ impl ServingModel {
         if model.nu_u.is_none() {
             model.precompute_variance();
         }
-        let u_mean = model.u_mean.clone();
-        let nu_u = model.nu_u.clone().unwrap();
+        Self::from_parts(
+            model.grid.clone(),
+            model.u_mean.clone(),
+            model.nu_u.clone().unwrap(),
+            model.kernel.sf2(),
+            model.sigma2,
+        )
+    }
+
+    /// Assemble a serving model from raw precomputes (the streaming
+    /// trainer's refresh path — no [`MsgpModel`] involved).
+    pub fn from_parts(
+        grid: Grid,
+        u_mean: Vec<f64>,
+        nu_u: Vec<f64>,
+        kss: f64,
+        sigma2: f64,
+    ) -> Self {
+        assert_eq!(u_mean.len(), grid.m());
+        assert_eq!(nu_u.len(), grid.m());
         ServingModel {
-            grid: model.grid.clone(),
+            grid,
             u_mean_f32: u_mean.iter().map(|&v| v as f32).collect(),
             nu_u_f32: nu_u.iter().map(|&v| v as f32).collect(),
             u_mean,
             nu_u,
-            kss: model.kernel.sf2(),
-            sigma2: model.sigma2,
+            kss,
+            sigma2,
         }
     }
 
@@ -89,6 +107,36 @@ impl ServingModel {
     /// Grid vectors as f32 (precomputed; for the PJRT path).
     pub fn grid_vecs_f32(&self) -> (&[f32], &[f32]) {
         (&self.u_mean_f32, &self.nu_u_f32)
+    }
+}
+
+/// The live-model slot: a single hot-swappable `Arc<ServingModel>`.
+///
+/// Readers (`get`) take a cheap clone of the `Arc` and work against an
+/// immutable snapshot; the ingest loop publishes a refreshed model with
+/// `swap`. A batch in flight keeps serving its snapshot — a swap can
+/// never tear a model mid-batch, and a reader sees either the old or the
+/// new model in full.
+#[derive(Debug)]
+pub struct ModelSlot {
+    inner: RwLock<Arc<ServingModel>>,
+}
+
+impl ModelSlot {
+    /// Slot holding an initial model.
+    pub fn new(model: ServingModel) -> Self {
+        ModelSlot { inner: RwLock::new(Arc::new(model)) }
+    }
+
+    /// Snapshot of the current model (cheap: one `Arc` clone).
+    pub fn get(&self) -> Arc<ServingModel> {
+        self.inner.read().unwrap().clone()
+    }
+
+    /// Atomically publish a new model; returns the previous snapshot.
+    pub fn swap(&self, model: ServingModel) -> Arc<ServingModel> {
+        let mut w = self.inner.write().unwrap();
+        std::mem::replace(&mut *w, Arc::new(model))
     }
 }
 
@@ -169,6 +217,42 @@ mod tests {
         assert!((u[0] as f64 - ax.n as f64 / 2.0).abs() < 1e-3);
         assert!(u[1] as f64 <= (ax.n - 2) as f64);
         assert!(u[2] >= 1.0);
+    }
+
+    #[test]
+    fn model_slot_swap_returns_previous_snapshot() {
+        let sm = serving_model();
+        let slot = ModelSlot::new(sm.clone());
+        let held = slot.get();
+        let mut sm2 = sm;
+        sm2.sigma2 = 42.0;
+        let old = slot.swap(sm2);
+        // The pre-swap handle and the returned snapshot are the same
+        // version; new readers see the new model.
+        assert!(Arc::ptr_eq(&held, &old));
+        assert!((slot.get().sigma2 - 42.0).abs() < 1e-12);
+        assert!(held.sigma2 < 1.0);
+    }
+
+    #[test]
+    fn from_parts_matches_from_msgp() {
+        let data = gen_stress_1d(200, 0.05, 7);
+        let kernel = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0));
+        let cfg = MsgpConfig { n_per_dim: vec![128], n_var_samples: 20, ..Default::default() };
+        let mut model = MsgpModel::fit(kernel, 0.01, data, cfg).unwrap();
+        let a = ServingModel::from_msgp(&mut model);
+        let b = ServingModel::from_parts(
+            model.grid.clone(),
+            model.u_mean.clone(),
+            model.nu_u.clone().unwrap(),
+            model.kernel.sf2(),
+            model.sigma2,
+        );
+        let xs: Vec<f64> = (0..10).map(|i| -4.0 + i as f64).collect();
+        let (ma, va) = a.predict_batch(&xs);
+        let (mb, vb) = b.predict_batch(&xs);
+        assert_eq!(ma, mb);
+        assert_eq!(va, vb);
     }
 
     #[test]

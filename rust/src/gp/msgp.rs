@@ -71,7 +71,7 @@ impl Default for MsgpConfig {
             margin_cells: 3,
             wraps: 3,
             logdet: LogdetMethod::Circulant(CirculantKind::Whittle),
-            cg: CgOptions { tol: 1e-6, max_iter: 400 },
+            cg: CgOptions { tol: 1e-6, max_iter: 400, warm_start: false },
             n_var_samples: 20,
             seed: 0,
         }
@@ -194,6 +194,48 @@ impl Kuu {
             Kuu::Kron(k) => k.sqrt_matvec(v),
             Kuu::Bttb { bccb, .. } => bccb.sqrt_matvec(v),
         }
+    }
+}
+
+/// Public handle to the structured grid operator `K_{U,U}` (unit signal
+/// variance): FFT-based MVMs plus the symmetric-PSD circulant square
+/// root. The batch model builds this internally; the streaming subsystem
+/// ([`crate::stream`]) builds it standalone so it can rebuild the
+/// operator after grid auto-expansion or a hyperparameter re-opt without
+/// refitting a whole [`MsgpModel`].
+pub struct GridKernel {
+    kuu: Kuu,
+}
+
+impl GridKernel {
+    /// Build the operator for a kernel spec on a grid. Only
+    /// `cfg.logdet` (circulant kind) and `cfg.wraps` are consulted.
+    pub fn new(kernel: &KernelSpec, grid: &Grid, cfg: &MsgpConfig) -> Self {
+        let kuu = match kernel {
+            KernelSpec::Product(k) => Kuu::Kron(build_kron(k, grid, cfg)),
+            KernelSpec::Iso { ktype, log_ell, .. } => {
+                let (op, bccb) = build_bttb(*ktype, *log_ell, grid, cfg.wraps);
+                Kuu::Bttb { op, bccb }
+            }
+        };
+        GridKernel { kuu }
+    }
+
+    /// Grid size `m`.
+    pub fn m(&self) -> usize {
+        self.kuu.m()
+    }
+
+    /// `K_{U,U} v` (unit variance).
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        self.kuu.matvec(v)
+    }
+
+    /// Symmetric PSD `K_{U,U}^{1/2} v` (per-factor circulant square
+    /// roots; `S S v` equals the Whittle circulant MVM, the section-5.2
+    /// approximation of `K_{U,U} v`).
+    pub fn sqrt_matvec(&self, v: &[f64]) -> Vec<f64> {
+        self.kuu.sqrt_matvec(v)
     }
 }
 
@@ -1214,7 +1256,7 @@ mod tests {
         let kernel = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0));
         let mut cfg = cfg_1d(32);
         cfg.n_var_samples = 800;
-        cfg.cg = CgOptions { tol: 1e-10, max_iter: 2000 };
+        cfg.cg = CgOptions { tol: 1e-10, max_iter: 2000, warm_start: false };
         let mut model = MsgpModel::fit(kernel, 0.05, data, cfg).unwrap();
         model.precompute_variance();
         let est = model.nu_u.clone().unwrap();
@@ -1286,7 +1328,7 @@ mod tests {
         let data = gen_stress_1d(n, 0.1, 31);
         let kernel = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.2, 0.8));
         let mut model = MsgpModel::fit(kernel, 0.05, data, cfg_1d(128)).unwrap();
-        model.cfg.cg = CgOptions { tol: 1e-12, max_iter: 3000 };
+        model.cfg.cg = CgOptions { tol: 1e-12, max_iter: 3000, warm_start: false };
         model.refit(&model.params().clone()).unwrap();
         let g = model.lml_grad();
         let p0 = model.params();
@@ -1349,7 +1391,7 @@ mod tests {
         };
         let cfg = MsgpConfig {
             n_per_dim: vec![24, 24],
-            cg: CgOptions { tol: 1e-12, max_iter: 3000 },
+            cg: CgOptions { tol: 1e-12, max_iter: 3000, warm_start: false },
             ..Default::default()
         };
         let mut model = MsgpModel::fit(kernel, 0.05, data, cfg).unwrap();
@@ -1448,7 +1490,7 @@ mod tests {
         };
         let cfg = MsgpConfig {
             n_per_dim: vec![24, 24],
-            cg: CgOptions { tol: 1e-12, max_iter: 3000 },
+            cg: CgOptions { tol: 1e-12, max_iter: 3000, warm_start: false },
             ..Default::default()
         };
         // Hold the grid fixed across FD perturbations (it is fixed during

@@ -34,6 +34,36 @@ impl GridAxis {
     pub fn to_units(&self, x: f64) -> f64 {
         (x - self.lo) / self.step
     }
+
+    /// The same axis grown by whole cells on each side: `step` is
+    /// preserved, so every existing grid point keeps its coordinate
+    /// (its index shifts by `left`).
+    pub fn extended(&self, left: usize, right: usize) -> GridAxis {
+        GridAxis {
+            lo: self.lo - left as f64 * self.step,
+            step: self.step,
+            n: self.n + left + right,
+        }
+    }
+}
+
+/// Whole-cell growth of a [`Grid`], per dimension. Because the step is
+/// preserved, sufficient statistics indexed by grid cell stay valid
+/// under the index shift `i -> i + added_lo[d]` — the contract the
+/// streaming subsystem's remapping relies on.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct GridExpansion {
+    /// Cells added below the old origin, per dimension.
+    pub added_lo: Vec<usize>,
+    /// Cells added above the old top, per dimension.
+    pub added_hi: Vec<usize>,
+}
+
+impl GridExpansion {
+    /// True when no dimension grew.
+    pub fn is_empty(&self) -> bool {
+        self.added_lo.iter().all(|&a| a == 0) && self.added_hi.iter().all(|&a| a == 0)
+    }
 }
 
 /// A D-dimensional rectilinear grid.
@@ -115,6 +145,81 @@ impl Grid {
         }
         out
     }
+
+    /// True when `x` sits at least `margin` cells inside every axis — the
+    /// region where the cubic stencil needs no inward shifting. A small
+    /// unit tolerance absorbs `to_units` rounding so points placed
+    /// exactly on the margin count as covered.
+    pub fn covers(&self, x: &[f64], margin: f64) -> bool {
+        debug_assert_eq!(x.len(), self.dim());
+        const EPS: f64 = 1e-9;
+        self.axes.iter().zip(x).all(|(ax, &v)| {
+            let u = ax.to_units(v);
+            u >= margin - EPS && u <= (ax.n - 1) as f64 - margin + EPS
+        })
+    }
+
+    /// Whole-cell expansion needed so that `x` lies at least
+    /// `margin_cells` cells inside every axis; `None` when the grid
+    /// already covers it (up to the same unit tolerance as
+    /// [`Self::covers`], so margin-exact points never trigger a spurious
+    /// one-cell expansion). The step never changes, so the expansion is
+    /// purely additive (see [`GridExpansion`]).
+    pub fn expansion_to_cover(&self, x: &[f64], margin_cells: usize) -> Option<GridExpansion> {
+        debug_assert_eq!(x.len(), self.dim());
+        const EPS: f64 = 1e-9;
+        let m = margin_cells as f64;
+        let mut added_lo = vec![0usize; self.dim()];
+        let mut added_hi = vec![0usize; self.dim()];
+        let mut any = false;
+        for (d, (ax, &v)) in self.axes.iter().zip(x).enumerate() {
+            let u = ax.to_units(v);
+            if u < m - EPS {
+                added_lo[d] = (m - u).ceil() as usize;
+                any = true;
+            }
+            let top = (ax.n - 1) as f64 - m;
+            if u > top + EPS {
+                added_hi[d] = (u - top).ceil() as usize;
+                any = true;
+            }
+        }
+        any.then_some(GridExpansion { added_lo, added_hi })
+    }
+
+    /// Apply an expansion, producing the grown grid.
+    pub fn expanded(&self, exp: &GridExpansion) -> Grid {
+        assert_eq!(exp.added_lo.len(), self.dim());
+        assert_eq!(exp.added_hi.len(), self.dim());
+        Grid {
+            axes: self
+                .axes
+                .iter()
+                .enumerate()
+                .map(|(d, ax)| ax.extended(exp.added_lo[d], exp.added_hi[d]))
+                .collect(),
+        }
+    }
+
+    /// Per-dimension index shift of this grid's cells inside `new` (which
+    /// must be an expansion of this grid with the same steps). Used to
+    /// remap flat-indexed grid vectors after auto-expansion.
+    pub fn shift_within(&self, new: &Grid) -> Vec<usize> {
+        assert_eq!(self.dim(), new.dim());
+        self.axes
+            .iter()
+            .zip(&new.axes)
+            .map(|(old, nw)| {
+                let s = (old.lo - nw.lo) / nw.step;
+                let r = s.round();
+                assert!(
+                    (s - r).abs() < 1e-6 && r >= 0.0,
+                    "grid is not a whole-cell expansion (shift {s})"
+                );
+                r as usize
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -140,6 +245,32 @@ mod tests {
                 assert!(u >= 2.0 - 1e-9 && u <= (g.axes[d].n - 3) as f64 + 1e-9, "u={u}");
             }
         }
+    }
+
+    #[test]
+    fn expansion_preserves_existing_points() {
+        let g = Grid::new(vec![GridAxis::span(0.0, 4.0, 9), GridAxis::span(-1.0, 1.0, 5)]);
+        // A point far left in dim 0 and far right in dim 1.
+        let x = [-1.3, 1.9];
+        assert!(!g.covers(&x, 2.0));
+        let exp = g.expansion_to_cover(&x, 2).unwrap();
+        let g2 = g.expanded(&exp);
+        assert!(g2.covers(&x, 2.0), "expanded grid must cover the point");
+        // Steps unchanged; old grid points keep their coordinates.
+        for d in 0..2 {
+            assert!((g2.axes[d].step - g.axes[d].step).abs() < 1e-12);
+        }
+        let shift = g.shift_within(&g2);
+        assert_eq!(shift, exp.added_lo);
+        for d in 0..2 {
+            for i in 0..g.axes[d].n {
+                let old = g.axes[d].coord(i);
+                let new = g2.axes[d].coord(i + shift[d]);
+                assert!((old - new).abs() < 1e-12);
+            }
+        }
+        // Covered point expands to nothing.
+        assert!(g2.expansion_to_cover(&x, 2).is_none());
     }
 
     #[test]

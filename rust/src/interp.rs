@@ -68,6 +68,39 @@ pub fn stencil_1d(u: f64, n: usize) -> Stencil1D {
     Stencil1D { i0, w, dw }
 }
 
+/// Visit the `4^D` tensor-product taps of one point's interpolation row
+/// without materializing a [`SparseInterp`]: `f(flat, weight, idx)` is
+/// called once per tap, where `idx` holds the per-dimension grid indices
+/// of that tap. Tap order and arithmetic are identical to
+/// [`SparseInterp::build`], so streaming accumulators built tap-by-tap
+/// match a from-scratch batch build bit-for-bit up to summation order.
+pub fn for_each_tap(point: &[f64], grid: &Grid, mut f: impl FnMut(usize, f64, &[usize])) {
+    /// Fixed scratch bound — keeps this per-point hot path free of heap
+    /// allocation (the streaming ingester calls it once per observation).
+    const MAX_D: usize = 8;
+    let d = grid.dim();
+    debug_assert_eq!(point.len(), d);
+    assert!(d <= MAX_D, "for_each_tap supports up to {MAX_D} dimensions (got {d})");
+    let nnz = 4usize.pow(d as u32);
+    let mut stencils = [Stencil1D { i0: 0, w: [0.0; 4], dw: [0.0; 4] }; MAX_D];
+    for (a, st) in stencils[..d].iter_mut().enumerate() {
+        let u = grid.axes[a].to_units(point[a]);
+        *st = stencil_1d(u, grid.axes[a].n);
+    }
+    let mut idx = [0usize; MAX_D];
+    for t in 0..nnz {
+        let mut flat = 0usize;
+        let mut w = 1.0f64;
+        for (a, st) in stencils[..d].iter().enumerate() {
+            let j = (t >> (2 * (d - 1 - a))) & 3;
+            idx[a] = st.i0 + j;
+            flat = flat * grid.axes[a].n + (st.i0 + j);
+            w *= st.w[j];
+        }
+        f(flat, w, &idx[..d]);
+    }
+}
+
 /// A sparse interpolation matrix `W` (`rows x m`) with exactly `4^D`
 /// non-zeros per row, stored row-compressed with fixed row width.
 #[derive(Clone, Debug)]
@@ -323,6 +356,27 @@ mod tests {
         for (r, g) in got.iter().enumerate() {
             let (x, y) = (pts[r * 2], pts[r * 2 + 1]);
             assert!((g - f(x, y)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn for_each_tap_matches_built_rows() {
+        let grid = Grid::new(vec![GridAxis::span(0.0, 5.0, 12), GridAxis::span(-2.0, 2.0, 9)]);
+        let pts = vec![1.3, -0.7, 4.1, 1.6, 0.4, 0.0];
+        let w = SparseInterp::build(&pts, &grid);
+        for r in 0..3 {
+            let mut taps: Vec<(usize, f64)> = Vec::new();
+            for_each_tap(&pts[r * 2..r * 2 + 2], &grid, |flat, wt, idx| {
+                // flat must agree with the row-major multi-index.
+                assert_eq!(flat, grid.flat(idx));
+                taps.push((flat, wt));
+            });
+            assert_eq!(taps.len(), w.nnz_per_row);
+            let base = r * w.nnz_per_row;
+            for (t, &(flat, wt)) in taps.iter().enumerate() {
+                assert_eq!(flat as u32, w.col_idx[base + t]);
+                assert!((wt - w.vals[base + t]).abs() == 0.0, "tap {t} differs");
+            }
         }
     }
 

@@ -16,10 +16,24 @@
 //!   inference, Whittle log-determinant kernel learning, O(1) fast
 //!   predictive mean/variance, supervised projections) plus exact-GP,
 //!   FITC, SSGP and SVI (Big-Data-GP) baselines.
-//! * **A serving coordinator** ([`coordinator`]): a tokio-based request
+//! * **A serving coordinator** ([`coordinator`]): a thread-backed request
 //!   router and dynamic batcher that serves trained MSGP models, backed
 //!   either by the native Rust engine or by AOT-compiled JAX/Pallas
 //!   artifacts executed through PJRT ([`runtime`]).
+//! * **Streaming & online learning** ([`stream`]): the SKI data
+//!   dependence factors through grid-local sufficient statistics
+//!   (`W^T y`, the banded Gram `W^T W`, per-cell counts, and exact
+//!   `N(0, W^T W)` probe accumulators), so new observations are absorbed
+//!   in O(4^D) each — no pass over historical data. A push-through
+//!   identity moves the training solves into the m-domain
+//!   (`u_mean = sf2 S (sigma^2 I + sf2 S G S)^{-1} S W^T y` with
+//!   `S = K_UU^{1/2}`), making refresh cost independent of n; CG
+//!   warm-starts from the previous solution, the grid auto-expands under
+//!   out-of-box points, and hyperparameters re-optimize periodically on
+//!   a reservoir snapshot. The coordinator's `/ingest` route feeds a
+//!   background trainer thread that atomically hot-swaps refreshed
+//!   snapshots into the live [`coordinator::state::ModelSlot`], so
+//!   prediction latency stays O(1) per point throughout.
 //!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-reproduction results.
@@ -33,6 +47,7 @@ pub mod solver;
 pub mod opt;
 pub mod gp;
 pub mod coordinator;
+pub mod stream;
 pub mod runtime;
 pub mod bench;
 pub mod data;

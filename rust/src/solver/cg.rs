@@ -14,11 +14,24 @@ pub struct CgOptions {
     pub tol: f64,
     /// Iteration cap.
     pub max_iter: usize,
+    /// Warm start: when `true`, the contents of `x` on entry are used as
+    /// the initial guess `x0` (the streaming trainer passes the previous
+    /// solution); when `false` (the default), `x` is zeroed first so a
+    /// stale buffer can never poison a cold solve.
+    pub warm_start: bool,
 }
 
 impl Default for CgOptions {
     fn default() -> Self {
-        CgOptions { tol: 1e-8, max_iter: 1000 }
+        CgOptions { tol: 1e-8, max_iter: 1000, warm_start: false }
+    }
+}
+
+impl CgOptions {
+    /// Same options with warm starting enabled.
+    pub fn warm(mut self) -> Self {
+        self.warm_start = true;
+        self
     }
 }
 
@@ -75,12 +88,15 @@ pub fn cg_solve(
     let n = b.len();
     assert_eq!(x.len(), n);
     ws.resize(n);
+    if !opts.warm_start {
+        x.fill(0.0);
+    }
     let bnorm = dot(b, b).sqrt();
     if bnorm == 0.0 {
         x.fill(0.0);
         return CgResult { iters: 0, rel_residual: 0.0, converged: true };
     }
-    // r = b - A x
+    // r = b - A x (with x = x0 when warm starting, x = 0 otherwise).
     apply_a(x, &mut ws.ap);
     for i in 0..n {
         ws.r[i] = b[i] - ws.ap[i];
@@ -144,7 +160,7 @@ mod tests {
             |v, out| out.copy_from_slice(v),
             &b,
             &mut x,
-            CgOptions { tol: 1e-10, max_iter: 500 },
+            CgOptions { tol: 1e-10, max_iter: 500, warm_start: false },
             &mut ws,
         );
         assert!(res.converged, "{res:?}");
@@ -163,7 +179,7 @@ mod tests {
             a[(i, i)] += (i as f64 + 1.0) * 10.0;
         }
         let b: Vec<f64> = (0..n).map(|i| (i as f64).cos()).collect();
-        let opts = CgOptions { tol: 1e-10, max_iter: 2000 };
+        let opts = CgOptions { tol: 1e-10, max_iter: 2000, warm_start: false };
         let mut ws = CgWorkspace::new(n);
         let mut x0 = vec![0.0; n];
         let plain = cg_solve(
@@ -192,6 +208,81 @@ mod tests {
         assert!(pre.iters <= plain.iters, "pre {} vs plain {}", pre.iters, plain.iters);
         for (p, q) in x0.iter().zip(&x1) {
             assert!((p - q).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn warm_start_uses_fewer_iterations_than_cold() {
+        // Solve A x = b, then re-solve against a slightly perturbed rhs:
+        // warm-starting from the previous solution must converge in
+        // strictly fewer iterations than a cold start (and to the same
+        // answer).
+        let n = 48;
+        let a = spd(n);
+        let b0: Vec<f64> = (0..n).map(|i| (i as f64 * 0.7).sin()).collect();
+        let opts = CgOptions { tol: 1e-10, max_iter: 2000, warm_start: false };
+        let mut ws = CgWorkspace::new(n);
+        let mut x = vec![0.0; n];
+        let first = cg_solve(
+            |v, out| out.copy_from_slice(&a.matvec(v)),
+            |v, out| out.copy_from_slice(v),
+            &b0,
+            &mut x,
+            opts,
+            &mut ws,
+        );
+        assert!(first.converged);
+        // Perturb the rhs by 1%.
+        let b1: Vec<f64> = b0.iter().enumerate().map(|(i, v)| v + 0.01 * (i as f64).cos()).collect();
+        let mut x_warm = x.clone();
+        let warm = cg_solve(
+            |v, out| out.copy_from_slice(&a.matvec(v)),
+            |v, out| out.copy_from_slice(v),
+            &b1,
+            &mut x_warm,
+            opts.warm(),
+            &mut ws,
+        );
+        let mut x_cold = x.clone(); // contents ignored: warm_start = false zeroes it
+        let cold = cg_solve(
+            |v, out| out.copy_from_slice(&a.matvec(v)),
+            |v, out| out.copy_from_slice(v),
+            &b1,
+            &mut x_cold,
+            opts,
+            &mut ws,
+        );
+        assert!(warm.converged && cold.converged);
+        assert!(
+            warm.iters < cold.iters,
+            "warm {} !< cold {}",
+            warm.iters,
+            cold.iters
+        );
+        for (p, q) in x_warm.iter().zip(&x_cold) {
+            assert!((p - q).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn cold_start_ignores_stale_x_contents() {
+        let n = 16;
+        let a = spd(n);
+        let x_true: Vec<f64> = (0..n).map(|i| (i as f64 * 0.11).cos()).collect();
+        let b = a.matvec(&x_true);
+        let mut x = vec![1e6; n]; // garbage that a cold start must discard
+        let mut ws = CgWorkspace::new(n);
+        let res = cg_solve(
+            |v, out| out.copy_from_slice(&a.matvec(v)),
+            |v, out| out.copy_from_slice(v),
+            &b,
+            &mut x,
+            CgOptions { tol: 1e-10, max_iter: 500, warm_start: false },
+            &mut ws,
+        );
+        assert!(res.converged);
+        for (xi, ti) in x.iter().zip(&x_true) {
+            assert!((xi - ti).abs() < 1e-7);
         }
     }
 

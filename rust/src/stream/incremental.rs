@@ -1,0 +1,320 @@
+//! The incremental SKI core: grid-local sufficient statistics with
+//! O(4^D)-per-point updates and step-preserving grid auto-expansion.
+
+use crate::grid::{Grid, GridExpansion};
+use crate::interp::for_each_tap;
+use crate::util::Rng;
+
+/// Width of the banded `W^T W` Gram matrix per dimension: two cubic
+/// stencils overlap iff their base cells differ by at most 3, so the
+/// per-dimension index offset between coupled grid cells lies in
+/// `-3 ..= 3`.
+const BAND_W: usize = 7;
+const BAND_HALF: i64 = 3;
+
+/// Remap a flat grid vector from `old` onto `new`, where `new` is a
+/// whole-cell expansion of `old` (same steps). New cells are zero.
+pub fn remap_grid_vec(old: &Grid, new: &Grid, v: &[f64]) -> Vec<f64> {
+    assert_eq!(v.len(), old.m());
+    let shift = old.shift_within(new);
+    let d = old.dim();
+    let old_shape = old.shape();
+    let new_shape = new.shape();
+    // Row-major strides of the new grid.
+    let mut strides = vec![1usize; d];
+    for a in (0..d.saturating_sub(1)).rev() {
+        strides[a] = strides[a + 1] * new_shape[a + 1];
+    }
+    let mut out = vec![0.0; new.m()];
+    let mut idx = vec![0usize; d];
+    for &val in v.iter() {
+        let mut f = 0usize;
+        for a in 0..d {
+            f += (idx[a] + shift[a]) * strides[a];
+        }
+        out[f] = val;
+        // Odometer over the old shape (last axis fastest, row-major).
+        for a in (0..d).rev() {
+            idx[a] += 1;
+            if idx[a] < old_shape[a] {
+                break;
+            }
+            idx[a] = 0;
+        }
+    }
+    out
+}
+
+/// Streaming sufficient statistics of the SKI decomposition. See the
+/// [module docs](crate::stream) for the algebra.
+pub struct IncrementalSki {
+    grid: Grid,
+    /// `b = W^T y`, length `m`.
+    wty: Vec<f64>,
+    /// Banded `G = W^T W`: `bands[o][i] = G[i, j]` where `j`'s
+    /// multi-index is `i`'s shifted by the per-dimension deltas encoded
+    /// in `o` (base-7 digits, each `delta + 3`). `7^D` bands of length
+    /// `m`; both `(i, j)` and `(j, i)` entries are stored, so `G`
+    /// MVMs need no symmetry bookkeeping.
+    bands: Vec<Vec<f64>>,
+    /// Per-cell point counts (nearest grid cell), length `m`.
+    counts: Vec<u32>,
+    /// Probe accumulators `q_k = sum_i eps_ik w_i` — exact fixed samples
+    /// of `N(0, G)` for the stochastic variance estimator, maintained
+    /// without retaining any raw data.
+    probes: Vec<Vec<f64>>,
+    /// Margin (cells) enforced around ingested points on auto-expansion.
+    margin_cells: usize,
+    n: usize,
+    sum_y: f64,
+    sum_y2: f64,
+    rng: Rng,
+    /// Reused per-point buffers — keeps the O(4^D) hot path
+    /// allocation-free in steady state.
+    scratch: IngestScratch,
+}
+
+#[derive(Default)]
+struct IngestScratch {
+    flats: Vec<usize>,
+    ws: Vec<f64>,
+    idxs: Vec<usize>,
+    eps: Vec<f64>,
+}
+
+impl IncrementalSki {
+    /// Empty statistics over an initial grid. `n_probes` fixes the
+    /// number of variance-probe accumulators (the paper's `n_s`, 20 by
+    /// default); `margin_cells` is the safety margin kept around points
+    /// when the grid auto-expands.
+    pub fn new(grid: Grid, n_probes: usize, margin_cells: usize, seed: u64) -> Self {
+        let m = grid.m();
+        let d = grid.dim();
+        let nbands = BAND_W.pow(d as u32);
+        IncrementalSki {
+            grid,
+            wty: vec![0.0; m],
+            bands: (0..nbands).map(|_| vec![0.0; m]).collect(),
+            counts: vec![0; m],
+            probes: (0..n_probes).map(|_| vec![0.0; m]).collect(),
+            margin_cells: margin_cells.max(1),
+            n: 0,
+            sum_y: 0.0,
+            sum_y2: 0.0,
+            rng: Rng::new(seed ^ 0x57ea3_u64),
+            scratch: IngestScratch::default(),
+        }
+    }
+
+    /// Current grid.
+    pub fn grid(&self) -> &Grid {
+        &self.grid
+    }
+
+    /// Observations absorbed so far.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Grid size.
+    pub fn m(&self) -> usize {
+        self.grid.m()
+    }
+
+    /// `W^T y` accumulator.
+    pub fn wty(&self) -> &[f64] {
+        &self.wty
+    }
+
+    /// Per-cell point counts.
+    pub fn counts(&self) -> &[u32] {
+        &self.counts
+    }
+
+    /// Probe accumulators (`n_probes` vectors of length `m`).
+    pub fn probes(&self) -> &[Vec<f64>] {
+        &self.probes
+    }
+
+    /// Running mean of the targets (diagnostics / de-trending).
+    pub fn y_mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum_y / self.n as f64
+        }
+    }
+
+    /// Running second moment of the targets.
+    pub fn y_var(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            (self.sum_y2 / self.n as f64 - self.y_mean().powi(2)).max(0.0)
+        }
+    }
+
+    /// Absorb one observation in O(4^D) (plus a remap when the grid must
+    /// grow). Returns the expansion applied, if any.
+    pub fn ingest(&mut self, x: &[f64], y: f64) -> Option<GridExpansion> {
+        assert_eq!(x.len(), self.grid.dim());
+        let expansion = self.grid.expansion_to_cover(x, self.margin_cells);
+        if let Some(exp) = &expansion {
+            self.apply_expansion(exp);
+        }
+        let d = self.grid.dim();
+        let nnz = 4usize.pow(d as u32);
+        // Gather the point's taps once (reused scratch: the hot path is
+        // allocation-free in steady state); the pairwise Gram update
+        // needs random access to them.
+        let mut scratch = std::mem::take(&mut self.scratch);
+        scratch.flats.clear();
+        scratch.ws.clear();
+        scratch.idxs.clear();
+        for_each_tap(x, &self.grid, |flat, w, idx| {
+            scratch.flats.push(flat);
+            scratch.ws.push(w);
+            scratch.idxs.extend_from_slice(idx);
+        });
+        debug_assert_eq!(scratch.flats.len(), nnz);
+        let (flats, ws, idxs) = (&scratch.flats, &scratch.ws, &scratch.idxs);
+        // b += w^T y and the probe accumulators.
+        scratch.eps.clear();
+        for _ in 0..self.probes.len() {
+            scratch.eps.push(self.rng.normal());
+        }
+        for t1 in 0..nnz {
+            self.wty[flats[t1]] += ws[t1] * y;
+            for (q, &e) in self.probes.iter_mut().zip(&scratch.eps) {
+                q[flats[t1]] += e * ws[t1];
+            }
+        }
+        // G += w w^T (banded storage, both triangles).
+        for t1 in 0..nnz {
+            for t2 in 0..nnz {
+                let mut o = 0usize;
+                for a in 0..d {
+                    let delta = idxs[t2 * d + a] as i64 - idxs[t1 * d + a] as i64;
+                    debug_assert!(delta.abs() <= BAND_HALF);
+                    o = o * BAND_W + (delta + BAND_HALF) as usize;
+                }
+                self.bands[o][flats[t1]] += ws[t1] * ws[t2];
+            }
+        }
+        self.scratch = scratch;
+        // Nearest-cell occupancy count.
+        let mut cell = 0usize;
+        for a in 0..d {
+            let u = self.grid.axes[a].to_units(x[a]).round();
+            let i = (u.max(0.0) as usize).min(self.grid.axes[a].n - 1);
+            cell = cell * self.grid.axes[a].n + i;
+        }
+        self.counts[cell] += 1;
+        self.n += 1;
+        self.sum_y += y;
+        self.sum_y2 += y * y;
+        expansion
+    }
+
+    /// Absorb a batch (row-major `k x D` inputs). Returns the number of
+    /// grid expansions applied.
+    pub fn ingest_batch(&mut self, xs: &[f64], ys: &[f64]) -> usize {
+        let d = self.grid.dim();
+        assert_eq!(xs.len(), ys.len() * d, "xs is k x D row-major, ys length k");
+        let mut expansions = 0;
+        for (i, &y) in ys.iter().enumerate() {
+            if self.ingest(&xs[i * d..(i + 1) * d], y).is_some() {
+                expansions += 1;
+            }
+        }
+        expansions
+    }
+
+    /// Banded Gram MVM `out = G v` in O(m 7^D).
+    pub fn g_matvec(&self, v: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; v.len()];
+        self.g_matvec_into(v, &mut out);
+        out
+    }
+
+    /// Allocation-free banded Gram MVM.
+    pub fn g_matvec_into(&self, v: &[f64], out: &mut [f64]) {
+        let m = self.grid.m();
+        assert_eq!(v.len(), m);
+        assert_eq!(out.len(), m);
+        let shape = self.grid.shape();
+        let d = shape.len();
+        let mut strides = vec![1i64; d];
+        for a in (0..d.saturating_sub(1)).rev() {
+            strides[a] = strides[a + 1] * shape[a + 1] as i64;
+        }
+        // Precompute each band's per-dim deltas and flat offset.
+        let nbands = self.bands.len();
+        let mut deltas = vec![0i64; nbands * d];
+        let mut flat_off = vec![0i64; nbands];
+        for o in 0..nbands {
+            let mut rem = o;
+            for a in (0..d).rev() {
+                let delta = (rem % BAND_W) as i64 - BAND_HALF;
+                rem /= BAND_W;
+                deltas[o * d + a] = delta;
+                flat_off[o] += delta * strides[a];
+            }
+        }
+        let mut idx = vec![0i64; d];
+        for (i, oi) in out.iter_mut().enumerate() {
+            let mut acc = 0.0;
+            for (o, band) in self.bands.iter().enumerate() {
+                let bv = band[i];
+                if bv == 0.0 {
+                    continue;
+                }
+                let mut ok = true;
+                for a in 0..d {
+                    let ni = idx[a] + deltas[o * d + a];
+                    if ni < 0 || ni >= shape[a] as i64 {
+                        ok = false;
+                        break;
+                    }
+                }
+                if ok {
+                    acc += bv * v[(i as i64 + flat_off[o]) as usize];
+                }
+            }
+            *oi = acc;
+            for a in (0..d).rev() {
+                idx[a] += 1;
+                if idx[a] < shape[a] as i64 {
+                    break;
+                }
+                idx[a] = 0;
+            }
+        }
+    }
+
+    /// Dense `G` materialization (tests / small grids only).
+    pub fn g_dense(&self) -> crate::linalg::Mat {
+        let m = self.m();
+        let mut g = crate::linalg::Mat::zeros(m, m);
+        for j in 0..m {
+            let mut e = vec![0.0; m];
+            e[j] = 1.0;
+            let col = self.g_matvec(&e);
+            for i in 0..m {
+                g[(i, j)] = col[i];
+            }
+        }
+        g
+    }
+
+    fn apply_expansion(&mut self, exp: &GridExpansion) {
+        let new_grid = self.grid.expanded(exp);
+        let remap = |v: &[f64]| remap_grid_vec(&self.grid, &new_grid, v);
+        self.wty = remap(&self.wty);
+        self.bands = self.bands.iter().map(|b| remap(b)).collect();
+        self.probes = self.probes.iter().map(|q| remap(q)).collect();
+        let counts_f: Vec<f64> = self.counts.iter().map(|&c| c as f64).collect();
+        self.counts = remap(&counts_f).iter().map(|&c| c as u32).collect();
+        self.grid = new_grid;
+    }
+}

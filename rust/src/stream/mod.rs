@@ -1,0 +1,53 @@
+//! Online streaming: incremental SKI ingestion with warm-started solves.
+//!
+//! The SKI decomposition `K_XX ~= W K_UU W^T` (section 5) makes the
+//! model's data dependence factor through two *grid-local sufficient
+//! statistics*:
+//!
+//! * `b = W^T y` — the interpolated target accumulator, and
+//! * `G = W^T W` — the grid Gram matrix, banded with `7^D` diagonals
+//!   because two interpolation rows only overlap when their points fall
+//!   within 3 grid cells of each other per dimension.
+//!
+//! Both absorb a new observation in O(4^D) — no retraining pass over the
+//! data. The push-through identity
+//!
+//! ```text
+//! W^T (sigma^2 I + sf2 W K W^T)^{-1} = (sigma^2 I + sf2 G K)^{-1} W^T
+//! ```
+//!
+//! then moves *every* training-time solve from the n-domain to the
+//! m-domain: with `S = K^{1/2}` (the symmetric circulant square root,
+//! section 5.2), the fast-prediction precompute becomes
+//!
+//! ```text
+//! u_mean = sf2 S (sigma^2 I + sf2 S G S)^{-1} S b,
+//! ```
+//!
+//! an SPD system whose CG iterations cost O(m log m + m 7^D) —
+//! **independent of n**. The stochastic variance grid vector `nu_U`
+//! (section 5.1.2) rides the same operator: the `N(0, G)`-distributed
+//! probe component is accumulated exactly during ingestion
+//! (`q_k += eps_ik w_i`), so the Papandreou–Yuille estimator never needs
+//! the raw data either.
+//!
+//! Layers:
+//!
+//! * [`IncrementalSki`] — the sufficient-statistic core: O(4^D)
+//!   per-point updates, banded `G` MVMs, and whole-cell grid
+//!   auto-expansion (step-preserving, so statistics remap by an index
+//!   shift) when points arrive outside the covered box.
+//! * [`StreamTrainer`] — warm-started CG refreshes (reusing
+//!   [`crate::solver::CgWorkspace`] and the previous solutions as `x0`),
+//!   incremental `u_mean` / `nu_U` cache rebuilds, and periodic Whittle
+//!   hyperparameter re-optimization on a reservoir snapshot of the
+//!   stream.
+//! * Coordinator integration lives in [`crate::coordinator`]: the
+//!   `/ingest` route, batched ingestion, and atomic
+//!   [`crate::coordinator::state::ModelSlot`] snapshot swaps.
+
+pub mod incremental;
+pub mod trainer;
+
+pub use incremental::{remap_grid_vec, IncrementalSki};
+pub use trainer::{RefreshStats, StreamConfig, StreamTrainer};

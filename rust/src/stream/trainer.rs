@@ -1,0 +1,380 @@
+//! Warm-started m-domain refreshes over the incremental SKI statistics,
+//! plus periodic Whittle hyperparameter re-optimization on a reservoir
+//! snapshot of the stream.
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::state::ServingModel;
+use crate::data::Dataset;
+use crate::gp::msgp::{GridKernel, KernelSpec, MsgpConfig, MsgpModel};
+use crate::grid::Grid;
+use crate::solver::{cg_solve, CgWorkspace};
+use crate::stream::incremental::{remap_grid_vec, IncrementalSki};
+use crate::util::Rng;
+
+/// Streaming configuration.
+#[derive(Clone, Debug)]
+pub struct StreamConfig {
+    /// Batch-model configuration reused for the grid operator (wraps,
+    /// circulant kind, CG options, `n_var_samples`, seed) and for
+    /// re-optimization snapshots.
+    pub msgp: MsgpConfig,
+    /// Points between automatic cache refreshes + model swaps (consumed
+    /// by the coordinator's ingest loop; [`StreamTrainer::refresh`] can
+    /// also be called manually at any cadence).
+    pub refresh_every: usize,
+    /// Points between hyperparameter re-optimizations (0 disables).
+    pub reopt_every: usize,
+    /// Adam iterations per re-optimization.
+    pub reopt_iters: usize,
+    /// Adam learning rate for re-optimization.
+    pub reopt_lr: f64,
+    /// Reservoir-sample size for the re-optimization snapshot.
+    pub reservoir: usize,
+    /// Hard cap on the total grid size `m` that auto-expansion may
+    /// reach. A single wild outlier (e.g. `x = 1e9` on a 0.1-step grid)
+    /// would otherwise demand a multi-gigabyte statistics reallocation;
+    /// points whose coverage would exceed the cap are rejected and
+    /// counted in [`StreamTrainer::rejected_points`] instead.
+    pub max_grid_cells: usize,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig {
+            msgp: MsgpConfig::default(),
+            refresh_every: 2048,
+            reopt_every: 0,
+            reopt_iters: 15,
+            reopt_lr: 0.05,
+            reservoir: 2048,
+            max_grid_cells: 262_144,
+        }
+    }
+}
+
+/// Diagnostics from one refresh.
+#[derive(Clone, Debug, Default)]
+pub struct RefreshStats {
+    /// CG iterations of the warm-started mean solve.
+    pub mean_iters: usize,
+    /// Total CG iterations across the variance-probe solves.
+    pub var_iters_total: usize,
+    /// Grid size at refresh time.
+    pub m: usize,
+    /// Points absorbed at refresh time.
+    pub n: usize,
+    /// Wall-clock time of the refresh.
+    pub wall: Duration,
+}
+
+/// The streaming trainer: owns the sufficient statistics, the structured
+/// grid operator, and the warm-start state for all m-domain solves.
+pub struct StreamTrainer {
+    /// Kernel hyperparameters (updated by [`Self::reoptimize`]).
+    pub kernel: KernelSpec,
+    /// Noise variance.
+    pub sigma2: f64,
+    /// Configuration.
+    pub cfg: StreamConfig,
+    ski: IncrementalSki,
+    gk: GridKernel,
+    /// Warm start for the mean solve (m).
+    t_mean: Vec<f64>,
+    /// Warm starts for the variance-probe solves (`n_s` x m).
+    t_probes: Vec<Vec<f64>>,
+    /// Fixed `N(0, I_m)` probe draws (`n_s` x m); new cells after an
+    /// expansion get fresh normals, existing cells keep theirs.
+    g_probes: Vec<Vec<f64>>,
+    ws: CgWorkspace,
+    probe_rng: Rng,
+    // Reservoir snapshot of the stream for hyper re-optimization.
+    res_x: Vec<f64>,
+    res_y: Vec<f64>,
+    seen: usize,
+    res_rng: Rng,
+    /// Fast-mean grid cache `u_mean` from the last refresh (m).
+    pub u_mean: Vec<f64>,
+    /// Explained-variance grid cache `nu_U` from the last refresh (m).
+    pub nu_u: Vec<f64>,
+    /// Diagnostics from the last refresh.
+    pub last_refresh: RefreshStats,
+    /// Completed refreshes.
+    pub refresh_count: u64,
+    /// Points absorbed since the last refresh.
+    pub dirty_points: usize,
+    /// Points rejected (non-finite values, or coverage beyond
+    /// `cfg.max_grid_cells`).
+    pub rejected_points: usize,
+}
+
+impl StreamTrainer {
+    /// Fresh trainer over an initial grid (predicts the prior until data
+    /// arrives).
+    pub fn new(kernel: KernelSpec, sigma2: f64, grid: Grid, cfg: StreamConfig) -> Self {
+        assert_eq!(kernel.dim(), grid.dim(), "kernel dim vs grid dim");
+        let m = grid.m();
+        let ns = cfg.msgp.n_var_samples.max(1);
+        let seed = cfg.msgp.seed;
+        let mut probe_rng = Rng::new(seed ^ 0x9b0b_u64);
+        let gk = GridKernel::new(&kernel, &grid, &cfg.msgp);
+        let ski = IncrementalSki::new(grid, ns, cfg.msgp.margin_cells, seed);
+        StreamTrainer {
+            g_probes: (0..ns).map(|_| probe_rng.normal_vec(m)).collect(),
+            t_probes: (0..ns).map(|_| vec![0.0; m]).collect(),
+            t_mean: vec![0.0; m],
+            u_mean: vec![0.0; m],
+            nu_u: vec![0.0; m],
+            ws: CgWorkspace::new(m),
+            probe_rng,
+            res_x: Vec::new(),
+            res_y: Vec::new(),
+            seen: 0,
+            res_rng: Rng::new(seed ^ 0x7e5e_u64),
+            kernel,
+            sigma2,
+            cfg,
+            ski,
+            gk,
+            last_refresh: RefreshStats::default(),
+            refresh_count: 0,
+            dirty_points: 0,
+            rejected_points: 0,
+        }
+    }
+
+    /// Observations absorbed.
+    pub fn n(&self) -> usize {
+        self.ski.n()
+    }
+
+    /// Grid size.
+    pub fn m(&self) -> usize {
+        self.ski.m()
+    }
+
+    /// Current grid.
+    pub fn grid(&self) -> &Grid {
+        self.ski.grid()
+    }
+
+    /// Sufficient-statistic core (read access for diagnostics/tests).
+    pub fn ski(&self) -> &IncrementalSki {
+        &self.ski
+    }
+
+    /// Absorb a batch of observations (row-major `k x D` inputs).
+    /// O(4^D) per point; rebuilds the grid operator and remaps all
+    /// warm-start state if the grid auto-expanded.
+    pub fn ingest_batch(&mut self, xs: &[f64], ys: &[f64]) {
+        let d = self.ski.grid().dim();
+        assert_eq!(xs.len(), ys.len() * d, "xs is k x D row-major, ys length k");
+        let old_grid = self.ski.grid().clone();
+        let mut applied = 0usize;
+        for (i, &y) in ys.iter().enumerate() {
+            let row = &xs[i * d..(i + 1) * d];
+            if !self.admit(row, y) {
+                self.rejected_points += 1;
+                continue;
+            }
+            self.ski.ingest(row, y);
+            applied += 1;
+            // Reservoir sample for re-optimization snapshots.
+            self.seen += 1;
+            if self.res_y.len() < self.cfg.reservoir {
+                self.res_x.extend_from_slice(row);
+                self.res_y.push(y);
+            } else if self.cfg.reservoir > 0 {
+                let j = self.res_rng.below(self.seen);
+                if j < self.cfg.reservoir {
+                    self.res_x[j * d..(j + 1) * d].copy_from_slice(row);
+                    self.res_y[j] = y;
+                }
+            }
+        }
+        self.dirty_points += applied;
+        if self.ski.grid() != &old_grid {
+            self.on_grid_changed(&old_grid);
+        }
+    }
+
+    /// Admission control for one observation: finite values only, and
+    /// any required auto-expansion must keep the grid under
+    /// `cfg.max_grid_cells` (computed in f64 so a wild outlier cannot
+    /// overflow the size arithmetic before the check).
+    fn admit(&self, row: &[f64], y: f64) -> bool {
+        if !y.is_finite() || row.iter().any(|v| !v.is_finite()) {
+            return false;
+        }
+        let grid = self.ski.grid();
+        // Same effective margin as IncrementalSki (which clamps to >= 1),
+        // so the cap is sized against the expansion that will actually
+        // be applied.
+        if let Some(exp) = grid.expansion_to_cover(row, self.cfg.msgp.margin_cells.max(1)) {
+            let mut m_new = 1.0f64;
+            for (a, ax) in grid.axes.iter().enumerate() {
+                m_new *= (ax.n as f64) + (exp.added_lo[a] as f64) + (exp.added_hi[a] as f64);
+            }
+            if m_new > self.cfg.max_grid_cells as f64 {
+                return false;
+            }
+        }
+        true
+    }
+
+    fn on_grid_changed(&mut self, old_grid: &Grid) {
+        let new_grid = self.ski.grid().clone();
+        self.gk = GridKernel::new(&self.kernel, &new_grid, &self.cfg.msgp);
+        self.t_mean = remap_grid_vec(old_grid, &new_grid, &self.t_mean);
+        self.u_mean = remap_grid_vec(old_grid, &new_grid, &self.u_mean);
+        self.nu_u = remap_grid_vec(old_grid, &new_grid, &self.nu_u);
+        for t in self.t_probes.iter_mut() {
+            *t = remap_grid_vec(old_grid, &new_grid, t);
+        }
+        // Probe draws: keep existing cells' normals, give new cells
+        // fresh ones (zeros would bias the variance estimate low).
+        let mask = {
+            let ones = vec![1.0; old_grid.m()];
+            remap_grid_vec(old_grid, &new_grid, &ones)
+        };
+        for g in self.g_probes.iter_mut() {
+            let remapped = remap_grid_vec(old_grid, &new_grid, g);
+            *g = remapped
+                .iter()
+                .zip(&mask)
+                .map(|(&v, &keep)| if keep > 0.5 { v } else { self.probe_rng.normal() })
+                .collect();
+        }
+        self.ws = CgWorkspace::new(new_grid.m());
+    }
+
+    /// Warm-started refresh of the fast-prediction caches:
+    /// `u_mean = sf2 S B^{-1} S b` and the stochastic `nu_U` via the
+    /// probe accumulators. Cost: `(n_s + 1)` CG solves on the m-domain
+    /// operator `B = sigma^2 I + sf2 S G S` — independent of n.
+    pub fn refresh(&mut self) -> RefreshStats {
+        let t0 = Instant::now();
+        let m = self.m();
+        let sf2 = self.kernel.sf2();
+        let sigma2 = self.sigma2;
+        let opts = self.cfg.msgp.cg.warm();
+        // Borrow the read-only operator pieces as disjoint fields so the
+        // warm-start buffers and workspace stay mutably borrowable.
+        let gk = &self.gk;
+        let ski = &self.ski;
+        let mut gbuf = vec![0.0f64; m];
+        let mut apply = |v: &[f64], out: &mut [f64]| {
+            let s1 = gk.sqrt_matvec(v);
+            ski.g_matvec_into(&s1, &mut gbuf);
+            let s3 = gk.sqrt_matvec(&gbuf);
+            for ((o, &s), &vi) in out.iter_mut().zip(&s3).zip(v) {
+                *o = sf2 * s + sigma2 * vi;
+            }
+        };
+        // --- mean solve ---
+        let s_b = gk.sqrt_matvec(ski.wty());
+        let mean_res = cg_solve(
+            &mut apply,
+            |v, out| out.copy_from_slice(v),
+            &s_b,
+            &mut self.t_mean,
+            opts,
+            &mut self.ws,
+        );
+        let mut u = gk.sqrt_matvec(&self.t_mean);
+        for v in u.iter_mut() {
+            *v *= sf2;
+        }
+        self.u_mean = u;
+        // --- variance probes ---
+        let sig = sigma2.sqrt();
+        let rsf = sf2.sqrt();
+        let mut acc = vec![0.0f64; m];
+        let mut var_iters = 0usize;
+        let ns = self.g_probes.len().max(1);
+        for (k, g_k) in self.g_probes.iter().enumerate() {
+            // p~ = sqrt(sf2) G S g_k + sigma q_k  (the m-domain image of
+            // the Papandreou–Yuille probe), then solve B t = S p~.
+            let sg = gk.sqrt_matvec(g_k);
+            let gsg = ski.g_matvec(&sg);
+            let q = &ski.probes()[k];
+            let ptilde: Vec<f64> =
+                gsg.iter().zip(q).map(|(&a, &b)| rsf * a + sig * b).collect();
+            let rhs = gk.sqrt_matvec(&ptilde);
+            let res = cg_solve(
+                &mut apply,
+                |v, out| out.copy_from_slice(v),
+                &rhs,
+                &mut self.t_probes[k],
+                opts,
+                &mut self.ws,
+            );
+            var_iters += res.iters;
+            let uk = gk.sqrt_matvec(&self.t_probes[k]);
+            for (a, &v) in acc.iter_mut().zip(&uk) {
+                let t = sf2 * v;
+                *a += t * t;
+            }
+        }
+        for a in acc.iter_mut() {
+            *a /= ns as f64;
+        }
+        self.nu_u = acc;
+        self.refresh_count += 1;
+        self.dirty_points = 0;
+        let stats = RefreshStats {
+            mean_iters: mean_res.iters,
+            var_iters_total: var_iters,
+            m,
+            n: self.n(),
+            wall: t0.elapsed(),
+        };
+        self.last_refresh = stats.clone();
+        stats
+    }
+
+    /// Freeze the current caches into a serving snapshot (refresh first
+    /// if ingests happened since the last refresh).
+    pub fn serving_model(&mut self) -> ServingModel {
+        if self.dirty_points > 0 || self.refresh_count == 0 {
+            self.refresh();
+        }
+        ServingModel::from_parts(
+            self.ski.grid().clone(),
+            self.u_mean.clone(),
+            self.nu_u.clone(),
+            self.kernel.sf2(),
+            self.sigma2,
+        )
+    }
+
+    /// Whittle hyperparameter re-optimization on the reservoir snapshot:
+    /// fit a batch MSGP on the sampled points (same grid), run
+    /// `reopt_iters` Adam steps on the spectral marginal likelihood,
+    /// adopt the learned hypers, rebuild the grid operator, and refresh.
+    /// Returns the final snapshot LML, or `None` when the reservoir is
+    /// still empty.
+    pub fn reoptimize(&mut self) -> anyhow::Result<Option<f64>> {
+        if self.res_y.is_empty() {
+            return Ok(None);
+        }
+        let d = self.ski.grid().dim();
+        let snapshot = Dataset { x: self.res_x.clone(), d, y: self.res_y.clone() };
+        let mut cfg = self.cfg.msgp.clone();
+        cfg.n_per_dim = self.ski.grid().shape();
+        let mut model = MsgpModel::fit_with_grid(
+            self.kernel.clone(),
+            self.sigma2,
+            snapshot,
+            self.ski.grid().clone(),
+            cfg,
+        )?;
+        model.train(self.cfg.reopt_iters, self.cfg.reopt_lr)?;
+        let lml = model.lml();
+        self.kernel = model.kernel.clone();
+        self.sigma2 = model.sigma2;
+        self.gk = GridKernel::new(&self.kernel, self.ski.grid(), &self.cfg.msgp);
+        self.refresh();
+        Ok(Some(lml))
+    }
+}

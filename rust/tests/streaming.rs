@@ -1,0 +1,426 @@
+//! Streaming subsystem: property tests for the incremental sufficient
+//! statistics, snapshot-swap consistency under concurrent readers, and
+//! the end-to-end coordinator ingest -> refresh -> serve loop.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use msgp::coordinator::{BatcherConfig, EngineSpec, ModelSlot, Server, ServingModel};
+use msgp::data::{gen_stress_1d, gen_stress_2d, Dataset};
+use msgp::gp::msgp::{KernelSpec, MsgpConfig, MsgpModel};
+use msgp::grid::{Grid, GridAxis};
+use msgp::interp::SparseInterp;
+use msgp::kernels::{KernelType, ProductKernel};
+use msgp::stream::{IncrementalSki, StreamConfig, StreamTrainer};
+use msgp::util::Rng;
+
+fn rmse(a: &[f64], b: &[f64]) -> f64 {
+    let s: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+    (s / a.len() as f64).sqrt()
+}
+
+fn se_kernel() -> KernelSpec {
+    KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0))
+}
+
+/// Satellite property: N single-point ingests reproduce the from-scratch
+/// `W^T y` and per-cell counts to 1e-10.
+#[test]
+fn prop_incremental_wty_and_counts_match_batch_build() {
+    for (n, seed) in [(57usize, 3u64), (400, 11), (201, 29)] {
+        let data = gen_stress_1d(n, 0.1, seed);
+        let grid = Grid::covering(&data.x, 1, &[96], 3);
+        let mut ski = IncrementalSki::new(grid.clone(), 4, 3, seed);
+        for i in 0..n {
+            let exp = ski.ingest(&data.x[i..i + 1], data.y[i]);
+            assert!(exp.is_none(), "covering grid must not expand");
+        }
+        assert_eq!(ski.n(), n);
+        // From-scratch statistics.
+        let w = SparseInterp::build(&data.x, &grid);
+        let want_wty = w.tmatvec(&data.y);
+        for (j, (a, b)) in ski.wty().iter().zip(&want_wty).enumerate() {
+            assert!((a - b).abs() < 1e-10, "n={n} cell {j}: {a} vs {b}");
+        }
+        // Counts: every point lands in its nearest cell exactly once.
+        let total: u64 = ski.counts().iter().map(|&c| c as u64).sum();
+        assert_eq!(total, n as u64);
+        let mut want_counts = vec![0u32; grid.m()];
+        for i in 0..n {
+            let u = grid.axes[0].to_units(data.x[i]).round();
+            let idx = (u.max(0.0) as usize).min(grid.axes[0].n - 1);
+            want_counts[idx] += 1;
+        }
+        assert_eq!(ski.counts(), &want_counts[..]);
+    }
+}
+
+/// The banded Gram accumulator agrees with the dense `W^T W`.
+#[test]
+fn prop_banded_gram_matches_dense_wtw_1d_and_2d() {
+    // 1-D.
+    let data = gen_stress_1d(150, 0.1, 7);
+    let grid = Grid::covering(&data.x, 1, &[40], 3);
+    let mut ski = IncrementalSki::new(grid.clone(), 2, 3, 7);
+    ski.ingest_batch(&data.x, &data.y);
+    let w = SparseInterp::build(&data.x, &grid);
+    let mut rng = Rng::new(5);
+    for _ in 0..5 {
+        let v = rng.normal_vec(grid.m());
+        let got = ski.g_matvec(&v);
+        let want = w.tmatvec(&w.matvec(&v));
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+    // 2-D (exercises the multi-dimensional band encoding).
+    let data2 = gen_stress_2d(120, 0.1, 9);
+    let grid2 = Grid::covering(&data2.x, 2, &[14, 12], 3);
+    let mut ski2 = IncrementalSki::new(grid2.clone(), 2, 3, 9);
+    ski2.ingest_batch(&data2.x, &data2.y);
+    let w2 = SparseInterp::build(&data2.x, &grid2);
+    for _ in 0..5 {
+        let v = rng.normal_vec(grid2.m());
+        let got = ski2.g_matvec(&v);
+        let want = w2.tmatvec(&w2.matvec(&v));
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+}
+
+/// Grid auto-expansion preserves previously absorbed statistics exactly
+/// (step-preserving whole-cell growth = pure index shift).
+#[test]
+fn prop_expansion_remaps_statistics_exactly() {
+    let grid = Grid::new(vec![GridAxis::span(-2.0, 2.0, 32)]);
+    let mut ski = IncrementalSki::new(grid, 3, 3, 13);
+    let mut rng = Rng::new(21);
+    // Phase 1: interior points.
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for _ in 0..60 {
+        let x = rng.uniform_in(-1.5, 1.5);
+        let y = rng.normal();
+        xs.push(x);
+        ys.push(y);
+        ski.ingest(&[x], y);
+    }
+    // Phase 2: a far-out point forces expansion.
+    let exp = ski.ingest(&[6.0], 0.5);
+    assert!(exp.is_some(), "out-of-box point must expand the grid");
+    xs.push(6.0);
+    ys.push(0.5);
+    let grid_now = ski.grid().clone();
+    assert!(grid_now.covers(&[6.0], 1.0));
+    // From-scratch build on the *final* grid must agree.
+    let w = SparseInterp::build(&xs, &grid_now);
+    let want_wty = w.tmatvec(&ys);
+    for (a, b) in ski.wty().iter().zip(&want_wty) {
+        assert!((a - b).abs() < 1e-10, "{a} vs {b}");
+    }
+    let v: Vec<f64> = (0..grid_now.m()).map(|i| ((i % 7) as f64) - 3.0).collect();
+    let got = ski.g_matvec(&v);
+    let want = w.tmatvec(&w.matvec(&v));
+    for (a, b) in got.iter().zip(&want) {
+        assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+    }
+}
+
+/// The streaming m-domain mean solve reproduces batch-trained fast
+/// predictions (same grid, same hypers) up to the Whittle-circulant
+/// approximation.
+#[test]
+fn streaming_refresh_matches_batch_predictions() {
+    let data = gen_stress_1d(1500, 0.05, 17);
+    let grid = Grid::new(vec![GridAxis::span(-12.0, 13.0, 256)]);
+    let mcfg = MsgpConfig { n_per_dim: vec![256], n_var_samples: 8, ..Default::default() };
+    let batch =
+        MsgpModel::fit_with_grid(se_kernel(), 0.01, data.clone(), grid.clone(), mcfg.clone())
+            .unwrap();
+    let mut trainer = StreamTrainer::new(
+        se_kernel(),
+        0.01,
+        grid,
+        StreamConfig { msgp: mcfg, ..Default::default() },
+    );
+    trainer.ingest_batch(&data.x, &data.y);
+    let stats = trainer.refresh();
+    assert!(stats.mean_iters > 0 && stats.n == 1500);
+    let sm = trainer.serving_model();
+    let xs: Vec<f64> = (0..200).map(|i| -9.5 + i as f64 * 0.095).collect();
+    let (stream_mean, _) = sm.predict_batch(&xs);
+    let batch_mean = batch.predict_mean(&xs);
+    let err = rmse(&stream_mean, &batch_mean);
+    assert!(err < 0.02, "stream vs batch mean RMSE {err}");
+}
+
+/// Warm-started incremental refreshes converge in fewer CG iterations
+/// than a from-zero refresh of the same state.
+#[test]
+fn warm_started_refresh_beats_cold_refresh() {
+    let data = gen_stress_1d(2000, 0.05, 23);
+    let grid = Grid::new(vec![GridAxis::span(-12.0, 13.0, 256)]);
+    let mcfg = MsgpConfig { n_per_dim: vec![256], n_var_samples: 4, ..Default::default() };
+    let cfg = StreamConfig { msgp: mcfg, ..Default::default() };
+    let mut warm = StreamTrainer::new(se_kernel(), 0.01, grid.clone(), cfg.clone());
+    // Absorb most of the stream and refresh (populates the warm starts).
+    warm.ingest_batch(&data.x[..1800], &data.y[..1800]);
+    warm.refresh();
+    // Absorb a small increment and refresh again: warm path.
+    warm.ingest_batch(&data.x[1800..], &data.y[1800..]);
+    let warm_stats = warm.refresh();
+    // Cold baseline: a fresh trainer over the identical data refreshes
+    // from zero.
+    let mut cold = StreamTrainer::new(se_kernel(), 0.01, grid, cfg);
+    cold.ingest_batch(&data.x, &data.y);
+    let cold_stats = cold.refresh();
+    assert!(
+        warm_stats.mean_iters < cold_stats.mean_iters,
+        "warm {} !< cold {}",
+        warm_stats.mean_iters,
+        cold_stats.mean_iters
+    );
+}
+
+/// Satellite property: concurrent `predict_batch` readers racing a
+/// swapper never observe a torn model. Each installed model is
+/// internally consistent (predicts mean == var == its tag); a torn
+/// snapshot would mix tags.
+#[test]
+fn prop_snapshot_swap_never_tears_under_concurrent_readers() {
+    let grid = Grid::new(vec![GridAxis::span(-1.0, 1.0, 16)]);
+    let tagged = |c: f64| -> ServingModel {
+        // kss = 0, nu_u = 0 -> var = sigma2 = c; u_mean = c (partition of
+        // unity) -> mean = c at interior points.
+        ServingModel::from_parts(grid.clone(), vec![c; 16], vec![0.0; 16], 0.0, c)
+    };
+    let slot = Arc::new(ModelSlot::new(tagged(1.0)));
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut joins = Vec::new();
+    for t in 0..4 {
+        let slot = slot.clone();
+        let stop = stop.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(100 + t);
+            let mut seen = [false, false];
+            while !stop.load(Ordering::Relaxed) {
+                let model = slot.get();
+                let xs: Vec<f64> = (0..8).map(|_| rng.uniform_in(-0.5, 0.5)).collect();
+                let (means, vars) = model.predict_batch(&xs);
+                for (m, v) in means.iter().zip(&vars) {
+                    assert!((m - v).abs() < 1e-9, "torn snapshot: mean {m} var {v}");
+                    let tag = *m;
+                    assert!(
+                        (tag - 1.0).abs() < 1e-9 || (tag - 2.0).abs() < 1e-9,
+                        "unknown tag {tag}"
+                    );
+                    seen[if (tag - 1.0).abs() < 1e-9 { 0 } else { 1 }] = true;
+                }
+            }
+            seen
+        }));
+    }
+    for i in 0..2000 {
+        slot.swap(tagged(if i % 2 == 0 { 2.0 } else { 1.0 }));
+        if i % 64 == 0 {
+            std::thread::yield_now();
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    let mut seen_any = [false, false];
+    for j in joins {
+        let seen = j.join().unwrap();
+        seen_any[0] |= seen[0];
+        seen_any[1] |= seen[1];
+    }
+    // Readers actually observed both versions (the race was real).
+    assert!(seen_any[0] && seen_any[1], "swap race never exercised both versions");
+}
+
+/// Acceptance: end-to-end streaming through the coordinator. Ingest
+/// >= 10k points via the `/ingest` route in batches; held-out RMSE must
+/// match a batch-trained MSGP on the full dataset within 5%, with O(1)
+/// per-point predict latency.
+#[test]
+fn e2e_coordinator_streaming_matches_batch_rmse() {
+    let n = 12_000;
+    let data = gen_stress_1d(n, 0.05, 1);
+    let test = gen_stress_1d(500, 0.0, 99);
+    let grid = Grid::new(vec![GridAxis::span(-12.0, 13.0, 256)]);
+    let mcfg = MsgpConfig { n_per_dim: vec![256], n_var_samples: 8, ..Default::default() };
+    // Batch reference on the full dataset.
+    let batch =
+        MsgpModel::fit_with_grid(se_kernel(), 0.01, data.clone(), grid.clone(), mcfg.clone())
+            .unwrap();
+    let batch_rmse = rmse(&batch.predict_mean(&test.x), &test.y);
+    assert!(batch_rmse < 0.1, "batch reference unexpectedly poor: {batch_rmse}");
+    // Streaming: same grid + hypers, fed through the coordinator.
+    let trainer = StreamTrainer::new(
+        se_kernel(),
+        0.01,
+        grid,
+        StreamConfig {
+            msgp: mcfg,
+            refresh_every: 4096, // a few mid-stream swaps
+            ..Default::default()
+        },
+    );
+    let server = Server::start_online(trainer, EngineSpec::Native, BatcherConfig::default());
+    let bs = 500;
+    for c in 0..(n / bs) {
+        let lo = c * bs;
+        let hi = lo + bs;
+        let applied = server
+            .ingest(data.x[lo..hi].to_vec(), data.y[lo..hi].to_vec())
+            .expect("ingest");
+        assert_eq!(applied, bs);
+    }
+    server.flush_stream().expect("flush");
+    assert_eq!(
+        server.metrics.ingested_points_total.load(Ordering::Relaxed),
+        n as u64
+    );
+    assert!(server.metrics.refresh_count.load(Ordering::Relaxed) >= 2);
+    // Held-out predictions through the predict route.
+    let t0 = Instant::now();
+    let mut preds = Vec::with_capacity(test.y.len());
+    for i in 0..test.y.len() {
+        preds.push(server.predict(vec![test.x[i]]).unwrap().mean);
+    }
+    let per_point = t0.elapsed() / test.y.len() as u32;
+    let stream_rmse = rmse(&preds, &test.y);
+    assert!(
+        stream_rmse <= batch_rmse * 1.05 + 1e-4,
+        "stream RMSE {stream_rmse} vs batch {batch_rmse}"
+    );
+    // O(1) serving: a sparse gather + queue round trip. 50ms/pt is a
+    // generous sanity ceiling even on loaded CI machines.
+    assert!(per_point.as_millis() < 50, "predict latency {per_point:?}/pt");
+    server.shutdown();
+}
+
+/// Streaming with grid auto-expansion end to end: start on a grid that
+/// covers almost none of the data and let ingestion grow it.
+#[test]
+fn streaming_grid_expansion_end_to_end() {
+    let data = gen_stress_1d(1200, 0.05, 31);
+    let tiny = Grid::new(vec![GridAxis::span(-0.5, 0.5, 16)]);
+    let mcfg = MsgpConfig { n_per_dim: vec![16], n_var_samples: 4, ..Default::default() };
+    let mut trainer = StreamTrainer::new(
+        se_kernel(),
+        0.01,
+        tiny,
+        StreamConfig { msgp: mcfg, ..Default::default() },
+    );
+    for c in 0..12 {
+        let lo = c * 100;
+        let hi = lo + 100;
+        trainer.ingest_batch(&data.x[lo..hi], &data.y[lo..hi]);
+    }
+    assert!(trainer.m() > 16, "grid must have auto-expanded (m = {})", trainer.m());
+    let covered = trainer.grid().covers(&[-10.0], 1.0) && trainer.grid().covers(&[10.0], 1.0);
+    assert!(covered, "expanded grid must cover the data range");
+    trainer.refresh();
+    let sm = trainer.serving_model();
+    let test = gen_stress_1d(300, 0.0, 77);
+    let (mean, _) = sm.predict_batch(&test.x);
+    let err = rmse(&mean, &test.y);
+    // The expanded grid keeps the tiny grid's (coarse) step, so allow a
+    // looser tolerance than the fixed-grid test.
+    assert!(err < 0.2, "post-expansion RMSE {err}");
+}
+
+/// Hyperparameter re-optimization on the reservoir snapshot improves a
+/// deliberately mis-specified kernel.
+#[test]
+fn reservoir_reopt_improves_misspecified_hypers() {
+    let data = gen_stress_1d(1500, 0.05, 41);
+    let grid = Grid::new(vec![GridAxis::span(-12.0, 13.0, 128)]);
+    let mcfg = MsgpConfig { n_per_dim: vec![128], n_var_samples: 4, ..Default::default() };
+    // Start far from good hypers: tiny lengthscale, tiny signal.
+    let bad = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 0.25, 0.3));
+    let mut trainer = StreamTrainer::new(
+        bad,
+        0.2,
+        grid,
+        StreamConfig {
+            msgp: mcfg,
+            reopt_iters: 25,
+            reopt_lr: 0.1,
+            reservoir: 512,
+            ..Default::default()
+        },
+    );
+    trainer.ingest_batch(&data.x, &data.y);
+    trainer.refresh();
+    let test = gen_stress_1d(300, 0.0, 55);
+    let before = {
+        let sm = trainer.serving_model();
+        rmse(&sm.predict_batch(&test.x).0, &test.y)
+    };
+    let lml = trainer.reoptimize().unwrap().expect("reservoir non-empty");
+    assert!(lml.is_finite());
+    let after = {
+        let sm = trainer.serving_model();
+        rmse(&sm.predict_batch(&test.x).0, &test.y)
+    };
+    assert!(after < before, "re-opt must improve held-out RMSE: {after} !< {before}");
+}
+
+/// Admission control: non-finite values and wild outliers (whose
+/// auto-expansion would exceed the grid-size cap) are rejected without
+/// corrupting statistics or ballooning memory.
+#[test]
+fn outliers_and_nans_are_rejected_not_absorbed() {
+    let grid = Grid::new(vec![GridAxis::span(-10.0, 10.0, 64)]);
+    let mcfg = MsgpConfig { n_per_dim: vec![64], n_var_samples: 2, ..Default::default() };
+    let mut trainer = StreamTrainer::new(
+        se_kernel(),
+        0.01,
+        grid,
+        StreamConfig { msgp: mcfg, max_grid_cells: 4096, ..Default::default() },
+    );
+    trainer.ingest_batch(&[0.5, f64::NAN, 1e9, -0.5, f64::INFINITY], &[1.0, 1.0, 1.0, 1.0, 1.0]);
+    assert_eq!(trainer.n(), 2, "only the two sane points are absorbed");
+    assert_eq!(trainer.rejected_points, 3);
+    assert_eq!(trainer.m(), 64, "the 1e9 outlier must not explode the grid");
+    // A moderate out-of-box point under the cap still expands normally.
+    trainer.ingest_batch(&[15.0], &[0.2]);
+    assert_eq!(trainer.rejected_points, 3);
+    assert!(trainer.m() > 64 && trainer.m() < 4096);
+    // The server front door rejects non-finite batches outright.
+    let g2 = Grid::new(vec![GridAxis::span(-10.0, 10.0, 64)]);
+    let mcfg2 = MsgpConfig { n_per_dim: vec![64], n_var_samples: 2, ..Default::default() };
+    let t2 = StreamTrainer::new(
+        se_kernel(),
+        0.01,
+        g2,
+        StreamConfig { msgp: mcfg2, ..Default::default() },
+    );
+    let server = Server::start_online(t2, EngineSpec::Native, BatcherConfig::default());
+    assert!(server.ingest(vec![f64::NAN], vec![1.0]).is_err());
+    assert!(server.ingest(vec![0.0], vec![f64::NAN]).is_err());
+    server.shutdown();
+}
+
+/// Ingest shape validation and the `Dataset` helper round trip.
+#[test]
+fn ingest_rejects_malformed_shapes() {
+    let grid = Grid::new(vec![GridAxis::span(-1.0, 1.0, 16)]);
+    let mcfg = MsgpConfig { n_per_dim: vec![16], n_var_samples: 2, ..Default::default() };
+    let trainer = StreamTrainer::new(
+        se_kernel(),
+        0.01,
+        grid,
+        StreamConfig { msgp: mcfg, ..Default::default() },
+    );
+    let server = Server::start_online(trainer, EngineSpec::Native, BatcherConfig::default());
+    assert!(server.ingest(vec![0.0, 0.5], vec![1.0]).is_err(), "xs/ys mismatch");
+    assert!(server.ingest(vec![0.0], vec![1.0]).is_ok());
+    // Dataset sanity used across the suite.
+    let d = Dataset { x: vec![1.0, 2.0], d: 1, y: vec![3.0, 4.0] };
+    assert_eq!(d.n(), 2);
+    server.shutdown();
+}

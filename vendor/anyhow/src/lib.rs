@@ -1,0 +1,119 @@
+//! Minimal offline shim of the `anyhow` crate.
+//!
+//! The build environment has no network access, so the real crates.io
+//! `anyhow` cannot be fetched. This shim provides the subset the `msgp`
+//! crate uses — [`Result`], [`Error`], and the `anyhow!` / `bail!` /
+//! `ensure!` macros — with the same call-site syntax, so swapping the
+//! path dependency for the real crate is a one-line `Cargo.toml` change.
+
+use std::fmt;
+
+/// A string-backed error type (the shim keeps no source chain).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from a rendered message.
+    pub fn new(msg: String) -> Self {
+        Error { msg }
+    }
+
+    /// `anyhow::Error::msg` compatibility constructor.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error` — that is what makes this blanket conversion from
+// every std error type coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::new(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::new(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] when the condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!(
+                "condition failed: {}",
+                ::std::stringify!($cond)
+            ));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(flag, "flag was {}", flag);
+        Ok(7)
+    }
+
+    #[test]
+    fn macros_render_messages() {
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(format!("{e}"), "x = 3");
+        let e2 = anyhow!(String::from("plain"));
+        assert_eq!(format!("{e2:?}"), "plain");
+        assert!(fails(true).is_ok());
+        assert_eq!(format!("{}", fails(false).unwrap_err()), "flag was false");
+    }
+
+    #[test]
+    fn std_errors_convert() {
+        fn io_fail() -> Result<()> {
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "boom"))?;
+            Ok(())
+        }
+        assert_eq!(format!("{}", io_fail().unwrap_err()), "boom");
+    }
+}

@@ -1,0 +1,171 @@
+//! Offline stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! The real crate links the XLA runtime and is only available in build
+//! environments where its closure has been vendored. This stub exposes
+//! the same API surface used by `msgp::runtime`, but
+//! [`PjRtClient::cpu`] always fails — so `Runtime::load` returns an
+//! error and the serving coordinator degrades to the native Rust engine
+//! (which it does gracefully by design). Swap the `xla` path dependency
+//! in the workspace `Cargo.toml` for the vendored xla-rs to enable the
+//! compiled PJRT artifacts.
+
+use std::path::Path;
+
+/// Error type mirroring xla-rs (`Debug`-formatted at call sites).
+#[derive(Debug)]
+pub struct XlaError(pub String);
+
+impl std::fmt::Display for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn unavailable<T>() -> Result<T, XlaError> {
+    Err(XlaError(
+        "XLA runtime not vendored in this build (stub crate); using native engine".to_string(),
+    ))
+}
+
+/// Element types transferable to/from [`Literal`]s.
+pub trait NativeType: Copy + Default + 'static {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+/// A parsed HLO module (stub: never constructed successfully).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse HLO text from a file (stub: always fails).
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<Self, XlaError> {
+        unavailable()
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Host-side literal (tensor) value.
+#[derive(Clone)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(_v: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    /// Reshape (stub: fails — only reachable with a live client).
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaError> {
+        unavailable()
+    }
+
+    /// Destructure a 1-tuple.
+    pub fn to_tuple1(&self) -> Result<Literal, XlaError> {
+        unavailable()
+    }
+
+    /// Destructure a 2-tuple.
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal), XlaError> {
+        unavailable()
+    }
+
+    /// Copy out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, XlaError> {
+        unavailable()
+    }
+
+    /// First element of the flattened literal.
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T, XlaError> {
+        unavailable()
+    }
+}
+
+impl From<f32> for Literal {
+    fn from(_v: f32) -> Self {
+        Literal { _private: () }
+    }
+}
+
+impl From<f64> for Literal {
+    fn from(_v: f64) -> Self {
+        Literal { _private: () }
+    }
+}
+
+/// Device-side buffer returned by an execution.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Transfer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        unavailable()
+    }
+}
+
+/// Compiled executable (stub: never constructed).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments.
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        unavailable()
+    }
+}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// CPU client (stub: always fails; callers degrade to native).
+    pub fn cpu() -> Result<Self, XlaError> {
+        unavailable()
+    }
+
+    /// Platform name for diagnostics.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_fails_cleanly() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(format!("{err:?}").contains("stub"));
+    }
+}
