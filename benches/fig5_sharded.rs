@@ -1,0 +1,87 @@
+//! `cargo bench --bench fig5_sharded` — sharded data-parallel scaling:
+//! per-shard refresh wall-clock vs a single whole-domain trainer (the
+//! ~1/S claim: each shard solves an m/S-sized system on its own core),
+//! plus routed ingest throughput. BENCH_FULL=1 enables the larger sweep.
+
+use msgp::data::gen_stress_1d;
+use msgp::gp::msgp::{KernelSpec, MsgpConfig};
+use msgp::grid::{Grid, GridAxis};
+use msgp::kernels::{KernelType, ProductKernel};
+use msgp::shard::{ShardConfig, ShardedTrainer};
+use msgp::stream::{StreamConfig, StreamTrainer};
+use std::time::Instant;
+
+fn main() {
+    let full = std::env::var("BENCH_FULL").is_ok();
+    let m: usize = if full { 8192 } else { 4096 };
+    let n: usize = if full { 300_000 } else { 60_000 };
+    let ns = 8usize;
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let kernel = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0));
+    let grid = Grid::new(vec![GridAxis::span(-12.0, 13.0, m)]);
+    let data = gen_stress_1d(n, 0.05, 7);
+    println!("# fig5_sharded: m = {m}, n = {n}, n_s = {ns}, cores = {cores}");
+    println!("# config ingest_pts_per_s refresh_wall_ms speedup_vs_single");
+
+    // Single-trainer baseline: one O(m) refresh on one core.
+    let mcfg = MsgpConfig { n_per_dim: vec![m], n_var_samples: ns, ..Default::default() };
+    let mut single = StreamTrainer::new(
+        kernel.clone(),
+        0.01,
+        grid.clone(),
+        StreamConfig { msgp: mcfg.clone(), ..Default::default() },
+    );
+    let t0 = Instant::now();
+    single.ingest_batch(&data.x, &data.y);
+    let single_ingest = t0.elapsed().as_secs_f64();
+    // Warm the caches once, then time a post-increment refresh (the
+    // steady-state cost a live swap pays).
+    single.refresh();
+    single.ingest_batch(&data.x[..1024], &data.y[..1024]);
+    let t1 = Instant::now();
+    single.refresh();
+    let single_refresh = t1.elapsed().as_secs_f64();
+    println!(
+        "{:>8} {:>16.0} {:>15.2} {:>17.2}",
+        "single",
+        n as f64 / single_ingest,
+        single_refresh * 1e3,
+        1.0
+    );
+
+    for &s in &[2usize, 4, 8] {
+        if s > cores.max(2) {
+            break;
+        }
+        let cfg = ShardConfig {
+            shards: s,
+            halo: 8,
+            blend: 4,
+            refresh_every: usize::MAX, // refresh only on flush, so we time it
+            msgp: mcfg.clone(),
+            ..Default::default()
+        };
+        let sharded = ShardedTrainer::start(kernel.clone(), 0.01, grid.clone(), cfg);
+        let t2 = Instant::now();
+        let bs = 4096;
+        let mut i = 0;
+        while i < n {
+            let hi = (i + bs).min(n);
+            sharded.ingest_batch(&data.x[i..hi], &data.y[i..hi]);
+            i = hi;
+        }
+        let shard_ingest = t2.elapsed().as_secs_f64();
+        sharded.flush(); // cold warm-starts
+        sharded.ingest_batch(&data.x[..1024], &data.y[..1024]);
+        let t3 = Instant::now();
+        sharded.flush(); // all shards refresh concurrently
+        let shard_refresh = t3.elapsed().as_secs_f64();
+        println!(
+            "{:>8} {:>16.0} {:>15.2} {:>17.2}",
+            format!("S={s}"),
+            n as f64 / shard_ingest,
+            shard_refresh * 1e3,
+            single_refresh / shard_refresh
+        );
+    }
+}

@@ -1,0 +1,88 @@
+//! Sharded streaming walkthrough: partition the inducing grid into
+//! spatial shards, stream observations through a sharded coordinator
+//! while per-shard trainers refresh in parallel, then inspect the shard
+//! layout, check a seam, and fold the statistics into one global
+//! snapshot.
+//!
+//! `cargo run --release --example sharded_streaming`
+
+use msgp::coordinator::{BatcherConfig, Server};
+use msgp::data::{gen_stress_1d, stress_fn};
+use msgp::gp::msgp::{KernelSpec, MsgpConfig};
+use msgp::grid::{Grid, GridAxis};
+use msgp::kernels::{KernelType, ProductKernel};
+use msgp::shard::{ShardConfig, ShardedTrainer};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let shards = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(2).min(4);
+    let kernel = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0));
+    let grid = Grid::new(vec![GridAxis::span(-12.0, 13.0, 512)]);
+    let cfg = ShardConfig {
+        shards,
+        halo: 8,
+        blend: 4,
+        refresh_every: 2048,
+        msgp: MsgpConfig { n_per_dim: vec![512], n_var_samples: 8, ..Default::default() },
+        ..Default::default()
+    };
+    let trainer = ShardedTrainer::start(kernel, 0.01, grid.clone(), cfg);
+    let seam_x = grid.axes[0].coord(trainer.plan().cuts()[1]);
+    println!("plan:\n{}", trainer.summary());
+    let server = Server::start_sharded(trainer, BatcherConfig::default());
+
+    // Stream 20k observations; each shard refreshes + hot-swaps its own
+    // slot every `refresh_every` points, independently of the others.
+    let data = gen_stress_1d(20_000, 0.05, 11);
+    let bs = 500;
+    let t0 = Instant::now();
+    for c in 0..data.y.len() / bs {
+        let lo = c * bs;
+        let hi = lo + bs;
+        server.ingest(data.x[lo..hi].to_vec(), data.y[lo..hi].to_vec())?;
+        if (c + 1) % 10 == 0 {
+            let p = server.predict(vec![seam_x])?;
+            println!(
+                "n = {:>6}:  seam mean {:+.4}  var {:.4}   (truth {:+.4})",
+                (c + 1) * bs,
+                p.mean,
+                p.var,
+                stress_fn(seam_x)
+            );
+        }
+    }
+    let ingest_wall = t0.elapsed();
+    server.flush_stream()?;
+
+    // Seam continuity: sample finely across the first shard boundary.
+    let mut max_jump = 0.0f64;
+    let mut prev = f64::NAN;
+    let mut x = seam_x - 0.5;
+    while x <= seam_x + 0.5 {
+        let p = server.predict(vec![x])?;
+        if prev.is_finite() {
+            max_jump = max_jump.max((p.mean - prev).abs());
+        }
+        prev = p.mean;
+        x += 0.01;
+    }
+    println!("max step across the seam (dx = 0.01): {max_jump:.5}");
+
+    // The additive merge: whole-domain snapshot from per-shard stats.
+    let trainer = server.shard_trainer().expect("sharded server");
+    let merged = trainer.merged_stats();
+    println!(
+        "merged stats: n = {}, weight = {:.1}, m = {}",
+        merged.n(),
+        merged.weight(),
+        merged.m()
+    );
+    println!(
+        "ingest throughput: {:.0} points/s across {shards} shards",
+        data.y.len() as f64 / ingest_wall.as_secs_f64()
+    );
+    println!("shards:\n{}", server.shards_summary().unwrap());
+    println!("metrics: {}", server.metrics.summary());
+    server.shutdown();
+    Ok(())
+}

@@ -14,6 +14,7 @@ use std::time::{Duration, Instant};
 use super::metrics::Metrics;
 use super::router::{Backend, EngineSpec, Router};
 use super::state::{ModelSlot, ServingModel};
+use crate::shard::ShardedServing;
 
 /// A prediction reply.
 #[derive(Clone, Debug)]
@@ -121,40 +122,132 @@ pub fn run(
         },
     };
     loop {
-        // Phase 1: block for the first job (or shutdown).
+        if !collect(&rx, &mut pending, &cfg, &mut accept) {
+            return; // channel closed: drain done, exit
+        }
         if pending.is_empty() {
-            match rx.recv() {
-                Ok(job) => accept(job, &mut pending),
-                Err(_) => return, // channel closed: drain done, exit
-            }
-            if pending.is_empty() {
-                continue; // the job was an ingest; keep waiting
-            }
+            continue; // the wake-up was an ingest; keep waiting
         }
-        // Phase 2: drain whatever is already queued (free batching).
-        while pending.len() < cfg.max_batch {
-            match rx.try_recv() {
-                Ok(job) => accept(job, &mut pending),
-                Err(_) => break,
-            }
-        }
-        // Phase 3: unless eager, keep accumulating until the oldest
-        // request's deadline or capacity.
-        if !cfg.eager {
-            let deadline = pending[0].t0 + cfg.max_wait;
-            while pending.len() < cfg.max_batch {
-                let now = Instant::now();
-                let Some(left) = deadline.checked_duration_since(now) else { break };
-                match rx.recv_timeout(left) {
-                    Ok(job) => accept(job, &mut pending),
-                    Err(RecvTimeoutError::Timeout) => break,
-                    Err(RecvTimeoutError::Disconnected) => break,
-                }
-            }
-        }
-        // Phase 4: execute against the live snapshot and fan out.
+        // Execute against the live snapshot and fan out.
         let model = slot.get();
         flush(&mut pending, &router, &model, &metrics);
+    }
+}
+
+/// The batch-collection phases shared by [`run`] and [`run_sharded`]:
+/// block for the first job, drain whatever is already queued (free
+/// batching), then — unless eager — keep accumulating until the oldest
+/// request's deadline or capacity. Returns `false` when the ingress
+/// channel closed with nothing pending (the loop should exit).
+fn collect(
+    rx: &Receiver<Job>,
+    pending: &mut Vec<Request>,
+    cfg: &BatcherConfig,
+    accept: &mut dyn FnMut(Job, &mut Vec<Request>),
+) -> bool {
+    // Phase 1: block for the first job (or shutdown).
+    if pending.is_empty() {
+        match rx.recv() {
+            Ok(job) => accept(job, pending),
+            Err(_) => return false,
+        }
+        if pending.is_empty() {
+            return true; // the job was a non-predict; caller re-loops
+        }
+    }
+    // Phase 2: drain whatever is already queued (free batching).
+    while pending.len() < cfg.max_batch {
+        match rx.try_recv() {
+            Ok(job) => accept(job, pending),
+            Err(_) => break,
+        }
+    }
+    // Phase 3: unless eager, keep accumulating until the oldest
+    // request's deadline or capacity.
+    if !cfg.eager {
+        let deadline = pending[0].t0 + cfg.max_wait;
+        while pending.len() < cfg.max_batch {
+            let now = Instant::now();
+            let Some(left) = deadline.checked_duration_since(now) else { break };
+            match rx.recv_timeout(left) {
+                Ok(job) => accept(job, pending),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+    }
+    true
+}
+
+/// The sharded batcher loop: same collection phases as [`run`], but the
+/// flush *groups jobs by their owning shard before dispatch* — each
+/// shard group executes as one batch against that shard's slot (with
+/// halo blending handled by [`ShardedServing::predict_routed`]), so a
+/// seam-heavy batch touches at most the two neighboring snapshots and a
+/// refresh on one shard never stalls predictions owned by another.
+/// Ingest jobs are rejected here: sharded servers route `/ingest`
+/// directly to the [`crate::shard::ShardedTrainer`] facade.
+pub fn run_sharded(
+    rx: Receiver<Job>,
+    serving: Arc<ShardedServing>,
+    cfg: BatcherConfig,
+    metrics: Arc<Metrics>,
+) {
+    let mut pending: Vec<Request> = Vec::with_capacity(cfg.max_batch);
+    let mut accept = |job: Job, pending: &mut Vec<Request>| match job {
+        Job::Predict(r) => pending.push(r),
+        Job::Ingest(b) => {
+            let _ = b.reply.send(Err(anyhow::anyhow!(
+                "sharded servers ingest via the trainer facade, not the batch queue"
+            )));
+        }
+    };
+    loop {
+        if !collect(&rx, &mut pending, &cfg, &mut accept) {
+            return;
+        }
+        if pending.is_empty() {
+            continue;
+        }
+        flush_sharded(&mut pending, &serving, &metrics);
+    }
+}
+
+/// Group the pending requests by owning shard and dispatch one batch
+/// per group.
+fn flush_sharded(pending: &mut Vec<Request>, serving: &ShardedServing, metrics: &Metrics) {
+    if pending.is_empty() {
+        return;
+    }
+    let d = serving.plan().global().dim();
+    let nshards = serving.plan().shards();
+    let mut groups: Vec<Vec<Request>> = (0..nshards).map(|_| Vec::new()).collect();
+    for r in pending.drain(..) {
+        let s = serving.plan().owner_of(&r.x);
+        groups[s].push(r);
+    }
+    for (s, group) in groups.into_iter().enumerate() {
+        if group.is_empty() {
+            continue;
+        }
+        let k = group.len();
+        let mut points = Vec::with_capacity(k * d);
+        for r in &group {
+            points.extend_from_slice(&r.x);
+        }
+        let (means, vars) = serving.predict_routed(s, &points);
+        metrics.batches.fetch_add(1, Ordering::Relaxed);
+        metrics.native_batches.fetch_add(1, Ordering::Relaxed);
+        if let Some(sm) = metrics.shards.get(s) {
+            sm.routed_predictions.fetch_add(k as u64, Ordering::Relaxed);
+        }
+        for (i, req) in group.into_iter().enumerate() {
+            metrics.record_latency(req.t0.elapsed());
+            metrics.completed.fetch_add(1, Ordering::Relaxed);
+            let _ = req
+                .reply
+                .send(Ok(Prediction { mean: means[i], var: vars[i] }));
+        }
     }
 }
 

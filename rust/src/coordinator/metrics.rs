@@ -7,6 +7,24 @@ use std::time::Duration;
 /// Number of log-scale latency buckets (1us .. ~1000s).
 const NBUCKETS: usize = 64;
 
+/// Per-shard counters for sharded deployments (one entry per spatial
+/// shard; see [`crate::shard`]). All wait-free atomics.
+#[derive(Debug, Default)]
+pub struct ShardMetrics {
+    /// Owned observations absorbed by this shard's trainer.
+    pub ingested: AtomicU64,
+    /// Halo copies absorbed (points owned by a neighbor but within this
+    /// shard's overlap coverage).
+    pub halo_ingested: AtomicU64,
+    /// Refresh + publish cycles completed by this shard.
+    pub refreshes: AtomicU64,
+    /// Messages currently queued to this shard's worker (ingest
+    /// back-pressure signal).
+    pub queue_depth: AtomicU64,
+    /// Prediction requests routed to this shard by the batcher.
+    pub routed_predictions: AtomicU64,
+}
+
 /// Serving metrics. All methods are thread-safe and wait-free.
 #[derive(Debug)]
 pub struct Metrics {
@@ -38,6 +56,8 @@ pub struct Metrics {
     pub last_refresh_us: AtomicU64,
     /// Streaming: hyperparameter re-optimizations completed.
     pub reopt_count: AtomicU64,
+    /// Sharded serving: per-shard counters (empty on unsharded servers).
+    pub shards: Vec<ShardMetrics>,
     hist: [AtomicU64; NBUCKETS],
 }
 
@@ -56,6 +76,7 @@ impl Default for Metrics {
             refresh_count: AtomicU64::new(0),
             last_refresh_us: AtomicU64::new(0),
             reopt_count: AtomicU64::new(0),
+            shards: Vec::new(),
             hist: std::array::from_fn(|_| AtomicU64::new(0)),
         }
     }
@@ -65,6 +86,14 @@ impl Metrics {
     /// Fresh metrics.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Fresh metrics with `n_shards` per-shard counter blocks.
+    pub fn with_shards(n_shards: usize) -> Self {
+        Metrics {
+            shards: (0..n_shards).map(|_| ShardMetrics::default()).collect(),
+            ..Default::default()
+        }
     }
 
     fn bucket(d: Duration) -> usize {
@@ -102,9 +131,10 @@ impl Metrics {
         self.refresh_count.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// One-line summary (the `/metrics` endpoint payload).
+    /// One-line summary (the `/metrics` endpoint payload). Sharded
+    /// servers append one `shard[i] ...` clause per shard.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "submitted={} completed={} batches={} (pjrt={} native={}) padding={} p50<={}us p99<={}us \
              ingested_points_total={} ingest_rejected_total={} ingest_batches={} refresh_count={} last_refresh_us={} reopt_count={}",
             self.submitted.load(Ordering::Relaxed),
@@ -121,7 +151,18 @@ impl Metrics {
             self.refresh_count.load(Ordering::Relaxed),
             self.last_refresh_us.load(Ordering::Relaxed),
             self.reopt_count.load(Ordering::Relaxed),
-        )
+        );
+        for (i, sh) in self.shards.iter().enumerate() {
+            s.push_str(&format!(
+                " shard[{i}] ingested={} halo={} refreshes={} queue_depth={} routed={}",
+                sh.ingested.load(Ordering::Relaxed),
+                sh.halo_ingested.load(Ordering::Relaxed),
+                sh.refreshes.load(Ordering::Relaxed),
+                sh.queue_depth.load(Ordering::Relaxed),
+                sh.routed_predictions.load(Ordering::Relaxed),
+            ));
+        }
+        s
     }
 }
 
@@ -149,6 +190,20 @@ mod tests {
     fn empty_histogram_is_zero() {
         let m = Metrics::new();
         assert_eq!(m.latency_quantile_us(0.99), 0);
+    }
+
+    #[test]
+    fn per_shard_counters_appear_in_summary() {
+        let m = Metrics::with_shards(2);
+        m.shards[0].ingested.fetch_add(10, Ordering::Relaxed);
+        m.shards[1].halo_ingested.fetch_add(3, Ordering::Relaxed);
+        m.shards[1].queue_depth.fetch_add(5, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("shard[0] ingested=10"), "{s}");
+        assert!(s.contains("halo=3"), "{s}");
+        assert!(s.contains("queue_depth=5"), "{s}");
+        // Unsharded metrics emit no shard clauses.
+        assert!(!Metrics::new().summary().contains("shard[0]"));
     }
 
     #[test]

@@ -20,8 +20,15 @@
 //!   thread that absorbs streamed observations through the `/ingest`
 //!   route and hot-swaps refreshed snapshots into the live
 //!   [`state::ModelSlot`].
-//! * [`metrics`] — latency histograms, throughput counters, and the
-//!   streaming ingest/refresh counters.
+//! * [`metrics`] — latency histograms, throughput counters, the
+//!   streaming ingest/refresh counters, and per-shard
+//!   ingest/refresh/queue-depth counters for sharded servers.
+//!
+//! Sharded deployments ([`server::Server::start_sharded`]) swap the
+//! single [`state::ModelSlot`] for a [`state::ShardSlots`] table inside
+//! [`crate::shard::ShardedServing`]; the batcher groups each flush by
+//! owning shard ([`batcher::run_sharded`]) and the `/shards` route
+//! exposes the live layout.
 
 pub mod state;
 pub mod router;
@@ -30,6 +37,7 @@ pub mod metrics;
 pub mod server;
 
 pub use batcher::{BatcherConfig, IngestBatch, Job, Prediction, Request};
+pub use metrics::{Metrics, ShardMetrics};
 pub use router::{Engine, EngineSpec, Route, Router};
 pub use server::Server;
-pub use state::{ModelSlot, ModelStore, ServingModel};
+pub use state::{ModelSlot, ModelStore, ServingModel, ShardSlots};

@@ -63,6 +63,9 @@ pub enum Route {
     Metrics,
     /// Installed model listing.
     Models,
+    /// Shard-layout introspection (sharded servers: per-shard owned
+    /// slab, grid size, ingest/refresh counters, queue depth).
+    Shards,
 }
 
 impl Route {
@@ -74,6 +77,7 @@ impl Route {
             "/ingest" | "ingest" => Some(Route::Ingest),
             "/metrics" | "metrics" => Some(Route::Metrics),
             "/models" | "models" => Some(Route::Models),
+            "/shards" | "shards" => Some(Route::Shards),
             _ => None,
         }
     }
@@ -199,6 +203,8 @@ mod tests {
         assert_eq!(Route::parse("/ingest?batch=64"), Some(Route::Ingest));
         assert_eq!(Route::parse("/metrics/"), Some(Route::Metrics));
         assert_eq!(Route::parse("/models"), Some(Route::Models));
+        assert_eq!(Route::parse("/shards"), Some(Route::Shards));
+        assert_eq!(Route::parse("/shards?verbose=1"), Some(Route::Shards));
         assert_eq!(Route::parse("/nope"), None);
     }
 

@@ -13,9 +13,12 @@ use super::batcher::{self, BatcherConfig, IngestBatch, Job, Prediction, Request}
 use super::metrics::Metrics;
 use super::router::EngineSpec;
 use super::state::{ModelSlot, ServingModel};
+use crate::shard::ShardedTrainer;
 use crate::stream::StreamTrainer;
 
-/// A running prediction (and optionally ingestion) server for one model.
+/// A running prediction (and optionally ingestion) server for one model
+/// — or, via [`Server::start_sharded`], for a spatially sharded fleet of
+/// per-shard models served behind one front door.
 pub struct Server {
     tx: Option<SyncSender<Job>>,
     handle: Option<std::thread::JoinHandle<()>>,
@@ -23,8 +26,11 @@ pub struct Server {
     /// Shared metrics.
     pub metrics: Arc<Metrics>,
     /// Live model slot (readable for diagnostics; swapped by the ingest
-    /// thread on refresh).
-    pub slot: Arc<ModelSlot>,
+    /// thread on refresh). `None` on sharded servers, whose slots live
+    /// in the [`crate::shard::ShardedServing`] table.
+    pub slot: Option<Arc<ModelSlot>>,
+    /// The sharded trainer facade (sharded servers only).
+    sharded: Option<Arc<ShardedTrainer>>,
     dim: usize,
     streaming: bool,
 }
@@ -77,7 +83,56 @@ impl Server {
                 .spawn(move || run_ingest(irx, trainer, slot3, met3))
                 .expect("spawn ingest")
         });
-        Server { tx: Some(tx), handle: Some(handle), ingest_handle, metrics, slot, dim, streaming }
+        Server {
+            tx: Some(tx),
+            handle: Some(handle),
+            ingest_handle,
+            metrics,
+            slot: Some(slot),
+            sharded: None,
+            dim,
+            streaming,
+        }
+    }
+
+    /// Start a sharded server: predictions flow through a batcher that
+    /// groups each flush by owning shard and serves it from the
+    /// shard-indexed slot table (with seam blending); `/ingest` routes
+    /// directly to the [`ShardedTrainer`] facade, whose workers refresh
+    /// and hot-swap their slots independently. The server shares the
+    /// trainer's metrics, so `/metrics` carries the per-shard counters.
+    pub fn start_sharded(trainer: ShardedTrainer, cfg: BatcherConfig) -> Server {
+        let trainer = Arc::new(trainer);
+        let metrics = trainer.metrics.clone();
+        let serving = trainer.serving();
+        let dim = trainer.plan().global().dim();
+        let (tx, rx) = mpsc::sync_channel::<Job>(4096);
+        let met2 = metrics.clone();
+        let handle = std::thread::Builder::new()
+            .name("msgp-shard-batcher".into())
+            .spawn(move || batcher::run_sharded(rx, serving, cfg, met2))
+            .expect("spawn batcher");
+        Server {
+            tx: Some(tx),
+            handle: Some(handle),
+            ingest_handle: None,
+            metrics,
+            slot: None,
+            sharded: Some(trainer),
+            dim,
+            streaming: true,
+        }
+    }
+
+    /// The sharded trainer facade, when this is a sharded server (for
+    /// decay epochs, whole-domain re-opts, and merged snapshots).
+    pub fn shard_trainer(&self) -> Option<&Arc<ShardedTrainer>> {
+        self.sharded.as_ref()
+    }
+
+    /// `/shards` introspection payload (sharded servers only).
+    pub fn shards_summary(&self) -> Option<String> {
+        self.sharded.as_ref().map(|t| t.summary())
     }
 
     /// Submit a point; returns a receiver for the reply.
@@ -120,6 +175,11 @@ impl Server {
             xs.iter().all(|v| v.is_finite()) && ys.iter().all(|v| v.is_finite()),
             "ingest rejects non-finite coordinates/targets"
         );
+        if let Some(t) = &self.sharded {
+            // Sharded ingest bypasses the batch queue: the facade routes
+            // per shard and blocks until every owning worker acks.
+            return Ok(t.ingest_batch(&xs, &ys));
+        }
         self.ingest_inner(xs, ys, false)
     }
 
@@ -128,6 +188,10 @@ impl Server {
     /// ingest).
     pub fn flush_stream(&self) -> anyhow::Result<usize> {
         anyhow::ensure!(self.streaming, "server has no stream trainer (use start_online)");
+        if let Some(t) = &self.sharded {
+            t.flush();
+            return Ok(0);
+        }
         self.ingest_inner(Vec::new(), Vec::new(), true)
     }
 

@@ -140,6 +140,44 @@ impl ModelSlot {
     }
 }
 
+/// A shard-indexed table of hot-swappable model slots: one
+/// [`ModelSlot`] per spatial shard, each swapped atomically and
+/// independently by its shard's trainer thread. Readers snapshot only
+/// the slots a batch actually touches, so one shard refreshing never
+/// stalls (or tears) predictions served by the others.
+#[derive(Debug)]
+pub struct ShardSlots {
+    slots: Vec<ModelSlot>,
+}
+
+impl ShardSlots {
+    /// Build a table from one initial model per shard.
+    pub fn new(models: Vec<ServingModel>) -> Self {
+        assert!(!models.is_empty(), "shard table needs at least one slot");
+        ShardSlots { slots: models.into_iter().map(ModelSlot::new).collect() }
+    }
+
+    /// Number of shards.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// True when the table has no slots (never, by construction).
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Snapshot shard `s`'s current model.
+    pub fn get(&self, s: usize) -> Arc<ServingModel> {
+        self.slots[s].get()
+    }
+
+    /// Atomically publish a new model for shard `s`.
+    pub fn swap(&self, s: usize, model: ServingModel) -> Arc<ServingModel> {
+        self.slots[s].swap(model)
+    }
+}
+
 /// A versioned, hot-swappable store of serving models.
 #[derive(Default)]
 pub struct ModelStore {

@@ -71,7 +71,7 @@ impl Default for MsgpConfig {
             margin_cells: 3,
             wraps: 3,
             logdet: LogdetMethod::Circulant(CirculantKind::Whittle),
-            cg: CgOptions { tol: 1e-6, max_iter: 400, warm_start: false },
+            cg: CgOptions { tol: 1e-6, max_iter: 400, warm_start: false, precondition: false },
             n_var_samples: 20,
             seed: 0,
         }
@@ -1256,7 +1256,7 @@ mod tests {
         let kernel = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0));
         let mut cfg = cfg_1d(32);
         cfg.n_var_samples = 800;
-        cfg.cg = CgOptions { tol: 1e-10, max_iter: 2000, warm_start: false };
+        cfg.cg = CgOptions { tol: 1e-10, max_iter: 2000, warm_start: false, precondition: false };
         let mut model = MsgpModel::fit(kernel, 0.05, data, cfg).unwrap();
         model.precompute_variance();
         let est = model.nu_u.clone().unwrap();
@@ -1328,7 +1328,7 @@ mod tests {
         let data = gen_stress_1d(n, 0.1, 31);
         let kernel = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.2, 0.8));
         let mut model = MsgpModel::fit(kernel, 0.05, data, cfg_1d(128)).unwrap();
-        model.cfg.cg = CgOptions { tol: 1e-12, max_iter: 3000, warm_start: false };
+        model.cfg.cg = CgOptions { tol: 1e-12, max_iter: 3000, warm_start: false, precondition: false };
         model.refit(&model.params().clone()).unwrap();
         let g = model.lml_grad();
         let p0 = model.params();
@@ -1391,7 +1391,7 @@ mod tests {
         };
         let cfg = MsgpConfig {
             n_per_dim: vec![24, 24],
-            cg: CgOptions { tol: 1e-12, max_iter: 3000, warm_start: false },
+            cg: CgOptions { tol: 1e-12, max_iter: 3000, warm_start: false, precondition: false },
             ..Default::default()
         };
         let mut model = MsgpModel::fit(kernel, 0.05, data, cfg).unwrap();
@@ -1490,7 +1490,7 @@ mod tests {
         };
         let cfg = MsgpConfig {
             n_per_dim: vec![24, 24],
-            cg: CgOptions { tol: 1e-12, max_iter: 3000, warm_start: false },
+            cg: CgOptions { tol: 1e-12, max_iter: 3000, warm_start: false, precondition: false },
             ..Default::default()
         };
         // Hold the grid fixed across FD perturbations (it is fixed during

@@ -33,10 +33,28 @@
 //!   a reservoir snapshot. The coordinator's `/ingest` route feeds a
 //!   background trainer thread that atomically hot-swaps refreshed
 //!   snapshots into the live [`coordinator::state::ModelSlot`], so
-//!   prediction latency stays O(1) per point throughout.
+//!   prediction latency stays O(1) per point throughout. Non-stationary
+//!   streams can down-weight history with exponential forgetting
+//!   ([`stream::StreamTrainer::decay`]), and refresh solves can be
+//!   Jacobi-preconditioned from the tracked `diag(W^T W)`
+//!   ([`solver::CgOptions::precondition`]).
+//! * **Sharded data-parallel training & serving** ([`shard`]): the
+//!   sufficient statistics are additive, so a [`shard::ShardPlan`]
+//!   splits the inducing grid into S spatial slabs (with halo overlap
+//!   for stencil exactness), a [`shard::ShardedTrainer`] runs one
+//!   trainer thread per shard (refresh wall-clock O(m/S) per core),
+//!   per-shard statistics merge exactly into a whole-domain snapshot
+//!   for global hyper re-optimization, and [`shard::ShardedServing`]
+//!   routes each prediction to its owning shard in O(1), blending
+//!   across seams with partition-of-unity weights.
 //!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-reproduction results.
+
+// Index-driven loops over grid cells frequently read clearer than
+// iterator chains in the numeric kernels; keep clippy focused on the
+// lints that catch real defects.
+#![allow(clippy::needless_range_loop)]
 
 pub mod linalg;
 pub mod structure;
@@ -48,6 +66,7 @@ pub mod opt;
 pub mod gp;
 pub mod coordinator;
 pub mod stream;
+pub mod shard;
 pub mod runtime;
 pub mod bench;
 pub mod data;

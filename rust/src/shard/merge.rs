@@ -1,0 +1,47 @@
+//! Additive merge of per-shard sufficient statistics.
+//!
+//! The SKI statistics (`W^T y`, the banded Gram `W^T W`, per-cell mass,
+//! probe accumulators) are sums over observations, and every observation
+//! is *owned* by exactly one shard (halo copies live in a separate
+//! accumulator that merge never touches). Each shard's local grid is an
+//! exact sub-grid of the global grid, so its owned accumulator lifts
+//! onto the global grid by a whole-cell index shift and adds — the
+//! merged result equals a single-trainer build over the union of the
+//! shards' streams (to float rounding, ~1e-13 relative).
+
+use crate::gp::msgp::KernelSpec;
+use crate::grid::Grid;
+use crate::stream::{IncrementalSki, StreamConfig, StreamTrainer};
+
+/// Fold per-shard *owned* accumulators into one global accumulator.
+/// `parts` must share the probe count; each part's grid must be a
+/// sub-grid of `global` (the shard plan guarantees both).
+pub fn merge_owned(global: Grid, seed: u64, parts: &[IncrementalSki]) -> IncrementalSki {
+    assert!(!parts.is_empty(), "nothing to merge");
+    let n_probes = parts[0].probes().len();
+    // Offset the probe-RNG seed away from every worker accumulator's
+    // (`seed ^ 2i` / `seed ^ (2i+1)`): continued ingestion on the
+    // merged accumulator must not replay eps draws already baked into
+    // the merged probe sums, or `E[q q^T] != G`.
+    let mut out = IncrementalSki::new(global, n_probes, 1, seed ^ 0x4d52_4745_u64);
+    for p in parts {
+        out.accumulate_shifted(p);
+    }
+    out
+}
+
+/// Build a whole-domain trainer from merged statistics: the combined
+/// global snapshot used for whole-domain hyper re-optimization and for
+/// exactness checks against an unsharded trainer. The returned trainer
+/// refreshes (and re-optimizes) exactly like one that ingested the full
+/// stream itself — its statistics *are* that trainer's statistics.
+pub fn merged_trainer(
+    kernel: KernelSpec,
+    sigma2: f64,
+    cfg: StreamConfig,
+    global: Grid,
+    parts: &[IncrementalSki],
+) -> StreamTrainer {
+    let merged = merge_owned(global, cfg.msgp.seed, parts);
+    StreamTrainer::from_stats(kernel, sigma2, cfg, merged)
+}

@@ -1,0 +1,52 @@
+//! Sharded data-parallel MSGP: spatial partitioning of the streaming
+//! subsystem across worker threads.
+//!
+//! The SKI sufficient statistics are *additive* — `W^T y`, the banded
+//! Gram `W^T W`, per-cell mass, and the variance-probe accumulators are
+//! all sums over observations. That is exactly the property that lets
+//! inference scale past one trainer thread: partition the inducing
+//! grid's covered box into S spatial slabs, run one incremental trainer
+//! per slab, and fold the per-shard statistics back together whenever a
+//! whole-domain view is needed. KISS-GP's local cubic interpolation
+//! keeps each shard's statistics exact on its sub-grid: a point's
+//! stencil touches at most 2 cells past its ownership boundary, so a
+//! `halo >= 2` of overlap cells makes every owned tap land inside the
+//! local grid unshifted.
+//!
+//! Layers:
+//!
+//! * [`plan::ShardPlan`] — splits the grid along its longest axis into
+//!   near-even slabs with a configurable halo; O(1) owner lookup;
+//!   partition-of-unity blend weights across each seam.
+//! * [`trainer::ShardedTrainer`] — one worker thread per shard, each
+//!   running an owned + halo [`crate::stream::IncrementalSki`] pair and
+//!   refreshing independently (O(m/S) per refresh per core instead of
+//!   O(m) on one). Halo copies of seam-adjacent points keep every local
+//!   model accurate through its blend zone without ever double counting
+//!   in the merge.
+//! * [`merge`] — folds per-shard *owned* accumulators into one global
+//!   accumulator (equal to a single-trainer build to ~1e-13) and wraps
+//!   it in a [`crate::stream::StreamTrainer`] for whole-domain hyper
+//!   re-optimization.
+//! * [`serving::ShardedServing`] — a shard-indexed
+//!   [`crate::coordinator::state::ModelSlot`] table; predictions route
+//!   to their owning shard in O(1) and blend mean/variance across the
+//!   halo with C1 partition-of-unity weights, so the served surface is
+//!   continuous at seams.
+//!
+//! Coordinator integration ([`crate::coordinator`]): `Server::
+//! start_sharded` runs the batcher against the slot table (grouping
+//! each flush by owning shard), `/ingest` routes straight to the
+//! facade, `/shards` exposes per-shard introspection, and
+//! [`crate::coordinator::metrics::Metrics`] carries per-shard
+//! ingest/refresh/queue-depth counters.
+
+pub mod merge;
+pub mod plan;
+pub mod serving;
+pub mod trainer;
+
+pub use merge::{merge_owned, merged_trainer};
+pub use plan::ShardPlan;
+pub use serving::ShardedServing;
+pub use trainer::{ShardConfig, ShardedTrainer};

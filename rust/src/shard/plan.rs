@@ -1,0 +1,357 @@
+//! Spatial shard planning: partition the inducing grid's covered box
+//! into S contiguous slabs along its longest axis.
+//!
+//! Each shard *owns* a half-open interval of grid cells on the split
+//! axis and *covers* that interval plus `halo` extra cells on each side
+//! (clamped to the global box). The halo serves two purposes:
+//!
+//! 1. **Ingest exactness** — a point near an ownership boundary has a
+//!    cubic stencil reaching up to 2 cells past the boundary; with
+//!    `halo >= 2` every owned point's taps land inside the local grid
+//!    unshifted, so per-shard sufficient statistics scatter-add into the
+//!    global accumulator *exactly* (see [`crate::shard::merge`]).
+//! 2. **Seam continuity** — shards also absorb *halo copies* of
+//!    neighbor-owned points inside their coverage, so each local model
+//!    is informed by all data near the seam, and serving blends the two
+//!    local predictions with a partition-of-unity ramp over
+//!    `[cut - blend, cut + blend]` (see
+//!    [`crate::shard::serving::ShardedServing`]).
+
+use crate::grid::{Grid, GridAxis};
+
+/// A spatial partition of a [`Grid`] into `S` slabs along one axis.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    global: Grid,
+    /// Split axis (the axis with the most grid points).
+    axis: usize,
+    /// Halo width, in grid cells (`>= 2`).
+    halo: usize,
+    /// Blend half-width, in grid cells (`0` disables blending;
+    /// otherwise `<= halo - 2` so blended neighbor predictions never
+    /// tap a shifted stencil).
+    blend: usize,
+    /// Ownership boundaries on the split axis, in grid units:
+    /// shard `s` owns `[cuts[s], cuts[s+1])` (`cuts.len() == S + 1`,
+    /// `cuts[0] == 0`, `cuts[S] == n - 1`; the last shard's interval is
+    /// closed at the top).
+    cuts: Vec<usize>,
+    /// Cells owned by the first `rem` shards (`base + 1`) vs the rest
+    /// (`base`) — kept for the O(1) owner lookup.
+    base: usize,
+    rem: usize,
+}
+
+/// C1 partition-of-unity ramp (`smoothstep`): `0 -> 0`, `1 -> 1`,
+/// `sigma(t) + sigma(1 - t) = 1`.
+#[inline]
+fn smoothstep(t: f64) -> f64 {
+    let t = t.clamp(0.0, 1.0);
+    t * t * (3.0 - 2.0 * t)
+}
+
+impl ShardPlan {
+    /// Plan `shards` slabs over `global`, split along its longest axis.
+    ///
+    /// Panics when the geometry cannot support the requested layout:
+    /// every shard must own at least `halo` cells (so halo copies only
+    /// ever go to the immediate neighbors), more than `2 * blend` cells
+    /// (so blend zones never overlap), and every local grid must keep
+    /// `>= 4` points for the cubic stencil.
+    pub fn new(global: Grid, shards: usize, halo: usize, blend: usize) -> Self {
+        assert!(shards >= 1, "need at least one shard");
+        assert!(halo >= 2, "halo must be >= 2 cells for stencil exactness");
+        assert!(
+            blend == 0 || blend + 2 <= halo,
+            "blend half-width ({blend}) must be <= halo - 2 ({})",
+            halo.saturating_sub(2)
+        );
+        let axis = global
+            .shape()
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &n)| n)
+            .map(|(a, _)| a)
+            .unwrap();
+        let cells = global.axes[axis].n - 1;
+        assert!(
+            shards == 1 || cells / shards >= halo.max(2 * blend + 1),
+            "split axis has {cells} cells; {shards} shards of >= {} cells each don't fit",
+            halo.max(2 * blend + 1)
+        );
+        let base = cells / shards;
+        let rem = cells % shards;
+        let mut cuts = Vec::with_capacity(shards + 1);
+        let mut acc = 0usize;
+        cuts.push(0);
+        for s in 0..shards {
+            acc += base + usize::from(s < rem);
+            cuts.push(acc);
+        }
+        debug_assert_eq!(*cuts.last().unwrap(), cells);
+        ShardPlan { global, axis, halo, blend, cuts, base, rem }
+    }
+
+    /// The global grid being partitioned.
+    pub fn global(&self) -> &Grid {
+        &self.global
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.cuts.len() - 1
+    }
+
+    /// Split axis.
+    pub fn axis(&self) -> usize {
+        self.axis
+    }
+
+    /// Halo width in cells.
+    pub fn halo(&self) -> usize {
+        self.halo
+    }
+
+    /// Blend half-width in cells.
+    pub fn blend(&self) -> usize {
+        self.blend
+    }
+
+    /// Ownership boundaries in grid units (length `S + 1`).
+    pub fn cuts(&self) -> &[usize] {
+        &self.cuts
+    }
+
+    /// Split-axis coordinate of `x` in grid units, clamped to the box.
+    #[inline]
+    pub fn unit(&self, x: &[f64]) -> f64 {
+        let ax = &self.global.axes[self.axis];
+        ax.to_units(x[self.axis]).clamp(0.0, (ax.n - 1) as f64)
+    }
+
+    /// Owning shard of `x` in O(1): invert the near-even cut layout
+    /// (first `rem` shards own `base + 1` cells) by direct division.
+    #[inline]
+    pub fn owner_of(&self, x: &[f64]) -> usize {
+        let u = self.unit(x);
+        let cell = (u as usize).min(self.global.axes[self.axis].n.saturating_sub(2));
+        let wide = self.rem * (self.base + 1);
+        let s = if cell < wide {
+            cell / (self.base + 1)
+        } else if self.base > 0 {
+            self.rem + (cell - wide) / self.base
+        } else {
+            self.rem
+        };
+        s.min(self.shards() - 1)
+    }
+
+    /// Inclusive grid-point index range `[start, end]` of shard `s`'s
+    /// local grid (owned slab + halo, clamped to the box).
+    pub fn local_range(&self, s: usize) -> (usize, usize) {
+        let n = self.global.axes[self.axis].n;
+        let start = self.cuts[s].saturating_sub(self.halo);
+        let end = (self.cuts[s + 1] + self.halo).min(n - 1);
+        (start, end)
+    }
+
+    /// Shard `s`'s local grid: the split axis restricted to
+    /// [`Self::local_range`] (identical step and point coordinates —
+    /// the local grid is an exact sub-grid of the global one), all
+    /// other axes in full.
+    pub fn local_grid(&self, s: usize) -> Grid {
+        let (start, end) = self.local_range(s);
+        let axes = self
+            .global
+            .axes
+            .iter()
+            .enumerate()
+            .map(|(a, ax)| {
+                if a == self.axis {
+                    GridAxis { lo: ax.coord(start), step: ax.step, n: end - start + 1 }
+                } else {
+                    ax.clone()
+                }
+            })
+            .collect();
+        let g = Grid::new(axes);
+        debug_assert!(g.axes[self.axis].n >= 4, "local grid too small for cubic stencils");
+        g
+    }
+
+    /// Neighbors that should absorb a *halo copy* of a point owned by
+    /// `owner`: a neighbor receives the copy when the point sits at
+    /// least one cell inside the neighbor's local grid on both sides
+    /// (so the copy ingests without triggering grid expansion).
+    pub fn halo_recipients(&self, x: &[f64], owner: usize) -> [Option<usize>; 2] {
+        let u = self.unit(x);
+        let mut out = [None, None];
+        if owner > 0 {
+            let (_, end) = self.local_range(owner - 1);
+            if u <= (end - 2) as f64 {
+                out[0] = Some(owner - 1);
+            }
+        }
+        if owner + 1 < self.shards() {
+            let (start, _) = self.local_range(owner + 1);
+            if u >= (start + 1) as f64 {
+                out[1] = Some(owner + 1);
+            }
+        }
+        out
+    }
+
+    /// Partition-of-unity blend at `x` for its `owner`'s prediction:
+    /// `Some((neighbor, owner_weight))` when `x` falls strictly inside a
+    /// blend zone (`owner_weight` in `(0, 1)`, the neighbor carries
+    /// `1 - owner_weight`), `None` when the owner serves it alone. The
+    /// weights are C1-continuous across the seam and reach exactly
+    /// `1 / 0` at the zone edges, so blended and pure-routed predictions
+    /// agree there.
+    pub fn blend_neighbor(&self, x: &[f64], owner: usize) -> Option<(usize, f64)> {
+        if self.blend == 0 {
+            return None;
+        }
+        let u = self.unit(x);
+        let b = self.blend as f64;
+        // Lower seam: boundary between owner-1 (left) and owner (right).
+        if owner > 0 {
+            let c = self.cuts[owner] as f64;
+            if u < c + b {
+                let w_left = smoothstep((c + b - u) / (2.0 * b));
+                if w_left > 0.0 {
+                    return Some((owner - 1, 1.0 - w_left));
+                }
+            }
+        }
+        // Upper seam: boundary between owner (left) and owner+1 (right).
+        if owner + 1 < self.shards() {
+            let c = self.cuts[owner + 1] as f64;
+            if u > c - b {
+                let w_left = smoothstep((c + b - u) / (2.0 * b));
+                if w_left < 1.0 {
+                    return Some((owner + 1, w_left));
+                }
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid_1d(n: usize) -> Grid {
+        Grid::new(vec![GridAxis::span(0.0, (n - 1) as f64, n)])
+    }
+
+    #[test]
+    fn cuts_partition_the_axis() {
+        let p = ShardPlan::new(grid_1d(101), 4, 4, 2);
+        assert_eq!(p.cuts().first(), Some(&0));
+        assert_eq!(p.cuts().last(), Some(&100));
+        assert_eq!(p.shards(), 4);
+        // Near-even: widths differ by at most one cell.
+        let widths: Vec<usize> = p.cuts().windows(2).map(|w| w[1] - w[0]).collect();
+        let (lo, hi) = (widths.iter().min().unwrap(), widths.iter().max().unwrap());
+        assert!(hi - lo <= 1, "{widths:?}");
+    }
+
+    #[test]
+    fn owner_lookup_matches_cut_scan() {
+        for (n, s) in [(97usize, 3usize), (128, 4), (61, 5)] {
+            let p = ShardPlan::new(grid_1d(n), s, 3, 0);
+            for i in 0..10 * (n - 1) {
+                let u = i as f64 / 10.0;
+                let x = [u]; // unit-spaced grid: coordinate == unit
+                let got = p.owner_of(&x);
+                let want = p
+                    .cuts()
+                    .windows(2)
+                    .position(|w| u >= w[0] as f64 && (u as usize) < w[1])
+                    .unwrap_or(s - 1);
+                assert_eq!(got, want, "n={n} s={s} u={u}");
+            }
+        }
+    }
+
+    #[test]
+    fn local_grids_are_exact_subgrids() {
+        let g = Grid::new(vec![
+            GridAxis::span(-3.0, 7.0, 41),
+            GridAxis::span(0.0, 1.0, 6),
+        ]);
+        let p = ShardPlan::new(g.clone(), 3, 4, 2);
+        assert_eq!(p.axis(), 0, "longest axis wins");
+        for s in 0..3 {
+            let lg = p.local_grid(s);
+            let (start, end) = p.local_range(s);
+            assert_eq!(lg.axes[0].n, end - start + 1);
+            assert!((lg.axes[0].step - g.axes[0].step).abs() < 1e-15);
+            for i in 0..lg.axes[0].n {
+                let want = g.axes[0].coord(start + i);
+                assert!((lg.axes[0].coord(i) - want).abs() < 1e-12);
+            }
+            assert_eq!(lg.axes[1], g.axes[1]);
+        }
+        // Boundary shards stop at the box; interior shards have full halos.
+        assert_eq!(p.local_range(0).0, 0);
+        assert_eq!(p.local_range(2).1, 40);
+    }
+
+    #[test]
+    fn blend_weights_are_a_partition_of_unity_and_continuous() {
+        let p = ShardPlan::new(grid_1d(65), 2, 5, 3);
+        let cut = p.cuts()[1] as f64;
+        let mut prev: Option<f64> = None;
+        let mut du = -4.0;
+        while du <= 4.0 {
+            let x = [cut + du];
+            let owner = p.owner_of(&x);
+            let w_owner = match p.blend_neighbor(&x, owner) {
+                Some((nb, w)) => {
+                    assert!(nb == owner + 1 || nb + 1 == owner);
+                    assert!(w > 0.0 && w < 1.0, "w={w}");
+                    w
+                }
+                None => 1.0,
+            };
+            // Express as "weight of the left shard" for continuity.
+            let w_left = if owner == 0 { w_owner } else { 1.0 - w_owner };
+            if let Some(pl) = prev {
+                assert!((w_left - pl).abs() < 0.02, "jump at du={du}");
+            }
+            prev = Some(w_left);
+            du += 0.01;
+        }
+        // Outside the zone: pure routing.
+        assert!(p.blend_neighbor(&[cut - 3.5], 0).is_none());
+        assert!(p.blend_neighbor(&[cut + 3.5], 1).is_none());
+        // At the seam: a 50/50 split.
+        let (nb, w) = p.blend_neighbor(&[cut], 1).unwrap();
+        assert_eq!(nb, 0);
+        assert!((w - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn halo_recipients_cover_the_overlap_only() {
+        let p = ShardPlan::new(grid_1d(65), 2, 4, 2);
+        let cut = p.cuts()[1]; // 32
+        // Deep interior of shard 0: no copies.
+        assert_eq!(p.halo_recipients(&[2.0], 0), [None, None]);
+        // Just left of the cut: shard 1's local grid starts at cut-4, so
+        // the copy lands safely inside it.
+        assert_eq!(p.halo_recipients(&[(cut - 1) as f64], 0), [None, Some(1)]);
+        // Just right of the cut: shard 0 receives the mirror copy.
+        assert_eq!(p.halo_recipients(&[(cut + 1) as f64], 1), [Some(0), None]);
+        // Past the halo: no copies again.
+        assert_eq!(p.halo_recipients(&[(cut + 6) as f64], 1), [None, None]);
+    }
+
+    #[test]
+    #[should_panic(expected = "don't fit")]
+    fn too_many_shards_panic() {
+        ShardPlan::new(grid_1d(17), 8, 4, 0);
+    }
+}

@@ -1,0 +1,114 @@
+//! Shard-aware serving: O(1) routing of each prediction to its owning
+//! shard, with partition-of-unity blending across the halo so the served
+//! surface is continuous at shard seams.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::coordinator::state::{ServingModel, ShardSlots};
+use crate::shard::plan::ShardPlan;
+
+/// The serving side of a sharded deployment: the shard plan plus a
+/// shard-indexed table of hot-swappable model slots (one
+/// [`crate::coordinator::state::ModelSlot`] per shard, each swapped
+/// atomically and independently by its trainer thread).
+pub struct ShardedServing {
+    plan: Arc<ShardPlan>,
+    slots: ShardSlots,
+}
+
+impl ShardedServing {
+    /// Build the table from one initial model per shard (a prior model
+    /// until the first refresh publishes).
+    pub fn new(plan: Arc<ShardPlan>, initial: Vec<ServingModel>) -> Self {
+        assert_eq!(initial.len(), plan.shards());
+        for (s, m) in initial.iter().enumerate() {
+            assert_eq!(m.grid, plan.local_grid(s), "slot {s} grid must match the plan");
+        }
+        ShardedServing { plan, slots: ShardSlots::new(initial) }
+    }
+
+    /// The shard plan.
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// Snapshot shard `s`'s current model.
+    pub fn snapshot(&self, s: usize) -> Arc<ServingModel> {
+        self.slots.get(s)
+    }
+
+    /// Atomically publish a refreshed model for shard `s` (called by the
+    /// shard's trainer thread; readers in flight keep their snapshots).
+    pub fn publish(&self, s: usize, model: ServingModel) {
+        assert_eq!(model.grid, self.plan.local_grid(s), "published grid must match the plan");
+        self.slots.swap(s, model);
+    }
+
+    /// Predict a batch of points *all owned by* `shard` (the batcher
+    /// groups jobs by owning shard before dispatch). The owner's
+    /// snapshot serves every point; points inside a blend zone
+    /// additionally gather the neighbor's prediction and mix with the
+    /// plan's partition-of-unity weights. Each involved slot is
+    /// snapshotted once per call — a concurrent swap can never tear the
+    /// batch.
+    pub fn predict_routed(&self, shard: usize, points: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let d = self.plan.global().dim();
+        debug_assert_eq!(points.len() % d, 0);
+        let owner = self.slots.get(shard);
+        let (mut means, mut vars) = owner.predict_batch(points);
+        if self.plan.blend() == 0 {
+            return (means, vars);
+        }
+        // Gather the blend-zone points per neighbor (at most two
+        // neighbors for a seam-straddling batch).
+        let mut groups: HashMap<usize, (Vec<f64>, Vec<(usize, f64)>)> = HashMap::new();
+        for (i, x) in points.chunks_exact(d).enumerate() {
+            if let Some((nb, w_owner)) = self.plan.blend_neighbor(x, shard) {
+                let e = groups.entry(nb).or_default();
+                e.0.extend_from_slice(x);
+                e.1.push((i, w_owner));
+            }
+        }
+        for (nb, (pts, idx)) in groups {
+            let model = self.slots.get(nb);
+            let (nm, nv) = model.predict_batch(&pts);
+            for (j, &(i, w)) in idx.iter().enumerate() {
+                // Mixture moments, not a plain average: the
+                // mean-disagreement term keeps the served variance
+                // honest exactly when the two snapshots differ (e.g.
+                // one shard refreshed while its neighbor is stale).
+                let (m1, v1) = (means[i], vars[i]);
+                let (m2, v2) = (nm[j], nv[j]);
+                means[i] = w * m1 + (1.0 - w) * m2;
+                vars[i] = w * v1 + (1.0 - w) * v2 + w * (1.0 - w) * (m1 - m2) * (m1 - m2);
+            }
+        }
+        (means, vars)
+    }
+
+    /// Predict an arbitrary batch: group by owning shard (O(1) per
+    /// point), serve each group via [`Self::predict_routed`], and
+    /// scatter the results back into input order.
+    pub fn predict_batch(&self, points: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let d = self.plan.global().dim();
+        assert_eq!(points.len() % d, 0);
+        let k = points.len() / d;
+        let mut groups: HashMap<usize, (Vec<f64>, Vec<usize>)> = HashMap::new();
+        for (i, x) in points.chunks_exact(d).enumerate() {
+            let e = groups.entry(self.plan.owner_of(x)).or_default();
+            e.0.extend_from_slice(x);
+            e.1.push(i);
+        }
+        let mut means = vec![0.0; k];
+        let mut vars = vec![0.0; k];
+        for (shard, (pts, idx)) in groups {
+            let (gm, gv) = self.predict_routed(shard, &pts);
+            for (j, &i) in idx.iter().enumerate() {
+                means[i] = gm[j];
+                vars[i] = gv[j];
+            }
+        }
+        (means, vars)
+    }
+}

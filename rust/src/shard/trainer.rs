@@ -1,0 +1,679 @@
+//! Data-parallel sharded training: one incremental-SKI trainer per
+//! spatial shard, each on its own worker thread.
+//!
+//! Every shard worker owns **two** accumulators over its local grid:
+//!
+//! * `own` — points the shard *owns* (routed by [`ShardPlan::owner_of`]).
+//!   These are the statistics the additive merge folds into the global
+//!   snapshot: each observation lives in exactly one `own` accumulator,
+//!   so the merged sum equals a single-trainer build.
+//! * `halo` — copies of neighbor-owned points that fall inside this
+//!   shard's halo coverage. They never merge (that would double count);
+//!   they only inform the *local* refresh, so the shard's model sees all
+//!   data near its seams and blended serving stays accurate.
+//!
+//! Refreshes run per shard, in parallel and independently, on the
+//! combined `own + halo` statistics — each solve is O(m/S) per core
+//! instead of O(m) on one, which is where the 1/S refresh wall-clock
+//! scaling comes from. Each worker publishes its refreshed
+//! [`ServingModel`] into its slot of the shared [`ShardedServing`]
+//! table; swaps are per-shard and atomic.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::state::ServingModel;
+use crate::data::Dataset;
+use crate::gp::msgp::{GridKernel, KernelSpec, MsgpConfig, MsgpModel};
+use crate::grid::Grid;
+use crate::shard::merge;
+use crate::shard::plan::ShardPlan;
+use crate::shard::serving::ShardedServing;
+use crate::solver::CgWorkspace;
+use crate::stream::trainer::{refresh_mdomain, RefreshInputs, Reservoir};
+use crate::stream::{IncrementalSki, StreamConfig, StreamTrainer};
+use crate::util::Rng;
+
+/// Sharded-trainer configuration.
+#[derive(Clone, Debug)]
+pub struct ShardConfig {
+    /// Number of spatial shards (worker threads).
+    pub shards: usize,
+    /// Halo width in grid cells (`>= 2`; see [`ShardPlan`]).
+    pub halo: usize,
+    /// Blend half-width in cells (`0` disables seam blending).
+    pub blend: usize,
+    /// Owned points per shard between automatic refresh + publish
+    /// cycles (halo copies count half toward the cadence).
+    pub refresh_every: usize,
+    /// Per-shard reservoir size for whole-domain re-optimization.
+    pub reservoir: usize,
+    /// Grid-operator / CG / probe configuration (shared by all shards).
+    pub msgp: MsgpConfig,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig {
+            shards: 2,
+            halo: 6,
+            blend: 3,
+            refresh_every: 2048,
+            reservoir: 1024,
+            msgp: MsgpConfig::default(),
+        }
+    }
+}
+
+/// Control messages to a shard worker. All channels are FIFO, so a
+/// `Flush` observes every ingest sent before it.
+enum ShardMsg {
+    Ingest {
+        /// Row-major `k x D` inputs, all inside this shard's safe band.
+        xs: Vec<f64>,
+        /// Targets.
+        ys: Vec<f64>,
+        /// True for halo copies (absorbed into the `halo` accumulator,
+        /// excluded from merge and the reservoir).
+        halo: bool,
+        /// Acked with the number of points absorbed.
+        reply: Option<SyncSender<usize>>,
+    },
+    /// Force a refresh + publish (no-op refresh if already clean).
+    Flush { reply: SyncSender<()> },
+    /// Exponential forgetting on both accumulators, under the reservoir
+    /// lock (so a concurrent whole-domain re-opt snapshot is ordered
+    /// strictly before or after the decay).
+    Decay { gamma: f64, reply: SyncSender<()> },
+    /// Clone of the owned accumulator (the merge path's input).
+    OwnedStats { reply: SyncSender<IncrementalSki> },
+    /// Adopt re-optimized hyperparameters, rebuild the grid operator,
+    /// refresh, publish.
+    SetHypers { kernel: KernelSpec, sigma2: f64, reply: SyncSender<()> },
+}
+
+/// Per-shard worker state (lives entirely on the worker thread).
+struct ShardWorker {
+    id: usize,
+    grid: Grid,
+    kernel: KernelSpec,
+    sigma2: f64,
+    cfg: ShardConfig,
+    own: IncrementalSki,
+    halo: IncrementalSki,
+    gk: GridKernel,
+    t_mean: Vec<f64>,
+    t_probes: Vec<Vec<f64>>,
+    g_probes: Vec<Vec<f64>>,
+    ws: CgWorkspace,
+    reservoir: Arc<Mutex<Reservoir>>,
+    res_rng: Rng,
+    serving: Arc<ShardedServing>,
+    metrics: Arc<Metrics>,
+    /// Weighted ingests since the last refresh (owned 1.0, halo 0.5).
+    dirty: f64,
+    refresh_count: u64,
+}
+
+impl ShardWorker {
+    fn ingest(&mut self, xs: &[f64], ys: &[f64], is_halo: bool) -> usize {
+        let d = self.grid.dim();
+        let target = if is_halo { &mut self.halo } else { &mut self.own };
+        for (i, &y) in ys.iter().enumerate() {
+            let row = &xs[i * d..(i + 1) * d];
+            let exp = target.ingest(row, y);
+            debug_assert!(exp.is_none(), "routed point must not expand a shard grid");
+        }
+        if !is_halo && !ys.is_empty() {
+            let mut res = self.reservoir.lock().unwrap();
+            for (i, &y) in ys.iter().enumerate() {
+                res.offer(&xs[i * d..(i + 1) * d], y, self.cfg.reservoir, &mut self.res_rng);
+            }
+        }
+        self.dirty += ys.len() as f64 * if is_halo { 0.5 } else { 1.0 };
+        let counter = if is_halo {
+            &self.metrics.shards[self.id].halo_ingested
+        } else {
+            &self.metrics.shards[self.id].ingested
+        };
+        counter.fetch_add(ys.len() as u64, Ordering::Relaxed);
+        ys.len()
+    }
+
+    /// Refresh the fast-prediction caches from the combined
+    /// `own + halo` statistics and publish the snapshot. Same math as
+    /// [`StreamTrainer::refresh`] (shared [`refresh_mdomain`] core),
+    /// with the Gram apply, `W^T y`, probe accumulators, and `diag(G)`
+    /// each summed across the two accumulators.
+    fn refresh_and_publish(&mut self) {
+        let t0 = Instant::now();
+        let m = self.grid.m();
+        let has_halo = self.halo.n() > 0;
+        // Combine the two accumulators only when there is halo data;
+        // otherwise borrow `own`'s statistics directly and keep the
+        // refresh allocation-light (matching StreamTrainer::refresh).
+        let combined = if has_halo {
+            let mut wty = self.own.wty().to_vec();
+            let mut g_diag = self.own.g_diag().to_vec();
+            let mut probes_q: Vec<Vec<f64>> = self.own.probes().to_vec();
+            for (a, &b) in wty.iter_mut().zip(self.halo.wty()) {
+                *a += b;
+            }
+            for (a, &b) in g_diag.iter_mut().zip(self.halo.g_diag()) {
+                *a += b;
+            }
+            for (q, hq) in probes_q.iter_mut().zip(self.halo.probes()) {
+                for (a, &b) in q.iter_mut().zip(hq) {
+                    *a += b;
+                }
+            }
+            Some((wty, g_diag, probes_q))
+        } else {
+            None
+        };
+        let (wty, g_diag, probes_q): (&[f64], &[f64], &[Vec<f64>]) = match &combined {
+            Some((w, g, p)) => (w.as_slice(), g.as_slice(), p.as_slice()),
+            None => (self.own.wty(), self.own.g_diag(), self.own.probes()),
+        };
+        let inputs = RefreshInputs {
+            gk: &self.gk,
+            sf2: self.kernel.sf2(),
+            sigma2: self.sigma2,
+            opts: self.cfg.msgp.cg.warm(),
+            wty,
+            probes_q,
+            g_probes: &self.g_probes,
+            g_diag: Some(g_diag),
+        };
+        let own = &self.own;
+        let halo = &self.halo;
+        let mut hbuf = vec![0.0f64; m];
+        let mut g_apply = |v: &[f64], out: &mut [f64]| {
+            own.g_matvec_into(v, out);
+            if has_halo {
+                halo.g_matvec_into(v, &mut hbuf);
+                for (o, &h) in out.iter_mut().zip(&hbuf) {
+                    *o += h;
+                }
+            }
+        };
+        let (u_mean, nu_u, _, _) = refresh_mdomain(
+            inputs,
+            &mut g_apply,
+            &mut self.t_mean,
+            &mut self.t_probes,
+            &mut self.ws,
+        );
+        self.serving.publish(
+            self.id,
+            ServingModel::from_parts(
+                self.grid.clone(),
+                u_mean,
+                nu_u,
+                self.kernel.sf2(),
+                self.sigma2,
+            ),
+        );
+        self.dirty = 0.0;
+        self.refresh_count += 1;
+        self.metrics.shards[self.id].refreshes.fetch_add(1, Ordering::Relaxed);
+        self.metrics.record_refresh(t0.elapsed());
+    }
+
+    fn run(mut self, rx: Receiver<ShardMsg>) {
+        let refresh_every = self.cfg.refresh_every.max(1) as f64;
+        while let Ok(msg) = rx.recv() {
+            self.metrics.shards[self.id].queue_depth.fetch_sub(1, Ordering::Relaxed);
+            match msg {
+                ShardMsg::Ingest { xs, ys, halo, reply } => {
+                    let k = self.ingest(&xs, &ys, halo);
+                    // Ack before any cadence-triggered refresh so a slow
+                    // solve never stalls the ingest caller.
+                    if let Some(r) = reply {
+                        let _ = r.send(k);
+                    }
+                    if self.dirty >= refresh_every {
+                        self.refresh_and_publish();
+                    }
+                }
+                ShardMsg::Flush { reply } => {
+                    if self.dirty > 0.0 || self.refresh_count == 0 {
+                        self.refresh_and_publish();
+                    }
+                    let _ = reply.send(());
+                }
+                ShardMsg::Decay { gamma, reply } => {
+                    {
+                        // Same lock a whole-domain re-opt snapshot takes:
+                        // the accumulators can never be observed
+                        // half-decayed.
+                        let reservoir = self.reservoir.clone();
+                        let _guard = reservoir.lock().unwrap();
+                        self.own.decay(gamma);
+                        self.halo.decay(gamma);
+                    }
+                    if self.own.n() > 0 || self.halo.n() > 0 {
+                        self.dirty = self.dirty.max(1.0);
+                    }
+                    let _ = reply.send(());
+                }
+                ShardMsg::OwnedStats { reply } => {
+                    let _ = reply.send(self.own.clone());
+                }
+                ShardMsg::SetHypers { kernel, sigma2, reply } => {
+                    self.kernel = kernel;
+                    self.sigma2 = sigma2;
+                    self.gk = GridKernel::new(&self.kernel, &self.grid, &self.cfg.msgp);
+                    self.refresh_and_publish();
+                    let _ = reply.send(());
+                }
+            }
+        }
+    }
+}
+
+/// The facade over S shard workers: routes ingest batches (with halo
+/// copies), fans out control messages, merges owned statistics, and
+/// runs whole-domain hyper re-optimization on the pooled reservoirs.
+pub struct ShardedTrainer {
+    plan: Arc<ShardPlan>,
+    serving: Arc<ShardedServing>,
+    /// Shared metrics (per-shard counters populated; the sharded server
+    /// reuses this instance so `/metrics` sees both sides).
+    pub metrics: Arc<Metrics>,
+    cfg: ShardConfig,
+    txs: Vec<SyncSender<ShardMsg>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    reservoirs: Vec<Arc<Mutex<Reservoir>>>,
+    /// Current hyperparameters (updated by whole-domain re-opts).
+    hypers: Mutex<(KernelSpec, f64)>,
+    /// Serializes cross-shard facade operations (ingest routing, decay
+    /// broadcasts, stats collection, re-opts). Per-worker queues already
+    /// order messages *within* a shard; this lock makes multi-shard
+    /// operations atomic *across* shards, so a decay epoch can never
+    /// interleave with a concurrent ingest batch or merge — every point
+    /// of a batch sees the same epoch on every shard, and merged
+    /// statistics always correspond to one consistent epoch.
+    ops: Mutex<()>,
+}
+
+impl ShardedTrainer {
+    /// Plan the shards over `global` and start one worker thread per
+    /// shard. Until data arrives every shard serves the prior.
+    pub fn start(kernel: KernelSpec, sigma2: f64, global: Grid, cfg: ShardConfig) -> Self {
+        assert_eq!(kernel.dim(), global.dim(), "kernel dim vs grid dim");
+        let plan = Arc::new(ShardPlan::new(global, cfg.shards, cfg.halo, cfg.blend));
+        let s = plan.shards();
+        let metrics = Arc::new(Metrics::with_shards(s));
+        let initial: Vec<ServingModel> = (0..s)
+            .map(|i| {
+                let g = plan.local_grid(i);
+                let m = g.m();
+                ServingModel::from_parts(g, vec![0.0; m], vec![0.0; m], kernel.sf2(), sigma2)
+            })
+            .collect();
+        let serving = Arc::new(ShardedServing::new(plan.clone(), initial));
+        let mut txs = Vec::with_capacity(s);
+        let mut handles = Vec::with_capacity(s);
+        let mut reservoirs = Vec::with_capacity(s);
+        for id in 0..s {
+            let (tx, rx) = mpsc::sync_channel::<ShardMsg>(1024);
+            let reservoir = Arc::new(Mutex::new(Reservoir::default()));
+            let grid = plan.local_grid(id);
+            let kernel = kernel.clone();
+            let cfg = cfg.clone();
+            let serving = serving.clone();
+            let metrics = metrics.clone();
+            let res = reservoir.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("msgp-shard-{id}"))
+                .spawn(move || {
+                    // Build the heavy state on the worker thread itself.
+                    let m = grid.m();
+                    let ns = cfg.msgp.n_var_samples.max(1);
+                    let seed = cfg.msgp.seed;
+                    let mut probe_rng = Rng::new(seed ^ (0x9b0b + 2 * id as u64));
+                    let gk = GridKernel::new(&kernel, &grid, &cfg.msgp);
+                    // Distinct seeds per accumulator: merged probe sums
+                    // stay exact N(0, G) samples (independent draws).
+                    let own = IncrementalSki::new(grid.clone(), ns, 1, seed ^ (2 * id as u64));
+                    let halo =
+                        IncrementalSki::new(grid.clone(), ns, 1, seed ^ (2 * id as u64 + 1));
+                    let worker = ShardWorker {
+                        g_probes: (0..ns).map(|_| probe_rng.normal_vec(m)).collect(),
+                        t_probes: (0..ns).map(|_| vec![0.0; m]).collect(),
+                        t_mean: vec![0.0; m],
+                        ws: CgWorkspace::new(m),
+                        res_rng: Rng::new(seed ^ (0x7e5e + id as u64)),
+                        sigma2,
+                        id,
+                        grid,
+                        kernel,
+                        cfg,
+                        own,
+                        halo,
+                        gk,
+                        reservoir: res,
+                        serving,
+                        metrics,
+                        dirty: 0.0,
+                        refresh_count: 0,
+                    };
+                    worker.run(rx);
+                })
+                .expect("spawn shard worker");
+            txs.push(tx);
+            handles.push(handle);
+            reservoirs.push(reservoir);
+        }
+        ShardedTrainer {
+            plan,
+            serving,
+            metrics,
+            cfg,
+            txs,
+            handles,
+            reservoirs,
+            hypers: Mutex::new((kernel, sigma2)),
+            ops: Mutex::new(()),
+        }
+    }
+
+    /// The shard plan.
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// The serving table (shared with the coordinator's batcher).
+    pub fn serving(&self) -> Arc<ShardedServing> {
+        self.serving.clone()
+    }
+
+    /// Configuration.
+    pub fn cfg(&self) -> &ShardConfig {
+        &self.cfg
+    }
+
+    fn send(&self, shard: usize, msg: ShardMsg) {
+        self.metrics.shards[shard].queue_depth.fetch_add(1, Ordering::Relaxed);
+        self.txs[shard]
+            .send(msg)
+            .unwrap_or_else(|_| panic!("shard {shard} worker died"));
+    }
+
+    /// Route a batch of observations to their owning shards (plus halo
+    /// copies to seam neighbors) and wait for the owned-ingest acks.
+    /// Returns the number of points applied. Rejected (and counted in
+    /// `metrics.ingest_rejected_total`): non-finite points, and points
+    /// less than **one grid cell inside the global box** — the sharded
+    /// path never auto-expands (the plan's geometry is fixed), and the
+    /// one-cell admission margin is what lets the per-shard
+    /// accumulators run with `margin_cells = 1` and never expand
+    /// either. Size the global grid with a margin around the expected
+    /// data range (as [`crate::grid::Grid::covering`] does) so edge
+    /// data is not excluded.
+    pub fn ingest_batch(&self, xs: &[f64], ys: &[f64]) -> usize {
+        let d = self.plan.global().dim();
+        assert_eq!(xs.len(), ys.len() * d, "xs is k x D row-major, ys length k");
+        let _ops = self.ops.lock().unwrap();
+        let s = self.plan.shards();
+        let mut owned: Vec<(Vec<f64>, Vec<f64>)> = vec![(Vec::new(), Vec::new()); s];
+        let mut halos: Vec<(Vec<f64>, Vec<f64>)> = vec![(Vec::new(), Vec::new()); s];
+        let mut rejected = 0u64;
+        for (i, &y) in ys.iter().enumerate() {
+            let row = &xs[i * d..(i + 1) * d];
+            let finite = y.is_finite() && row.iter().all(|v| v.is_finite());
+            if !finite || !self.plan.global().covers(row, 1.0) {
+                rejected += 1;
+                continue;
+            }
+            let owner = self.plan.owner_of(row);
+            owned[owner].0.extend_from_slice(row);
+            owned[owner].1.push(y);
+            for nb in self.plan.halo_recipients(row, owner).into_iter().flatten() {
+                halos[nb].0.extend_from_slice(row);
+                halos[nb].1.push(y);
+            }
+        }
+        let (ack_tx, ack_rx) = mpsc::sync_channel::<usize>(s);
+        let mut expected = 0usize;
+        for shard in 0..s {
+            let (hx, hy) = std::mem::take(&mut halos[shard]);
+            if !hy.is_empty() {
+                self.send(shard, ShardMsg::Ingest { xs: hx, ys: hy, halo: true, reply: None });
+            }
+            let (ox, oy) = std::mem::take(&mut owned[shard]);
+            if !oy.is_empty() {
+                expected += 1;
+                self.send(
+                    shard,
+                    ShardMsg::Ingest { xs: ox, ys: oy, halo: false, reply: Some(ack_tx.clone()) },
+                );
+            }
+        }
+        drop(ack_tx);
+        let mut applied = 0usize;
+        for _ in 0..expected {
+            applied += ack_rx.recv().expect("shard worker dropped ingest ack");
+        }
+        if applied > 0 {
+            self.metrics.ingested_points_total.fetch_add(applied as u64, Ordering::Relaxed);
+            self.metrics.ingest_batches.fetch_add(1, Ordering::Relaxed);
+        }
+        self.metrics.ingest_rejected_total.fetch_add(rejected, Ordering::Relaxed);
+        applied
+    }
+
+    /// Force every shard to refresh + publish, and wait. After this
+    /// returns, predictions observe every previously acked ingest.
+    pub fn flush(&self) {
+        let (tx, rx) = mpsc::sync_channel::<()>(self.txs.len());
+        for shard in 0..self.txs.len() {
+            self.send(shard, ShardMsg::Flush { reply: tx.clone() });
+        }
+        drop(tx);
+        for _ in 0..self.txs.len() {
+            let _ = rx.recv();
+        }
+    }
+
+    /// Broadcast an exponential-forgetting epoch to every shard (each
+    /// worker decays under its reservoir lock) and wait. Atomic with
+    /// respect to the other facade operations: a concurrent ingest
+    /// batch or stats merge observes every shard either before or
+    /// after the epoch, never a mix.
+    pub fn decay(&self, gamma: f64) {
+        assert!(gamma > 0.0 && gamma <= 1.0);
+        let _ops = self.ops.lock().unwrap();
+        let (tx, rx) = mpsc::sync_channel::<()>(self.txs.len());
+        for shard in 0..self.txs.len() {
+            self.send(shard, ShardMsg::Decay { gamma, reply: tx.clone() });
+        }
+        drop(tx);
+        for _ in 0..self.txs.len() {
+            let _ = rx.recv();
+        }
+    }
+
+    /// Collect a clone of every shard's *owned* accumulator (FIFO
+    /// ordering: observes every ingest acked before the call, and — via
+    /// the facade ops lock — one consistent decay epoch across shards).
+    /// Broadcast-then-collect, so per-shard queue drains overlap
+    /// instead of summing.
+    pub fn owned_stats(&self) -> Vec<IncrementalSki> {
+        let _ops = self.ops.lock().unwrap();
+        let rxs: Vec<_> = (0..self.txs.len())
+            .map(|shard| {
+                let (tx, rx) = mpsc::sync_channel::<IncrementalSki>(1);
+                self.send(shard, ShardMsg::OwnedStats { reply: tx });
+                rx
+            })
+            .collect();
+        rxs.into_iter()
+            .map(|rx| rx.recv().expect("shard worker dropped stats reply"))
+            .collect()
+    }
+
+    /// Fold every shard's owned statistics into one global accumulator
+    /// (equals a single-trainer build over the full stream to ~1e-13).
+    pub fn merged_stats(&self) -> IncrementalSki {
+        merge::merge_owned(
+            self.plan.global().clone(),
+            self.cfg.msgp.seed,
+            &self.owned_stats(),
+        )
+    }
+
+    /// A whole-domain trainer over the merged statistics, carrying the
+    /// current hyperparameters — the "combined global snapshot" used for
+    /// whole-domain evaluation and re-optimization.
+    pub fn merged_trainer(&self) -> StreamTrainer {
+        let (kernel, sigma2) = self.hypers.lock().unwrap().clone();
+        let cfg = StreamConfig {
+            msgp: self.cfg.msgp.clone(),
+            reservoir: self.cfg.reservoir,
+            ..StreamConfig::default()
+        };
+        merge::merged_trainer(kernel, sigma2, cfg, self.plan.global().clone(), &self.owned_stats())
+    }
+
+    /// Whole-domain hyperparameter re-optimization: pool the per-shard
+    /// reservoir snapshots (each taken under the lock its shard's decay
+    /// holds), fit a batch MSGP on the *global* grid, run `iters` Adam
+    /// steps, broadcast the learned hypers to every shard (each
+    /// rebuilds its operator, refreshes, publishes), and return the
+    /// snapshot LML — or `None` while the reservoirs are empty.
+    pub fn reoptimize_global(&self, iters: usize, lr: f64) -> anyhow::Result<Option<f64>> {
+        let d = self.plan.global().dim();
+        // Snapshot phase, under the ops lock: a consistent view of the
+        // reservoirs and current hypers. The (slow) fit below runs
+        // *outside* the lock so ingest/decay/merge keep flowing — the
+        // learned hypers then describe a snapshot at most one epoch
+        // stale, which a later re-opt corrects.
+        //
+        // Each reservoir is a uniform sample of *its own shard's*
+        // stream, so equal-weight pooling would over-represent
+        // low-traffic shards and bias the fitted hypers toward sparse
+        // regions. Subsample shard s proportionally to its seen stream
+        // length, approximating one uniform reservoir over the union.
+        let (parts, kernel, sigma2) = {
+            let _ops = self.ops.lock().unwrap();
+            let mut parts: Vec<(Vec<f64>, Vec<f64>, usize)> =
+                Vec::with_capacity(self.reservoirs.len());
+            for r in &self.reservoirs {
+                let g = r.lock().unwrap();
+                parts.push((g.x.clone(), g.y.clone(), g.seen));
+            }
+            let (kernel, sigma2) = self.hypers.lock().unwrap().clone();
+            (parts, kernel, sigma2)
+        };
+        let seen_total: usize = parts.iter().map(|p| p.2).sum();
+        if seen_total == 0 {
+            return Ok(None);
+        }
+        let target = self.cfg.reservoir.max(1);
+        let mut rng = Rng::new(self.cfg.msgp.seed ^ 0x5e0f_u64);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for (px, py, seen) in parts {
+            let len = py.len();
+            if len == 0 {
+                continue;
+            }
+            let share = target as f64 * seen as f64 / seen_total as f64;
+            let quota = (share.round() as usize).clamp(1, len);
+            let mut idx: Vec<usize> = (0..len).collect();
+            rng.shuffle(&mut idx);
+            for &i in idx.iter().take(quota) {
+                x.extend_from_slice(&px[i * d..(i + 1) * d]);
+                y.push(py[i]);
+            }
+        }
+        if y.is_empty() {
+            return Ok(None);
+        }
+        let snapshot = Dataset { x, d, y };
+        let mut cfg = self.cfg.msgp.clone();
+        cfg.n_per_dim = self.plan.global().shape();
+        let mut model = MsgpModel::fit_with_grid(
+            kernel,
+            sigma2,
+            snapshot,
+            self.plan.global().clone(),
+            cfg,
+        )?;
+        model.train(iters, lr)?;
+        let lml = model.lml();
+        // Broadcast phase, under the ops lock again: hypers adoption is
+        // atomic across shards with respect to ingest/decay/merge.
+        let _ops = self.ops.lock().unwrap();
+        *self.hypers.lock().unwrap() = (model.kernel.clone(), model.sigma2);
+        self.metrics.reopt_count.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::sync_channel::<()>(self.txs.len());
+        for shard in 0..self.txs.len() {
+            self.send(
+                shard,
+                ShardMsg::SetHypers {
+                    kernel: model.kernel.clone(),
+                    sigma2: model.sigma2,
+                    reply: tx.clone(),
+                },
+            );
+        }
+        drop(tx);
+        for _ in 0..self.txs.len() {
+            let _ = rx.recv();
+        }
+        Ok(Some(lml))
+    }
+
+    /// Blended, shard-routed prediction (serving-path shortcut for
+    /// callers not going through the coordinator).
+    pub fn predict_batch(&self, points: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        self.serving.predict_batch(points)
+    }
+
+    /// `/shards` introspection payload: one line per shard with its
+    /// owned slab, local grid size, and live counters.
+    pub fn summary(&self) -> String {
+        let ax = &self.plan.global().axes[self.plan.axis()];
+        let mut s = format!(
+            "shards={} axis={} halo={} blend={}\n",
+            self.plan.shards(),
+            self.plan.axis(),
+            self.plan.halo(),
+            self.plan.blend()
+        );
+        for i in 0..self.plan.shards() {
+            let (lo, hi) = (self.plan.cuts()[i], self.plan.cuts()[i + 1]);
+            let sm = &self.metrics.shards[i];
+            s.push_str(&format!(
+                "shard[{i}] owns=[{:.3}, {:.3}) m={} ingested={} halo={} refreshes={} queue_depth={}\n",
+                ax.coord(lo),
+                ax.coord(hi),
+                self.plan.local_grid(i).m(),
+                sm.ingested.load(Ordering::Relaxed),
+                sm.halo_ingested.load(Ordering::Relaxed),
+                sm.refreshes.load(Ordering::Relaxed),
+                sm.queue_depth.load(Ordering::Relaxed),
+            ));
+        }
+        s
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.txs.clear(); // closing every channel stops the workers
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ShardedTrainer {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}

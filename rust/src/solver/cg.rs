@@ -19,11 +19,18 @@ pub struct CgOptions {
     /// solution); when `false` (the default), `x` is zeroed first so a
     /// stale buffer can never poison a cold solve.
     pub warm_start: bool,
+    /// Jacobi preconditioning for the streaming m-domain refresh operator
+    /// `sigma^2 I + sf2 S G S`: the refresh builds a diagonal scaling
+    /// from `diag(G)` (already tracked by the banded Gram accumulator)
+    /// and the constant circulant diagonal of `S`. Off by default; the
+    /// flag is consumed by the refresh paths, not by [`cg_solve`] itself
+    /// (whose `precond` argument stays explicit).
+    pub precondition: bool,
 }
 
 impl Default for CgOptions {
     fn default() -> Self {
-        CgOptions { tol: 1e-8, max_iter: 1000, warm_start: false }
+        CgOptions { tol: 1e-8, max_iter: 1000, warm_start: false, precondition: false }
     }
 }
 
@@ -31,6 +38,12 @@ impl CgOptions {
     /// Same options with warm starting enabled.
     pub fn warm(mut self) -> Self {
         self.warm_start = true;
+        self
+    }
+
+    /// Same options with Jacobi preconditioning enabled.
+    pub fn jacobi(mut self) -> Self {
+        self.precondition = true;
         self
     }
 }
@@ -160,7 +173,7 @@ mod tests {
             |v, out| out.copy_from_slice(v),
             &b,
             &mut x,
-            CgOptions { tol: 1e-10, max_iter: 500, warm_start: false },
+            CgOptions { tol: 1e-10, max_iter: 500, warm_start: false, precondition: false },
             &mut ws,
         );
         assert!(res.converged, "{res:?}");
@@ -179,7 +192,7 @@ mod tests {
             a[(i, i)] += (i as f64 + 1.0) * 10.0;
         }
         let b: Vec<f64> = (0..n).map(|i| (i as f64).cos()).collect();
-        let opts = CgOptions { tol: 1e-10, max_iter: 2000, warm_start: false };
+        let opts = CgOptions { tol: 1e-10, max_iter: 2000, warm_start: false, precondition: false };
         let mut ws = CgWorkspace::new(n);
         let mut x0 = vec![0.0; n];
         let plain = cg_solve(
@@ -220,7 +233,7 @@ mod tests {
         let n = 48;
         let a = spd(n);
         let b0: Vec<f64> = (0..n).map(|i| (i as f64 * 0.7).sin()).collect();
-        let opts = CgOptions { tol: 1e-10, max_iter: 2000, warm_start: false };
+        let opts = CgOptions { tol: 1e-10, max_iter: 2000, warm_start: false, precondition: false };
         let mut ws = CgWorkspace::new(n);
         let mut x = vec![0.0; n];
         let first = cg_solve(
@@ -277,7 +290,7 @@ mod tests {
             |v, out| out.copy_from_slice(v),
             &b,
             &mut x,
-            CgOptions { tol: 1e-10, max_iter: 500, warm_start: false },
+            CgOptions { tol: 1e-10, max_iter: 500, warm_start: false, precondition: false },
             &mut ws,
         );
         assert!(res.converged);

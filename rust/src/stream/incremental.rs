@@ -12,8 +12,10 @@ use crate::util::Rng;
 const BAND_W: usize = 7;
 const BAND_HALF: i64 = 3;
 
-/// Remap a flat grid vector from `old` onto `new`, where `new` is a
-/// whole-cell expansion of `old` (same steps). New cells are zero.
+/// Remap a flat grid vector from `old` onto `new`, where `old` sits
+/// inside `new` at a whole-cell offset with the same steps (`new` is an
+/// expansion of `old`, or `old` is a shard's local sub-grid of a global
+/// `new`). Cells outside `old` are zero.
 pub fn remap_grid_vec(old: &Grid, new: &Grid, v: &[f64]) -> Vec<f64> {
     assert_eq!(v.len(), old.m());
     let shift = old.shift_within(new);
@@ -47,6 +49,7 @@ pub fn remap_grid_vec(old: &Grid, new: &Grid, v: &[f64]) -> Vec<f64> {
 
 /// Streaming sufficient statistics of the SKI decomposition. See the
 /// [module docs](crate::stream) for the algebra.
+#[derive(Clone)]
 pub struct IncrementalSki {
     grid: Grid,
     /// `b = W^T y`, length `m`.
@@ -57,8 +60,9 @@ pub struct IncrementalSki {
     /// `m`; both `(i, j)` and `(j, i)` entries are stored, so `G`
     /// MVMs need no symmetry bookkeeping.
     bands: Vec<Vec<f64>>,
-    /// Per-cell point counts (nearest grid cell), length `m`.
-    counts: Vec<u32>,
+    /// Per-cell point mass (nearest grid cell), length `m`. Whole counts
+    /// until [`Self::decay`] down-weights history, fractional after.
+    counts: Vec<f64>,
     /// Probe accumulators `q_k = sum_i eps_ik w_i` — exact fixed samples
     /// of `N(0, G)` for the stochastic variance estimator, maintained
     /// without retaining any raw data.
@@ -66,6 +70,10 @@ pub struct IncrementalSki {
     /// Margin (cells) enforced around ingested points on auto-expansion.
     margin_cells: usize,
     n: usize,
+    /// Effective sample mass: `+1` per ingest, scaled by every
+    /// [`Self::decay`]. `y_mean`/`y_var` divide by this, so both are
+    /// invariant under decay (numerator and denominator scale together).
+    weight: f64,
     sum_y: f64,
     sum_y2: f64,
     rng: Rng,
@@ -74,7 +82,7 @@ pub struct IncrementalSki {
     scratch: IngestScratch,
 }
 
-#[derive(Default)]
+#[derive(Clone, Default)]
 struct IngestScratch {
     flats: Vec<usize>,
     ws: Vec<f64>,
@@ -95,10 +103,11 @@ impl IncrementalSki {
             grid,
             wty: vec![0.0; m],
             bands: (0..nbands).map(|_| vec![0.0; m]).collect(),
-            counts: vec![0; m],
+            counts: vec![0.0; m],
             probes: (0..n_probes).map(|_| vec![0.0; m]).collect(),
             margin_cells: margin_cells.max(1),
             n: 0,
+            weight: 0.0,
             sum_y: 0.0,
             sum_y2: 0.0,
             rng: Rng::new(seed ^ 0x57ea3_u64),
@@ -126,9 +135,25 @@ impl IncrementalSki {
         &self.wty
     }
 
-    /// Per-cell point counts.
-    pub fn counts(&self) -> &[u32] {
+    /// Per-cell point mass (whole counts until [`Self::decay`]).
+    pub fn counts(&self) -> &[f64] {
         &self.counts
+    }
+
+    /// The banded Gram accumulator (`7^D` bands of length `m`; see the
+    /// field docs for the delta encoding). Read access for the shard
+    /// merge path and diagnostics.
+    pub fn bands(&self) -> &[Vec<f64>] {
+        &self.bands
+    }
+
+    /// `diag(G)`: the zero-offset band (all per-dimension deltas zero),
+    /// used by the Jacobi refresh preconditioner. O(1) — the diagonal is
+    /// already tracked by the banded storage.
+    pub fn g_diag(&self) -> &[f64] {
+        // Base-7 digits all equal to 3 (delta 0 per dimension):
+        // o = 3 * (7^D - 1) / 6 = (7^D - 1) / 2.
+        &self.bands[(self.bands.len() - 1) / 2]
     }
 
     /// Probe accumulators (`n_probes` vectors of length `m`).
@@ -136,22 +161,63 @@ impl IncrementalSki {
         &self.probes
     }
 
-    /// Running mean of the targets (diagnostics / de-trending).
+    /// Effective (decay-weighted) sample mass.
+    pub fn weight(&self) -> f64 {
+        self.weight
+    }
+
+    /// Running (decay-weighted) mean of the targets.
     pub fn y_mean(&self) -> f64 {
-        if self.n == 0 {
+        if self.weight <= 0.0 {
             0.0
         } else {
-            self.sum_y / self.n as f64
+            self.sum_y / self.weight
         }
     }
 
-    /// Running second moment of the targets.
+    /// Running (decay-weighted) second central moment of the targets.
     pub fn y_var(&self) -> f64 {
-        if self.n == 0 {
+        if self.weight <= 0.0 {
             0.0
         } else {
-            (self.sum_y2 / self.n as f64 - self.y_mean().powi(2)).max(0.0)
+            (self.sum_y2 / self.weight - self.y_mean().powi(2)).max(0.0)
         }
+    }
+
+    /// Exponential forgetting for non-stationary streams: scale every
+    /// linear accumulator — `b = W^T y`, the banded Gram `G`, per-cell
+    /// mass, and the target sums — by `gamma in (0, 1]`. Called once per
+    /// epoch, this gives observation `i` an effective weight
+    /// `gamma^(age_i in epochs)`. The probe accumulators scale by
+    /// `sqrt(gamma)`: `q_k ~ N(0, G)` maps to a valid sample of
+    /// `N(0, gamma G)` under `sqrt(gamma)`, keeping the stochastic
+    /// variance estimator exact against the decayed Gram. `n` keeps
+    /// counting raw ingests; `weight()` carries the decayed mass.
+    pub fn decay(&mut self, gamma: f64) {
+        assert!(gamma > 0.0 && gamma <= 1.0, "decay factor must be in (0, 1], got {gamma}");
+        if gamma == 1.0 {
+            return;
+        }
+        let root = gamma.sqrt();
+        for v in self.wty.iter_mut() {
+            *v *= gamma;
+        }
+        for band in self.bands.iter_mut() {
+            for v in band.iter_mut() {
+                *v *= gamma;
+            }
+        }
+        for q in self.probes.iter_mut() {
+            for v in q.iter_mut() {
+                *v *= root;
+            }
+        }
+        for c in self.counts.iter_mut() {
+            *c *= gamma;
+        }
+        self.weight *= gamma;
+        self.sum_y *= gamma;
+        self.sum_y2 *= gamma;
     }
 
     /// Absorb one observation in O(4^D) (plus a remap when the grid must
@@ -209,8 +275,9 @@ impl IncrementalSki {
             let i = (u.max(0.0) as usize).min(self.grid.axes[a].n - 1);
             cell = cell * self.grid.axes[a].n + i;
         }
-        self.counts[cell] += 1;
+        self.counts[cell] += 1.0;
         self.n += 1;
+        self.weight += 1.0;
         self.sum_y += y;
         self.sum_y2 += y * y;
         expansion
@@ -313,8 +380,43 @@ impl IncrementalSki {
         self.wty = remap(&self.wty);
         self.bands = self.bands.iter().map(|b| remap(b)).collect();
         self.probes = self.probes.iter().map(|q| remap(q)).collect();
-        let counts_f: Vec<f64> = self.counts.iter().map(|&c| c as f64).collect();
-        self.counts = remap(&counts_f).iter().map(|&c| c as u32).collect();
+        self.counts = remap(&self.counts);
         self.grid = new_grid;
+    }
+
+    /// Fold another accumulator's statistics into this one. `other`'s
+    /// grid must be a sub-grid of `self`'s (same steps, axes contained —
+    /// exactly what a shard's local grid is relative to the global grid);
+    /// every statistic is lifted by the whole-cell index shift and added.
+    /// This is the shard merge primitive: sufficient statistics are
+    /// additive, so S owned-shard accumulators folded into an empty
+    /// global accumulator equal a single-trainer build over the union of
+    /// the shards' streams.
+    pub fn accumulate_shifted(&mut self, other: &IncrementalSki) {
+        assert_eq!(self.grid.dim(), other.grid.dim(), "dimension mismatch");
+        assert_eq!(self.bands.len(), other.bands.len());
+        assert_eq!(
+            self.probes.len(),
+            other.probes.len(),
+            "probe counts must match to merge accumulators"
+        );
+        let lift = |v: &[f64]| remap_grid_vec(&other.grid, &self.grid, v);
+        let add = |dst: &mut [f64], src: Vec<f64>| {
+            for (d, s) in dst.iter_mut().zip(src) {
+                *d += s;
+            }
+        };
+        add(&mut self.wty, lift(&other.wty));
+        for (band, ob) in self.bands.iter_mut().zip(&other.bands) {
+            add(band, lift(ob));
+        }
+        for (q, oq) in self.probes.iter_mut().zip(&other.probes) {
+            add(q, lift(oq));
+        }
+        add(&mut self.counts, lift(&other.counts));
+        self.n += other.n;
+        self.weight += other.weight;
+        self.sum_y += other.sum_y;
+        self.sum_y2 += other.sum_y2;
     }
 }

@@ -38,16 +38,21 @@
 //!   auto-expansion (step-preserving, so statistics remap by an index
 //!   shift) when points arrive outside the covered box.
 //! * [`StreamTrainer`] — warm-started CG refreshes (reusing
-//!   [`crate::solver::CgWorkspace`] and the previous solutions as `x0`),
-//!   incremental `u_mean` / `nu_U` cache rebuilds, and periodic Whittle
-//!   hyperparameter re-optimization on a reservoir snapshot of the
-//!   stream.
+//!   [`crate::solver::CgWorkspace`] and the previous solutions as `x0`,
+//!   optionally Jacobi-preconditioned from the tracked `diag(G)`),
+//!   incremental `u_mean` / `nu_U` cache rebuilds, exponential
+//!   forgetting ([`StreamTrainer::decay`]) for non-stationary streams,
+//!   and periodic Whittle hyperparameter re-optimization on a
+//!   lock-guarded reservoir snapshot of the stream.
 //! * Coordinator integration lives in [`crate::coordinator`]: the
 //!   `/ingest` route, batched ingestion, and atomic
 //!   [`crate::coordinator::state::ModelSlot`] snapshot swaps.
+//! * Data-parallel scaling lives in [`crate::shard`]: the statistics
+//!   are *additive*, so S spatial shards ingest disjoint sub-streams in
+//!   parallel and merge (or serve) without ever replaying data.
 
 pub mod incremental;
 pub mod trainer;
 
 pub use incremental::{remap_grid_vec, IncrementalSki};
-pub use trainer::{RefreshStats, StreamConfig, StreamTrainer};
+pub use trainer::{RefreshStats, Reservoir, StreamConfig, StreamTrainer};

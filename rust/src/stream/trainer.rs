@@ -1,14 +1,20 @@
 //! Warm-started m-domain refreshes over the incremental SKI statistics,
 //! plus periodic Whittle hyperparameter re-optimization on a reservoir
 //! snapshot of the stream.
+//!
+//! The refresh math lives in [`refresh_mdomain`] so the single-trainer
+//! path here and the per-shard workers in [`crate::shard`] solve the
+//! identical operator (including the optional Jacobi preconditioner
+//! built from the banded Gram's diagonal).
 
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::state::ServingModel;
 use crate::data::Dataset;
 use crate::gp::msgp::{GridKernel, KernelSpec, MsgpConfig, MsgpModel};
 use crate::grid::Grid;
-use crate::solver::{cg_solve, CgWorkspace};
+use crate::solver::{cg_solve, CgOptions, CgResult, CgWorkspace};
 use crate::stream::incremental::{remap_grid_vec, IncrementalSki};
 use crate::util::Rng;
 
@@ -68,6 +74,218 @@ pub struct RefreshStats {
     pub wall: Duration,
 }
 
+/// Reservoir sample of the stream, used for hyperparameter
+/// re-optimization snapshots. Lives behind a `Mutex` shared between the
+/// trainer and — in sharded deployments — the facade that runs
+/// whole-domain re-opts: a snapshot is taken under the same lock
+/// [`StreamTrainer::decay`] (and the shard workers' decay path) holds
+/// while down-weighting the accumulators, so a re-opt can never observe
+/// a half-decayed trainer.
+#[derive(Debug, Default)]
+pub struct Reservoir {
+    /// Sampled inputs, row-major `k x D`.
+    pub x: Vec<f64>,
+    /// Sampled targets.
+    pub y: Vec<f64>,
+    /// Stream length seen by the sampler.
+    pub seen: usize,
+}
+
+impl Reservoir {
+    /// Offer one observation to the reservoir (classic Algorithm R).
+    pub(crate) fn offer(&mut self, row: &[f64], y: f64, cap: usize, rng: &mut Rng) {
+        self.seen += 1;
+        let d = row.len();
+        if self.y.len() < cap {
+            self.x.extend_from_slice(row);
+            self.y.push(y);
+        } else if cap > 0 {
+            let j = rng.below(self.seen);
+            if j < cap {
+                self.x[j * d..(j + 1) * d].copy_from_slice(row);
+                self.y[j] = y;
+            }
+        }
+    }
+}
+
+/// Inputs to one m-domain cache refresh: the structured grid operator,
+/// hypers, CG options, and the (possibly multi-accumulator-combined)
+/// sufficient statistics.
+pub(crate) struct RefreshInputs<'a> {
+    /// Structured `K_UU` operator on the refresh grid.
+    pub gk: &'a GridKernel,
+    /// Signal variance `sf2`.
+    pub sf2: f64,
+    /// Noise variance.
+    pub sigma2: f64,
+    /// CG options (warm start + Jacobi flags included).
+    pub opts: CgOptions,
+    /// `b = W^T y` (combined across accumulators by the caller).
+    pub wty: &'a [f64],
+    /// Probe accumulators `q_k` (combined by the caller).
+    pub probes_q: &'a [Vec<f64>],
+    /// Fixed `N(0, I_m)` probe draws.
+    pub g_probes: &'a [Vec<f64>],
+    /// `diag(G)` (combined); required when `opts.precondition` is set.
+    pub g_diag: Option<&'a [f64]>,
+}
+
+/// One CG solve on the m-domain operator `B = sigma^2 I + sf2 S G S`,
+/// with `G v` supplied by `g_apply` and an optional Jacobi diagonal.
+#[allow(clippy::too_many_arguments)]
+fn solve_mdomain(
+    gk: &GridKernel,
+    sf2: f64,
+    sigma2: f64,
+    g_apply: &mut dyn FnMut(&[f64], &mut [f64]),
+    gout: &mut [f64],
+    diag: Option<&[f64]>,
+    rhs: &[f64],
+    x: &mut [f64],
+    opts: CgOptions,
+    ws: &mut CgWorkspace,
+) -> CgResult {
+    let mut apply = |v: &[f64], out: &mut [f64]| {
+        let s1 = gk.sqrt_matvec(v);
+        g_apply(&s1, &mut *gout);
+        let s3 = gk.sqrt_matvec(&*gout);
+        for ((o, &s), &vi) in out.iter_mut().zip(&s3).zip(v) {
+            *o = sf2 * s + sigma2 * vi;
+        }
+    };
+    match diag {
+        Some(d) => cg_solve(
+            &mut apply,
+            |v: &[f64], out: &mut [f64]| {
+                for ((o, &vi), &di) in out.iter_mut().zip(v).zip(d) {
+                    *o = vi / di;
+                }
+            },
+            rhs,
+            x,
+            opts,
+            ws,
+        ),
+        None => cg_solve(
+            &mut apply,
+            |v: &[f64], out: &mut [f64]| out.copy_from_slice(v),
+            rhs,
+            x,
+            opts,
+            ws,
+        ),
+    }
+}
+
+/// Rebuild the fast-prediction caches from sufficient statistics:
+/// `u_mean = sf2 S B^{-1} S b` and the stochastic `nu_U` via the probe
+/// accumulators, where `B = sigma^2 I + sf2 S G S`. `(n_s + 1)` CG
+/// solves, each O(m log m + m 7^D) — independent of n. Shared by
+/// [`StreamTrainer::refresh`] and the per-shard workers (which combine
+/// an owned and a halo accumulator into one `G` apply).
+///
+/// When `opts.precondition` is set, a Jacobi diagonal
+/// `d_i = sigma^2 + sf2 s0^2 G_ii` is built from the tracked `diag(G)`
+/// and the constant circulant diagonal `s0` of `S` — an O(m) setup that
+/// typically cuts CG iterations well below the unpreconditioned count on
+/// spatially non-uniform streams (where `diag(G)` spans orders of
+/// magnitude).
+///
+/// Returns `(u_mean, nu_u, mean_iters, var_iters_total)`.
+pub(crate) fn refresh_mdomain(
+    inp: RefreshInputs<'_>,
+    g_apply: &mut dyn FnMut(&[f64], &mut [f64]),
+    t_mean: &mut [f64],
+    t_probes: &mut [Vec<f64>],
+    ws: &mut CgWorkspace,
+) -> (Vec<f64>, Vec<f64>, usize, usize) {
+    let m = inp.wty.len();
+    let sf2 = inp.sf2;
+    let sigma2 = inp.sigma2;
+    let diag: Option<Vec<f64>> = if inp.opts.precondition {
+        let g_diag = inp
+            .g_diag
+            .expect("opts.precondition requires the tracked diag(G)");
+        // Circulant (and Kronecker-of-circulant) operators have a
+        // constant diagonal: read it off the first column of `S`.
+        let s0 = {
+            let mut e0 = vec![0.0; m];
+            e0[0] = 1.0;
+            inp.gk.sqrt_matvec(&e0)[0]
+        };
+        // Every entry must stay strictly positive for an SPD
+        // preconditioner; empty cells have G_ii = 0 and fall back to the
+        // noise floor.
+        let floor = sigma2.abs().max(1e-12);
+        Some(
+            g_diag
+                .iter()
+                .map(|&g| (sigma2 + sf2 * s0 * s0 * g).max(floor))
+                .collect(),
+        )
+    } else {
+        None
+    };
+    let mut gout = vec![0.0f64; m];
+    // --- mean solve ---
+    let s_b = inp.gk.sqrt_matvec(inp.wty);
+    let mean_res = solve_mdomain(
+        inp.gk,
+        sf2,
+        sigma2,
+        &mut *g_apply,
+        &mut gout,
+        diag.as_deref(),
+        &s_b,
+        t_mean,
+        inp.opts,
+        ws,
+    );
+    let mut u_mean = inp.gk.sqrt_matvec(t_mean);
+    for v in u_mean.iter_mut() {
+        *v *= sf2;
+    }
+    // --- variance probes ---
+    let sig = sigma2.sqrt();
+    let rsf = sf2.sqrt();
+    let mut acc = vec![0.0f64; m];
+    let mut var_iters = 0usize;
+    let ns = inp.g_probes.len().max(1);
+    let mut gsg = vec![0.0f64; m];
+    for (k, g_k) in inp.g_probes.iter().enumerate() {
+        // p~ = sqrt(sf2) G S g_k + sigma q_k  (the m-domain image of
+        // the Papandreou–Yuille probe), then solve B t = S p~.
+        let sg = inp.gk.sqrt_matvec(g_k);
+        g_apply(&sg, &mut gsg);
+        let q = &inp.probes_q[k];
+        let ptilde: Vec<f64> = gsg.iter().zip(q).map(|(&a, &b)| rsf * a + sig * b).collect();
+        let rhs = inp.gk.sqrt_matvec(&ptilde);
+        let res = solve_mdomain(
+            inp.gk,
+            sf2,
+            sigma2,
+            &mut *g_apply,
+            &mut gout,
+            diag.as_deref(),
+            &rhs,
+            &mut t_probes[k],
+            inp.opts,
+            ws,
+        );
+        var_iters += res.iters;
+        let uk = inp.gk.sqrt_matvec(&t_probes[k]);
+        for (a, &v) in acc.iter_mut().zip(&uk) {
+            let t = sf2 * v;
+            *a += t * t;
+        }
+    }
+    for a in acc.iter_mut() {
+        *a /= ns as f64;
+    }
+    (u_mean, acc, mean_res.iters, var_iters)
+}
+
 /// The streaming trainer: owns the sufficient statistics, the structured
 /// grid operator, and the warm-start state for all m-domain solves.
 pub struct StreamTrainer {
@@ -88,10 +306,11 @@ pub struct StreamTrainer {
     g_probes: Vec<Vec<f64>>,
     ws: CgWorkspace,
     probe_rng: Rng,
-    // Reservoir snapshot of the stream for hyper re-optimization.
-    res_x: Vec<f64>,
-    res_y: Vec<f64>,
-    seen: usize,
+    /// Reservoir snapshot of the stream for hyper re-optimization.
+    /// Shared (`Arc`) so a sharded facade can snapshot it without
+    /// stopping the worker; the lock also serializes snapshots against
+    /// [`Self::decay`].
+    reservoir: Arc<Mutex<Reservoir>>,
     res_rng: Rng,
     /// Fast-mean grid cache `u_mean` from the last refresh (m).
     pub u_mean: Vec<f64>,
@@ -127,9 +346,7 @@ impl StreamTrainer {
             nu_u: vec![0.0; m],
             ws: CgWorkspace::new(m),
             probe_rng,
-            res_x: Vec::new(),
-            res_y: Vec::new(),
-            seen: 0,
+            reservoir: Arc::new(Mutex::new(Reservoir::default())),
             res_rng: Rng::new(seed ^ 0x7e5e_u64),
             kernel,
             sigma2,
@@ -141,6 +358,28 @@ impl StreamTrainer {
             dirty_points: 0,
             rejected_points: 0,
         }
+    }
+
+    /// Trainer wrapped around pre-built sufficient statistics (the shard
+    /// merge path: S owned accumulators folded into one global
+    /// accumulator). The trainer refreshes and re-optimizes exactly as
+    /// if it had ingested the underlying stream itself; its reservoir
+    /// starts empty (the sharded facade keeps per-shard reservoirs).
+    pub fn from_stats(
+        kernel: KernelSpec,
+        sigma2: f64,
+        cfg: StreamConfig,
+        ski: IncrementalSki,
+    ) -> Self {
+        let mut t = Self::new(kernel, sigma2, ski.grid().clone(), cfg);
+        assert_eq!(
+            t.g_probes.len(),
+            ski.probes().len(),
+            "cfg.msgp.n_var_samples must match the accumulator's probe count"
+        );
+        t.dirty_points = ski.n();
+        t.ski = ski;
+        t
     }
 
     /// Observations absorbed.
@@ -163,6 +402,19 @@ impl StreamTrainer {
         &self.ski
     }
 
+    /// Handle to the shared reservoir (the sharded facade clones this to
+    /// snapshot per-shard reservoirs for whole-domain re-opts).
+    pub fn reservoir_handle(&self) -> Arc<Mutex<Reservoir>> {
+        self.reservoir.clone()
+    }
+
+    /// Consistent snapshot of the reservoir sample, taken under the same
+    /// lock [`Self::decay`] holds while down-weighting the accumulators.
+    pub fn reservoir_snapshot(&self) -> (Vec<f64>, Vec<f64>) {
+        let res = self.reservoir.lock().unwrap();
+        (res.x.clone(), res.y.clone())
+    }
+
     /// Absorb a batch of observations (row-major `k x D` inputs).
     /// O(4^D) per point; rebuilds the grid operator and remaps all
     /// warm-start state if the grid auto-expanded.
@@ -171,6 +423,7 @@ impl StreamTrainer {
         assert_eq!(xs.len(), ys.len() * d, "xs is k x D row-major, ys length k");
         let old_grid = self.ski.grid().clone();
         let mut applied = 0usize;
+        let mut admitted: Vec<usize> = Vec::new();
         for (i, &y) in ys.iter().enumerate() {
             let row = &xs[i * d..(i + 1) * d];
             if !self.admit(row, y) {
@@ -179,22 +432,37 @@ impl StreamTrainer {
             }
             self.ski.ingest(row, y);
             applied += 1;
-            // Reservoir sample for re-optimization snapshots.
-            self.seen += 1;
-            if self.res_y.len() < self.cfg.reservoir {
-                self.res_x.extend_from_slice(row);
-                self.res_y.push(y);
-            } else if self.cfg.reservoir > 0 {
-                let j = self.res_rng.below(self.seen);
-                if j < self.cfg.reservoir {
-                    self.res_x[j * d..(j + 1) * d].copy_from_slice(row);
-                    self.res_y[j] = y;
-                }
+            admitted.push(i);
+        }
+        // Lock only for the cheap reservoir offers — a concurrent
+        // snapshot (via the shared handle) must not wait out the O(4^D)
+        // scatter-adds or a grid-expansion remap above.
+        if !admitted.is_empty() {
+            let reservoir = self.reservoir.clone();
+            let mut res = reservoir.lock().unwrap();
+            for &i in &admitted {
+                res.offer(&xs[i * d..(i + 1) * d], ys[i], self.cfg.reservoir, &mut self.res_rng);
             }
         }
         self.dirty_points += applied;
         if self.ski.grid() != &old_grid {
             self.on_grid_changed(&old_grid);
+        }
+    }
+
+    /// Epoch hook for non-stationary streams: exponentially down-weight
+    /// the sufficient statistics (see [`IncrementalSki::decay`]). Taken
+    /// under the reservoir lock so a concurrent re-opt snapshot (sharded
+    /// deployments share the reservoir handle across threads) is ordered
+    /// strictly before or after the decay — never interleaved with it.
+    /// Marks the caches dirty so the next [`Self::serving_model`]
+    /// refreshes.
+    pub fn decay(&mut self, gamma: f64) {
+        let reservoir = self.reservoir.clone();
+        let _guard = reservoir.lock().unwrap();
+        self.ski.decay(gamma);
+        if self.ski.n() > 0 {
+            self.dirty_points = self.dirty_points.max(1);
         }
     }
 
@@ -251,79 +519,40 @@ impl StreamTrainer {
     /// Warm-started refresh of the fast-prediction caches:
     /// `u_mean = sf2 S B^{-1} S b` and the stochastic `nu_U` via the
     /// probe accumulators. Cost: `(n_s + 1)` CG solves on the m-domain
-    /// operator `B = sigma^2 I + sf2 S G S` — independent of n.
+    /// operator `B = sigma^2 I + sf2 S G S` — independent of n. With
+    /// `cfg.msgp.cg.precondition` set, each solve is Jacobi-
+    /// preconditioned from the tracked `diag(G)`.
     pub fn refresh(&mut self) -> RefreshStats {
         let t0 = Instant::now();
         let m = self.m();
-        let sf2 = self.kernel.sf2();
-        let sigma2 = self.sigma2;
         let opts = self.cfg.msgp.cg.warm();
         // Borrow the read-only operator pieces as disjoint fields so the
         // warm-start buffers and workspace stay mutably borrowable.
-        let gk = &self.gk;
         let ski = &self.ski;
-        let mut gbuf = vec![0.0f64; m];
-        let mut apply = |v: &[f64], out: &mut [f64]| {
-            let s1 = gk.sqrt_matvec(v);
-            ski.g_matvec_into(&s1, &mut gbuf);
-            let s3 = gk.sqrt_matvec(&gbuf);
-            for ((o, &s), &vi) in out.iter_mut().zip(&s3).zip(v) {
-                *o = sf2 * s + sigma2 * vi;
-            }
-        };
-        // --- mean solve ---
-        let s_b = gk.sqrt_matvec(ski.wty());
-        let mean_res = cg_solve(
-            &mut apply,
-            |v, out| out.copy_from_slice(v),
-            &s_b,
-            &mut self.t_mean,
+        let inputs = RefreshInputs {
+            gk: &self.gk,
+            sf2: self.kernel.sf2(),
+            sigma2: self.sigma2,
             opts,
+            wty: ski.wty(),
+            probes_q: ski.probes(),
+            g_probes: &self.g_probes,
+            g_diag: Some(ski.g_diag()),
+        };
+        let mut g_apply = |v: &[f64], out: &mut [f64]| ski.g_matvec_into(v, out);
+        let (u_mean, nu_u, mean_iters, var_iters) = refresh_mdomain(
+            inputs,
+            &mut g_apply,
+            &mut self.t_mean,
+            &mut self.t_probes,
             &mut self.ws,
         );
-        let mut u = gk.sqrt_matvec(&self.t_mean);
-        for v in u.iter_mut() {
-            *v *= sf2;
-        }
-        self.u_mean = u;
-        // --- variance probes ---
-        let sig = sigma2.sqrt();
-        let rsf = sf2.sqrt();
-        let mut acc = vec![0.0f64; m];
-        let mut var_iters = 0usize;
-        let ns = self.g_probes.len().max(1);
-        for (k, g_k) in self.g_probes.iter().enumerate() {
-            // p~ = sqrt(sf2) G S g_k + sigma q_k  (the m-domain image of
-            // the Papandreou–Yuille probe), then solve B t = S p~.
-            let sg = gk.sqrt_matvec(g_k);
-            let gsg = ski.g_matvec(&sg);
-            let q = &ski.probes()[k];
-            let ptilde: Vec<f64> =
-                gsg.iter().zip(q).map(|(&a, &b)| rsf * a + sig * b).collect();
-            let rhs = gk.sqrt_matvec(&ptilde);
-            let res = cg_solve(
-                &mut apply,
-                |v, out| out.copy_from_slice(v),
-                &rhs,
-                &mut self.t_probes[k],
-                opts,
-                &mut self.ws,
-            );
-            var_iters += res.iters;
-            let uk = gk.sqrt_matvec(&self.t_probes[k]);
-            for (a, &v) in acc.iter_mut().zip(&uk) {
-                let t = sf2 * v;
-                *a += t * t;
-            }
-        }
-        for a in acc.iter_mut() {
-            *a /= ns as f64;
-        }
-        self.nu_u = acc;
+        self.u_mean = u_mean;
+        self.nu_u = nu_u;
         self.refresh_count += 1;
         self.dirty_points = 0;
         let stats = RefreshStats {
-            mean_iters: mean_res.iters,
+            mean_iters,
             var_iters_total: var_iters,
             m,
             n: self.n(),
@@ -355,11 +584,12 @@ impl StreamTrainer {
     /// Returns the final snapshot LML, or `None` when the reservoir is
     /// still empty.
     pub fn reoptimize(&mut self) -> anyhow::Result<Option<f64>> {
-        if self.res_y.is_empty() {
+        let (res_x, res_y) = self.reservoir_snapshot();
+        if res_y.is_empty() {
             return Ok(None);
         }
         let d = self.ski.grid().dim();
-        let snapshot = Dataset { x: self.res_x.clone(), d, y: self.res_y.clone() };
+        let snapshot = Dataset { x: res_x, d, y: res_y };
         let mut cfg = self.cfg.msgp.clone();
         cfg.n_per_dim = self.ski.grid().shape();
         let mut model = MsgpModel::fit_with_grid(

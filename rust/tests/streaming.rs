@@ -44,13 +44,13 @@ fn prop_incremental_wty_and_counts_match_batch_build() {
             assert!((a - b).abs() < 1e-10, "n={n} cell {j}: {a} vs {b}");
         }
         // Counts: every point lands in its nearest cell exactly once.
-        let total: u64 = ski.counts().iter().map(|&c| c as u64).sum();
-        assert_eq!(total, n as u64);
-        let mut want_counts = vec![0u32; grid.m()];
+        let total: f64 = ski.counts().iter().sum();
+        assert_eq!(total, n as f64);
+        let mut want_counts = vec![0.0f64; grid.m()];
         for i in 0..n {
             let u = grid.axes[0].to_units(data.x[i]).round();
             let idx = (u.max(0.0) as usize).min(grid.axes[0].n - 1);
-            want_counts[idx] += 1;
+            want_counts[idx] += 1.0;
         }
         assert_eq!(ski.counts(), &want_counts[..]);
     }
@@ -367,6 +367,128 @@ fn reservoir_reopt_improves_misspecified_hypers() {
         rmse(&sm.predict_batch(&test.x).0, &test.y)
     };
     assert!(after < before, "re-opt must improve held-out RMSE: {after} !< {before}");
+}
+
+/// Satellite: exponential forgetting. `decay(gamma)` scales every
+/// linear accumulator by `gamma` (probes by `sqrt(gamma)`), leaves the
+/// running target mean invariant, and lets fresh data overwrite stale
+/// structure on a non-stationary stream.
+#[test]
+fn decay_downweights_history_exactly_and_tracks_regime_change() {
+    // Exactness of the scaling itself.
+    let data = gen_stress_1d(300, 0.1, 61);
+    let grid = Grid::covering(&data.x, 1, &[64], 3);
+    let mut ski = IncrementalSki::new(grid.clone(), 3, 3, 61);
+    ski.ingest_batch(&data.x, &data.y);
+    let wty0 = ski.wty().to_vec();
+    let counts0 = ski.counts().to_vec();
+    let probes0: Vec<Vec<f64>> = ski.probes().to_vec();
+    let diag0 = ski.g_diag().to_vec();
+    let mean0 = ski.y_mean();
+    let gamma = 0.25f64;
+    ski.decay(gamma);
+    for (a, b) in ski.wty().iter().zip(&wty0) {
+        assert!((a - gamma * b).abs() < 1e-12);
+    }
+    for (a, b) in ski.counts().iter().zip(&counts0) {
+        assert!((a - gamma * b).abs() < 1e-12);
+    }
+    for (a, b) in ski.g_diag().iter().zip(&diag0) {
+        assert!((a - gamma * b).abs() < 1e-12);
+    }
+    let root = gamma.sqrt();
+    for (q, q0) in ski.probes().iter().zip(&probes0) {
+        for (a, b) in q.iter().zip(q0) {
+            assert!((a - root * b).abs() < 1e-12);
+        }
+    }
+    assert!((ski.y_mean() - mean0).abs() < 1e-9, "y_mean must be decay-invariant");
+    assert!((ski.weight() - gamma * 300.0).abs() < 1e-9);
+    assert_eq!(ski.n(), 300, "n counts raw ingests");
+
+    // Regime change: phase A says y = +2 on [-5, 5], then a hard decay
+    // epoch and phase B says y = -2. Without forgetting the refreshed
+    // mean would sit near the (weighted) average; with gamma = 0.02 the
+    // stale regime carries ~2% of the mass and the model follows B.
+    let grid2 = Grid::new(vec![GridAxis::span(-8.0, 8.0, 96)]);
+    let mcfg = MsgpConfig { n_per_dim: vec![96], n_var_samples: 4, ..Default::default() };
+    let mut trainer = StreamTrainer::new(
+        se_kernel(),
+        0.05,
+        grid2,
+        StreamConfig { msgp: mcfg, ..Default::default() },
+    );
+    let mut rng = Rng::new(5);
+    let xs_a: Vec<f64> = (0..800).map(|_| rng.uniform_in(-5.0, 5.0)).collect();
+    let ys_a = vec![2.0; 800];
+    trainer.ingest_batch(&xs_a, &ys_a);
+    trainer.refresh();
+    let before = trainer.serving_model().predict_batch(&[0.5]).0[0];
+    assert!((before - 2.0).abs() < 0.2, "phase A mean {before}");
+    trainer.decay(0.02);
+    let xs_b: Vec<f64> = (0..800).map(|_| rng.uniform_in(-5.0, 5.0)).collect();
+    let ys_b = vec![-2.0; 800];
+    trainer.ingest_batch(&xs_b, &ys_b);
+    let after = trainer.serving_model().predict_batch(&[0.5]).0[0];
+    assert!((after - (-2.0)).abs() < 0.3, "post-decay mean {after} must track phase B");
+    // Without decay, the same two phases average out instead.
+    let grid3 = Grid::new(vec![GridAxis::span(-8.0, 8.0, 96)]);
+    let mcfg3 = MsgpConfig { n_per_dim: vec![96], n_var_samples: 4, ..Default::default() };
+    let mut stale = StreamTrainer::new(
+        se_kernel(),
+        0.05,
+        grid3,
+        StreamConfig { msgp: mcfg3, ..Default::default() },
+    );
+    stale.ingest_batch(&xs_a, &ys_a);
+    stale.ingest_batch(&xs_b, &ys_b);
+    let avg = stale.serving_model().predict_batch(&[0.5]).0[0];
+    assert!(avg.abs() < 0.5, "undecayed mean {avg} averages the regimes");
+}
+
+/// Satellite: the Jacobi preconditioner (built from the tracked
+/// `diag(G)`) cuts mean-solve CG iterations on a spatially non-uniform
+/// stream, where the Gram diagonal spans orders of magnitude, without
+/// changing the solution.
+#[test]
+fn jacobi_precondition_cuts_refresh_iterations() {
+    // All the mass in one tenth of the domain: diag(B) varies from
+    // sigma^2 (empty cells) to O(100) (dense cells).
+    let mut rng = Rng::new(97);
+    let n = 4000;
+    let mut xs = Vec::with_capacity(n);
+    let mut ys = Vec::with_capacity(n);
+    for _ in 0..n {
+        let x = rng.uniform_in(-9.5, -7.5);
+        xs.push(x);
+        ys.push(msgp::data::stress_fn(x) + 0.05 * rng.normal());
+    }
+    let make = |precondition: bool| {
+        let grid = Grid::new(vec![GridAxis::span(-10.0, 10.0, 256)]);
+        let mut mcfg = MsgpConfig { n_per_dim: vec![256], n_var_samples: 4, ..Default::default() };
+        mcfg.cg.precondition = precondition;
+        mcfg.cg.tol = 1e-8;
+        mcfg.cg.max_iter = 2000;
+        StreamTrainer::new(se_kernel(), 0.01, grid, StreamConfig { msgp: mcfg, ..Default::default() })
+    };
+    let mut plain = make(false);
+    plain.ingest_batch(&xs, &ys);
+    let plain_stats = plain.refresh();
+    let mut pre = make(true);
+    pre.ingest_batch(&xs, &ys);
+    let pre_stats = pre.refresh();
+    assert!(
+        pre_stats.mean_iters < plain_stats.mean_iters,
+        "jacobi {} !< plain {}",
+        pre_stats.mean_iters,
+        plain_stats.mean_iters
+    );
+    // Both converged to the same caches.
+    let probe: Vec<f64> = (0..40).map(|i| -9.4 + 0.045 * i as f64).collect();
+    let (mp, _) = plain.serving_model().predict_batch(&probe);
+    let (mj, _) = pre.serving_model().predict_batch(&probe);
+    let err = rmse(&mp, &mj);
+    assert!(err < 1e-3, "preconditioned solution drifted: {err}");
 }
 
 /// Admission control: non-finite values and wild outliers (whose
