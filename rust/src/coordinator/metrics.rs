@@ -18,6 +18,11 @@ pub struct ShardMetrics {
     pub halo_ingested: AtomicU64,
     /// Refresh + publish cycles completed by this shard.
     pub refreshes: AtomicU64,
+    /// Cumulative refresh CG iterations (mean + probe solves) on this
+    /// shard — the per-shard view of the preconditioner win (the
+    /// global `last_refresh_*` gauges are unsharded-only; S workers
+    /// racing one gauge would make its reading meaningless).
+    pub refresh_cg_iters: AtomicU64,
     /// Messages currently queued to this shard's worker (ingest
     /// back-pressure signal).
     pub queue_depth: AtomicU64,
@@ -54,6 +59,23 @@ pub struct Metrics {
     pub refresh_count: AtomicU64,
     /// Streaming: wall-clock of the most recent refresh, microseconds.
     pub last_refresh_us: AtomicU64,
+    /// Streaming: CG iterations of the most recent refresh's mean
+    /// solve (the preconditioner win is directly observable here).
+    /// Unsharded servers only — sharded workers report per-shard
+    /// cumulative counts in [`ShardMetrics::refresh_cg_iters`] instead
+    /// of racing this gauge.
+    pub last_refresh_mean_iters: AtomicU64,
+    /// Streaming: total CG iterations across the most recent refresh's
+    /// variance-probe solves (unsharded servers only, like
+    /// [`Self::last_refresh_mean_iters`]).
+    pub last_refresh_var_iters: AtomicU64,
+    /// Streaming: cumulative refresh CG iterations (mean + probes)
+    /// across all refreshes — the long-run iteration budget a
+    /// preconditioner change moves.
+    pub refresh_cg_iters_total: AtomicU64,
+    /// Streaming: refreshes that requested a preconditioner but had to
+    /// degrade to unpreconditioned CG (misconfigured refresh inputs).
+    pub precond_fallbacks: AtomicU64,
     /// Streaming: hyperparameter re-optimizations completed.
     pub reopt_count: AtomicU64,
     /// Sharded serving: per-shard counters (empty on unsharded servers).
@@ -75,6 +97,10 @@ impl Default for Metrics {
             ingest_batches: AtomicU64::new(0),
             refresh_count: AtomicU64::new(0),
             last_refresh_us: AtomicU64::new(0),
+            last_refresh_mean_iters: AtomicU64::new(0),
+            last_refresh_var_iters: AtomicU64::new(0),
+            refresh_cg_iters_total: AtomicU64::new(0),
+            precond_fallbacks: AtomicU64::new(0),
             reopt_count: AtomicU64::new(0),
             shards: Vec::new(),
             hist: std::array::from_fn(|_| AtomicU64::new(0)),
@@ -131,12 +157,25 @@ impl Metrics {
         self.refresh_count.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one refresh's CG iteration counts (mean solve + total
+    /// across the variance probes) — the signal that makes the
+    /// preconditioner choice observable at `/metrics`. Called by the
+    /// unsharded ingest loop only; shard workers update their
+    /// [`ShardMetrics::refresh_cg_iters`] and the cumulative total
+    /// directly, leaving the `last_*` gauges single-writer.
+    pub fn record_refresh_cg(&self, mean_iters: u64, var_iters: u64) {
+        self.last_refresh_mean_iters.store(mean_iters, Ordering::Relaxed);
+        self.last_refresh_var_iters.store(var_iters, Ordering::Relaxed);
+        self.refresh_cg_iters_total.fetch_add(mean_iters + var_iters, Ordering::Relaxed);
+    }
+
     /// One-line summary (the `/metrics` endpoint payload). Sharded
     /// servers append one `shard[i] ...` clause per shard.
     pub fn summary(&self) -> String {
         let mut s = format!(
             "submitted={} completed={} batches={} (pjrt={} native={}) padding={} p50<={}us p99<={}us \
-             ingested_points_total={} ingest_rejected_total={} ingest_batches={} refresh_count={} last_refresh_us={} reopt_count={}",
+             ingested_points_total={} ingest_rejected_total={} ingest_batches={} refresh_count={} last_refresh_us={} \
+             last_refresh_mean_iters={} last_refresh_var_iters={} refresh_cg_iters_total={} precond_fallbacks={} reopt_count={}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
@@ -150,14 +189,19 @@ impl Metrics {
             self.ingest_batches.load(Ordering::Relaxed),
             self.refresh_count.load(Ordering::Relaxed),
             self.last_refresh_us.load(Ordering::Relaxed),
+            self.last_refresh_mean_iters.load(Ordering::Relaxed),
+            self.last_refresh_var_iters.load(Ordering::Relaxed),
+            self.refresh_cg_iters_total.load(Ordering::Relaxed),
+            self.precond_fallbacks.load(Ordering::Relaxed),
             self.reopt_count.load(Ordering::Relaxed),
         );
         for (i, sh) in self.shards.iter().enumerate() {
             s.push_str(&format!(
-                " shard[{i}] ingested={} halo={} refreshes={} queue_depth={} routed={}",
+                " shard[{i}] ingested={} halo={} refreshes={} cg_iters={} queue_depth={} routed={}",
                 sh.ingested.load(Ordering::Relaxed),
                 sh.halo_ingested.load(Ordering::Relaxed),
                 sh.refreshes.load(Ordering::Relaxed),
+                sh.refresh_cg_iters.load(Ordering::Relaxed),
                 sh.queue_depth.load(Ordering::Relaxed),
                 sh.routed_predictions.load(Ordering::Relaxed),
             ));
@@ -198,10 +242,12 @@ mod tests {
         m.shards[0].ingested.fetch_add(10, Ordering::Relaxed);
         m.shards[1].halo_ingested.fetch_add(3, Ordering::Relaxed);
         m.shards[1].queue_depth.fetch_add(5, Ordering::Relaxed);
+        m.shards[0].refresh_cg_iters.fetch_add(42, Ordering::Relaxed);
         let s = m.summary();
         assert!(s.contains("shard[0] ingested=10"), "{s}");
         assert!(s.contains("halo=3"), "{s}");
         assert!(s.contains("queue_depth=5"), "{s}");
+        assert!(s.contains("cg_iters=42"), "{s}");
         // Unsharded metrics emit no shard clauses.
         assert!(!Metrics::new().summary().contains("shard[0]"));
     }
@@ -215,5 +261,21 @@ mod tests {
         assert!(s.contains("ingested_points_total=123"), "{s}");
         assert!(s.contains("refresh_count=1"), "{s}");
         assert!(s.contains("last_refresh_us=456"), "{s}");
+    }
+
+    #[test]
+    fn refresh_cg_counters_accumulate_and_appear_in_summary() {
+        let m = Metrics::new();
+        m.record_refresh_cg(12, 80);
+        m.record_refresh_cg(7, 40);
+        assert_eq!(m.last_refresh_mean_iters.load(Ordering::Relaxed), 7);
+        assert_eq!(m.last_refresh_var_iters.load(Ordering::Relaxed), 40);
+        assert_eq!(m.refresh_cg_iters_total.load(Ordering::Relaxed), 139);
+        m.precond_fallbacks.fetch_add(2, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("last_refresh_mean_iters=7"), "{s}");
+        assert!(s.contains("last_refresh_var_iters=40"), "{s}");
+        assert!(s.contains("refresh_cg_iters_total=139"), "{s}");
+        assert!(s.contains("precond_fallbacks=2"), "{s}");
     }
 }

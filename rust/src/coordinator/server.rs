@@ -241,6 +241,9 @@ fn run_ingest(
     let refresh_every = trainer.cfg.refresh_every.max(1);
     let reopt_every = trainer.cfg.reopt_every;
     let mut since_reopt = 0usize;
+    // Preconditioner fallbacks observed so far (the trainer counts them
+    // cumulatively; the metric mirrors the deltas).
+    let mut fallbacks_seen = 0u64;
     // Swap cadence is tracked separately from `dirty_points`: a
     // re-optimization refreshes the caches (zeroing `dirty_points`)
     // and MUST publish, otherwise the automatic swap would starve
@@ -279,6 +282,10 @@ fn run_ingest(
                     metrics.reopt_count.fetch_add(1, Ordering::Relaxed);
                     // reoptimize() ran a full refresh internally.
                     metrics.record_refresh(trainer.last_refresh.wall);
+                    metrics.record_refresh_cg(
+                        trainer.last_refresh.mean_iters as u64,
+                        trainer.last_refresh.var_iters_total as u64,
+                    );
                     need_swap = true; // new hypers + refreshed caches: publish
                 }
                 Ok(None) => {}
@@ -297,7 +304,17 @@ fn run_ingest(
             // clean trainer republishes the cached snapshot).
             if trainer.refresh_count > refreshes_before {
                 metrics.record_refresh(trainer.last_refresh.wall);
+                metrics.record_refresh_cg(
+                    trainer.last_refresh.mean_iters as u64,
+                    trainer.last_refresh.var_iters_total as u64,
+                );
             }
+        }
+        if trainer.precond_fallbacks > fallbacks_seen {
+            metrics
+                .precond_fallbacks
+                .fetch_add(trainer.precond_fallbacks - fallbacks_seen, Ordering::Relaxed);
+            fallbacks_seen = trainer.precond_fallbacks;
         }
         if let Some(r) = reply {
             let _ = r.send(Ok(applied));

@@ -26,7 +26,7 @@ use crate::grid::Grid;
 use crate::interp::SparseInterp;
 use crate::kernels::{KernelType, ProductKernel};
 use crate::linalg::Mat;
-use crate::solver::{cg_solve, CgOptions, CgResult, CgWorkspace};
+use crate::solver::{cg_solve, CgOptions, CgResult, CgWorkspace, Preconditioner};
 use crate::structure::bttb::{Bccb, Bttb};
 use crate::structure::circulant::CirculantKind;
 use crate::structure::kronecker::KronToeplitz;
@@ -71,7 +71,15 @@ impl Default for MsgpConfig {
             margin_cells: 3,
             wraps: 3,
             logdet: LogdetMethod::Circulant(CirculantKind::Whittle),
-            cg: CgOptions { tol: 1e-6, max_iter: 400, warm_start: false, precondition: false },
+            // The preconditioner choice is consumed by the streaming /
+            // sharded m-domain refresh paths only (batch n-domain solves
+            // ignore it); Spectral is the coordinator default.
+            cg: CgOptions {
+                tol: 1e-6,
+                max_iter: 400,
+                warm_start: false,
+                precondition: Preconditioner::Spectral,
+            },
             n_var_samples: 20,
             seed: 0,
         }
@@ -236,6 +244,29 @@ impl GridKernel {
     /// approximation of `K_{U,U} v`).
     pub fn sqrt_matvec(&self, v: &[f64]) -> Vec<f64> {
         self.kuu.sqrt_matvec(v)
+    }
+
+    /// Grid shape (per-dimension sizes, row-major tensor layout).
+    pub fn shape(&self) -> Vec<usize> {
+        match &self.kuu {
+            Kuu::Kron(k) => k.shape(),
+            Kuu::Bttb { op, .. } => op.shape.clone(),
+        }
+    }
+
+    /// Clipped eigenvalues (row-major tensor order over [`Self::shape`])
+    /// of the multi-level circulant approximation `C = S S` of
+    /// `K_{U,U}`: the Kronecker product of the per-factor circulant
+    /// spectra on the separable path, the BCCB spectrum on the isotropic
+    /// path. Both are diagonal in the multi-dimensional DFT basis, which
+    /// is what lets the spectral refresh preconditioner
+    /// ([`crate::solver::Preconditioner::Spectral`]) invert
+    /// `sigma^2 I + a C` exactly in O(m log m).
+    pub fn circulant_eigenvalues(&self) -> Vec<f64> {
+        match &self.kuu {
+            Kuu::Kron(k) => k.approx_eigenvalues(),
+            Kuu::Bttb { bccb, .. } => bccb.eigenvalues_clipped(),
+        }
     }
 }
 
@@ -1256,7 +1287,7 @@ mod tests {
         let kernel = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0));
         let mut cfg = cfg_1d(32);
         cfg.n_var_samples = 800;
-        cfg.cg = CgOptions { tol: 1e-10, max_iter: 2000, warm_start: false, precondition: false };
+        cfg.cg = CgOptions { tol: 1e-10, max_iter: 2000, ..Default::default() };
         let mut model = MsgpModel::fit(kernel, 0.05, data, cfg).unwrap();
         model.precompute_variance();
         let est = model.nu_u.clone().unwrap();
@@ -1328,7 +1359,7 @@ mod tests {
         let data = gen_stress_1d(n, 0.1, 31);
         let kernel = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.2, 0.8));
         let mut model = MsgpModel::fit(kernel, 0.05, data, cfg_1d(128)).unwrap();
-        model.cfg.cg = CgOptions { tol: 1e-12, max_iter: 3000, warm_start: false, precondition: false };
+        model.cfg.cg = CgOptions { tol: 1e-12, max_iter: 3000, ..Default::default() };
         model.refit(&model.params().clone()).unwrap();
         let g = model.lml_grad();
         let p0 = model.params();
@@ -1391,7 +1422,7 @@ mod tests {
         };
         let cfg = MsgpConfig {
             n_per_dim: vec![24, 24],
-            cg: CgOptions { tol: 1e-12, max_iter: 3000, warm_start: false, precondition: false },
+            cg: CgOptions { tol: 1e-12, max_iter: 3000, ..Default::default() },
             ..Default::default()
         };
         let mut model = MsgpModel::fit(kernel, 0.05, data, cfg).unwrap();
@@ -1490,7 +1521,7 @@ mod tests {
         };
         let cfg = MsgpConfig {
             n_per_dim: vec![24, 24],
-            cg: CgOptions { tol: 1e-12, max_iter: 3000, warm_start: false, precondition: false },
+            cg: CgOptions { tol: 1e-12, max_iter: 3000, ..Default::default() },
             ..Default::default()
         };
         // Hold the grid fixed across FD perturbations (it is fixed during

@@ -35,9 +35,11 @@
 //!   snapshots into the live [`coordinator::state::ModelSlot`], so
 //!   prediction latency stays O(1) per point throughout. Non-stationary
 //!   streams can down-weight history with exponential forgetting
-//!   ([`stream::StreamTrainer::decay`]), and refresh solves can be
-//!   Jacobi-preconditioned from the tracked `diag(W^T W)`
-//!   ([`solver::CgOptions::precondition`]).
+//!   ([`stream::StreamTrainer::decay`]), and refresh solves run under a
+//!   pluggable [`solver::Preconditioner`] — `Jacobi` (diagonal from the
+//!   tracked `diag(W^T W)`) or `Spectral` (the default: a BCCB
+//!   approximate inverse of the m-domain operator applied in
+//!   O(m log m) via the multi-level circulant eigendecomposition).
 //! * **Sharded data-parallel training & serving** ([`shard`]): the
 //!   sufficient statistics are additive, so a [`shard::ShardPlan`]
 //!   splits the inducing grid into S spatial slabs (with halo overlap

@@ -233,7 +233,12 @@ pub fn fftn(data: &mut [C64], shape: &[usize], inverse: bool) {
         }
         let p = plan(n);
         let stride = strides[ax];
-        scratch.resize(n, C64::ZERO);
+        if stride != 1 {
+            // Only strided axes gather into scratch; keeping the
+            // contiguous (last-axis / 1-D) path allocation-free matters
+            // because fftn sits inside CG iteration loops.
+            scratch.resize(n, C64::ZERO);
+        }
         // Iterate over all 1-D lines along axis `ax`.
         let outer: usize = shape[..ax].iter().product();
         let inner: usize = shape[ax + 1..].iter().product();

@@ -200,7 +200,7 @@ impl ShardWorker {
                 }
             }
         };
-        let (u_mean, nu_u, _, _) = refresh_mdomain(
+        let out = refresh_mdomain(
             inputs,
             &mut g_apply,
             &mut self.t_mean,
@@ -211,8 +211,8 @@ impl ShardWorker {
             self.id,
             ServingModel::from_parts(
                 self.grid.clone(),
-                u_mean,
-                nu_u,
+                out.u_mean,
+                out.nu_u,
                 self.kernel.sf2(),
                 self.sigma2,
             ),
@@ -220,6 +220,16 @@ impl ShardWorker {
         self.dirty = 0.0;
         self.refresh_count += 1;
         self.metrics.shards[self.id].refreshes.fetch_add(1, Ordering::Relaxed);
+        if out.precond_fallback {
+            self.metrics.precond_fallbacks.fetch_add(1, Ordering::Relaxed);
+        }
+        // Per-shard CG counts plus the (race-safe, cumulative) global
+        // total; the global `last_refresh_*` gauges stay unsharded-only
+        // — S workers racing one gauge would interleave shards of
+        // different sizes into a meaningless reading.
+        let iters = (out.mean_iters + out.var_iters) as u64;
+        self.metrics.shards[self.id].refresh_cg_iters.fetch_add(iters, Ordering::Relaxed);
+        self.metrics.refresh_cg_iters_total.fetch_add(iters, Ordering::Relaxed);
         self.metrics.record_refresh(t0.elapsed());
     }
 

@@ -4,8 +4,55 @@
 //! iteration cost is one MVM — O(n + m log m) with the SKI structure
 //! (section 4). Circulant/BCCB preconditioners (section 5.2) act as cheap
 //! approximate inverses and cut the iteration count substantially.
+//!
+//! The streaming/sharded m-domain refresh operator
+//! `B = sigma^2 I + sf2 S G S` (with `S = K_UU^{1/2}` the circulant
+//! square root and `G = W^T W` the banded Gram) supports a pluggable
+//! [`Preconditioner`]:
+//!
+//! * [`Preconditioner::Jacobi`] — the diagonal
+//!   `d_i = sigma^2 + sf2 s0^2 G_ii` built from the tracked `diag(G)`
+//!   and the constant circulant diagonal `s0` of `S`. O(m) setup, O(m)
+//!   per application; corrects point-wise occupancy variation only.
+//! * [`Preconditioner::Spectral`] — a true BCCB approximate inverse
+//!   `M^{-1} = (sigma^2 I + sf2 rho C)^{-1}` with `C = S S` the
+//!   multi-level (Whittle) circulant approximation of `K_UU` and
+//!   `rho = trace(G) / m` the mean cell occupancy standing in for
+//!   `G ~= rho I`. Applied exactly in O(m log m) in the Fourier domain,
+//!   it collapses the spectral spread of `C` — the dominant source of
+//!   ill-conditioning on smooth kernels — which a diagonal cannot touch.
+//!
+//! The enum is *consumed by the refresh paths*
+//! ([`crate::stream::trainer`]), not by [`cg_solve`] itself, whose
+//! `precond` argument stays an explicit closure.
 
 use crate::linalg::dense::{axpy, dot};
+
+/// Which preconditioner the m-domain refresh builds for
+/// `B = sigma^2 I + sf2 S G S` (see the [module docs](self) for the
+/// operator algebra of each variant).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Preconditioner {
+    /// Unpreconditioned CG.
+    #[default]
+    None,
+    /// Diagonal scaling `sigma^2 + sf2 s0^2 diag(G)`.
+    Jacobi,
+    /// BCCB approximate inverse `(sigma^2 I + sf2 rho C)^{-1}`, applied
+    /// in O(m log m) via the circulant eigendecomposition.
+    Spectral,
+}
+
+impl Preconditioner {
+    /// Display name (used by benches and `/metrics`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Preconditioner::None => "none",
+            Preconditioner::Jacobi => "jacobi",
+            Preconditioner::Spectral => "spectral",
+        }
+    }
+}
 
 /// CG stopping options.
 #[derive(Clone, Copy, Debug)]
@@ -19,18 +66,22 @@ pub struct CgOptions {
     /// solution); when `false` (the default), `x` is zeroed first so a
     /// stale buffer can never poison a cold solve.
     pub warm_start: bool,
-    /// Jacobi preconditioning for the streaming m-domain refresh operator
-    /// `sigma^2 I + sf2 S G S`: the refresh builds a diagonal scaling
-    /// from `diag(G)` (already tracked by the banded Gram accumulator)
-    /// and the constant circulant diagonal of `S`. Off by default; the
-    /// flag is consumed by the refresh paths, not by [`cg_solve`] itself
-    /// (whose `precond` argument stays explicit).
-    pub precondition: bool,
+    /// Preconditioner for the streaming m-domain refresh operator
+    /// `sigma^2 I + sf2 S G S` (see [`Preconditioner`]). `None` by
+    /// default at this level; the streaming/sharded configs default to
+    /// `Spectral`. The choice is consumed by the refresh paths, not by
+    /// [`cg_solve`] itself (whose `precond` argument stays explicit).
+    pub precondition: Preconditioner,
 }
 
 impl Default for CgOptions {
     fn default() -> Self {
-        CgOptions { tol: 1e-8, max_iter: 1000, warm_start: false, precondition: false }
+        CgOptions {
+            tol: 1e-8,
+            max_iter: 1000,
+            warm_start: false,
+            precondition: Preconditioner::None,
+        }
     }
 }
 
@@ -41,9 +92,15 @@ impl CgOptions {
         self
     }
 
-    /// Same options with Jacobi preconditioning enabled.
+    /// Same options with Jacobi preconditioning selected.
     pub fn jacobi(mut self) -> Self {
-        self.precondition = true;
+        self.precondition = Preconditioner::Jacobi;
+        self
+    }
+
+    /// Same options with spectral (BCCB) preconditioning selected.
+    pub fn spectral(mut self) -> Self {
+        self.precondition = Preconditioner::Spectral;
         self
     }
 }
@@ -173,7 +230,7 @@ mod tests {
             |v, out| out.copy_from_slice(v),
             &b,
             &mut x,
-            CgOptions { tol: 1e-10, max_iter: 500, warm_start: false, precondition: false },
+            CgOptions { tol: 1e-10, max_iter: 500, warm_start: false, ..Default::default() },
             &mut ws,
         );
         assert!(res.converged, "{res:?}");
@@ -192,7 +249,8 @@ mod tests {
             a[(i, i)] += (i as f64 + 1.0) * 10.0;
         }
         let b: Vec<f64> = (0..n).map(|i| (i as f64).cos()).collect();
-        let opts = CgOptions { tol: 1e-10, max_iter: 2000, warm_start: false, precondition: false };
+        let opts =
+            CgOptions { tol: 1e-10, max_iter: 2000, warm_start: false, ..Default::default() };
         let mut ws = CgWorkspace::new(n);
         let mut x0 = vec![0.0; n];
         let plain = cg_solve(
@@ -233,7 +291,8 @@ mod tests {
         let n = 48;
         let a = spd(n);
         let b0: Vec<f64> = (0..n).map(|i| (i as f64 * 0.7).sin()).collect();
-        let opts = CgOptions { tol: 1e-10, max_iter: 2000, warm_start: false, precondition: false };
+        let opts =
+            CgOptions { tol: 1e-10, max_iter: 2000, warm_start: false, ..Default::default() };
         let mut ws = CgWorkspace::new(n);
         let mut x = vec![0.0; n];
         let first = cg_solve(
@@ -290,7 +349,7 @@ mod tests {
             |v, out| out.copy_from_slice(v),
             &b,
             &mut x,
-            CgOptions { tol: 1e-10, max_iter: 500, warm_start: false, precondition: false },
+            CgOptions { tol: 1e-10, max_iter: 500, warm_start: false, ..Default::default() },
             &mut ws,
         );
         assert!(res.converged);

@@ -2,4 +2,4 @@
 
 pub mod cg;
 
-pub use cg::{cg_solve, CgOptions, CgResult, CgWorkspace};
+pub use cg::{cg_solve, CgOptions, CgResult, CgWorkspace, Preconditioner};

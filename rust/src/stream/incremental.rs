@@ -12,6 +12,18 @@ use crate::util::Rng;
 const BAND_W: usize = 7;
 const BAND_HALF: i64 = 3;
 
+/// Minimum effective sample mass for weight-normalized statistics.
+/// Repeated [`IncrementalSki::decay`] with no fresh ingest drives
+/// `weight` toward zero geometrically; once it underflows into the
+/// subnormal range the ratios `sum_y / weight` and `sum_y2 / weight`
+/// lose all precision (and become `inf`/`NaN` at exact underflow).
+/// `y_mean` / `y_var` return `0.0` below this mass, and hyper
+/// re-optimization is skipped entirely below it (see
+/// [`crate::stream::StreamTrainer::reoptimize`]): a trainer that has
+/// forgotten everything serves the prior rather than refitting to
+/// numerically meaningless statistics.
+pub const MIN_EFFECTIVE_MASS: f64 = 1e-12;
+
 /// Remap a flat grid vector from `old` onto `new`, where `old` sits
 /// inside `new` at a whole-cell offset with the same steps (`new` is an
 /// expansion of `old`, or `old` is a shard's local sub-grid of a global
@@ -166,18 +178,24 @@ impl IncrementalSki {
         self.weight
     }
 
-    /// Running (decay-weighted) mean of the targets.
+    /// Running (decay-weighted) mean of the targets. Returns `0.0` once
+    /// decay has driven the effective mass below [`MIN_EFFECTIVE_MASS`]
+    /// (the numerator decays in lockstep, so the true limit is the
+    /// prior mean anyway) — the guard is what keeps the ratio from
+    /// round-tripping through subnormals into `inf`/`NaN`; above it the
+    /// plain division is well conditioned.
     pub fn y_mean(&self) -> f64 {
-        if self.weight <= 0.0 {
+        if self.weight < MIN_EFFECTIVE_MASS {
             0.0
         } else {
             self.sum_y / self.weight
         }
     }
 
-    /// Running (decay-weighted) second central moment of the targets.
+    /// Running (decay-weighted) second central moment of the targets
+    /// (same mass guard as [`Self::y_mean`]).
     pub fn y_var(&self) -> f64 {
-        if self.weight <= 0.0 {
+        if self.weight < MIN_EFFECTIVE_MASS {
             0.0
         } else {
             (self.sum_y2 / self.weight - self.y_mean().powi(2)).max(0.0)

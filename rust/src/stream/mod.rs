@@ -38,12 +38,21 @@
 //!   auto-expansion (step-preserving, so statistics remap by an index
 //!   shift) when points arrive outside the covered box.
 //! * [`StreamTrainer`] — warm-started CG refreshes (reusing
-//!   [`crate::solver::CgWorkspace`] and the previous solutions as `x0`,
-//!   optionally Jacobi-preconditioned from the tracked `diag(G)`),
-//!   incremental `u_mean` / `nu_U` cache rebuilds, exponential
-//!   forgetting ([`StreamTrainer::decay`]) for non-stationary streams,
-//!   and periodic Whittle hyperparameter re-optimization on a
-//!   lock-guarded reservoir snapshot of the stream.
+//!   [`crate::solver::CgWorkspace`] and the previous solutions as `x0`)
+//!   under a pluggable [`crate::solver::Preconditioner`]: `Jacobi`
+//!   scales by `diag(B) ~= sigma^2 + sf2 s0^2 diag(G)` from the
+//!   tracked Gram diagonal, while `Spectral` (the default) inverts
+//!   `M = sigma^2 I + sf2 rho C` exactly in O(m log m) — `C = S S` the
+//!   multi-level circulant approximation of `K_UU` and
+//!   `rho = trace(G) / m` the mean cell occupancy — collapsing the
+//!   spectral spread that dominates CG iteration counts on smooth
+//!   kernels. Plus incremental `u_mean` / `nu_U` cache rebuilds,
+//!   exponential forgetting ([`StreamTrainer::decay`]) for
+//!   non-stationary streams (with an effective-mass floor,
+//!   [`MIN_EFFECTIVE_MASS`], below which weight-normalized statistics
+//!   zero out and re-opt skips), and periodic Whittle hyperparameter
+//!   re-optimization on a lock-guarded reservoir snapshot of the
+//!   stream.
 //! * Coordinator integration lives in [`crate::coordinator`]: the
 //!   `/ingest` route, batched ingestion, and atomic
 //!   [`crate::coordinator::state::ModelSlot`] snapshot swaps.
@@ -54,5 +63,5 @@
 pub mod incremental;
 pub mod trainer;
 
-pub use incremental::{remap_grid_vec, IncrementalSki};
+pub use incremental::{remap_grid_vec, IncrementalSki, MIN_EFFECTIVE_MASS};
 pub use trainer::{RefreshStats, Reservoir, StreamConfig, StreamTrainer};

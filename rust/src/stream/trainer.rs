@@ -4,18 +4,37 @@
 //!
 //! The refresh math lives in [`refresh_mdomain`] so the single-trainer
 //! path here and the per-shard workers in [`crate::shard`] solve the
-//! identical operator (including the optional Jacobi preconditioner
-//! built from the banded Gram's diagonal).
+//! identical operator, including the pluggable
+//! [`Preconditioner`](crate::solver::Preconditioner) for the m-domain
+//! system `B = sigma^2 I + sf2 S G S`:
+//!
+//! * `Jacobi` scales by `diag(B) ~= sigma^2 + sf2 s0^2 diag(G)` (the
+//!   banded Gram tracks its diagonal; `s0` is the constant circulant
+//!   diagonal of `S`) — O(m) per application, corrects occupancy skew.
+//! * `Spectral` inverts `M = sigma^2 I + sf2 rho C` exactly in
+//!   O(m log m), where `C = S S` is the multi-level circulant
+//!   approximation of `K_UU` and `rho = trace(G) / m` the mean cell
+//!   occupancy (`G ~= rho I`). `M` shares `B`'s eigenbasis up to the
+//!   `G` fluctuation, so it collapses the spectral spread that
+//!   dominates CG iteration counts on smooth kernels — the circulant
+//!   preconditioning the paper's section 5.2 machinery was built for.
+//!
+//! A requested preconditioner that cannot be built (no tracked
+//! `diag(G)` supplied) degrades to unpreconditioned CG — logged once
+//! per process and surfaced through the `precond_fallbacks` counters —
+//! rather than panicking the background refresh thread.
 
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, Once};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::state::ServingModel;
 use crate::data::Dataset;
 use crate::gp::msgp::{GridKernel, KernelSpec, MsgpConfig, MsgpModel};
 use crate::grid::Grid;
-use crate::solver::{cg_solve, CgOptions, CgResult, CgWorkspace};
-use crate::stream::incremental::{remap_grid_vec, IncrementalSki};
+use crate::linalg::fft::fftn;
+use crate::linalg::C64;
+use crate::solver::{cg_solve, CgOptions, CgResult, CgWorkspace, Preconditioner};
+use crate::stream::incremental::{remap_grid_vec, IncrementalSki, MIN_EFFECTIVE_MASS};
 use crate::util::Rng;
 
 /// Streaming configuration.
@@ -72,6 +91,9 @@ pub struct RefreshStats {
     pub n: usize,
     /// Wall-clock time of the refresh.
     pub wall: Duration,
+    /// Whether a requested preconditioner could not be built and the
+    /// refresh degraded to unpreconditioned CG.
+    pub precond_fallback: bool,
 }
 
 /// Reservoir sample of the stream, used for hyperparameter
@@ -119,7 +141,8 @@ pub(crate) struct RefreshInputs<'a> {
     pub sf2: f64,
     /// Noise variance.
     pub sigma2: f64,
-    /// CG options (warm start + Jacobi flags included).
+    /// CG options (warm-start flag and [`Preconditioner`] choice
+    /// included).
     pub opts: CgOptions,
     /// `b = W^T y` (combined across accumulators by the caller).
     pub wty: &'a [f64],
@@ -127,12 +150,156 @@ pub(crate) struct RefreshInputs<'a> {
     pub probes_q: &'a [Vec<f64>],
     /// Fixed `N(0, I_m)` probe draws.
     pub g_probes: &'a [Vec<f64>],
-    /// `diag(G)` (combined); required when `opts.precondition` is set.
+    /// `diag(G)` (combined); consulted when `opts.precondition` selects
+    /// `Jacobi` (the scaling itself) or `Spectral` (the mean occupancy
+    /// `rho = trace(G) / m`). When absent with a preconditioner
+    /// requested, the refresh degrades to unpreconditioned CG (see
+    /// [`build_precond`]) instead of panicking.
     pub g_diag: Option<&'a [f64]>,
 }
 
+/// Result of one m-domain cache refresh.
+pub(crate) struct RefreshOutcome {
+    /// `u_mean = sf2 S B^{-1} S b`.
+    pub u_mean: Vec<f64>,
+    /// Stochastic explained-variance grid vector.
+    pub nu_u: Vec<f64>,
+    /// CG iterations of the mean solve.
+    pub mean_iters: usize,
+    /// Total CG iterations across the variance-probe solves.
+    pub var_iters: usize,
+    /// `true` when a requested preconditioner could not be built and
+    /// the solves ran unpreconditioned.
+    pub precond_fallback: bool,
+}
+
+/// A built preconditioner application `out = M^{-1} v` for one refresh:
+/// the [`Preconditioner`] choice resolved against the statistics that
+/// were actually supplied. The spectral arm precomputes the reciprocal
+/// spectrum and carries a reusable m-length FFT buffer, so applying it
+/// adds no per-iteration O(m) allocations to the CG hot path (on
+/// multi-dimensional grids `fftn` still gathers strided axes through a
+/// small line-length scratch).
+pub(crate) enum PrecondApply {
+    /// Unpreconditioned (`M = I`).
+    Identity,
+    /// Jacobi: element-wise division by `diag(B)`.
+    Diag(Vec<f64>),
+    /// Spectral: `(sigma^2 I + sf2 rho C)^{-1}` applied in the Fourier
+    /// domain with the reciprocal spectrum precomputed at build time.
+    Spectral {
+        /// Grid shape (row-major tensor layout of the FFT).
+        shape: Vec<usize>,
+        /// `1 / (sf2 rho e_k + sigma^2)` per eigenvalue, real.
+        inv: Vec<f64>,
+        /// Reusable complex FFT workspace (length m).
+        buf: Vec<C64>,
+    },
+}
+
+impl PrecondApply {
+    fn apply(&mut self, v: &[f64], out: &mut [f64]) {
+        match self {
+            PrecondApply::Identity => out.copy_from_slice(v),
+            PrecondApply::Diag(d) => {
+                for ((o, &vi), &di) in out.iter_mut().zip(v).zip(d.iter()) {
+                    *o = vi / di;
+                }
+            }
+            PrecondApply::Spectral { shape, inv, buf } => {
+                for (b, &vi) in buf.iter_mut().zip(v) {
+                    *b = C64::real(vi);
+                }
+                fftn(buf, shape, false);
+                for (b, &s) in buf.iter_mut().zip(inv.iter()) {
+                    *b = b.scale(s);
+                }
+                fftn(buf, shape, true);
+                for (o, b) in out.iter_mut().zip(buf.iter()) {
+                    *o = b.re;
+                }
+            }
+        }
+    }
+}
+
+/// Warn once per process when a requested preconditioner degrades (the
+/// condition is a caller misconfiguration, not a per-refresh event, so
+/// one line suffices and the counters carry the ongoing signal).
+static PRECOND_FALLBACK_WARN: Once = Once::new();
+
+/// Resolve the requested [`Preconditioner`] into a [`PrecondApply`].
+/// Returns `(apply, fallback)` where `fallback` is `true` when a
+/// preconditioner was requested but `diag(G)` was not supplied — the
+/// solve then degrades to unpreconditioned CG instead of panicking the
+/// refresh thread.
+pub(crate) fn build_precond(inp: &RefreshInputs<'_>) -> (PrecondApply, bool) {
+    let g_diag = match inp.opts.precondition {
+        Preconditioner::None => return (PrecondApply::Identity, false),
+        Preconditioner::Jacobi | Preconditioner::Spectral => match inp.g_diag {
+            Some(g) => g,
+            None => {
+                PRECOND_FALLBACK_WARN.call_once(|| {
+                    eprintln!(
+                        "refresh preconditioner ({}) requested but diag(G) was not \
+                         supplied; degrading to unpreconditioned CG",
+                        inp.opts.precondition.name()
+                    );
+                });
+                return (PrecondApply::Identity, true);
+            }
+        },
+    };
+    let m = inp.wty.len();
+    let sigma2 = inp.sigma2;
+    match inp.opts.precondition {
+        Preconditioner::None => unreachable!("handled above"),
+        Preconditioner::Jacobi => {
+            // Circulant (and Kronecker-of-circulant) operators have a
+            // constant diagonal: read it off the first column of `S`.
+            let s0 = {
+                let mut e0 = vec![0.0; m];
+                e0[0] = 1.0;
+                inp.gk.sqrt_matvec(&e0)[0]
+            };
+            // Every entry must stay strictly positive for an SPD
+            // preconditioner; empty cells have G_ii = 0 and fall back to
+            // the noise floor.
+            let floor = sigma2.abs().max(1e-12);
+            let d = g_diag
+                .iter()
+                .map(|&g| (sigma2 + inp.sf2 * s0 * s0 * g).max(floor))
+                .collect();
+            (PrecondApply::Diag(d), false)
+        }
+        Preconditioner::Spectral => {
+            // G ~= rho I with rho = trace(G) / m, so
+            // B ~= sigma^2 I + sf2 rho S S = sigma^2 I + sf2 rho C —
+            // a shifted BCCB (Kronecker-of-circulants is a BCCB too),
+            // invertible exactly in the Fourier domain. An empty
+            // trainer has rho = 0 and M degenerates to sigma^2 I (a
+            // scalar scaling: harmless and still SPD). The same
+            // positivity floor as the Jacobi arm keeps every
+            // reciprocal finite when sigma^2 = 0 meets a clipped
+            // (exactly zero) eigenvalue.
+            let rho = (g_diag.iter().sum::<f64>() / m.max(1) as f64).max(0.0);
+            let a = inp.sf2 * rho;
+            let floor = sigma2.abs().max(1e-12);
+            let inv: Vec<f64> = inp
+                .gk
+                .circulant_eigenvalues()
+                .iter()
+                .map(|&e| 1.0 / (a * e.max(0.0) + sigma2).max(floor))
+                .collect();
+            let shape = inp.gk.shape();
+            (PrecondApply::Spectral { shape, inv, buf: vec![C64::ZERO; m] }, false)
+        }
+    }
+}
+
 /// One CG solve on the m-domain operator `B = sigma^2 I + sf2 S G S`,
-/// with `G v` supplied by `g_apply` and an optional Jacobi diagonal.
+/// with `G v` supplied by `g_apply` and the preconditioner already
+/// resolved by [`build_precond`].
 #[allow(clippy::too_many_arguments)]
 fn solve_mdomain(
     gk: &GridKernel,
@@ -140,7 +307,7 @@ fn solve_mdomain(
     sigma2: f64,
     g_apply: &mut dyn FnMut(&[f64], &mut [f64]),
     gout: &mut [f64],
-    diag: Option<&[f64]>,
+    precond: &mut PrecondApply,
     rhs: &[f64],
     x: &mut [f64],
     opts: CgOptions,
@@ -154,28 +321,14 @@ fn solve_mdomain(
             *o = sf2 * s + sigma2 * vi;
         }
     };
-    match diag {
-        Some(d) => cg_solve(
-            &mut apply,
-            |v: &[f64], out: &mut [f64]| {
-                for ((o, &vi), &di) in out.iter_mut().zip(v).zip(d) {
-                    *o = vi / di;
-                }
-            },
-            rhs,
-            x,
-            opts,
-            ws,
-        ),
-        None => cg_solve(
-            &mut apply,
-            |v: &[f64], out: &mut [f64]| out.copy_from_slice(v),
-            rhs,
-            x,
-            opts,
-            ws,
-        ),
-    }
+    cg_solve(
+        &mut apply,
+        |v: &[f64], out: &mut [f64]| precond.apply(v, out),
+        rhs,
+        x,
+        opts,
+        ws,
+    )
 }
 
 /// Rebuild the fast-prediction caches from sufficient statistics:
@@ -185,48 +338,24 @@ fn solve_mdomain(
 /// [`StreamTrainer::refresh`] and the per-shard workers (which combine
 /// an owned and a halo accumulator into one `G` apply).
 ///
-/// When `opts.precondition` is set, a Jacobi diagonal
-/// `d_i = sigma^2 + sf2 s0^2 G_ii` is built from the tracked `diag(G)`
-/// and the constant circulant diagonal `s0` of `S` — an O(m) setup that
-/// typically cuts CG iterations well below the unpreconditioned count on
-/// spatially non-uniform streams (where `diag(G)` spans orders of
-/// magnitude).
-///
-/// Returns `(u_mean, nu_u, mean_iters, var_iters_total)`.
+/// `opts.precondition` selects the solve preconditioner (see the
+/// [module docs](self) for the operator algebra): `Jacobi` builds the
+/// O(m) diagonal from the tracked `diag(G)`; `Spectral` builds the
+/// O(m log m) BCCB approximate inverse `(sigma^2 I + sf2 rho C)^{-1}`
+/// from the grid operator's circulant spectrum and the mean occupancy
+/// `rho`. Both typically cut CG iterations well below the
+/// unpreconditioned count on spatially non-uniform streams.
 pub(crate) fn refresh_mdomain(
     inp: RefreshInputs<'_>,
     g_apply: &mut dyn FnMut(&[f64], &mut [f64]),
     t_mean: &mut [f64],
     t_probes: &mut [Vec<f64>],
     ws: &mut CgWorkspace,
-) -> (Vec<f64>, Vec<f64>, usize, usize) {
+) -> RefreshOutcome {
     let m = inp.wty.len();
     let sf2 = inp.sf2;
     let sigma2 = inp.sigma2;
-    let diag: Option<Vec<f64>> = if inp.opts.precondition {
-        let g_diag = inp
-            .g_diag
-            .expect("opts.precondition requires the tracked diag(G)");
-        // Circulant (and Kronecker-of-circulant) operators have a
-        // constant diagonal: read it off the first column of `S`.
-        let s0 = {
-            let mut e0 = vec![0.0; m];
-            e0[0] = 1.0;
-            inp.gk.sqrt_matvec(&e0)[0]
-        };
-        // Every entry must stay strictly positive for an SPD
-        // preconditioner; empty cells have G_ii = 0 and fall back to the
-        // noise floor.
-        let floor = sigma2.abs().max(1e-12);
-        Some(
-            g_diag
-                .iter()
-                .map(|&g| (sigma2 + sf2 * s0 * s0 * g).max(floor))
-                .collect(),
-        )
-    } else {
-        None
-    };
+    let (mut precond, precond_fallback) = build_precond(&inp);
     let mut gout = vec![0.0f64; m];
     // --- mean solve ---
     let s_b = inp.gk.sqrt_matvec(inp.wty);
@@ -236,7 +365,7 @@ pub(crate) fn refresh_mdomain(
         sigma2,
         &mut *g_apply,
         &mut gout,
-        diag.as_deref(),
+        &mut precond,
         &s_b,
         t_mean,
         inp.opts,
@@ -267,7 +396,7 @@ pub(crate) fn refresh_mdomain(
             sigma2,
             &mut *g_apply,
             &mut gout,
-            diag.as_deref(),
+            &mut precond,
             &rhs,
             &mut t_probes[k],
             inp.opts,
@@ -283,7 +412,13 @@ pub(crate) fn refresh_mdomain(
     for a in acc.iter_mut() {
         *a /= ns as f64;
     }
-    (u_mean, acc, mean_res.iters, var_iters)
+    RefreshOutcome {
+        u_mean,
+        nu_u: acc,
+        mean_iters: mean_res.iters,
+        var_iters,
+        precond_fallback,
+    }
 }
 
 /// The streaming trainer: owns the sufficient statistics, the structured
@@ -325,6 +460,10 @@ pub struct StreamTrainer {
     /// Points rejected (non-finite values, or coverage beyond
     /// `cfg.max_grid_cells`).
     pub rejected_points: usize,
+    /// Refreshes that requested a preconditioner but had to degrade to
+    /// unpreconditioned CG (mirrored into the coordinator's
+    /// `precond_fallbacks` metric).
+    pub precond_fallbacks: u64,
 }
 
 impl StreamTrainer {
@@ -357,6 +496,7 @@ impl StreamTrainer {
             refresh_count: 0,
             dirty_points: 0,
             rejected_points: 0,
+            precond_fallbacks: 0,
         }
     }
 
@@ -519,9 +659,10 @@ impl StreamTrainer {
     /// Warm-started refresh of the fast-prediction caches:
     /// `u_mean = sf2 S B^{-1} S b` and the stochastic `nu_U` via the
     /// probe accumulators. Cost: `(n_s + 1)` CG solves on the m-domain
-    /// operator `B = sigma^2 I + sf2 S G S` — independent of n. With
-    /// `cfg.msgp.cg.precondition` set, each solve is Jacobi-
-    /// preconditioned from the tracked `diag(G)`.
+    /// operator `B = sigma^2 I + sf2 S G S` — independent of n. Each
+    /// solve uses the preconditioner selected by
+    /// `cfg.msgp.cg.precondition` (`Spectral` by default; see
+    /// [`refresh_mdomain`]).
     pub fn refresh(&mut self) -> RefreshStats {
         let t0 = Instant::now();
         let m = self.m();
@@ -540,23 +681,27 @@ impl StreamTrainer {
             g_diag: Some(ski.g_diag()),
         };
         let mut g_apply = |v: &[f64], out: &mut [f64]| ski.g_matvec_into(v, out);
-        let (u_mean, nu_u, mean_iters, var_iters) = refresh_mdomain(
+        let out = refresh_mdomain(
             inputs,
             &mut g_apply,
             &mut self.t_mean,
             &mut self.t_probes,
             &mut self.ws,
         );
-        self.u_mean = u_mean;
-        self.nu_u = nu_u;
+        self.u_mean = out.u_mean;
+        self.nu_u = out.nu_u;
         self.refresh_count += 1;
         self.dirty_points = 0;
+        if out.precond_fallback {
+            self.precond_fallbacks += 1;
+        }
         let stats = RefreshStats {
-            mean_iters,
-            var_iters_total: var_iters,
+            mean_iters: out.mean_iters,
+            var_iters_total: out.var_iters,
             m,
             n: self.n(),
             wall: t0.elapsed(),
+            precond_fallback: out.precond_fallback,
         };
         self.last_refresh = stats.clone();
         stats
@@ -582,8 +727,14 @@ impl StreamTrainer {
     /// `reopt_iters` Adam steps on the spectral marginal likelihood,
     /// adopt the learned hypers, rebuild the grid operator, and refresh.
     /// Returns the final snapshot LML, or `None` when the reservoir is
-    /// still empty.
+    /// still empty — or when repeated decay has driven the effective
+    /// sample mass below [`MIN_EFFECTIVE_MASS`] (the model has forgotten
+    /// the stream the reservoir still describes, so hypers fit to that
+    /// stale snapshot would be adopted against near-zero statistics).
     pub fn reoptimize(&mut self) -> anyhow::Result<Option<f64>> {
+        if self.ski.weight() < MIN_EFFECTIVE_MASS {
+            return Ok(None);
+        }
         let (res_x, res_y) = self.reservoir_snapshot();
         if res_y.is_empty() {
             return Ok(None);
@@ -606,5 +757,106 @@ impl StreamTrainer {
         self.gk = GridKernel::new(&self.kernel, self.ski.grid(), &self.cfg.msgp);
         self.refresh();
         Ok(Some(lml))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::GridAxis;
+    use crate::kernels::{KernelType, ProductKernel};
+
+    fn se_kernel() -> KernelSpec {
+        KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0))
+    }
+
+    /// A spatially skewed accumulator: two-thirds of the mass lands in
+    /// one fifth of the domain, so `diag(G)` spans orders of magnitude.
+    fn skewed_ski(m: usize, n: usize) -> (Grid, IncrementalSki) {
+        let grid = Grid::new(vec![GridAxis::span(-5.0, 5.0, m)]);
+        let mut ski = IncrementalSki::new(grid.clone(), 3, 1, 7);
+        let mut rng = Rng::new(33);
+        for i in 0..n {
+            let x = if i % 3 == 0 {
+                rng.uniform_in(-4.5, 4.5)
+            } else {
+                rng.uniform_in(-4.5, -2.5)
+            };
+            ski.ingest(&[x], 0.2 * (x * 1.3).sin());
+        }
+        (grid, ski)
+    }
+
+    fn run_refresh(
+        precond: Preconditioner,
+        give_diag: bool,
+        gk: &GridKernel,
+        ski: &IncrementalSki,
+    ) -> RefreshOutcome {
+        let m = ski.m();
+        let ns = ski.probes().len();
+        // Fixed probe draws so every run solves identical systems.
+        let mut rng = Rng::new(4242);
+        let g_probes: Vec<Vec<f64>> = (0..ns).map(|_| rng.normal_vec(m)).collect();
+        let opts = CgOptions {
+            tol: 1e-12,
+            max_iter: 4000,
+            warm_start: false,
+            precondition: precond,
+        };
+        let inputs = RefreshInputs {
+            gk,
+            sf2: 1.0,
+            sigma2: 0.1,
+            opts,
+            wty: ski.wty(),
+            probes_q: ski.probes(),
+            g_probes: &g_probes,
+            g_diag: if give_diag { Some(ski.g_diag()) } else { None },
+        };
+        let mut t_mean = vec![0.0; m];
+        let mut t_probes: Vec<Vec<f64>> = (0..ns).map(|_| vec![0.0; m]).collect();
+        let mut ws = CgWorkspace::new(m);
+        let mut g_apply = |v: &[f64], out: &mut [f64]| ski.g_matvec_into(v, out);
+        refresh_mdomain(inputs, &mut g_apply, &mut t_mean, &mut t_probes, &mut ws)
+    }
+
+    /// Satellite regression: a preconditioner request without the
+    /// tracked `diag(G)` must degrade to unpreconditioned CG (same
+    /// solve, fallback flagged) instead of panicking the refresh thread.
+    #[test]
+    fn missing_g_diag_degrades_to_unpreconditioned_cg() {
+        let (grid, ski) = skewed_ski(48, 400);
+        let gk = GridKernel::new(&se_kernel(), &grid, &MsgpConfig::default());
+        let plain = run_refresh(Preconditioner::None, true, &gk, &ski);
+        assert!(!plain.precond_fallback);
+        for precond in [Preconditioner::Jacobi, Preconditioner::Spectral] {
+            let degraded = run_refresh(precond, false, &gk, &ski);
+            assert!(degraded.precond_fallback, "{precond:?} must flag the fallback");
+            assert_eq!(
+                degraded.mean_iters, plain.mean_iters,
+                "degraded {precond:?} solve must be the unpreconditioned solve"
+            );
+            for (a, b) in degraded.u_mean.iter().zip(&plain.u_mean) {
+                assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+            }
+        }
+    }
+
+    /// The spectral BCCB preconditioner changes the iteration path, not
+    /// the solution.
+    #[test]
+    fn spectral_precondition_preserves_the_solution() {
+        let (grid, ski) = skewed_ski(48, 600);
+        let gk = GridKernel::new(&se_kernel(), &grid, &MsgpConfig::default());
+        let plain = run_refresh(Preconditioner::None, true, &gk, &ski);
+        let spec = run_refresh(Preconditioner::Spectral, true, &gk, &ski);
+        assert!(!spec.precond_fallback);
+        for (a, b) in spec.u_mean.iter().zip(&plain.u_mean) {
+            assert!((a - b).abs() < 1e-8, "{a} vs {b}");
+        }
+        for (a, b) in spec.nu_u.iter().zip(&plain.nu_u) {
+            assert!((a - b).abs() < 1e-6, "nu_u drifted: {a} vs {b}");
+        }
     }
 }

@@ -95,7 +95,14 @@ impl Circulant {
         buf.into_iter().map(|z| z.re).collect()
     }
 
-    /// Solve `(C + jitter I) x = y` in the Fourier domain (exact, O(m log m)).
+    /// Solve `(C + jitter I) x = y` in the Fourier domain, O(m log m).
+    /// Eigenvalues are clipped at zero before inverting, matching
+    /// [`Self::logdet`] and [`Self::sqrt_circulant`]: a Whittle/Helgason
+    /// approximation of a PSD Toeplitz matrix can carry slightly
+    /// negative eigenvalues, and an unclipped `1 / (e + jitter)` with
+    /// `e ~= -jitter` amplifies that direction catastrophically (or
+    /// flips its sign, breaking positive-definiteness). The solve is
+    /// therefore exact for the *clipped* (PSD) circulant.
     pub fn solve(&self, y: &[f64], jitter: f64) -> Vec<f64> {
         let m = self.m();
         assert_eq!(y.len(), m);
@@ -103,7 +110,7 @@ impl Circulant {
         let mut buf: Vec<C64> = y.iter().map(|&v| C64::real(v)).collect();
         p.forward(&mut buf);
         for (b, &e) in buf.iter_mut().zip(&self.eigs) {
-            *b = b.scale(1.0 / (e + jitter));
+            *b = b.scale(1.0 / (e.max(0.0) + jitter));
         }
         p.inverse(&mut buf);
         buf.into_iter().map(|z| z.re).collect()
@@ -287,6 +294,41 @@ mod tests {
         for (xi, yi) in x.iter().zip(&y) {
             assert!((xi - yi).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn solve_clips_negative_eigenvalues() {
+        // Sign-indefinite symmetric circulant: eigs_k = 1 + 4 cos(2 pi
+        // k / 6), so k = 3 gives exactly -3. With `jitter = 3` the
+        // unclipped solve would divide by `-3 + 3 = 0` and blow up; the
+        // clipped solve must stay finite and invert the PSD-projected
+        // circulant (whose action is `sqrt_circulant` applied twice,
+        // since the square root clips the same way).
+        let c = Circulant::new(vec![1.0, 2.0, 0.0, 0.0, 0.0, 2.0]);
+        let min_eig = c.eigs.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!((min_eig - (-3.0)).abs() < 1e-9, "min eig {min_eig}");
+        let jitter = 3.0;
+        let y: Vec<f64> = (0..6).map(|i| (i as f64 * 0.9).sin() + 0.5).collect();
+        let x = c.solve(&y, jitter);
+        let ynorm = dot_norm(&y);
+        assert!(x.iter().all(|v| v.is_finite()), "{x:?}");
+        assert!(
+            dot_norm(&x) <= ynorm / jitter + 1e-9,
+            "amplified beyond the clipped bound: ||x|| = {}",
+            dot_norm(&x)
+        );
+        let s = c.sqrt_circulant();
+        let mut back = s.matvec(&s.matvec(&x));
+        for (b, &xi) in back.iter_mut().zip(&x) {
+            *b += jitter * xi;
+        }
+        for (b, w) in back.iter().zip(&y) {
+            assert!((b - w).abs() < 1e-9, "{b} vs {w}");
+        }
+    }
+
+    fn dot_norm(v: &[f64]) -> f64 {
+        v.iter().map(|x| x * x).sum::<f64>().sqrt()
     }
 
     #[test]

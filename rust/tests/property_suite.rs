@@ -260,7 +260,7 @@ fn prop_cg_matches_cholesky_on_random_spd() {
             |v, out| out.copy_from_slice(v),
             &rhs,
             &mut x,
-            CgOptions { tol: 1e-12, max_iter: 10 * n, warm_start: false, precondition: false },
+            CgOptions { tol: 1e-12, max_iter: 10 * n, ..Default::default() },
             &mut ws,
         );
         assert!(res.converged);

@@ -342,6 +342,50 @@ fn sharded_decay_and_global_reopt() {
     assert!(after < before, "global re-opt must improve held-out RMSE: {after} !< {before}");
 }
 
+/// Satellite: pin the owner lookup for out-of-domain and seam points.
+/// `ShardPlan::unit` clamps the split-axis coordinate into the box (and
+/// a negative f64 saturates to 0 through `as usize` regardless), so a
+/// point left of the domain must route to shard 0, a point right of the
+/// domain to the last shard, and a point exactly on a cut to exactly
+/// one owner (the shard whose half-open interval starts there).
+#[test]
+fn owner_lookup_saturates_out_of_domain_and_resolves_seams() {
+    for (n, s) in [(101usize, 4usize), (97, 3), (128, 5)] {
+        let grid = Grid::new(vec![GridAxis::span(0.0, (n - 1) as f64, n)]);
+        let plan = ShardPlan::new(grid, s, 4, 2);
+        // Left of the domain: negative coordinates saturate to shard 0.
+        for x in [-0.5, -25.0, -1e12, f64::MIN] {
+            assert_eq!(plan.owner_of(&[x]), 0, "left-of-domain x={x} (n={n}, s={s})");
+        }
+        // Right of the domain: clamps to the last cell -> last shard.
+        for x in [(n - 1) as f64 + 0.5, 1e12, f64::MAX] {
+            assert_eq!(
+                plan.owner_of(&[x]),
+                s - 1,
+                "right-of-domain x={x} (n={n}, s={s})"
+            );
+        }
+        // Interior seams: the cut belongs to the right-hand shard
+        // (half-open ownership), and a point just left of it to the
+        // left-hand shard — exactly one owner either way.
+        for seam in 1..s {
+            let cut = plan.cuts()[seam] as f64;
+            assert_eq!(plan.owner_of(&[cut]), seam, "cut {seam} (n={n}, s={s})");
+            assert_eq!(
+                plan.owner_of(&[cut - 1e-9]),
+                seam - 1,
+                "just-left of cut {seam} (n={n}, s={s})"
+            );
+        }
+    }
+    // The split axis alone decides ownership: out-of-domain coordinates
+    // on a non-split axis do not perturb the lookup.
+    let grid2 = Grid::new(vec![GridAxis::span(0.0, 63.0, 64), GridAxis::span(0.0, 1.0, 6)]);
+    let plan2 = ShardPlan::new(grid2, 2, 4, 2);
+    assert_eq!(plan2.owner_of(&[-5.0, 99.0]), 0);
+    assert_eq!(plan2.owner_of(&[99.0, -99.0]), 1);
+}
+
 /// Refresh-scaling smoke check (the full sweep lives in
 /// `benches/fig5_sharded.rs`): per-shard refresh operates on m/S cells,
 /// so each shard's local grid is a strict fraction of the global one.
