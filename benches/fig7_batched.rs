@@ -1,0 +1,169 @@
+//! `cargo bench --bench fig7_batched` — the batched-engine speedups:
+//!
+//! 1. multi-RHS FFT throughput on a 2-D grid, `fftn_batch` (cache-blocked
+//!    panels, shared plans) vs the per-line `fftn` reference — the
+//!    acceptance target is >= 1.5x;
+//! 2. real circulant MVM throughput, `matvec_batch` (two-for-one packing)
+//!    vs per-vector `matvec`;
+//! 3. streaming refresh wall-clock, the single block-CG solve
+//!    (`StreamTrainer::refresh`) vs the historical `n_s + 1` sequential
+//!    solves (`StreamTrainer::refresh_sequential`) on the fig4/fig6
+//!    skewed-stream workload.
+//!
+//! BENCH_FULL=1 enables the larger sweep.
+
+use msgp::gp::msgp::{KernelSpec, MsgpConfig};
+use msgp::grid::{Grid, GridAxis};
+use msgp::kernels::{KernelType, ProductKernel};
+use msgp::linalg::fft::{fftn, fftn_batch, FftScratch, Workspace};
+use msgp::linalg::C64;
+use msgp::stream::{StreamConfig, StreamTrainer};
+use msgp::structure::circulant::Circulant;
+use msgp::util::Rng;
+use std::time::Instant;
+
+/// Average seconds per call of `f` over `reps` calls (after one warmup).
+fn time_per_call(reps: usize, mut f: impl FnMut()) -> f64 {
+    f();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+/// A spatially skewed stream (the fig6 workload): two-thirds of the mass
+/// in ~15% of the domain.
+fn skewed_stream(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let mut xs = Vec::with_capacity(n);
+    let mut ys = Vec::with_capacity(n);
+    for i in 0..n {
+        let x = if i % 3 == 0 {
+            rng.uniform_in(-10.0, 10.0)
+        } else {
+            rng.uniform_in(-9.5, -6.5)
+        };
+        xs.push(x);
+        ys.push(msgp::data::stress_fn(x) + 0.05 * rng.normal());
+    }
+    (xs, ys)
+}
+
+fn main() {
+    let full = std::env::var("BENCH_FULL").is_ok();
+
+    // --- 1. batched vs per-line multi-dimensional FFT (2-D grid) ---
+    let sides: &[usize] = if full { &[64, 128, 256] } else { &[64, 128] };
+    let batch = 16usize;
+    let reps = if full { 20 } else { 10 };
+    println!("# fig7_batched / fftn: batch = {batch} complex 2-D tensors");
+    println!("# side per_line_ms batched_ms speedup");
+    for &side in sides {
+        let shape = [side, side];
+        let per: usize = side * side;
+        let data: Vec<C64> = (0..batch * per)
+            .map(|i| C64::new((i as f64 * 0.37).sin(), (i as f64 * 0.11).cos()))
+            .collect();
+        let mut buf = data.clone();
+        let per_line = time_per_call(reps, || {
+            buf.copy_from_slice(&data);
+            for item in buf.chunks_exact_mut(per) {
+                fftn(item, &shape, false);
+            }
+        });
+        let mut scratch = FftScratch::default();
+        let batched = time_per_call(reps, || {
+            buf.copy_from_slice(&data);
+            fftn_batch(&mut buf, batch, &shape, false, &mut scratch);
+        });
+        println!(
+            "{:>6} {:>12.3} {:>10.3} {:>8.2}",
+            side,
+            per_line * 1e3,
+            batched * 1e3,
+            per_line / batched
+        );
+    }
+
+    // --- 2. two-for-one real circulant MVM ---
+    let ms: &[usize] = if full { &[1024, 4096, 16384] } else { &[1024, 4096] };
+    let rhs = 8usize;
+    println!("# fig7_batched / circulant mvm: {rhs} real RHS");
+    println!("# m per_vec_ms batched_ms speedup");
+    for &m in ms {
+        let col: Vec<f64> = (0..m)
+            .map(|i| (-0.5 * (i.min(m - i) as f64 / 16.0).powi(2)).exp())
+            .collect();
+        let c = Circulant::new(col);
+        let block: Vec<f64> = (0..rhs * m).map(|i| (i as f64 * 0.23).sin()).collect();
+        let mut out = vec![0.0; rhs * m];
+        let per_vec = time_per_call(reps, || {
+            for r in 0..rhs {
+                let y = c.matvec(&block[r * m..(r + 1) * m]);
+                out[r * m..(r + 1) * m].copy_from_slice(&y);
+            }
+        });
+        let mut ws = Workspace::new();
+        let batched = time_per_call(reps, || {
+            c.matvec_batch(&block, &mut out, &mut ws);
+        });
+        println!(
+            "{:>6} {:>11.3} {:>10.3} {:>8.2}",
+            m,
+            per_vec * 1e3,
+            batched * 1e3,
+            per_vec / batched
+        );
+    }
+
+    // --- 3. block vs sequential m-domain refresh ---
+    let sizes: &[usize] = if full { &[1024, 4096] } else { &[256, 1024] };
+    let n: usize = if full { 40_000 } else { 8_000 };
+    let ns = if full { 8 } else { 6 };
+    let kernel = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0));
+    let (xs, ys) = skewed_stream(n, 7);
+    println!("# fig7_batched / refresh: n = {n}, n_s = {ns}, skewed stream, spectral precond");
+    println!("# m mode mean_iters var_iters_total block_iters refresh_wall_ms speedup");
+    for &m in sizes {
+        let build = || {
+            let grid = Grid::new(vec![GridAxis::span(-12.0, 13.0, m)]);
+            let mut mcfg =
+                MsgpConfig { n_per_dim: vec![m], n_var_samples: ns, ..Default::default() };
+            mcfg.cg.tol = 1e-8;
+            mcfg.cg.max_iter = 4000;
+            let mut t = StreamTrainer::new(
+                kernel.clone(),
+                0.01,
+                grid,
+                StreamConfig { msgp: mcfg, ..Default::default() },
+            );
+            t.ingest_batch(&xs, &ys);
+            t
+        };
+        let mut seq_wall = 0.0f64;
+        for mode in ["sequential", "block"] {
+            let mut trainer = build();
+            let t0 = Instant::now();
+            let stats = if mode == "sequential" {
+                trainer.refresh_sequential()
+            } else {
+                trainer.refresh()
+            };
+            let wall = t0.elapsed().as_secs_f64();
+            if mode == "sequential" {
+                seq_wall = wall;
+            }
+            println!(
+                "{:>6} {:>10} {:>10} {:>15} {:>11} {:>15.2} {:>8.2}",
+                m,
+                mode,
+                stats.mean_iters,
+                stats.var_iters_total,
+                stats.block_iters,
+                wall * 1e3,
+                seq_wall / wall
+            );
+        }
+    }
+}

@@ -23,6 +23,12 @@ pub struct ShardMetrics {
     /// global `last_refresh_*` gauges are unsharded-only; S workers
     /// racing one gauge would make its reading meaningless).
     pub refresh_cg_iters: AtomicU64,
+    /// Wall-clock of this shard's most recent refresh, microseconds
+    /// (single-writer: only the owning worker stores it) — the
+    /// per-shard counterpart of the global `last_refresh_us` gauge, so
+    /// the block-refresh speedup is observable in production on both
+    /// server shapes.
+    pub last_refresh_us: AtomicU64,
     /// Messages currently queued to this shard's worker (ingest
     /// back-pressure signal).
     pub queue_depth: AtomicU64,
@@ -197,11 +203,13 @@ impl Metrics {
         );
         for (i, sh) in self.shards.iter().enumerate() {
             s.push_str(&format!(
-                " shard[{i}] ingested={} halo={} refreshes={} cg_iters={} queue_depth={} routed={}",
+                " shard[{i}] ingested={} halo={} refreshes={} cg_iters={} last_refresh_us={} \
+                 queue_depth={} routed={}",
                 sh.ingested.load(Ordering::Relaxed),
                 sh.halo_ingested.load(Ordering::Relaxed),
                 sh.refreshes.load(Ordering::Relaxed),
                 sh.refresh_cg_iters.load(Ordering::Relaxed),
+                sh.last_refresh_us.load(Ordering::Relaxed),
                 sh.queue_depth.load(Ordering::Relaxed),
                 sh.routed_predictions.load(Ordering::Relaxed),
             ));
@@ -243,11 +251,13 @@ mod tests {
         m.shards[1].halo_ingested.fetch_add(3, Ordering::Relaxed);
         m.shards[1].queue_depth.fetch_add(5, Ordering::Relaxed);
         m.shards[0].refresh_cg_iters.fetch_add(42, Ordering::Relaxed);
+        m.shards[0].last_refresh_us.store(777, Ordering::Relaxed);
         let s = m.summary();
         assert!(s.contains("shard[0] ingested=10"), "{s}");
         assert!(s.contains("halo=3"), "{s}");
         assert!(s.contains("queue_depth=5"), "{s}");
         assert!(s.contains("cg_iters=42"), "{s}");
+        assert!(s.contains("last_refresh_us=777"), "{s}");
         // Unsharded metrics emit no shard clauses.
         assert!(!Metrics::new().summary().contains("shard[0]"));
     }

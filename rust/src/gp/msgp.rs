@@ -25,6 +25,7 @@ use crate::data::Dataset;
 use crate::grid::Grid;
 use crate::interp::SparseInterp;
 use crate::kernels::{KernelType, ProductKernel};
+use crate::linalg::fft::Workspace as FftWorkspace;
 use crate::linalg::Mat;
 use crate::solver::{cg_solve, CgOptions, CgResult, CgWorkspace, Preconditioner};
 use crate::structure::bttb::{Bccb, Bttb};
@@ -203,6 +204,20 @@ impl Kuu {
             Kuu::Bttb { bccb, .. } => bccb.sqrt_matvec(v),
         }
     }
+
+    fn matvec_batch(&self, block: &[f64], out: &mut [f64], ws: &mut FftWorkspace) {
+        match self {
+            Kuu::Kron(k) => k.matvec_batch(block, out, ws),
+            Kuu::Bttb { op, .. } => op.matvec_batch(block, out, ws),
+        }
+    }
+
+    fn sqrt_matvec_batch(&self, block: &[f64], out: &mut [f64], ws: &mut FftWorkspace) {
+        match self {
+            Kuu::Kron(k) => k.sqrt_matvec_batch(block, out, ws),
+            Kuu::Bttb { bccb, .. } => bccb.sqrt_matvec_batch(block, out, ws),
+        }
+    }
 }
 
 /// Public handle to the structured grid operator `K_{U,U}` (unit signal
@@ -244,6 +259,20 @@ impl GridKernel {
     /// approximation of `K_{U,U} v`).
     pub fn sqrt_matvec(&self, v: &[f64]) -> Vec<f64> {
         self.kuu.sqrt_matvec(v)
+    }
+
+    /// Batched `K_{U,U} Y` over a row-major `b x m` block (two RHS per
+    /// complex transform; see the batched engine in
+    /// [`crate::linalg::fft`]).
+    pub fn matvec_batch(&self, block: &[f64], out: &mut [f64], ws: &mut FftWorkspace) {
+        self.kuu.matvec_batch(block, out, ws)
+    }
+
+    /// Batched `K_{U,U}^{1/2} Y` over a row-major `b x m` block — the
+    /// operator core of the block-CG m-domain refresh, which applies `S`
+    /// to the mean and every variance probe in one call.
+    pub fn sqrt_matvec_batch(&self, block: &[f64], out: &mut [f64], ws: &mut FftWorkspace) {
+        self.kuu.sqrt_matvec_batch(block, out, ws)
     }
 
     /// Grid shape (per-dimension sizes, row-major tensor layout).

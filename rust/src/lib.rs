@@ -9,7 +9,12 @@
 //! * **Structure-exploiting linear algebra** ([`structure`]): Toeplitz,
 //!   circulant (with Strang / T. Chan / Tyrtyshnikov / Helgason / Whittle
 //!   approximations), Kronecker, and BTTB/BCCB operators, all built on an
-//!   in-crate FFT ([`linalg::fft`]).
+//!   in-crate FFT ([`linalg::fft`]) with a batched multi-RHS engine:
+//!   cache-blocked panel transforms over `[batch, shape...]` tensors,
+//!   two-for-one packing of real RHS pairs into single complex
+//!   transforms, and allocation-free `matvec_batch` paths on every
+//!   operator (a size-capped thread-local plan cache keeps twiddle /
+//!   bit-reversal setup amortized).
 //! * **Local cubic kernel interpolation** ([`interp`]) à la KISS-GP:
 //!   sparse interpolation matrices `W` with `4^D` entries per row.
 //! * **GP models** ([`gp`]): the MSGP model itself (SKI kernel, CG
@@ -40,6 +45,11 @@
 //!   tracked `diag(W^T W)`) or `Spectral` (the default: a BCCB
 //!   approximate inverse of the m-domain operator applied in
 //!   O(m log m) via the multi-level circulant eigendecomposition).
+//!   Each refresh solves the mean and all `n_s` variance-probe systems
+//!   as **one lockstep block-CG solve** ([`solver::cg_solve_block`])
+//!   with per-column convergence masking: one batched operator /
+//!   preconditioner application per iteration instead of `n_s + 1`
+//!   sequential solves.
 //! * **Sharded data-parallel training & serving** ([`shard`]): the
 //!   sufficient statistics are additive, so a [`shard::ShardPlan`]
 //!   splits the inducing grid into S spatial slabs (with halo overlap

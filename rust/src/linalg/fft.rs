@@ -1,19 +1,39 @@
 //! Fast Fourier transforms: iterative radix-2 Cooley–Tukey for power-of-two
 //! lengths and Bluestein's chirp-z algorithm for arbitrary lengths, plus a
-//! multi-dimensional transform over the axes of a dense tensor.
+//! multi-dimensional transform over the axes of a dense tensor and a
+//! **batched multi-RHS engine** for the structured MVMs that dominate CG
+//! iterations.
 //!
 //! Circulant eigenvalue computations ([`crate::structure::circulant`]) need
 //! FFTs at the *exact* grid size `m` (which users choose freely), hence the
 //! Bluestein fallback; Toeplitz matrix–vector products are free to pad to
 //! the next power of two and always hit the radix-2 path.
 //!
-//! [`FftPlan`] caches twiddle factors and (for Bluestein) the transformed
-//! chirp so repeated transforms of one size — the common case inside CG
-//! iterations — do no trigonometry.
+//! [`FftPlan`] caches twiddle factors, the bit-reversal permutation, and
+//! (for Bluestein) the transformed chirp, so repeated transforms of one
+//! size — the common case inside CG iterations — do no trigonometry. The
+//! thread-local plan cache is size-capped (FIFO eviction) so grid
+//! auto-expansion and per-shard worker threads cannot grow it without
+//! bound.
+//!
+//! The batched layer amortizes that per-transform setup across many lines:
+//!
+//! * [`FftPlan::forward_batch`] / [`FftPlan::inverse_batch`] transform a
+//!   contiguous `[batch, n]` buffer reusing one twiddle/bit-reversal table
+//!   (and, for Bluestein, one convolution scratch) across all lines.
+//! * [`fftn_batch`] transforms a `[batch, shape...]` tensor; strided axes
+//!   are processed in cache-blocked panels of adjacent lines instead of
+//!   the per-line gather/scatter of [`fftn`], so the dominant cost becomes
+//!   sequential memory traffic.
+//! * [`apply_real_spectrum_batch`] packs *pairs of real vectors* into one
+//!   complex line (`z = x + i y`, the classic two-for-one trick): a real
+//!   diagonal spectrum commutes with the packing, so every real-input
+//!   structured MVM (circulant, Toeplitz embedding, BCCB, separable
+//!   Kronecker square root) does half the FFT work on a batch.
 
 use super::complex::C64;
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::rc::Rc;
 
 /// Round `n` up to the next power of two.
@@ -28,6 +48,8 @@ pub struct FftPlan {
     /// Twiddles for the radix-2 kernel of size `work_len` (== `n` when `n`
     /// is a power of two, else the Bluestein convolution length).
     twiddles: Vec<C64>,
+    /// Bit-reversal permutation for the radix-2 kernel (size `work_len`).
+    bitrev: Vec<u32>,
     work_len: usize,
     /// Bluestein state: chirp `w_k = e^{-i pi k^2 / n}` and the forward
     /// FFT of the zero-padded conjugate chirp.
@@ -45,10 +67,17 @@ impl FftPlan {
     pub fn new(n: usize) -> Self {
         assert!(n >= 1, "FFT length must be >= 1");
         if n.is_power_of_two() {
-            FftPlan { n, twiddles: make_twiddles(n), work_len: n, bluestein: None }
+            FftPlan {
+                n,
+                twiddles: make_twiddles(n),
+                bitrev: make_bitrev(n),
+                work_len: n,
+                bluestein: None,
+            }
         } else {
             let m = next_pow2(2 * n - 1);
             let twiddles = make_twiddles(m);
+            let bitrev = make_bitrev(m);
             // chirp[k] = e^{-i pi k^2 / n}
             let mut chirp = vec![C64::ZERO; n];
             for k in 0..n {
@@ -64,8 +93,14 @@ impl FftPlan {
                 b[k] = chirp[k].conj();
                 b[m - k] = chirp[k].conj();
             }
-            fft_pow2(&mut b, &twiddles, false);
-            FftPlan { n, twiddles, work_len: m, bluestein: Some(BluesteinState { chirp, chirp_fft: b }) }
+            fft_pow2(&mut b, &twiddles, &bitrev, false);
+            FftPlan {
+                n,
+                twiddles,
+                bitrev,
+                work_len: m,
+                bluestein: Some(BluesteinState { chirp, chirp_fft: b }),
+            }
         }
     }
 
@@ -93,33 +128,87 @@ impl FftPlan {
         }
     }
 
-    fn transform(&self, x: &mut [C64], inverse: bool) {
-        assert_eq!(x.len(), self.n, "FFT length mismatch: plan {} vs input {}", self.n, x.len());
+    /// Forward DFT of every contiguous length-`n` line of `data`
+    /// (`data.len()` must be a multiple of `n`). One twiddle /
+    /// bit-reversal table — and, on the Bluestein path, one convolution
+    /// scratch — is reused across all lines.
+    pub fn forward_batch(&self, data: &mut [C64]) {
+        let mut blue = Vec::new();
+        self.batch_transform(data, false, &mut blue);
+    }
+
+    /// Inverse DFT (with `1/n` normalization) of every contiguous
+    /// length-`n` line of `data`.
+    pub fn inverse_batch(&self, data: &mut [C64]) {
+        let mut blue = Vec::new();
+        self.batch_transform(data, true, &mut blue);
+    }
+
+    /// Batched kernel behind [`Self::forward_batch`] /
+    /// [`Self::inverse_batch`], with a caller-owned Bluestein scratch so
+    /// tight loops ([`fftn_batch`]) stay allocation-free.
+    fn batch_transform(&self, data: &mut [C64], inverse: bool, blue: &mut Vec<C64>) {
+        assert_eq!(
+            data.len() % self.n,
+            0,
+            "batched FFT: buffer {} not a multiple of plan length {}",
+            data.len(),
+            self.n
+        );
         match &self.bluestein {
-            None => fft_pow2(x, &self.twiddles, inverse),
-            Some(bs) => self.bluestein_transform(x, bs, inverse),
+            None => {
+                for line in data.chunks_exact_mut(self.n) {
+                    fft_pow2(line, &self.twiddles, &self.bitrev, inverse);
+                }
+            }
+            Some(bs) => {
+                blue.resize(self.work_len, C64::ZERO);
+                for line in data.chunks_exact_mut(self.n) {
+                    self.bluestein_with(line, bs, inverse, blue);
+                }
+            }
+        }
+        if inverse {
+            let s = 1.0 / self.n as f64;
+            for v in data.iter_mut() {
+                *v = v.scale(s);
+            }
         }
     }
 
-    fn bluestein_transform(&self, x: &mut [C64], bs: &BluesteinState, inverse: bool) {
+    fn transform(&self, x: &mut [C64], inverse: bool) {
+        assert_eq!(x.len(), self.n, "FFT length mismatch: plan {} vs input {}", self.n, x.len());
+        match &self.bluestein {
+            None => fft_pow2(x, &self.twiddles, &self.bitrev, inverse),
+            Some(bs) => {
+                let mut a = vec![C64::ZERO; self.work_len];
+                self.bluestein_with(x, bs, inverse, &mut a);
+            }
+        }
+    }
+
+    /// Bluestein chirp-z transform of one line, using the caller's
+    /// work-length scratch `a` (contents overwritten). The result is
+    /// unnormalized; inverse normalization happens in the wrappers.
+    fn bluestein_with(&self, x: &mut [C64], bs: &BluesteinState, inverse: bool, a: &mut [C64]) {
         let n = self.n;
-        let m = self.work_len;
+        debug_assert_eq!(a.len(), self.work_len);
         // Inverse transform = conjugate trick: F^{-1}(x) * n = conj(F(conj(x))).
         if inverse {
             for v in x.iter_mut() {
                 *v = v.conj();
             }
         }
-        let mut a = vec![C64::ZERO; m];
+        a.fill(C64::ZERO);
         for k in 0..n {
             a[k] = x[k] * bs.chirp[k];
         }
-        fft_pow2(&mut a, &self.twiddles, false);
+        fft_pow2(a, &self.twiddles, &self.bitrev, false);
         for (av, bv) in a.iter_mut().zip(bs.chirp_fft.iter()) {
             *av = *av * *bv;
         }
-        fft_pow2(&mut a, &self.twiddles, true);
-        let s = 1.0 / m as f64;
+        fft_pow2(a, &self.twiddles, &self.bitrev, true);
+        let s = 1.0 / self.work_len as f64;
         for k in 0..n {
             x[k] = a[k].scale(s) * bs.chirp[k];
         }
@@ -142,23 +231,30 @@ fn make_twiddles(n: usize) -> Vec<C64> {
     tw
 }
 
+/// Bit-reversal permutation table for a power-of-two length `n`
+/// (`u32` halves the table footprint; every supported length fits).
+fn make_bitrev(n: usize) -> Vec<u32> {
+    debug_assert!(n.is_power_of_two());
+    let mut br = vec![0u32; n];
+    for i in 1..n {
+        br[i] = br[i >> 1] >> 1 | if i & 1 == 1 { (n >> 1) as u32 } else { 0 };
+    }
+    br
+}
+
 /// Iterative radix-2 Cooley–Tukey, `x.len()` must be a power of two.
-/// `twiddles` must be the table for exactly this length.
-fn fft_pow2(x: &mut [C64], twiddles: &[C64], inverse: bool) {
+/// `twiddles` / `bitrev` must be the tables for exactly this length.
+fn fft_pow2(x: &mut [C64], twiddles: &[C64], bitrev: &[u32], inverse: bool) {
     let n = x.len();
     debug_assert!(n.is_power_of_two());
+    debug_assert_eq!(bitrev.len(), n);
     if n <= 1 {
         return;
     }
-    // Bit-reversal permutation.
-    let mut j = 0usize;
-    for i in 1..n {
-        let mut bit = n >> 1;
-        while j & bit != 0 {
-            j ^= bit;
-            bit >>= 1;
-        }
-        j |= bit;
+    // Bit-reversal permutation (table-driven; the table is built once per
+    // plan and shared by every line of a batch).
+    for i in 0..n {
+        let j = bitrev[i] as usize;
         if i < j {
             x.swap(i, j);
         }
@@ -185,18 +281,43 @@ fn fft_pow2(x: &mut [C64], twiddles: &[C64], inverse: bool) {
     }
 }
 
+/// Per-thread plan-cache capacity. One plan per distinct transform
+/// length; grid auto-expansion and per-shard worker threads request new
+/// lengths over time, so the cache evicts FIFO beyond this cap instead
+/// of growing without bound. Evicted plans stay alive for as long as a
+/// caller still holds their `Rc`.
+const PLAN_CACHE_CAP: usize = 64;
+
 thread_local! {
-    static PLAN_CACHE: RefCell<HashMap<usize, Rc<FftPlan>>> = RefCell::new(HashMap::new());
+    static PLAN_CACHE: RefCell<(HashMap<usize, Rc<FftPlan>>, VecDeque<usize>)> =
+        RefCell::new((HashMap::new(), VecDeque::new()));
 }
 
 /// Fetch (or build) a thread-local cached plan for length `n`.
 pub fn plan(n: usize) -> Rc<FftPlan> {
     PLAN_CACHE.with(|c| {
-        c.borrow_mut()
-            .entry(n)
-            .or_insert_with(|| Rc::new(FftPlan::new(n)))
-            .clone()
+        let mut guard = c.borrow_mut();
+        let (map, order) = &mut *guard;
+        if let Some(p) = map.get(&n) {
+            return p.clone();
+        }
+        if map.len() >= PLAN_CACHE_CAP {
+            if let Some(old) = order.pop_front() {
+                map.remove(&old);
+            }
+        }
+        let p = Rc::new(FftPlan::new(n));
+        map.insert(n, p.clone());
+        order.push_back(n);
+        p
     })
+}
+
+/// Number of plans currently held by this thread's cache (test hook for
+/// the size cap).
+#[doc(hidden)]
+pub fn plan_cache_len() -> usize {
+    PLAN_CACHE.with(|c| c.borrow().0.len())
 }
 
 /// Forward DFT of a real signal; returns the full complex spectrum.
@@ -216,6 +337,10 @@ pub fn irfft_real(spec: &[C64]) -> Vec<f64> {
 
 /// Multi-dimensional FFT over a dense row-major tensor of shape `shape`.
 /// Transforms every axis in turn (`F = F_1 (x) ... (x) F_D`).
+///
+/// This is the single-tensor reference path; the batched engine
+/// ([`fftn_batch`]) additionally amortizes plan setup across lines and
+/// replaces the per-line gather/scatter below with cache-blocked panels.
 pub fn fftn(data: &mut [C64], shape: &[usize], inverse: bool) {
     let total: usize = shape.iter().product();
     assert_eq!(data.len(), total, "fftn: data/shape mismatch");
@@ -268,6 +393,278 @@ pub fn fftn(data: &mut [C64], shape: &[usize], inverse: bool) {
             }
         }
     }
+}
+
+/// Gather / Bluestein scratch for the batched transforms. Reusing one
+/// across calls keeps the batched hot paths allocation-free.
+#[derive(Clone, Debug, Default)]
+pub struct FftScratch {
+    /// Cache-blocked panel of gathered lines (strided axes).
+    panel: Vec<C64>,
+    /// Bluestein convolution buffer (non-power-of-two lengths).
+    blue: Vec<C64>,
+}
+
+/// Number of adjacent lines gathered per panel on strided axes: small
+/// enough that a panel of the longest supported lines stays cache-
+/// resident, large enough that gathers read whole cache lines.
+const PANEL: usize = 8;
+
+/// Multi-dimensional FFT of `batch` independent row-major tensors stored
+/// contiguously (`data.len() == batch * prod(shape)`). The batch axis is
+/// never transformed. Strided axes are processed in cache-blocked panels
+/// of [`PANEL`] adjacent lines — the gather then reads contiguous runs
+/// instead of one element per stride — and every line of an axis shares
+/// one plan (twiddles, bit-reversal table, Bluestein scratch).
+pub fn fftn_batch(
+    data: &mut [C64],
+    batch: usize,
+    shape: &[usize],
+    inverse: bool,
+    scratch: &mut FftScratch,
+) {
+    let per: usize = shape.iter().product();
+    assert_eq!(data.len(), batch * per, "fftn_batch: data/shape mismatch");
+    let d = shape.len();
+    for ax in 0..d {
+        let n = shape[ax];
+        if n == 1 {
+            continue;
+        }
+        let p = plan(n);
+        let inner: usize = shape[ax + 1..].iter().product();
+        if inner == 1 {
+            // Contiguous lines tile the whole buffer: one batched pass.
+            p.batch_transform(data, inverse, &mut scratch.blue);
+            continue;
+        }
+        let outer: usize = batch * shape[..ax].iter().product::<usize>();
+        scratch.panel.resize(PANEL * n, C64::ZERO);
+        for o in 0..outer {
+            let base_o = o * n * inner;
+            let mut i0 = 0;
+            while i0 < inner {
+                let pw = PANEL.min(inner - i0);
+                // Gather `pw` adjacent lines: contiguous reads of `pw`
+                // elements per grid row, sequential writes per line.
+                for k in 0..n {
+                    let src = base_o + k * inner + i0;
+                    for q in 0..pw {
+                        scratch.panel[q * n + k] = data[src + q];
+                    }
+                }
+                p.batch_transform(&mut scratch.panel[..pw * n], inverse, &mut scratch.blue);
+                for k in 0..n {
+                    let dst = base_o + k * inner + i0;
+                    for q in 0..pw {
+                        data[dst + q] = scratch.panel[q * n + k];
+                    }
+                }
+                i0 += pw;
+            }
+        }
+    }
+}
+
+/// Reusable buffers for the batched real-MVM engine: the two-for-one
+/// packed lines plus FFT gather scratch. One `Workspace` per solver /
+/// trainer keeps every structured `matvec_batch` allocation-free.
+#[derive(Clone, Debug, Default)]
+pub struct Workspace {
+    /// Two-for-one packed complex lines (`ceil(b/2) x m`).
+    pub(crate) packed: Vec<C64>,
+    /// Gather / Bluestein scratch shared by the batched transforms.
+    pub(crate) scratch: FftScratch,
+}
+
+impl Workspace {
+    /// Fresh (empty) workspace; buffers grow on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+thread_local! {
+    static TLS_WS: RefCell<Workspace> = RefCell::new(Workspace::default());
+}
+
+/// Run `f` with this thread's shared [`Workspace`] — the compatibility
+/// shim that lets the single-vector `matvec` wrappers reuse the batched
+/// engine without allocating scratch per call. Callers must not call
+/// [`with_workspace`] re-entrantly from inside `f` (the structured-MVM
+/// wrappers never do: only leaf `*_batch` kernels run under it).
+pub fn with_workspace<R>(f: impl FnOnce(&mut Workspace) -> R) -> R {
+    TLS_WS.with(|w| f(&mut w.borrow_mut()))
+}
+
+/// Pack the rows of a real `rows x m` block into `ceil(rows/2)` complex
+/// lines: line `j` is `row_{2j} + i row_{2j+1}` (imaginary part zero for
+/// the unpaired last row of an odd block).
+pub fn pack_real_pairs(block: &[f64], m: usize, out: &mut Vec<C64>) {
+    assert!(m > 0 && block.len() % m == 0, "pack_real_pairs: block/m mismatch");
+    let rows = block.len() / m;
+    let pairs = rows.div_ceil(2);
+    out.clear();
+    out.resize(pairs * m, C64::ZERO);
+    for j in 0..pairs {
+        let re = &block[2 * j * m..(2 * j + 1) * m];
+        let line = &mut out[j * m..(j + 1) * m];
+        if 2 * j + 1 < rows {
+            let im = &block[(2 * j + 1) * m..(2 * j + 2) * m];
+            for k in 0..m {
+                line[k] = C64::new(re[k], im[k]);
+            }
+        } else {
+            for k in 0..m {
+                line[k] = C64::real(re[k]);
+            }
+        }
+    }
+}
+
+/// Inverse of [`pack_real_pairs`] after real-linear processing: row `2j`
+/// is the real part of line `j`, row `2j+1` the imaginary part.
+pub fn unpack_real_pairs(packed: &[C64], m: usize, rows: usize, out: &mut [f64]) {
+    assert_eq!(out.len(), rows * m, "unpack_real_pairs: out/rows mismatch");
+    let pairs = rows.div_ceil(2);
+    assert_eq!(packed.len(), pairs * m, "unpack_real_pairs: packed/rows mismatch");
+    for j in 0..pairs {
+        let line = &packed[j * m..(j + 1) * m];
+        for k in 0..m {
+            out[2 * j * m + k] = line[k].re;
+        }
+        if 2 * j + 1 < rows {
+            for k in 0..m {
+                out[(2 * j + 1) * m + k] = line[k].im;
+            }
+        }
+    }
+}
+
+/// Split the forward spectrum `z` of a packed pair `x + i y` (`x`, `y`
+/// real) into the individual spectra, using conjugate symmetry:
+/// `X_k = (Z_k + conj(Z_{-k})) / 2`, `Y_k = -i (Z_k - conj(Z_{-k})) / 2`
+/// (indices mod `n`). Used by the tests to pin the two-for-one packing
+/// and available to callers that need the separate spectra.
+pub fn split_packed_spectrum(z: &[C64], x_spec: &mut [C64], y_spec: &mut [C64]) {
+    let n = z.len();
+    assert_eq!(x_spec.len(), n);
+    assert_eq!(y_spec.len(), n);
+    for k in 0..n {
+        let zk = z[k];
+        let zr = z[(n - k) % n].conj();
+        x_spec[k] = (zk + zr).scale(0.5);
+        let d = zk - zr;
+        y_spec[k] = C64::new(d.im * 0.5, -d.re * 0.5);
+    }
+}
+
+/// Apply a real diagonal spectrum (in the multi-dimensional Fourier basis
+/// over `shape`) to every row of a real `b x m` block, two rows per
+/// complex transform: `out_r = F^{-1} diag(f(spec)) F block_r`. Because
+/// the spectrum is real, the operator is a real matrix and commutes with
+/// the `x + i y` packing, so the result is the exact batched MVM with
+/// half the transforms. This one kernel powers the circulant, BCCB and
+/// separable square-root `matvec_batch` paths.
+pub fn apply_real_spectrum_batch(
+    block: &[f64],
+    out: &mut [f64],
+    shape: &[usize],
+    spec: &[f64],
+    f: impl Fn(f64) -> f64,
+    ws: &mut Workspace,
+) {
+    let m: usize = shape.iter().product();
+    assert_eq!(spec.len(), m, "spectrum length vs shape");
+    assert!(m > 0 && block.len() % m == 0, "block is b x m row-major");
+    assert_eq!(out.len(), block.len());
+    let rows = block.len() / m;
+    let pairs = rows.div_ceil(2);
+    let Workspace { packed, scratch } = ws;
+    pack_real_pairs(block, m, packed);
+    fftn_batch(packed, pairs, shape, false, scratch);
+    for line in packed.chunks_exact_mut(m) {
+        for (z, &e) in line.iter_mut().zip(spec) {
+            *z = z.scale(f(e));
+        }
+    }
+    fftn_batch(packed, pairs, shape, true, scratch);
+    unpack_real_pairs(packed, m, rows, out);
+}
+
+/// Apply a real 1-D spectrum along one axis of a batch of packed complex
+/// tensors, zero-padding every line from `n` to `spec.len()` (the
+/// circulant-embedding length) and truncating back after the inverse
+/// transform — the batched kernel behind the exact Toeplitz and
+/// Kronecker-of-Toeplitz MVMs. `outer` counts line groups before the
+/// axis (batch folded in), `inner` is the trailing stride.
+pub(crate) fn apply_axis_spectrum_packed(
+    data: &mut [C64],
+    outer: usize,
+    n: usize,
+    inner: usize,
+    spec: &[f64],
+    scratch: &mut FftScratch,
+) {
+    let a = spec.len();
+    assert!(a >= n, "embedding {a} shorter than axis {n}");
+    let p = plan(a);
+    scratch.panel.resize(PANEL * a, C64::ZERO);
+    if inner == 1 {
+        // Contiguous lines: panel over adjacent groups.
+        let mut o0 = 0;
+        while o0 < outer {
+            let pw = PANEL.min(outer - o0);
+            for q in 0..pw {
+                let line = &data[(o0 + q) * n..(o0 + q + 1) * n];
+                scratch.panel[q * a..q * a + n].copy_from_slice(line);
+                scratch.panel[q * a + n..(q + 1) * a].fill(C64::ZERO);
+            }
+            spectrum_lines(&mut scratch.panel[..pw * a], &p, spec, &mut scratch.blue);
+            for q in 0..pw {
+                data[(o0 + q) * n..(o0 + q + 1) * n]
+                    .copy_from_slice(&scratch.panel[q * a..q * a + n]);
+            }
+            o0 += pw;
+        }
+        return;
+    }
+    for o in 0..outer {
+        let base_o = o * n * inner;
+        let mut i0 = 0;
+        while i0 < inner {
+            let pw = PANEL.min(inner - i0);
+            for q in 0..pw {
+                scratch.panel[q * a + n..(q + 1) * a].fill(C64::ZERO);
+            }
+            for k in 0..n {
+                let src = base_o + k * inner + i0;
+                for q in 0..pw {
+                    scratch.panel[q * a + k] = data[src + q];
+                }
+            }
+            spectrum_lines(&mut scratch.panel[..pw * a], &p, spec, &mut scratch.blue);
+            for k in 0..n {
+                let dst = base_o + k * inner + i0;
+                for q in 0..pw {
+                    data[dst + q] = scratch.panel[q * a + k];
+                }
+            }
+            i0 += pw;
+        }
+    }
+}
+
+/// Forward-transform, scale by `spec`, and inverse-transform every
+/// contiguous `spec.len()`-line of `lines` with one plan.
+fn spectrum_lines(lines: &mut [C64], p: &FftPlan, spec: &[f64], blue: &mut Vec<C64>) {
+    p.batch_transform(lines, false, blue);
+    for line in lines.chunks_exact_mut(spec.len()) {
+        for (z, &e) in line.iter_mut().zip(spec) {
+            *z = z.scale(e);
+        }
+    }
+    p.batch_transform(lines, true, blue);
 }
 
 /// Reference O(n^2) DFT used by the tests.
@@ -393,5 +790,138 @@ mod tests {
         fftn(&mut y, &shape, false);
         fftn(&mut y, &shape, true);
         close(&y, &x, 1e-9);
+    }
+
+    /// Property: the batched transform equals the per-line reference for
+    /// mixed power-of-two / Bluestein shapes, forward and inverse, for
+    /// batches large enough to exercise the panel tail paths.
+    #[test]
+    fn prop_fftn_batch_matches_per_line_fftn() {
+        let shapes: [&[usize]; 6] =
+            [&[8], &[12], &[4, 6], &[3, 5], &[2, 3, 4], &[5, 1, 7]];
+        for shape in shapes {
+            let per: usize = shape.iter().product();
+            for &batch in &[1usize, 2, 3, 5] {
+                let data: Vec<C64> = (0..batch * per)
+                    .map(|i| C64::new((i as f64 * 0.61).sin(), (i as f64 * 0.37).cos()))
+                    .collect();
+                for &inverse in &[false, true] {
+                    let mut got = data.clone();
+                    let mut scratch = FftScratch::default();
+                    fftn_batch(&mut got, batch, shape, inverse, &mut scratch);
+                    let mut want = data.clone();
+                    for item in want.chunks_exact_mut(per) {
+                        fftn(item, shape, inverse);
+                    }
+                    close(&got, &want, 1e-9 * per as f64);
+                }
+            }
+        }
+    }
+
+    /// Property: forward_batch/inverse_batch round-trip every line, for
+    /// both radix-2 and Bluestein plans.
+    #[test]
+    fn prop_batch_roundtrip() {
+        for &n in &[4usize, 12, 31, 64] {
+            let p = plan(n);
+            let lines = 5;
+            let x: Vec<C64> =
+                (0..lines * n).map(|i| C64::new(i as f64 * 0.3, -(i as f64) * 0.7)).collect();
+            let mut y = x.clone();
+            p.forward_batch(&mut y);
+            p.inverse_batch(&mut y);
+            close(&y, &x, 1e-8 * n as f64);
+        }
+    }
+
+    /// The two-for-one packing is exact: the packed spectrum splits into
+    /// the individual real-input spectra, and pack -> forward -> inverse
+    /// -> unpack reproduces both rows.
+    #[test]
+    fn two_for_one_packing_round_trips() {
+        for &n in &[8usize, 12, 33] {
+            let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.9).sin() + 0.3).collect();
+            let y: Vec<f64> = (0..n).map(|i| (i as f64 * 0.4).cos() - 0.1).collect();
+            let block: Vec<f64> = x.iter().chain(y.iter()).copied().collect();
+            let mut packed = Vec::new();
+            pack_real_pairs(&block, n, &mut packed);
+            assert_eq!(packed.len(), n);
+            let p = plan(n);
+            p.forward(&mut packed);
+            // Split must match the individually transformed spectra.
+            let mut xs = vec![C64::ZERO; n];
+            let mut ys = vec![C64::ZERO; n];
+            split_packed_spectrum(&packed, &mut xs, &mut ys);
+            close(&xs, &rfft(&x), 1e-9 * n as f64);
+            close(&ys, &rfft(&y), 1e-9 * n as f64);
+            // And the packed round-trip recovers both rows.
+            p.inverse(&mut packed);
+            let mut back = vec![0.0; 2 * n];
+            unpack_real_pairs(&packed, n, 2, &mut back);
+            for (g, w) in back.iter().zip(&block) {
+                assert!((g - w).abs() < 1e-10, "{g} vs {w}");
+            }
+        }
+    }
+
+    /// Odd batches pad the unpaired last row with a zero imaginary part.
+    #[test]
+    fn two_for_one_handles_odd_batches() {
+        let n = 10;
+        let rows = 3;
+        let block: Vec<f64> = (0..rows * n).map(|i| (i as f64 * 0.17).sin()).collect();
+        let spec = vec![1.0; n]; // identity spectrum
+        let mut out = vec![0.0; rows * n];
+        let mut ws = Workspace::new();
+        apply_real_spectrum_batch(&block, &mut out, &[n], &spec, |e| e, &mut ws);
+        for (g, w) in out.iter().zip(&block) {
+            assert!((g - w).abs() < 1e-10, "{g} vs {w}");
+        }
+    }
+
+    /// apply_real_spectrum_batch equals the per-vector reference
+    /// (forward, scale, inverse) on a 2-D Bluestein shape.
+    #[test]
+    fn spectrum_batch_matches_per_vector() {
+        let shape = [6usize, 5];
+        let m = 30;
+        let rows = 4;
+        let spec: Vec<f64> = (0..m).map(|i| 0.5 + (i as f64 * 0.23).cos().abs()).collect();
+        let block: Vec<f64> = (0..rows * m).map(|i| (i as f64 * 0.13).sin()).collect();
+        let mut got = vec![0.0; rows * m];
+        let mut ws = Workspace::new();
+        apply_real_spectrum_batch(&block, &mut got, &shape, &spec, |e| e, &mut ws);
+        for r in 0..rows {
+            let mut buf: Vec<C64> =
+                block[r * m..(r + 1) * m].iter().map(|&v| C64::real(v)).collect();
+            fftn(&mut buf, &shape, false);
+            for (z, &e) in buf.iter_mut().zip(&spec) {
+                *z = z.scale(e);
+            }
+            fftn(&mut buf, &shape, true);
+            for (k, z) in buf.iter().enumerate() {
+                let g = got[r * m + k];
+                assert!((g - z.re).abs() < 1e-10, "row {r}: {g} vs {}", z.re);
+            }
+        }
+    }
+
+    /// The thread-local plan cache stays under its size cap no matter how
+    /// many distinct lengths a thread requests.
+    #[test]
+    fn plan_cache_is_size_capped() {
+        for n in 2..(3 * PLAN_CACHE_CAP + 2) {
+            let p = plan(n);
+            assert_eq!(p.len(), n);
+            assert!(
+                plan_cache_len() <= PLAN_CACHE_CAP,
+                "cache grew to {} (> {PLAN_CACHE_CAP})",
+                plan_cache_len()
+            );
+        }
+        // Evicted lengths rebuild transparently.
+        let p = plan(2);
+        assert_eq!(p.len(), 2);
     }
 }

@@ -32,8 +32,7 @@ use crate::grid::Grid;
 use crate::shard::merge;
 use crate::shard::plan::ShardPlan;
 use crate::shard::serving::ShardedServing;
-use crate::solver::CgWorkspace;
-use crate::stream::trainer::{refresh_mdomain, RefreshInputs, Reservoir};
+use crate::stream::trainer::{refresh_mdomain, RefreshInputs, RefreshWorkspace, Reservoir};
 use crate::stream::{IncrementalSki, StreamConfig, StreamTrainer};
 use crate::util::Rng;
 
@@ -108,7 +107,7 @@ struct ShardWorker {
     t_mean: Vec<f64>,
     t_probes: Vec<Vec<f64>>,
     g_probes: Vec<Vec<f64>>,
-    ws: CgWorkspace,
+    rws: RefreshWorkspace,
     reservoir: Arc<Mutex<Reservoir>>,
     res_rng: Rng,
     serving: Arc<ShardedServing>,
@@ -205,7 +204,7 @@ impl ShardWorker {
             &mut g_apply,
             &mut self.t_mean,
             &mut self.t_probes,
-            &mut self.ws,
+            &mut self.rws,
         );
         self.serving.publish(
             self.id,
@@ -230,7 +229,14 @@ impl ShardWorker {
         let iters = (out.mean_iters + out.var_iters) as u64;
         self.metrics.shards[self.id].refresh_cg_iters.fetch_add(iters, Ordering::Relaxed);
         self.metrics.refresh_cg_iters_total.fetch_add(iters, Ordering::Relaxed);
-        self.metrics.record_refresh(t0.elapsed());
+        // Per-shard wall-clock gauge (single-writer: only this worker
+        // touches its slot), so the block-refresh speedup is observable
+        // per shard at /metrics.
+        let wall = t0.elapsed();
+        self.metrics.shards[self.id]
+            .last_refresh_us
+            .store(wall.as_micros() as u64, Ordering::Relaxed);
+        self.metrics.record_refresh(wall);
     }
 
     fn run(mut self, rx: Receiver<ShardMsg>) {
@@ -356,7 +362,7 @@ impl ShardedTrainer {
                         g_probes: (0..ns).map(|_| probe_rng.normal_vec(m)).collect(),
                         t_probes: (0..ns).map(|_| vec![0.0; m]).collect(),
                         t_mean: vec![0.0; m],
-                        ws: CgWorkspace::new(m),
+                        rws: RefreshWorkspace::new(),
                         res_rng: Rng::new(seed ^ (0x7e5e + id as u64)),
                         sigma2,
                         id,

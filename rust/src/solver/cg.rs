@@ -25,6 +25,16 @@
 //! The enum is *consumed by the refresh paths*
 //! ([`crate::stream::trainer`]), not by [`cg_solve`] itself, whose
 //! `precond` argument stays an explicit closure.
+//!
+//! [`cg_solve_block`] is the multi-RHS form: `b` systems against one
+//! operator advance in lockstep, each column running the exact scalar CG
+//! recurrence it would run alone (so per-column iterates match
+//! [`cg_solve`] bit-for-bit up to operator rounding) while the operator
+//! and preconditioner are applied to the whole block at once — one
+//! batched FFT pass per iteration instead of one per RHS. Columns that
+//! reach tolerance are masked out of the scalar updates and simply ride
+//! along. The streaming m-domain refresh uses this to solve the mean and
+//! all `n_s` variance-probe systems as a single block.
 
 use crate::linalg::dense::{axpy, dot};
 
@@ -203,6 +213,180 @@ pub fn cg_solve(
     CgResult { iters, rel_residual: rel, converged: rel <= opts.tol }
 }
 
+/// Outcome of a lockstep multi-RHS CG solve.
+#[derive(Clone, Debug)]
+pub struct BlockCgResult {
+    /// Lockstep block iterations: the number of *batched* operator
+    /// applications is `block_iters + 1` (one for the initial residual).
+    pub block_iters: usize,
+    /// Iteration at which each column converged (or froze on a
+    /// non-SPD breakdown / the iteration cap) — comparable to the
+    /// sequential [`CgResult::iters`] per system.
+    pub col_iters: Vec<usize>,
+    /// Final per-column relative residuals.
+    pub rel_residuals: Vec<f64>,
+    /// Every column reached the tolerance within the iteration cap.
+    pub converged: bool,
+}
+
+/// Reusable block-CG buffers (`cols` systems of size `n` each) — keeps
+/// the lockstep hot loop allocation-free.
+#[derive(Clone, Debug, Default)]
+pub struct BlockCgWorkspace {
+    r: Vec<f64>,
+    z: Vec<f64>,
+    p: Vec<f64>,
+    ap: Vec<f64>,
+    rz: Vec<f64>,
+    bnorm: Vec<f64>,
+    rel: Vec<f64>,
+    active: Vec<bool>,
+}
+
+impl BlockCgWorkspace {
+    /// Create a workspace for `cols` systems of size `n`.
+    pub fn new(n: usize, cols: usize) -> Self {
+        let mut ws = Self::default();
+        ws.resize(n, cols);
+        ws
+    }
+
+    fn resize(&mut self, n: usize, cols: usize) {
+        let total = n * cols;
+        if self.r.len() != total {
+            self.r.resize(total, 0.0);
+            self.z.resize(total, 0.0);
+            self.p.resize(total, 0.0);
+            self.ap.resize(total, 0.0);
+        }
+        if self.rz.len() != cols {
+            self.rz.resize(cols, 0.0);
+            self.bnorm.resize(cols, 0.0);
+            self.rel.resize(cols, 0.0);
+            self.active.resize(cols, false);
+        }
+    }
+}
+
+/// Solve `A X = B` for `cols = b.len() / n` right-hand sides with
+/// lockstep preconditioned CG and per-column convergence masking.
+///
+/// * `apply_a(v, out)` computes the **batched** operator apply
+///   `out = A v` column-by-column over a row-major `cols x n` block.
+/// * `precond(v, out)` computes the batched `out = M^{-1} v`.
+/// * `b` / `x` are row-major `cols x n` blocks; `x` holds the per-column
+///   initial guesses on entry (honored when `opts.warm_start`) and the
+///   solutions on exit.
+///
+/// Each column runs the scalar CG recurrence of [`cg_solve`] with its own
+/// `alpha`/`beta`/residual, so per-column results match `cols` sequential
+/// solves (up to the rounding of the batched operator); converged or
+/// broken-down columns are masked out of the scalar updates while the
+/// block keeps iterating until all columns finish. The payoff: one
+/// batched operator + preconditioner application per iteration instead
+/// of one *solve* per RHS. Note the cost model: masked columns still
+/// ride through the batched applies until the slowest column finishes,
+/// so the win is largest when column iteration counts are similar (the
+/// m-domain refresh: identical operator, similar conditioning per
+/// probe); active-column compaction is a possible future refinement.
+pub fn cg_solve_block(
+    mut apply_a: impl FnMut(&[f64], &mut [f64]),
+    mut precond: impl FnMut(&[f64], &mut [f64]),
+    b: &[f64],
+    x: &mut [f64],
+    n: usize,
+    opts: CgOptions,
+    ws: &mut BlockCgWorkspace,
+) -> BlockCgResult {
+    assert!(n > 0 && b.len() % n == 0, "b is cols x n row-major");
+    let cols = b.len() / n;
+    assert_eq!(x.len(), b.len());
+    ws.resize(n, cols);
+    if !opts.warm_start {
+        x.fill(0.0);
+    }
+    // Initial residual block: one batched apply (covers warm starts).
+    apply_a(x, &mut ws.ap);
+    for i in 0..b.len() {
+        ws.r[i] = b[i] - ws.ap[i];
+    }
+    precond(&ws.r, &mut ws.z);
+    ws.p.copy_from_slice(&ws.z);
+    let mut col_iters = vec![0usize; cols];
+    for c in 0..cols {
+        let span = c * n..(c + 1) * n;
+        let bc = &b[span.clone()];
+        ws.bnorm[c] = dot(bc, bc).sqrt();
+        if ws.bnorm[c] == 0.0 {
+            // Zero RHS: solution is zero, converged immediately.
+            x[span.clone()].fill(0.0);
+            ws.rel[c] = 0.0;
+            ws.active[c] = false;
+            continue;
+        }
+        ws.rz[c] = dot(&ws.r[span.clone()], &ws.z[span.clone()]);
+        ws.rel[c] = dot(&ws.r[span.clone()], &ws.r[span.clone()]).sqrt() / ws.bnorm[c];
+        ws.active[c] = ws.rel[c] > opts.tol;
+    }
+    let mut iters = 0usize;
+    while ws.active.iter().any(|&a| a) && iters < opts.max_iter {
+        apply_a(&ws.p, &mut ws.ap);
+        for c in 0..cols {
+            if !ws.active[c] {
+                continue;
+            }
+            let span = c * n..(c + 1) * n;
+            let pap = dot(&ws.p[span.clone()], &ws.ap[span.clone()]);
+            if pap <= 0.0 || !pap.is_finite() {
+                // This column's operator is not SPD to working precision;
+                // freeze it with what it has (mirrors cg_solve's bail).
+                ws.active[c] = false;
+                col_iters[c] = iters;
+                continue;
+            }
+            let alpha = ws.rz[c] / pap;
+            axpy(&mut x[span.clone()], alpha, &ws.p[span.clone()]);
+            axpy(&mut ws.r[span.clone()], -alpha, &ws.ap[span.clone()]);
+            ws.rel[c] = dot(&ws.r[span.clone()], &ws.r[span.clone()]).sqrt() / ws.bnorm[c];
+            if ws.rel[c] <= opts.tol {
+                ws.active[c] = false;
+                col_iters[c] = iters + 1;
+            }
+        }
+        iters += 1;
+        if !ws.active.iter().any(|&a| a) {
+            break;
+        }
+        precond(&ws.r, &mut ws.z);
+        for c in 0..cols {
+            if !ws.active[c] {
+                continue;
+            }
+            let span = c * n..(c + 1) * n;
+            let rz_new = dot(&ws.r[span.clone()], &ws.z[span.clone()]);
+            let beta = rz_new / ws.rz[c];
+            ws.rz[c] = rz_new;
+            for i in span {
+                ws.p[i] = ws.z[i] + beta * ws.p[i];
+            }
+        }
+    }
+    // Columns still active hit the iteration cap.
+    for c in 0..cols {
+        if ws.active[c] {
+            col_iters[c] = iters;
+            ws.active[c] = false;
+        }
+    }
+    let converged = ws.rel.iter().all(|&r| r <= opts.tol);
+    BlockCgResult {
+        block_iters: iters,
+        col_iters,
+        rel_residuals: ws.rel.clone(),
+        converged,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -356,6 +540,171 @@ mod tests {
         for (xi, ti) in x.iter().zip(&x_true) {
             assert!((xi - ti).abs() < 1e-7);
         }
+    }
+
+    /// Lockstep block CG reproduces the per-system sequential solves:
+    /// same solutions, same per-column iteration counts, and the block
+    /// iteration count equals the slowest column's.
+    #[test]
+    fn block_solve_matches_sequential_solves() {
+        let n = 32;
+        let a = spd(n);
+        let cols = 4;
+        let b: Vec<f64> = (0..cols * n).map(|i| (i as f64 * 0.21).sin()).collect();
+        let opts =
+            CgOptions { tol: 1e-12, max_iter: 2000, warm_start: false, ..Default::default() };
+        // Sequential reference.
+        let mut xs_seq = vec![0.0; cols * n];
+        let mut seq_iters = Vec::new();
+        let mut ws = CgWorkspace::new(n);
+        for c in 0..cols {
+            let res = cg_solve(
+                |v, out| out.copy_from_slice(&a.matvec(v)),
+                |v, out| out.copy_from_slice(v),
+                &b[c * n..(c + 1) * n],
+                &mut xs_seq[c * n..(c + 1) * n],
+                opts,
+                &mut ws,
+            );
+            assert!(res.converged);
+            seq_iters.push(res.iters);
+        }
+        // Block path: the batched apply runs the identical dense MVM per
+        // column, so iterates match exactly.
+        let mut xs_blk = vec![0.0; cols * n];
+        let mut bws = BlockCgWorkspace::new(n, cols);
+        let res = cg_solve_block(
+            |v, out| {
+                for c in 0..cols {
+                    out[c * n..(c + 1) * n].copy_from_slice(&a.matvec(&v[c * n..(c + 1) * n]));
+                }
+            },
+            |v, out| out.copy_from_slice(v),
+            &b,
+            &mut xs_blk,
+            n,
+            opts,
+            &mut bws,
+        );
+        assert!(res.converged, "{res:?}");
+        assert_eq!(res.col_iters, seq_iters, "lockstep columns must match sequential");
+        assert_eq!(
+            res.block_iters,
+            *seq_iters.iter().max().unwrap(),
+            "block iterations = slowest column"
+        );
+        for (g, w) in xs_blk.iter().zip(&xs_seq) {
+            assert!((g - w).abs() < 1e-12, "{g} vs {w}");
+        }
+    }
+
+    /// Converged columns are masked: a well-conditioned column stops
+    /// early while an ill-conditioned one keeps iterating, and the
+    /// masked column's solution is untouched afterwards.
+    #[test]
+    fn block_solve_masks_converged_columns() {
+        let n = 48;
+        // Column 0: identity system (converges in one iteration).
+        // Column 1: ill-conditioned SPD system.
+        let mut a_ill = spd(n);
+        for i in 0..n {
+            a_ill[(i, i)] += (i as f64).powi(2) * 5.0;
+        }
+        let b: Vec<f64> = (0..2 * n).map(|i| 1.0 + (i as f64 * 0.4).cos()).collect();
+        let opts =
+            CgOptions { tol: 1e-10, max_iter: 2000, warm_start: false, ..Default::default() };
+        let mut x = vec![0.0; 2 * n];
+        let mut bws = BlockCgWorkspace::new(n, 2);
+        let res = cg_solve_block(
+            |v, out| {
+                out[..n].copy_from_slice(&v[..n]); // A_0 = I
+                out[n..].copy_from_slice(&a_ill.matvec(&v[n..]));
+            },
+            |v, out| out.copy_from_slice(v),
+            &b,
+            &mut x,
+            n,
+            opts,
+            &mut bws,
+        );
+        assert!(res.converged);
+        assert_eq!(res.col_iters[0], 1, "identity column converges in one step");
+        assert!(res.col_iters[1] > 1, "ill-conditioned column iterates on");
+        assert_eq!(res.block_iters, res.col_iters[1]);
+        // Column 0's solution is the RHS itself, untouched by the extra
+        // block iterations it sat out.
+        for (g, w) in x[..n].iter().zip(&b[..n]) {
+            assert!((g - w).abs() < 1e-10, "{g} vs {w}");
+        }
+    }
+
+    /// Warm-started block solves honor per-column initial guesses, just
+    /// like the sequential path.
+    #[test]
+    fn block_solve_warm_start_beats_cold() {
+        let n = 24;
+        let a = spd(n);
+        let cols = 3;
+        let b: Vec<f64> = (0..cols * n).map(|i| (i as f64 * 0.13).sin()).collect();
+        let opts = CgOptions { tol: 1e-12, max_iter: 1000, warm_start: false, ..Default::default() };
+        // First solve cold, then perturb the RHS and re-solve warm.
+        let mut x = vec![0.0; cols * n];
+        let mut bws = BlockCgWorkspace::new(n, cols);
+        let apply = |v: &[f64], out: &mut [f64]| {
+            for c in 0..cols {
+                out[c * n..(c + 1) * n].copy_from_slice(&a.matvec(&v[c * n..(c + 1) * n]));
+            }
+        };
+        let id = |v: &[f64], out: &mut [f64]| out.copy_from_slice(v);
+        let cold = cg_solve_block(apply, id, &b, &mut x, n, opts, &mut bws);
+        assert!(cold.converged);
+        let b2: Vec<f64> =
+            b.iter().enumerate().map(|(i, v)| v + 0.01 * (i as f64).cos()).collect();
+        let mut x_warm = x.clone();
+        let warm = cg_solve_block(apply, id, &b2, &mut x_warm, n, opts.warm(), &mut bws);
+        let mut x_cold = vec![0.0; cols * n];
+        let cold2 = cg_solve_block(apply, id, &b2, &mut x_cold, n, opts, &mut bws);
+        assert!(warm.converged && cold2.converged);
+        assert!(
+            warm.block_iters < cold2.block_iters,
+            "warm {} !< cold {}",
+            warm.block_iters,
+            cold2.block_iters
+        );
+        for (p, q) in x_warm.iter().zip(&x_cold) {
+            assert!((p - q).abs() < 1e-8);
+        }
+    }
+
+    /// A zero RHS column converges instantly with a zero solution while
+    /// the other columns solve normally.
+    #[test]
+    fn block_solve_zero_rhs_column() {
+        let n = 16;
+        let a = spd(n);
+        let mut b = vec![0.0; 2 * n];
+        for i in 0..n {
+            b[n + i] = (i as f64 * 0.3).sin();
+        }
+        let mut x = vec![1.0; 2 * n]; // garbage a cold start must discard
+        let mut bws = BlockCgWorkspace::new(n, 2);
+        let res = cg_solve_block(
+            |v, out| {
+                for c in 0..2 {
+                    out[c * n..(c + 1) * n].copy_from_slice(&a.matvec(&v[c * n..(c + 1) * n]));
+                }
+            },
+            |v, out| out.copy_from_slice(v),
+            &b,
+            &mut x,
+            n,
+            CgOptions { tol: 1e-10, max_iter: 500, warm_start: false, ..Default::default() },
+            &mut bws,
+        );
+        assert!(res.converged);
+        assert_eq!(res.col_iters[0], 0);
+        assert!(x[..n].iter().all(|&v| v == 0.0));
+        assert!(x[n..].iter().any(|&v| v != 0.0));
     }
 
     #[test]

@@ -1,5 +1,9 @@
-//! Iterative solvers.
+//! Iterative solvers: scalar preconditioned CG and its lockstep
+//! multi-RHS block form (one batched operator apply per iteration).
 
 pub mod cg;
 
-pub use cg::{cg_solve, CgOptions, CgResult, CgWorkspace, Preconditioner};
+pub use cg::{
+    cg_solve, cg_solve_block, BlockCgResult, BlockCgWorkspace, CgOptions, CgResult, CgWorkspace,
+    Preconditioner,
+};

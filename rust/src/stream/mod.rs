@@ -37,9 +37,14 @@
 //!   per-point updates, banded `G` MVMs, and whole-cell grid
 //!   auto-expansion (step-preserving, so statistics remap by an index
 //!   shift) when points arrive outside the covered box.
-//! * [`StreamTrainer`] — warm-started CG refreshes (reusing
-//!   [`crate::solver::CgWorkspace`] and the previous solutions as `x0`)
-//!   under a pluggable [`crate::solver::Preconditioner`]: `Jacobi`
+//! * [`StreamTrainer`] — warm-started refreshes that solve the mean and
+//!   all `n_s` variance-probe systems as **one lockstep block-CG solve**
+//!   ([`crate::solver::cg_solve_block`], previous solutions as the
+//!   per-column `x0`): per iteration, `S` and the preconditioner are
+//!   applied to the whole block through the batched two-for-one FFT
+//!   engine ([`crate::linalg::fft`]), with converged columns masked
+//!   out. Solves run under a pluggable
+//!   [`crate::solver::Preconditioner`]: `Jacobi`
 //!   scales by `diag(B) ~= sigma^2 + sf2 s0^2 diag(G)` from the
 //!   tracked Gram diagonal, while `Spectral` (the default) inverts
 //!   `M = sigma^2 I + sf2 rho C` exactly in O(m log m) — `C = S S` the

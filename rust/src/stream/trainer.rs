@@ -2,6 +2,18 @@
 //! plus periodic Whittle hyperparameter re-optimization on a reservoir
 //! snapshot of the stream.
 //!
+//! A refresh solves `n_s + 1` systems — the mean and every variance
+//! probe — against the *identical* operator `B = sigma^2 I + sf2 S G S`.
+//! [`refresh_mdomain`] therefore runs **one lockstep block-CG solve**
+//! ([`crate::solver::cg_solve_block`]): per iteration, `S` is applied to
+//! the whole block through the batched two-for-one FFT engine
+//! ([`crate::linalg::fft`]) and each column keeps its own scalar CG
+//! recurrence with convergence masking, so results match the historical
+//! sequential path (kept as [`refresh_mdomain_sequential`] for A/B
+//! validation and `benches/fig7_batched.rs`) while the FFT work per
+//! iteration drops from `n_s + 1` transforms to `ceil((n_s + 1) / 2)`
+//! batched ones.
+//!
 //! The refresh math lives in [`refresh_mdomain`] so the single-trainer
 //! path here and the per-shard workers in [`crate::shard`] solve the
 //! identical operator, including the pluggable
@@ -31,9 +43,11 @@ use crate::coordinator::state::ServingModel;
 use crate::data::Dataset;
 use crate::gp::msgp::{GridKernel, KernelSpec, MsgpConfig, MsgpModel};
 use crate::grid::Grid;
-use crate::linalg::fft::fftn;
+use crate::linalg::fft::{apply_real_spectrum_batch, fftn, Workspace as FftWorkspace};
 use crate::linalg::C64;
-use crate::solver::{cg_solve, CgOptions, CgResult, CgWorkspace, Preconditioner};
+use crate::solver::{
+    cg_solve, cg_solve_block, BlockCgWorkspace, CgOptions, CgResult, CgWorkspace, Preconditioner,
+};
 use crate::stream::incremental::{remap_grid_vec, IncrementalSki, MIN_EFFECTIVE_MASS};
 use crate::util::Rng;
 
@@ -81,10 +95,17 @@ impl Default for StreamConfig {
 /// Diagnostics from one refresh.
 #[derive(Clone, Debug, Default)]
 pub struct RefreshStats {
-    /// CG iterations of the warm-started mean solve.
+    /// CG iterations of the warm-started mean solve (the mean column's
+    /// convergence point inside the block solve).
     pub mean_iters: usize,
-    /// Total CG iterations across the variance-probe solves.
+    /// Total CG iterations across the variance-probe solves (sum of the
+    /// probe columns' convergence points).
     pub var_iters_total: usize,
+    /// Lockstep block-CG iterations of the single multi-RHS solve: the
+    /// refresh performed `block_iters + 1` batched operator
+    /// applications in total. `0` on the sequential reference path
+    /// ([`StreamTrainer::refresh_sequential`]).
+    pub block_iters: usize,
     /// Grid size at refresh time.
     pub m: usize,
     /// Points absorbed at refresh time.
@@ -164,13 +185,57 @@ pub(crate) struct RefreshOutcome {
     pub u_mean: Vec<f64>,
     /// Stochastic explained-variance grid vector.
     pub nu_u: Vec<f64>,
-    /// CG iterations of the mean solve.
+    /// CG iterations of the mean solve (its column's convergence point).
     pub mean_iters: usize,
     /// Total CG iterations across the variance-probe solves.
     pub var_iters: usize,
+    /// Lockstep iterations of the single block solve (`0` on the
+    /// sequential reference path).
+    pub block_iters: usize,
     /// `true` when a requested preconditioner could not be built and
     /// the solves ran unpreconditioned.
     pub precond_fallback: bool,
+}
+
+/// Reusable buffers for one m-domain refresh: the lockstep block-CG
+/// state, the batched-FFT workspaces (the operator and preconditioner
+/// closures are alive simultaneously, so each owns one), the staged
+/// RHS / solution blocks, and the sequential reference path's scalar CG
+/// workspace. All buffers are `(n_s + 1) x m` and resize with the grid.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct RefreshWorkspace {
+    /// Lockstep block-CG buffers (`n_s + 1` systems of size `m`).
+    cg: BlockCgWorkspace,
+    /// Batched-FFT scratch for the operator closure.
+    fft: FftWorkspace,
+    /// Batched-FFT scratch for the preconditioner closure.
+    fft_p: FftWorkspace,
+    /// Staged right-hand-side block.
+    rhs: Vec<f64>,
+    /// Warm-start / solution block.
+    xblk: Vec<f64>,
+    /// Operator temporaries.
+    s1: Vec<f64>,
+    s2: Vec<f64>,
+    /// Scalar CG workspace for the sequential reference path.
+    seq: CgWorkspace,
+}
+
+impl RefreshWorkspace {
+    /// Fresh (empty) workspace; buffers grow on first refresh.
+    pub(crate) fn new() -> Self {
+        Self::default()
+    }
+
+    fn resize(&mut self, m: usize, cols: usize) {
+        let total = m * cols;
+        if self.rhs.len() != total {
+            self.rhs.resize(total, 0.0);
+            self.xblk.resize(total, 0.0);
+            self.s1.resize(total, 0.0);
+            self.s2.resize(total, 0.0);
+        }
+    }
 }
 
 /// A built preconditioner application `out = M^{-1} v` for one refresh:
@@ -198,6 +263,7 @@ pub(crate) enum PrecondApply {
 }
 
 impl PrecondApply {
+    /// Single-vector application (the sequential reference path).
     fn apply(&mut self, v: &[f64], out: &mut [f64]) {
         match self {
             PrecondApply::Identity => out.copy_from_slice(v),
@@ -218,6 +284,27 @@ impl PrecondApply {
                 for (o, b) in out.iter_mut().zip(buf.iter()) {
                     *o = b.re;
                 }
+            }
+        }
+    }
+
+    /// Batched application over a row-major `cols x m` block: the
+    /// spectral arm runs through the two-for-one batched FFT engine
+    /// (half the transforms of `cols` single applications), the Jacobi
+    /// arm is a per-column elementwise divide.
+    fn apply_batch(&mut self, v: &[f64], out: &mut [f64], ws: &mut FftWorkspace) {
+        match self {
+            PrecondApply::Identity => out.copy_from_slice(v),
+            PrecondApply::Diag(d) => {
+                let m = d.len();
+                for (vc, oc) in v.chunks_exact(m).zip(out.chunks_exact_mut(m)) {
+                    for ((o, &vi), &di) in oc.iter_mut().zip(vc).zip(d.iter()) {
+                        *o = vi / di;
+                    }
+                }
+            }
+            PrecondApply::Spectral { shape, inv, .. } => {
+                apply_real_spectrum_batch(v, out, shape, inv, |e| e, ws);
             }
         }
     }
@@ -333,24 +420,127 @@ fn solve_mdomain(
 
 /// Rebuild the fast-prediction caches from sufficient statistics:
 /// `u_mean = sf2 S B^{-1} S b` and the stochastic `nu_U` via the probe
-/// accumulators, where `B = sigma^2 I + sf2 S G S`. `(n_s + 1)` CG
-/// solves, each O(m log m + m 7^D) — independent of n. Shared by
-/// [`StreamTrainer::refresh`] and the per-shard workers (which combine
-/// an owned and a halo accumulator into one `G` apply).
+/// accumulators, where `B = sigma^2 I + sf2 S G S`. The mean and all
+/// `n_s` probe systems share the operator, so the refresh performs
+/// **exactly one lockstep block-CG solve** ([`cg_solve_block`]): per
+/// iteration `S` is applied to the whole `(n_s + 1) x m` block through
+/// the batched two-for-one FFT engine — `ceil((n_s + 1) / 2)` complex
+/// transforms instead of `n_s + 1` — with per-column convergence
+/// masking, each solve O(m log m + m 7^D) per column and independent of
+/// n. Shared by [`StreamTrainer::refresh`] and the per-shard workers
+/// (which combine an owned and a halo accumulator into one `G` apply).
 ///
 /// `opts.precondition` selects the solve preconditioner (see the
 /// [module docs](self) for the operator algebra): `Jacobi` builds the
 /// O(m) diagonal from the tracked `diag(G)`; `Spectral` builds the
 /// O(m log m) BCCB approximate inverse `(sigma^2 I + sf2 rho C)^{-1}`
 /// from the grid operator's circulant spectrum and the mean occupancy
-/// `rho`. Both typically cut CG iterations well below the
-/// unpreconditioned count on spatially non-uniform streams.
+/// `rho`, applied batched through the same FFT engine. Both typically
+/// cut CG iterations well below the unpreconditioned count on
+/// spatially non-uniform streams.
 pub(crate) fn refresh_mdomain(
     inp: RefreshInputs<'_>,
     g_apply: &mut dyn FnMut(&[f64], &mut [f64]),
     t_mean: &mut [f64],
     t_probes: &mut [Vec<f64>],
-    ws: &mut CgWorkspace,
+    ws: &mut RefreshWorkspace,
+) -> RefreshOutcome {
+    let m = inp.wty.len();
+    let ns = inp.g_probes.len();
+    let cols = ns + 1;
+    let sf2 = inp.sf2;
+    let sigma2 = inp.sigma2;
+    let (mut precond, precond_fallback) = build_precond(&inp);
+    ws.resize(m, cols);
+    let RefreshWorkspace { cg, fft, fft_p, rhs, xblk, s1, s2, .. } = ws;
+    // --- stage the RHS block: one batched S over [b | g_1 .. g_ns] ---
+    s2[..m].copy_from_slice(inp.wty);
+    for (k, g) in inp.g_probes.iter().enumerate() {
+        s2[(k + 1) * m..(k + 2) * m].copy_from_slice(g);
+    }
+    inp.gk.sqrt_matvec_batch(&s2[..cols * m], &mut s1[..cols * m], fft);
+    rhs[..m].copy_from_slice(&s1[..m]);
+    // p~_k = sqrt(sf2) G S g_k + sigma q_k (the m-domain image of the
+    // Papandreou–Yuille probe), staged into s2 rows 0..ns ...
+    let sig = sigma2.sqrt();
+    let rsf = sf2.sqrt();
+    for k in 0..ns {
+        g_apply(&s1[(k + 1) * m..(k + 2) * m], &mut s2[k * m..(k + 1) * m]);
+        let q = &inp.probes_q[k];
+        for (v, &qi) in s2[k * m..(k + 1) * m].iter_mut().zip(q) {
+            *v = rsf * *v + sig * qi;
+        }
+    }
+    // ... then rhs rows 1.. = S p~ in a second batched apply.
+    if ns > 0 {
+        inp.gk.sqrt_matvec_batch(&s2[..ns * m], &mut rhs[m..cols * m], fft);
+    }
+    // --- warm starts in, ONE block solve (mean + probes), warm starts out ---
+    xblk[..m].copy_from_slice(t_mean);
+    for (k, t) in t_probes.iter().enumerate() {
+        xblk[(k + 1) * m..(k + 2) * m].copy_from_slice(t);
+    }
+    let gk = inp.gk;
+    let mut apply = |v: &[f64], out: &mut [f64]| {
+        gk.sqrt_matvec_batch(v, s1, fft);
+        for c in 0..cols {
+            g_apply(&s1[c * m..(c + 1) * m], &mut s2[c * m..(c + 1) * m]);
+        }
+        gk.sqrt_matvec_batch(s2, s1, fft);
+        for ((o, &s), &vi) in out.iter_mut().zip(s1.iter()).zip(v) {
+            *o = sf2 * s + sigma2 * vi;
+        }
+    };
+    let res = cg_solve_block(
+        &mut apply,
+        |v: &[f64], out: &mut [f64]| precond.apply_batch(v, out, fft_p),
+        rhs,
+        xblk,
+        m,
+        inp.opts,
+        cg,
+    );
+    t_mean.copy_from_slice(&xblk[..m]);
+    for (k, t) in t_probes.iter_mut().enumerate() {
+        t.copy_from_slice(&xblk[(k + 1) * m..(k + 2) * m]);
+    }
+    // --- one batched S maps every solution to the u-domain ---
+    inp.gk.sqrt_matvec_batch(&xblk[..cols * m], &mut s1[..cols * m], fft);
+    let mut u_mean = s1[..m].to_vec();
+    for v in u_mean.iter_mut() {
+        *v *= sf2;
+    }
+    let mut acc = vec![0.0f64; m];
+    for k in 0..ns {
+        for (a, &v) in acc.iter_mut().zip(&s1[(k + 1) * m..(k + 2) * m]) {
+            let t = sf2 * v;
+            *a += t * t;
+        }
+    }
+    for a in acc.iter_mut() {
+        *a /= ns.max(1) as f64;
+    }
+    RefreshOutcome {
+        u_mean,
+        nu_u: acc,
+        mean_iters: res.col_iters[0],
+        var_iters: res.col_iters[1..].iter().sum(),
+        block_iters: res.block_iters,
+        precond_fallback,
+    }
+}
+
+/// Reference implementation of the refresh: the historical `n_s + 1`
+/// *sequential* warm-started CG solves against the identical operator.
+/// Kept so the acceptance tests can pin block == sequential and so
+/// `benches/fig7_batched.rs` can measure the speedup; production
+/// refreshes always take the block path above.
+pub(crate) fn refresh_mdomain_sequential(
+    inp: RefreshInputs<'_>,
+    g_apply: &mut dyn FnMut(&[f64], &mut [f64]),
+    t_mean: &mut [f64],
+    t_probes: &mut [Vec<f64>],
+    ws: &mut RefreshWorkspace,
 ) -> RefreshOutcome {
     let m = inp.wty.len();
     let sf2 = inp.sf2;
@@ -369,7 +559,7 @@ pub(crate) fn refresh_mdomain(
         &s_b,
         t_mean,
         inp.opts,
-        ws,
+        &mut ws.seq,
     );
     let mut u_mean = inp.gk.sqrt_matvec(t_mean);
     for v in u_mean.iter_mut() {
@@ -383,8 +573,7 @@ pub(crate) fn refresh_mdomain(
     let ns = inp.g_probes.len().max(1);
     let mut gsg = vec![0.0f64; m];
     for (k, g_k) in inp.g_probes.iter().enumerate() {
-        // p~ = sqrt(sf2) G S g_k + sigma q_k  (the m-domain image of
-        // the Papandreou–Yuille probe), then solve B t = S p~.
+        // p~ = sqrt(sf2) G S g_k + sigma q_k, then solve B t = S p~.
         let sg = inp.gk.sqrt_matvec(g_k);
         g_apply(&sg, &mut gsg);
         let q = &inp.probes_q[k];
@@ -400,7 +589,7 @@ pub(crate) fn refresh_mdomain(
             &rhs,
             &mut t_probes[k],
             inp.opts,
-            ws,
+            &mut ws.seq,
         );
         var_iters += res.iters;
         let uk = inp.gk.sqrt_matvec(&t_probes[k]);
@@ -417,6 +606,7 @@ pub(crate) fn refresh_mdomain(
         nu_u: acc,
         mean_iters: mean_res.iters,
         var_iters,
+        block_iters: 0,
         precond_fallback,
     }
 }
@@ -439,7 +629,7 @@ pub struct StreamTrainer {
     /// Fixed `N(0, I_m)` probe draws (`n_s` x m); new cells after an
     /// expansion get fresh normals, existing cells keep theirs.
     g_probes: Vec<Vec<f64>>,
-    ws: CgWorkspace,
+    rws: RefreshWorkspace,
     probe_rng: Rng,
     /// Reservoir snapshot of the stream for hyper re-optimization.
     /// Shared (`Arc`) so a sharded facade can snapshot it without
@@ -483,7 +673,7 @@ impl StreamTrainer {
             t_mean: vec![0.0; m],
             u_mean: vec![0.0; m],
             nu_u: vec![0.0; m],
-            ws: CgWorkspace::new(m),
+            rws: RefreshWorkspace::new(),
             probe_rng,
             reservoir: Arc::new(Mutex::new(Reservoir::default())),
             res_rng: Rng::new(seed ^ 0x7e5e_u64),
@@ -653,17 +843,31 @@ impl StreamTrainer {
                 .map(|(&v, &keep)| if keep > 0.5 { v } else { self.probe_rng.normal() })
                 .collect();
         }
-        self.ws = CgWorkspace::new(new_grid.m());
+        self.rws = RefreshWorkspace::new();
     }
 
     /// Warm-started refresh of the fast-prediction caches:
     /// `u_mean = sf2 S B^{-1} S b` and the stochastic `nu_U` via the
-    /// probe accumulators. Cost: `(n_s + 1)` CG solves on the m-domain
-    /// operator `B = sigma^2 I + sf2 S G S` — independent of n. Each
-    /// solve uses the preconditioner selected by
-    /// `cfg.msgp.cg.precondition` (`Spectral` by default; see
-    /// [`refresh_mdomain`]).
+    /// probe accumulators. Cost: **one lockstep block-CG solve** over
+    /// the mean + `n_s` probe systems on the m-domain operator
+    /// `B = sigma^2 I + sf2 S G S` — one batched operator apply per
+    /// iteration, independent of n. Each column uses the preconditioner
+    /// selected by `cfg.msgp.cg.precondition` (`Spectral` by default,
+    /// applied batched; see [`refresh_mdomain`]).
     pub fn refresh(&mut self) -> RefreshStats {
+        self.refresh_impl(true)
+    }
+
+    /// Reference refresh running the historical `n_s + 1` *sequential*
+    /// CG solves instead of the single block solve — identical results
+    /// (the acceptance tests pin agreement to 1e-8), kept public for
+    /// A/B validation and the `benches/fig7_batched.rs` speedup table.
+    /// Production callers want [`Self::refresh`].
+    pub fn refresh_sequential(&mut self) -> RefreshStats {
+        self.refresh_impl(false)
+    }
+
+    fn refresh_impl(&mut self, block: bool) -> RefreshStats {
         let t0 = Instant::now();
         let m = self.m();
         let opts = self.cfg.msgp.cg.warm();
@@ -681,13 +885,23 @@ impl StreamTrainer {
             g_diag: Some(ski.g_diag()),
         };
         let mut g_apply = |v: &[f64], out: &mut [f64]| ski.g_matvec_into(v, out);
-        let out = refresh_mdomain(
-            inputs,
-            &mut g_apply,
-            &mut self.t_mean,
-            &mut self.t_probes,
-            &mut self.ws,
-        );
+        let out = if block {
+            refresh_mdomain(
+                inputs,
+                &mut g_apply,
+                &mut self.t_mean,
+                &mut self.t_probes,
+                &mut self.rws,
+            )
+        } else {
+            refresh_mdomain_sequential(
+                inputs,
+                &mut g_apply,
+                &mut self.t_mean,
+                &mut self.t_probes,
+                &mut self.rws,
+            )
+        };
         self.u_mean = out.u_mean;
         self.nu_u = out.nu_u;
         self.refresh_count += 1;
@@ -698,6 +912,7 @@ impl StreamTrainer {
         let stats = RefreshStats {
             mean_iters: out.mean_iters,
             var_iters_total: out.var_iters,
+            block_iters: out.block_iters,
             m,
             n: self.n(),
             wall: t0.elapsed(),
@@ -816,9 +1031,148 @@ mod tests {
         };
         let mut t_mean = vec![0.0; m];
         let mut t_probes: Vec<Vec<f64>> = (0..ns).map(|_| vec![0.0; m]).collect();
-        let mut ws = CgWorkspace::new(m);
+        let mut ws = RefreshWorkspace::new();
         let mut g_apply = |v: &[f64], out: &mut [f64]| ski.g_matvec_into(v, out);
         refresh_mdomain(inputs, &mut g_apply, &mut t_mean, &mut t_probes, &mut ws)
+    }
+
+    fn fixed_probes(m: usize, ns: usize) -> Vec<Vec<f64>> {
+        let mut rng = Rng::new(4242);
+        (0..ns).map(|_| rng.normal_vec(m)).collect()
+    }
+
+    fn refresh_inputs<'a>(
+        gk: &'a GridKernel,
+        ski: &'a IncrementalSki,
+        g_probes: &'a [Vec<f64>],
+        opts: CgOptions,
+    ) -> RefreshInputs<'a> {
+        RefreshInputs {
+            gk,
+            sf2: 1.0,
+            sigma2: 0.1,
+            opts,
+            wty: ski.wty(),
+            probes_q: ski.probes(),
+            g_probes,
+            g_diag: Some(ski.g_diag()),
+        }
+    }
+
+    /// Acceptance (tentpole): the single block solve reproduces the
+    /// `n_s + 1` sequential `solve_mdomain` results to 1e-10 on a
+    /// skewed stream — cold, warm-started, and under the Spectral
+    /// preconditioner.
+    #[test]
+    fn block_refresh_matches_sequential_to_1e10() {
+        let (grid, mut ski) = skewed_ski(48, 500);
+        let gk = GridKernel::new(&se_kernel(), &grid, &MsgpConfig::default());
+        let m = ski.m();
+        let ns = ski.probes().len();
+        let g_probes = fixed_probes(m, ns);
+        let tight = CgOptions { tol: 1e-13, max_iter: 8000, ..Default::default() };
+        for precond in [Preconditioner::None, Preconditioner::Spectral] {
+            let opts = CgOptions { precondition: precond, ..tight };
+            // --- cold start ---
+            let mut tm_b = vec![0.0; m];
+            let mut tp_b: Vec<Vec<f64>> = (0..ns).map(|_| vec![0.0; m]).collect();
+            let mut ws_b = RefreshWorkspace::new();
+            let mut tm_s = vec![0.0; m];
+            let mut tp_s: Vec<Vec<f64>> = (0..ns).map(|_| vec![0.0; m]).collect();
+            let mut ws_s = RefreshWorkspace::new();
+            {
+                let mut g_apply = |v: &[f64], out: &mut [f64]| ski.g_matvec_into(v, out);
+                let blk = refresh_mdomain(
+                    refresh_inputs(&gk, &ski, &g_probes, opts),
+                    &mut g_apply,
+                    &mut tm_b,
+                    &mut tp_b,
+                    &mut ws_b,
+                );
+                let seq = refresh_mdomain_sequential(
+                    refresh_inputs(&gk, &ski, &g_probes, opts),
+                    &mut g_apply,
+                    &mut tm_s,
+                    &mut tp_s,
+                    &mut ws_s,
+                );
+                for (a, b) in blk.u_mean.iter().zip(&seq.u_mean) {
+                    assert!((a - b).abs() < 1e-10, "{precond:?} cold u_mean: {a} vs {b}");
+                }
+                for (a, b) in blk.nu_u.iter().zip(&seq.nu_u) {
+                    assert!((a - b).abs() < 1e-10, "{precond:?} cold nu_u: {a} vs {b}");
+                }
+            }
+            // --- warm start: absorb more data, re-solve from the
+            //     previous solutions on both paths ---
+            let mut rng = Rng::new(77);
+            for _ in 0..150 {
+                let x = rng.uniform_in(-4.5, -2.0);
+                ski.ingest(&[x], 0.3 * (x * 0.9).cos());
+            }
+            let warm = CgOptions { precondition: precond, ..tight }.warm();
+            let mut g_apply = |v: &[f64], out: &mut [f64]| ski.g_matvec_into(v, out);
+            let blk_w = refresh_mdomain(
+                refresh_inputs(&gk, &ski, &g_probes, warm),
+                &mut g_apply,
+                &mut tm_b,
+                &mut tp_b,
+                &mut ws_b,
+            );
+            let seq_w = refresh_mdomain_sequential(
+                refresh_inputs(&gk, &ski, &g_probes, warm),
+                &mut g_apply,
+                &mut tm_s,
+                &mut tp_s,
+                &mut ws_s,
+            );
+            assert!(blk_w.block_iters > 0 && seq_w.block_iters == 0);
+            for (a, b) in blk_w.u_mean.iter().zip(&seq_w.u_mean) {
+                assert!((a - b).abs() < 1e-10, "{precond:?} warm u_mean: {a} vs {b}");
+            }
+            for (a, b) in blk_w.nu_u.iter().zip(&seq_w.nu_u) {
+                assert!((a - b).abs() < 1e-10, "{precond:?} warm nu_u: {a} vs {b}");
+            }
+        }
+    }
+
+    /// Acceptance: the refresh performs exactly one block CG solve.
+    /// Counting `G` applications pins it: `n_s` during RHS staging plus
+    /// `(block_iters + 1) * (n_s + 1)` inside the single lockstep solve
+    /// (one batched operator application per iteration plus the initial
+    /// residual) — no per-system solve loop remains.
+    #[test]
+    fn refresh_is_exactly_one_block_solve() {
+        let (grid, ski) = skewed_ski(48, 400);
+        let gk = GridKernel::new(&se_kernel(), &grid, &MsgpConfig::default());
+        let m = ski.m();
+        let ns = ski.probes().len();
+        let g_probes = fixed_probes(m, ns);
+        let opts = CgOptions { tol: 1e-10, max_iter: 4000, ..Default::default() }.spectral();
+        let mut tm = vec![0.0; m];
+        let mut tp: Vec<Vec<f64>> = (0..ns).map(|_| vec![0.0; m]).collect();
+        let mut ws = RefreshWorkspace::new();
+        let mut g_calls = 0usize;
+        let mut g_apply = |v: &[f64], out: &mut [f64]| {
+            g_calls += 1;
+            ski.g_matvec_into(v, out)
+        };
+        let out = refresh_mdomain(
+            refresh_inputs(&gk, &ski, &g_probes, opts),
+            &mut g_apply,
+            &mut tm,
+            &mut tp,
+            &mut ws,
+        );
+        assert!(out.block_iters > 0);
+        assert_eq!(
+            g_calls,
+            ns + (out.block_iters + 1) * (ns + 1),
+            "G applications must account for exactly one block solve"
+        );
+        // Per-column counts stay bounded by the lockstep length.
+        assert!(out.mean_iters <= out.block_iters);
+        assert!(out.var_iters <= ns * out.block_iters);
     }
 
     /// Satellite regression: a preconditioner request without the

@@ -10,7 +10,9 @@
 //! whose eigendecomposition is `C = F^H diag(F c) F`, carrying all the
 //! Toeplitz-case benefits over to multivariate data.
 
-use crate::linalg::fft::{fftn, next_pow2};
+use crate::linalg::fft::{
+    apply_real_spectrum_batch, fftn, fftn_batch, next_pow2, with_workspace, Workspace,
+};
 use crate::linalg::C64;
 
 /// A symmetric BTTB operator for a stationary kernel on a regular grid.
@@ -20,8 +22,11 @@ pub struct Bttb {
     pub shape: Vec<usize>,
     /// Embedding shape (per-dim power of two `>= 2 n_d - 1`).
     embed_shape: Vec<usize>,
-    /// FFT of the embedded kernel tensor (the embedding's spectrum).
-    spectrum: Vec<C64>,
+    /// FFT of the embedded kernel tensor. The embedding is even under
+    /// index negation (symmetric kernel), so its spectrum is real; only
+    /// the real parts are stored, which also makes the two-for-one
+    /// batched MVM exact.
+    spectrum: Vec<f64>,
 }
 
 impl Bttb {
@@ -72,7 +77,8 @@ impl Bttb {
             break;
         }
         fftn(&mut tensor, &embed_shape, false);
-        Bttb { shape: shape.to_vec(), embed_shape, spectrum: tensor }
+        let spectrum = tensor.into_iter().map(|z| z.re).collect();
+        Bttb { shape: shape.to_vec(), embed_shape, spectrum }
     }
 
     /// Total dimension `m = prod shape`.
@@ -81,24 +87,69 @@ impl Bttb {
     }
 
     /// Exact MVM `K v` via the circulant embedding: O(m log m).
+    /// Allocates only the returned vector (embedding tensor and FFT
+    /// scratch come from the thread-shared batched-engine workspace).
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
-        assert_eq!(x.len(), self.m());
-        let total: usize = self.embed_shape.iter().product();
-        let mut buf = vec![C64::ZERO; total];
-        // Scatter x into the leading corner of the embedding tensor.
-        self.for_each_corner(|flat_small, flat_big| {
-            buf[flat_big] = C64::real(x[flat_small]);
-        });
-        fftn(&mut buf, &self.embed_shape, false);
-        for (b, s) in buf.iter_mut().zip(&self.spectrum) {
-            *b = *b * *s;
-        }
-        fftn(&mut buf, &self.embed_shape, true);
         let mut out = vec![0.0; self.m()];
-        self.for_each_corner(|flat_small, flat_big| {
-            out[flat_small] = buf[flat_big].re;
-        });
+        with_workspace(|ws| self.matvec_batch(x, &mut out, ws));
         out
+    }
+
+    /// Exact batched MVM `K Y` for a row-major `b x m` block: pairs of
+    /// real vectors are scattered into the corners of one complex
+    /// embedding tensor each (two-for-one — the embedding spectrum is
+    /// real), transformed with [`fftn_batch`]'s cache-blocked panels,
+    /// scaled, and gathered back. Allocation-free given a warm
+    /// [`Workspace`].
+    pub fn matvec_batch(&self, block: &[f64], out: &mut [f64], ws: &mut Workspace) {
+        let m = self.m();
+        assert!(m > 0 && block.len() % m == 0, "block is b x m row-major");
+        assert_eq!(out.len(), block.len());
+        let rows = block.len() / m;
+        let pairs = rows.div_ceil(2);
+        let total: usize = self.embed_shape.iter().product();
+        let Workspace { packed, scratch } = ws;
+        packed.clear();
+        packed.resize(pairs * total, C64::ZERO);
+        for j in 0..pairs {
+            let re = &block[2 * j * m..(2 * j + 1) * m];
+            let im = if 2 * j + 1 < rows {
+                Some(&block[(2 * j + 1) * m..(2 * j + 2) * m])
+            } else {
+                None
+            };
+            let tensor = &mut packed[j * total..(j + 1) * total];
+            self.for_each_corner(|flat_small, flat_big| {
+                tensor[flat_big] = C64::new(
+                    re[flat_small],
+                    im.map_or(0.0, |v| v[flat_small]),
+                );
+            });
+        }
+        fftn_batch(packed, pairs, &self.embed_shape, false, scratch);
+        for tensor in packed.chunks_exact_mut(total) {
+            for (b, &s) in tensor.iter_mut().zip(&self.spectrum) {
+                *b = b.scale(s);
+            }
+        }
+        fftn_batch(packed, pairs, &self.embed_shape, true, scratch);
+        for j in 0..pairs {
+            let tensor = &packed[j * total..(j + 1) * total];
+            // Split the output block around the pair boundary so the two
+            // destination rows borrow disjointly.
+            let (head, tail) = out.split_at_mut((2 * j + 1) * m);
+            let re_out = &mut head[2 * j * m..];
+            let im_out = if 2 * j + 1 < rows { Some(&mut tail[..m]) } else { None };
+            match im_out {
+                Some(im_out) => self.for_each_corner(|flat_small, flat_big| {
+                    re_out[flat_small] = tensor[flat_big].re;
+                    im_out[flat_small] = tensor[flat_big].im;
+                }),
+                None => self.for_each_corner(|flat_small, flat_big| {
+                    re_out[flat_small] = tensor[flat_big].re;
+                }),
+            }
+        }
     }
 
     /// Iterate over the `shape` corner inside the embedding tensor,
@@ -215,15 +266,34 @@ impl Bccb {
         self.eigs.iter().map(|&e| e.max(0.0)).collect()
     }
 
+    /// Batched MVM `C Y` over a row-major `b x m` block, two RHS per
+    /// complex transform (the BCCB spectrum is real).
+    pub fn matvec_batch(&self, block: &[f64], out: &mut [f64], ws: &mut Workspace) {
+        apply_real_spectrum_batch(block, out, &self.shape, &self.eigs, |e| e, ws);
+    }
+
+    /// Batched [`Self::solve`] over a row-major `b x m` block.
+    pub fn solve_batch(&self, block: &[f64], out: &mut [f64], jitter: f64, ws: &mut Workspace) {
+        apply_real_spectrum_batch(
+            block,
+            out,
+            &self.shape,
+            &self.eigs,
+            |e| 1.0 / (e.max(0.0) + jitter),
+            ws,
+        );
+    }
+
+    /// Batched [`Self::sqrt_matvec`] over a row-major `b x m` block.
+    pub fn sqrt_matvec_batch(&self, block: &[f64], out: &mut [f64], ws: &mut Workspace) {
+        apply_real_spectrum_batch(block, out, &self.shape, &self.eigs, |e| e.max(0.0).sqrt(), ws);
+    }
+
     fn apply_spectrum(&self, x: &[f64], f: impl Fn(f64) -> f64) -> Vec<f64> {
         assert_eq!(x.len(), self.m());
-        let mut buf: Vec<C64> = x.iter().map(|&v| C64::real(v)).collect();
-        fftn(&mut buf, &self.shape, false);
-        for (b, &e) in buf.iter_mut().zip(&self.eigs) {
-            *b = b.scale(f(e));
-        }
-        fftn(&mut buf, &self.shape, true);
-        buf.into_iter().map(|z| z.re).collect()
+        let mut out = vec![0.0; x.len()];
+        with_workspace(|ws| apply_real_spectrum_batch(x, &mut out, &self.shape, &self.eigs, f, ws));
+        out
     }
 }
 
@@ -281,6 +351,50 @@ mod tests {
         let want = dense.matvec(&x);
         for (g, w) in got.iter().zip(&want) {
             assert!((g - w).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn bttb_matvec_batch_matches_per_vector() {
+        let shape = [5usize, 4];
+        let b = Bttb::new(&shape, &k_iso);
+        let m = b.m();
+        for rows in 1..=3 {
+            let block: Vec<f64> = (0..rows * m).map(|i| (i as f64 * 0.37).sin()).collect();
+            let mut got = vec![0.0; rows * m];
+            let mut ws = Workspace::new();
+            b.matvec_batch(&block, &mut got, &mut ws);
+            for r in 0..rows {
+                let want = b.matvec(&block[r * m..(r + 1) * m]);
+                for (g, w) in got[r * m..(r + 1) * m].iter().zip(&want) {
+                    assert!((g - w).abs() < 1e-9, "rows={rows} r={r}: {g} vs {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bccb_batch_ops_match_per_vector() {
+        let shape = [6usize, 5];
+        let bccb = Bccb::whittle(&shape, 2, &k_iso);
+        let m = bccb.m();
+        let rows = 3;
+        let block: Vec<f64> = (0..rows * m).map(|i| (i as f64 * 0.19).cos()).collect();
+        let mut ws = Workspace::new();
+        let mut got = vec![0.0; rows * m];
+        bccb.solve_batch(&block, &mut got, 0.5, &mut ws);
+        for r in 0..rows {
+            let want = bccb.solve(&block[r * m..(r + 1) * m], 0.5);
+            for (g, w) in got[r * m..(r + 1) * m].iter().zip(&want) {
+                assert!((g - w).abs() < 1e-10, "solve: {g} vs {w}");
+            }
+        }
+        bccb.sqrt_matvec_batch(&block, &mut got, &mut ws);
+        for r in 0..rows {
+            let want = bccb.sqrt_matvec(&block[r * m..(r + 1) * m]);
+            for (g, w) in got[r * m..(r + 1) * m].iter().zip(&want) {
+                assert!((g - w).abs() < 1e-10, "sqrt: {g} vs {w}");
+            }
         }
     }
 

@@ -18,7 +18,7 @@
 //! * **Whittle** (1954) — periodic summation `c_i = sum_j k_{i+jm}`,
 //!   truncated at `w` wraps; the paper's recommended choice.
 
-use crate::linalg::fft::{plan, rfft};
+use crate::linalg::fft::{apply_real_spectrum_batch, plan, rfft, with_workspace, Workspace};
 use crate::linalg::C64;
 
 /// Which circulant approximation of a Toeplitz matrix to use.
@@ -82,17 +82,27 @@ impl Circulant {
     }
 
     /// Matrix–vector product via two FFTs: `C y = F^{-1}(diag(F c) F y)`.
+    /// Allocates only the returned vector; the complex FFT buffer comes
+    /// from the thread-shared batched-engine workspace (see
+    /// [`Self::matvec_into`] for the fully allocation-free form).
     pub fn matvec(&self, y: &[f64]) -> Vec<f64> {
-        let m = self.m();
-        assert_eq!(y.len(), m);
-        let p = plan(m);
-        let mut buf: Vec<C64> = y.iter().map(|&v| C64::real(v)).collect();
-        p.forward(&mut buf);
-        for (b, &e) in buf.iter_mut().zip(&self.eigs) {
-            *b = b.scale(e);
-        }
-        p.inverse(&mut buf);
-        buf.into_iter().map(|z| z.re).collect()
+        let mut out = vec![0.0; y.len()];
+        with_workspace(|ws| self.matvec_into(y, &mut out, ws));
+        out
+    }
+
+    /// [`Self::matvec`] into a caller-provided output through a reusable
+    /// [`Workspace`]: zero allocations.
+    pub fn matvec_into(&self, y: &[f64], out: &mut [f64], ws: &mut Workspace) {
+        assert_eq!(y.len(), self.m());
+        apply_real_spectrum_batch(y, out, &[self.m()], &self.eigs, |e| e, ws);
+    }
+
+    /// Batched MVM `C Y` for a row-major `b x m` block `Y`, two RHS per
+    /// complex transform (the eigenvalues are real, so the two-for-one
+    /// packing is exact). Allocation-free given a warm [`Workspace`].
+    pub fn matvec_batch(&self, block: &[f64], out: &mut [f64], ws: &mut Workspace) {
+        apply_real_spectrum_batch(block, out, &[self.m()], &self.eigs, |e| e, ws);
     }
 
     /// Solve `(C + jitter I) x = y` in the Fourier domain, O(m log m).
@@ -104,16 +114,36 @@ impl Circulant {
     /// flips its sign, breaking positive-definiteness). The solve is
     /// therefore exact for the *clipped* (PSD) circulant.
     pub fn solve(&self, y: &[f64], jitter: f64) -> Vec<f64> {
-        let m = self.m();
-        assert_eq!(y.len(), m);
-        let p = plan(m);
-        let mut buf: Vec<C64> = y.iter().map(|&v| C64::real(v)).collect();
-        p.forward(&mut buf);
-        for (b, &e) in buf.iter_mut().zip(&self.eigs) {
-            *b = b.scale(1.0 / (e.max(0.0) + jitter));
-        }
-        p.inverse(&mut buf);
-        buf.into_iter().map(|z| z.re).collect()
+        let mut out = vec![0.0; y.len()];
+        with_workspace(|ws| self.solve_into(y, &mut out, jitter, ws));
+        out
+    }
+
+    /// [`Self::solve`] into a caller-provided output through a reusable
+    /// [`Workspace`]: zero allocations.
+    pub fn solve_into(&self, y: &[f64], out: &mut [f64], jitter: f64, ws: &mut Workspace) {
+        assert_eq!(y.len(), self.m());
+        apply_real_spectrum_batch(
+            y,
+            out,
+            &[self.m()],
+            &self.eigs,
+            |e| 1.0 / (e.max(0.0) + jitter),
+            ws,
+        );
+    }
+
+    /// Batched [`Self::solve`] over a row-major `b x m` block, two RHS
+    /// per complex transform.
+    pub fn solve_batch(&self, block: &[f64], out: &mut [f64], jitter: f64, ws: &mut Workspace) {
+        apply_real_spectrum_batch(
+            block,
+            out,
+            &[self.m()],
+            &self.eigs,
+            |e| 1.0 / (e.max(0.0) + jitter),
+            ws,
+        );
     }
 
     /// `log |C + sigma2 I|` with eigenvalue clipping at zero, as in the
@@ -402,6 +432,41 @@ mod tests {
         let want = t.matvec(&y);
         for i in 0..m {
             assert!((full[i] - want[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn matvec_batch_matches_per_vector() {
+        let c = Circulant::new(vec![4.0, 1.0, 0.5, 0.25, 0.5, 1.0]);
+        let m = c.m();
+        for rows in 1..=5 {
+            let block: Vec<f64> = (0..rows * m).map(|i| (i as f64 * 0.31).sin()).collect();
+            let mut got = vec![0.0; rows * m];
+            let mut ws = crate::linalg::fft::Workspace::new();
+            c.matvec_batch(&block, &mut got, &mut ws);
+            for r in 0..rows {
+                let want = c.matvec(&block[r * m..(r + 1) * m]);
+                for (g, w) in got[r * m..(r + 1) * m].iter().zip(&want) {
+                    assert!((g - w).abs() < 1e-10, "rows={rows} r={r}: {g} vs {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn solve_batch_matches_per_vector() {
+        let c = Circulant::new(vec![4.0, 1.0, 0.5, 0.25, 0.5, 1.0]);
+        let m = c.m();
+        let rows = 3;
+        let block: Vec<f64> = (0..rows * m).map(|i| (i as f64 * 0.7).cos()).collect();
+        let mut got = vec![0.0; rows * m];
+        let mut ws = crate::linalg::fft::Workspace::new();
+        c.solve_batch(&block, &mut got, 0.1, &mut ws);
+        for r in 0..rows {
+            let want = c.solve(&block[r * m..(r + 1) * m], 0.1);
+            for (g, w) in got[r * m..(r + 1) * m].iter().zip(&want) {
+                assert!((g - w).abs() < 1e-10, "{g} vs {w}");
+            }
         }
     }
 

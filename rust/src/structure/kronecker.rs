@@ -14,6 +14,10 @@ use super::circulant::{circulant_approx, Circulant, CirculantKind};
 use super::toeplitz::SymToeplitz;
 use crate::linalg::dense::Mat;
 use crate::linalg::eigen::{sym_eig, SymEig};
+use crate::linalg::fft::{
+    apply_axis_spectrum_packed, apply_real_spectrum_batch, pack_real_pairs, unpack_real_pairs,
+    with_workspace, Workspace,
+};
 
 /// Apply a linear operator `op: R^{shape[axis]} -> R^{shape[axis]}` along
 /// one axis of a row-major tensor, in place (via scratch).
@@ -134,6 +138,31 @@ pub struct KronToeplitz {
     /// Per-dimension circulant approximations (for eigenvalues / logdet /
     /// square-root sampling).
     pub circulants: Vec<Circulant>,
+    /// Cached separable square-root spectrum: the Kronecker product of
+    /// the per-factor `sqrt(max(eig, 0))` spectra, row-major over the
+    /// grid (length `m`). Lets [`Self::sqrt_matvec`] /
+    /// [`Self::sqrt_matvec_batch`] apply `K^{1/2}` as one diagonal in
+    /// the multi-dimensional Fourier basis instead of rebuilding a
+    /// `sqrt_circulant` per factor per call.
+    sqrt_spec: Vec<f64>,
+}
+
+/// Kronecker product of the per-factor clipped square-root spectra,
+/// row-major tensor order (matches [`KronToeplitz::approx_eigenvalues`]
+/// with the square root pushed inside the product — all terms are
+/// non-negative, so the two orders agree).
+fn product_sqrt_spec(circulants: &[Circulant]) -> Vec<f64> {
+    let mut vals = vec![1.0f64];
+    for c in circulants {
+        let mut next = Vec::with_capacity(vals.len() * c.eigs.len());
+        for &a in &vals {
+            for &b in &c.eigs {
+                next.push(a * b.max(0.0).sqrt());
+            }
+        }
+        vals = next;
+    }
+    vals
 }
 
 impl KronToeplitz {
@@ -147,21 +176,24 @@ impl KronToeplitz {
         tails: &[&dyn Fn(usize) -> f64],
     ) -> Self {
         assert_eq!(cols.len(), tails.len());
-        let circulants = cols
+        let circulants: Vec<Circulant> = cols
             .iter()
             .zip(tails)
             .map(|(k, t)| circulant_approx(CirculantKind::Whittle, k, wraps, Some(*t)))
             .collect();
         let factors = cols.into_iter().map(SymToeplitz::new).collect();
-        KronToeplitz { factors, circulants }
+        let sqrt_spec = product_sqrt_spec(&circulants);
+        KronToeplitz { factors, circulants, sqrt_spec }
     }
 
     /// Build with a chosen circulant kind (no tail: Strang/Chan/... don't
     /// need one).
     pub fn new_with_kind(cols: Vec<Vec<f64>>, kind: CirculantKind) -> Self {
-        let circulants = cols.iter().map(|k| circulant_approx(kind, k, 0, None)).collect();
+        let circulants: Vec<Circulant> =
+            cols.iter().map(|k| circulant_approx(kind, k, 0, None)).collect();
         let factors = cols.into_iter().map(SymToeplitz::new).collect();
-        KronToeplitz { factors, circulants }
+        let sqrt_spec = product_sqrt_spec(&circulants);
+        KronToeplitz { factors, circulants, sqrt_spec }
     }
 
     /// Grid shape (per-dimension sizes).
@@ -175,17 +207,37 @@ impl KronToeplitz {
     }
 
     /// Exact MVM `K_{U,U} v` via per-axis Toeplitz MVMs: O(P m log m_max).
+    /// Allocates only the returned vector (batched-engine workspace
+    /// shared per thread; see [`Self::matvec_batch`]).
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
-        let shape = self.shape();
         assert_eq!(x.len(), self.m());
-        let mut data = x.to_vec();
+        let mut out = vec![0.0; x.len()];
+        with_workspace(|ws| self.matvec_batch(x, &mut out, ws));
+        out
+    }
+
+    /// Exact batched MVM `K_{U,U} Y` for a row-major `b x m` block: pairs
+    /// of real vectors are packed into one complex tensor (two-for-one),
+    /// and each factor's circulant-embedding spectrum is applied along
+    /// its axis in cache-blocked panels with per-line zero-padding —
+    /// O(P m log m_max) per pair of RHS instead of per RHS.
+    /// Allocation-free given a warm [`Workspace`].
+    pub fn matvec_batch(&self, block: &[f64], out: &mut [f64], ws: &mut Workspace) {
+        let shape = self.shape();
+        let m = self.m();
+        assert!(m > 0 && block.len() % m == 0, "block is b x m row-major");
+        assert_eq!(out.len(), block.len());
+        let rows = block.len() / m;
+        let pairs = rows.div_ceil(2);
+        let Workspace { packed, scratch } = ws;
+        pack_real_pairs(block, m, packed);
         for (axis, f) in self.factors.iter().enumerate() {
-            apply_along_axis(&mut data, &shape, axis, |line, out| {
-                let r = f.matvec(line);
-                out.copy_from_slice(&r);
-            });
+            let n = shape[axis];
+            let inner: usize = shape[axis + 1..].iter().product();
+            let outer = pairs * (m / (n * inner));
+            apply_axis_spectrum_packed(packed, outer, n, inner, f.embed_eigs(), scratch);
         }
-        data
+        unpack_real_pairs(packed, m, rows, out);
     }
 
     /// Approximate eigenvalues of `K_{U,U}`: Kronecker product of the
@@ -209,20 +261,23 @@ impl KronToeplitz {
         self.approx_eigenvalues().iter().map(|&e| (e + sigma2).ln()).sum()
     }
 
-    /// Apply the approximate symmetric square root `K^{1/2} v` using the
-    /// per-factor circulant square roots (for variance-estimator sampling).
+    /// Apply the approximate symmetric square root `K^{1/2} v` — the
+    /// Kronecker product of the per-factor circulant square roots — as
+    /// one cached separable spectrum in the multi-dimensional Fourier
+    /// basis (no per-call `sqrt_circulant` rebuilds).
     pub fn sqrt_matvec(&self, x: &[f64]) -> Vec<f64> {
-        let shape = self.shape();
         assert_eq!(x.len(), self.m());
-        let mut data = x.to_vec();
-        for (axis, c) in self.circulants.iter().enumerate() {
-            let s = c.sqrt_circulant();
-            apply_along_axis(&mut data, &shape, axis, |line, out| {
-                let r = s.matvec(line);
-                out.copy_from_slice(&r);
-            });
-        }
-        data
+        let mut out = vec![0.0; x.len()];
+        with_workspace(|ws| self.sqrt_matvec_batch(x, &mut out, ws));
+        out
+    }
+
+    /// Batched [`Self::sqrt_matvec`] over a row-major `b x m` block, two
+    /// RHS per complex transform. The workhorse of the block-CG m-domain
+    /// refresh, which applies `S` to the mean and every variance probe
+    /// in one call.
+    pub fn sqrt_matvec_batch(&self, block: &[f64], out: &mut [f64], ws: &mut Workspace) {
+        apply_real_spectrum_batch(block, out, &self.shape(), &self.sqrt_spec, |e| e, ws);
     }
 }
 
@@ -272,6 +327,48 @@ mod tests {
         let want = kron_dense(&[d1, d2]).matvec(&x);
         for (g, w) in got.iter().zip(&want) {
             assert!((g - w).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn kron_toeplitz_matvec_batch_matches_per_vector() {
+        let kt = KronToeplitz::new_with_kind(vec![se(5, 1.5), se(4, 2.0)], CirculantKind::Chan);
+        let m = kt.m();
+        for rows in 1..=3 {
+            let block: Vec<f64> = (0..rows * m).map(|i| (i as f64 * 0.29).sin()).collect();
+            let mut got = vec![0.0; rows * m];
+            let mut ws = Workspace::new();
+            kt.matvec_batch(&block, &mut got, &mut ws);
+            for r in 0..rows {
+                let want = kt.matvec(&block[r * m..(r + 1) * m]);
+                for (g, w) in got[r * m..(r + 1) * m].iter().zip(&want) {
+                    assert!((g - w).abs() < 1e-9, "rows={rows} r={r}: {g} vs {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sqrt_matvec_batch_matches_per_vector() {
+        let kt = KronToeplitz::new_whittle(
+            vec![se(6, 2.0), se(5, 1.0)],
+            3,
+            &[
+                &|lag| (-0.5 * (lag as f64 / 2.0).powi(2)).exp(),
+                &|lag| (-0.5 * (lag as f64 / 1.0).powi(2)).exp(),
+            ],
+        );
+        let m = kt.m();
+        let rows = 3;
+        let block: Vec<f64> = (0..rows * m).map(|i| (i as f64 * 0.41).cos()).collect();
+        let mut got = vec![0.0; rows * m];
+        let mut ws = Workspace::new();
+        kt.sqrt_matvec_batch(&block, &mut got, &mut ws);
+        for r in 0..rows {
+            let want = kt.sqrt_matvec(&block[r * m..(r + 1) * m]);
+            for (g, w) in got[r * m..(r + 1) * m].iter().zip(&want) {
+                assert!((g - w).abs() < 1e-10, "{g} vs {w}");
+            }
         }
     }
 

@@ -12,6 +12,15 @@
 //! * [`bttb`] — block-Toeplitz-Toeplitz-block operators for
 //!   multi-dimensional grids without a factorizing kernel, and their BCCB
 //!   Whittle approximations (section 5.3).
+//!
+//! Every operator exposes both a single-vector `matvec` (allocating only
+//! its output) and an allocation-free `matvec_batch(&self, block, out,
+//! ws)` over a row-major `b x m` block, built on the batched two-for-one
+//! real-FFT engine in [`crate::linalg::fft`]: pairs of real RHS share
+//! one complex transform, and strided axes are processed in
+//! cache-blocked panels. The block-CG m-domain refresh
+//! ([`crate::stream::trainer`]) rides these paths to apply its operator
+//! to the mean and every variance probe at once.
 
 pub mod circulant;
 pub mod toeplitz;

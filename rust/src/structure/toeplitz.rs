@@ -7,7 +7,10 @@
 //! Figure 2) or approximated by a circulant (section 5.2, the MSGP path).
 
 use super::circulant::{embed_for_mvm, Circulant};
-use crate::linalg::fft::next_pow2;
+use crate::linalg::fft::{
+    apply_axis_spectrum_packed, next_pow2, pack_real_pairs, unpack_real_pairs, with_workspace,
+    Workspace,
+};
 
 /// A symmetric Toeplitz matrix represented by its first column, with the
 /// circulant embedding for fast MVMs prepared at construction.
@@ -36,25 +39,55 @@ impl SymToeplitz {
         self.k.len()
     }
 
-    /// Exact MVM via circulant embedding: O(m log m).
+    /// Exact MVM via circulant embedding: O(m log m). Allocates only the
+    /// returned vector (the embedding pad and FFT buffers come from the
+    /// thread-shared batched-engine workspace).
     pub fn matvec(&self, y: &[f64]) -> Vec<f64> {
         let m = self.m();
         assert_eq!(y.len(), m);
-        let mut pad = vec![0.0; self.a];
-        pad[..m].copy_from_slice(y);
-        let full = self.embed.matvec(&pad);
-        full[..m].to_vec()
+        let mut out = vec![0.0; m];
+        with_workspace(|ws| self.matvec_batch(y, &mut out, ws));
+        out
     }
 
     /// Exact MVM into a caller-provided output buffer, reusing `scratch`
-    /// (must have length `>= embedding length`); allocation-free hot path.
+    /// (resized to the embedding length); allocation-free hot path for
+    /// callers that already own a real scratch vector. New code should
+    /// prefer [`Self::matvec_batch`].
     pub fn matvec_into(&self, y: &[f64], out: &mut [f64], scratch: &mut Vec<f64>) {
         let m = self.m();
+        assert_eq!(y.len(), m);
+        assert_eq!(out.len(), m);
         scratch.clear();
-        scratch.resize(self.a, 0.0);
-        scratch[..m].copy_from_slice(y);
-        let full = self.embed.matvec(scratch);
+        scratch.resize(2 * self.a, 0.0);
+        let (pad, full) = scratch.split_at_mut(self.a);
+        pad[..m].copy_from_slice(y);
+        with_workspace(|ws| self.embed.matvec_into(pad, full, ws));
         out.copy_from_slice(&full[..m]);
+    }
+
+    /// Exact batched MVM `T Y` for a row-major `b x m` block: every line
+    /// is zero-padded into the power-of-two circulant embedding, pairs of
+    /// real lines share one complex transform (two-for-one), and the
+    /// embedding spectrum is applied with one cached plan for the whole
+    /// block. Allocation-free given a warm [`Workspace`].
+    pub fn matvec_batch(&self, block: &[f64], out: &mut [f64], ws: &mut Workspace) {
+        let m = self.m();
+        assert!(block.len() % m == 0, "block is b x m row-major");
+        assert_eq!(out.len(), block.len());
+        let rows = block.len() / m;
+        let pairs = rows.div_ceil(2);
+        let Workspace { packed, scratch } = ws;
+        pack_real_pairs(block, m, packed);
+        apply_axis_spectrum_packed(packed, pairs, m, 1, self.embed_eigs(), scratch);
+        unpack_real_pairs(packed, m, rows, out);
+    }
+
+    /// Eigenvalues of the power-of-two circulant embedding — the spectrum
+    /// the batched Toeplitz / Kronecker MVMs apply along this factor's
+    /// axis (its length is the embedding length).
+    pub(crate) fn embed_eigs(&self) -> &[f64] {
+        &self.embed.eigs
     }
 
     /// Exact `log |T + sigma2 I|` via dense Cholesky — O(m^3) memory-light
@@ -144,6 +177,25 @@ mod tests {
         let mut scratch = Vec::new();
         t.matvec_into(&y, &mut out, &mut scratch);
         assert_eq!(out, t.matvec(&y));
+    }
+
+    #[test]
+    fn matvec_batch_matches_per_vector() {
+        let m = 19;
+        let k: Vec<f64> = (0..m).map(|i| (-0.2 * i as f64).exp()).collect();
+        let t = SymToeplitz::new(k);
+        for rows in 1..=4 {
+            let block: Vec<f64> = (0..rows * m).map(|i| (i as f64 * 0.23).sin()).collect();
+            let mut got = vec![0.0; rows * m];
+            let mut ws = Workspace::new();
+            t.matvec_batch(&block, &mut got, &mut ws);
+            for r in 0..rows {
+                let want = t.matvec(&block[r * m..(r + 1) * m]);
+                for (g, w) in got[r * m..(r + 1) * m].iter().zip(&want) {
+                    assert!((g - w).abs() < 1e-9, "rows={rows} r={r}: {g} vs {w}");
+                }
+            }
+        }
     }
 
     #[test]
