@@ -1,0 +1,165 @@
+//! `cargo bench --bench fig8_parallel` — the in-tree parallel execution
+//! layer and the true real-FFT half-spectrum:
+//!
+//! 1. batched FFT throughput vs thread count (`fftn_batch` on a 2-D
+//!    grid, the pool's line-chunk / panel fan-out);
+//! 2. streaming block-refresh wall-clock vs thread count on a grid with
+//!    m >= 4096 — the acceptance target is >= 1.5x at 4 threads;
+//! 3. rfft half-spectrum vs full complex transform time for the batched
+//!    real-spectrum apply (even last axis), plus the half-transform op
+//!    counter delta.
+//!
+//! Results are identical at every thread count (pinned by the test
+//! suite); this bench measures wall-clock only. BENCH_FULL=1 enables
+//! the larger sweep.
+
+use msgp::gp::msgp::{KernelSpec, MsgpConfig};
+use msgp::grid::{Grid, GridAxis};
+use msgp::kernels::{KernelType, ProductKernel};
+use msgp::linalg::fft::{
+    apply_real_spectrum_batch, fftn, fftn_batch, rfft_half_lines_total, FftScratch, Workspace,
+};
+use msgp::linalg::C64;
+use msgp::parallel::{self, ParallelConfig};
+use msgp::stream::{StreamConfig, StreamTrainer};
+use msgp::util::Rng;
+use std::time::Instant;
+
+/// Average seconds per call of `f` over `reps` calls (after one warmup).
+fn time_per_call(reps: usize, mut f: impl FnMut()) -> f64 {
+    f();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+/// A spatially skewed stream (the fig6/fig7 workload).
+fn skewed_stream(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let mut xs = Vec::with_capacity(n);
+    let mut ys = Vec::with_capacity(n);
+    for i in 0..n {
+        let x = if i % 3 == 0 {
+            rng.uniform_in(-10.0, 10.0)
+        } else {
+            rng.uniform_in(-9.5, -6.5)
+        };
+        xs.push(x);
+        ys.push(msgp::data::stress_fn(x) + 0.05 * rng.normal());
+    }
+    (xs, ys)
+}
+
+fn main() {
+    let full = std::env::var("BENCH_FULL").is_ok();
+    let thread_sweep: &[usize] = if full { &[1, 2, 4, 8] } else { &[1, 2, 4] };
+
+    // --- 1. batched FFT throughput vs thread count (2-D grid) ---
+    let side: usize = if full { 256 } else { 128 };
+    let batch = 16usize;
+    let reps = if full { 20 } else { 10 };
+    let shape = [side, side];
+    let per = side * side;
+    let data: Vec<C64> = (0..batch * per)
+        .map(|i| C64::new((i as f64 * 0.37).sin(), (i as f64 * 0.11).cos()))
+        .collect();
+    let mut buf = data.clone();
+    println!("# fig8_parallel / fftn_batch: {batch} x {side}x{side} complex tensors");
+    println!("# threads batched_ms speedup_vs_1t");
+    let mut base_ms = 0.0f64;
+    for &t in thread_sweep {
+        parallel::configure(ParallelConfig { threads: t });
+        let mut scratch = FftScratch::default();
+        let secs = time_per_call(reps, || {
+            buf.copy_from_slice(&data);
+            fftn_batch(&mut buf, batch, &shape, false, &mut scratch);
+        });
+        if t == 1 {
+            base_ms = secs * 1e3;
+        }
+        println!("{:>8} {:>10.3} {:>12.2}", t, secs * 1e3, base_ms / (secs * 1e3));
+    }
+
+    // --- 2. block-refresh wall-clock vs thread count (m >= 4096) ---
+    let m: usize = if full { 8192 } else { 4096 };
+    let n: usize = if full { 60_000 } else { 30_000 };
+    let ns = 8usize;
+    let kernel = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0));
+    let (xs, ys) = skewed_stream(n, 7);
+    println!("# fig8_parallel / refresh: m = {m}, n = {n}, n_s = {ns}, spectral precond");
+    println!("# threads block_iters refresh_wall_ms speedup_vs_1t");
+    let mut base_refresh = 0.0f64;
+    for &t in thread_sweep {
+        parallel::configure(ParallelConfig { threads: t });
+        let grid = Grid::new(vec![GridAxis::span(-12.0, 13.0, m)]);
+        let mut mcfg = MsgpConfig { n_per_dim: vec![m], n_var_samples: ns, ..Default::default() };
+        mcfg.cg.tol = 1e-8;
+        mcfg.cg.max_iter = 4000;
+        let mut trainer = StreamTrainer::new(
+            kernel.clone(),
+            0.01,
+            grid,
+            StreamConfig { msgp: mcfg, ..Default::default() },
+        );
+        trainer.ingest_batch(&xs, &ys);
+        let t0 = Instant::now();
+        let stats = trainer.refresh();
+        let wall = t0.elapsed().as_secs_f64() * 1e3;
+        if t == 1 {
+            base_refresh = wall;
+        }
+        println!(
+            "{:>8} {:>11} {:>15.2} {:>13.2}",
+            t,
+            stats.block_iters,
+            wall,
+            base_refresh / wall
+        );
+    }
+
+    // --- 3. rfft half-spectrum vs full complex transform ---
+    parallel::configure(ParallelConfig { threads: 1 }); // isolate the algorithmic win
+    let ms: &[usize] = if full { &[4096, 16384] } else { &[1024, 4096] };
+    let rows = 8usize;
+    println!("# fig8_parallel / rfft: {rows} real RHS, serial (1 thread)");
+    println!("# m full_complex_ms rfft_half_ms speedup half_lines");
+    for &m in ms {
+        let spec: Vec<f64> = (0..m)
+            .map(|i| (-0.5 * (i.min(m - i) as f64 / 16.0).powi(2)).exp() + 0.1)
+            .collect();
+        let block: Vec<f64> = (0..rows * m).map(|i| (i as f64 * 0.23).sin()).collect();
+        let mut out = vec![0.0; rows * m];
+        // Full-complex reference: one full-length transform pair per row.
+        let full_ms = time_per_call(reps, || {
+            for r in 0..rows {
+                let mut cbuf: Vec<C64> =
+                    block[r * m..(r + 1) * m].iter().map(|&v| C64::real(v)).collect();
+                fftn(&mut cbuf, &[m], false);
+                for (z, &e) in cbuf.iter_mut().zip(&spec) {
+                    *z = z.scale(e);
+                }
+                fftn(&mut cbuf, &[m], true);
+                for (o, z) in out[r * m..(r + 1) * m].iter_mut().zip(&cbuf) {
+                    *o = z.re;
+                }
+            }
+        });
+        let mut ws = Workspace::new();
+        let before = rfft_half_lines_total();
+        let rfft_ms = time_per_call(reps, || {
+            apply_real_spectrum_batch(&block, &mut out, &[m], &spec, |e| e, &mut ws);
+        });
+        let half_lines = rfft_half_lines_total() - before;
+        println!(
+            "{:>6} {:>15.3} {:>12.3} {:>8.2} {:>10}",
+            m,
+            full_ms * 1e3,
+            rfft_ms * 1e3,
+            full_ms / rfft_ms,
+            half_lines
+        );
+    }
+    parallel::configure(ParallelConfig { threads: 0 });
+}

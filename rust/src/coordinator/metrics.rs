@@ -82,6 +82,11 @@ pub struct Metrics {
     /// Streaming: refreshes that requested a preconditioner but had to
     /// degrade to unpreconditioned CG (misconfigured refresh inputs).
     pub precond_fallbacks: AtomicU64,
+    /// Streaming: thread count the in-tree pool had available during
+    /// the most recent refresh (`1` = the batched FFT hot paths ran
+    /// serially). Stored from `RefreshStats::threads` by the ingest
+    /// loops; the live pool width is also exported as `pool_threads`.
+    pub last_refresh_threads: AtomicU64,
     /// Streaming: hyperparameter re-optimizations completed.
     pub reopt_count: AtomicU64,
     /// Sharded serving: per-shard counters (empty on unsharded servers).
@@ -107,6 +112,7 @@ impl Default for Metrics {
             last_refresh_var_iters: AtomicU64::new(0),
             refresh_cg_iters_total: AtomicU64::new(0),
             precond_fallbacks: AtomicU64::new(0),
+            last_refresh_threads: AtomicU64::new(0),
             reopt_count: AtomicU64::new(0),
             shards: Vec::new(),
             hist: std::array::from_fn(|_| AtomicU64::new(0)),
@@ -175,13 +181,26 @@ impl Metrics {
         self.refresh_cg_iters_total.fetch_add(mean_iters + var_iters, Ordering::Relaxed);
     }
 
+    /// Record how many pool threads the most recent refresh had
+    /// available (from `RefreshStats::threads`). Every shard worker
+    /// reports the same process-wide value, so the sharded race on this
+    /// gauge is benign.
+    pub fn record_refresh_threads(&self, threads: u64) {
+        self.last_refresh_threads.store(threads, Ordering::Relaxed);
+    }
+
     /// One-line summary (the `/metrics` endpoint payload). Sharded
     /// servers append one `shard[i] ...` clause per shard.
+    /// `pool_threads` and `fft_parallel_panels_total` are read live from
+    /// the in-tree parallel layer ([`crate::parallel`] /
+    /// [`crate::linalg::fft`]) so they stay accurate even for refreshes
+    /// driven outside the coordinator.
     pub fn summary(&self) -> String {
         let mut s = format!(
             "submitted={} completed={} batches={} (pjrt={} native={}) padding={} p50<={}us p99<={}us \
              ingested_points_total={} ingest_rejected_total={} ingest_batches={} refresh_count={} last_refresh_us={} \
-             last_refresh_mean_iters={} last_refresh_var_iters={} refresh_cg_iters_total={} precond_fallbacks={} reopt_count={}",
+             last_refresh_mean_iters={} last_refresh_var_iters={} refresh_cg_iters_total={} precond_fallbacks={} reopt_count={} \
+             pool_threads={} fft_parallel_panels_total={} last_refresh_threads={}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
@@ -200,6 +219,9 @@ impl Metrics {
             self.refresh_cg_iters_total.load(Ordering::Relaxed),
             self.precond_fallbacks.load(Ordering::Relaxed),
             self.reopt_count.load(Ordering::Relaxed),
+            crate::parallel::threads(),
+            crate::linalg::fft::parallel_panels_total(),
+            self.last_refresh_threads.load(Ordering::Relaxed),
         );
         for (i, sh) in self.shards.iter().enumerate() {
             s.push_str(&format!(
@@ -287,5 +309,17 @@ mod tests {
         assert!(s.contains("last_refresh_var_iters=40"), "{s}");
         assert!(s.contains("refresh_cg_iters_total=139"), "{s}");
         assert!(s.contains("precond_fallbacks=2"), "{s}");
+    }
+
+    #[test]
+    fn parallel_gauges_appear_in_summary() {
+        let m = Metrics::new();
+        m.record_refresh_threads(3);
+        let s = m.summary();
+        assert!(s.contains("last_refresh_threads=3"), "{s}");
+        assert!(s.contains("fft_parallel_panels_total="), "{s}");
+        // pool_threads reads the live pool width; concurrent tests may
+        // reconfigure it between reads, so only pin its presence.
+        assert!(s.contains("pool_threads="), "{s}");
     }
 }

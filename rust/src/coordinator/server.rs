@@ -286,6 +286,7 @@ fn run_ingest(
                         trainer.last_refresh.mean_iters as u64,
                         trainer.last_refresh.var_iters_total as u64,
                     );
+                    metrics.record_refresh_threads(trainer.last_refresh.threads as u64);
                     need_swap = true; // new hypers + refreshed caches: publish
                 }
                 Ok(None) => {}
@@ -308,6 +309,7 @@ fn run_ingest(
                     trainer.last_refresh.mean_iters as u64,
                     trainer.last_refresh.var_iters_total as u64,
                 );
+                metrics.record_refresh_threads(trainer.last_refresh.threads as u64);
             }
         }
         if trainer.precond_fallbacks > fallbacks_seen {

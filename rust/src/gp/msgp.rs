@@ -27,7 +27,10 @@ use crate::interp::SparseInterp;
 use crate::kernels::{KernelType, ProductKernel};
 use crate::linalg::fft::Workspace as FftWorkspace;
 use crate::linalg::Mat;
-use crate::solver::{cg_solve, CgOptions, CgResult, CgWorkspace, Preconditioner};
+use crate::solver::{
+    cg_solve, cg_solve_block, BlockCgResult, BlockCgWorkspace, CgOptions, CgResult, CgWorkspace,
+    Preconditioner,
+};
 use crate::structure::bttb::{Bccb, Bttb};
 use crate::structure::circulant::CirculantKind;
 use crate::structure::kronecker::KronToeplitz;
@@ -323,6 +326,19 @@ pub struct MsgpModel {
     pub last_cg: CgResult,
 }
 
+/// Per-output results of a multi-target block fit
+/// ([`MsgpModel::fit_multi`]): training solutions, fast-mean caches,
+/// and the lockstep solve diagnostics (per-column iteration counts,
+/// compacted operator-work accounting).
+pub struct MultiFit {
+    /// `alpha_j = (K_SKI + sigma^2 I)^{-1} y_j` per output (`cols x n`).
+    pub alphas: Vec<Vec<f64>>,
+    /// Fast-mean caches `u_mean_j = sf2 K_UU W^T alpha_j` (`cols x m`).
+    pub u_means: Vec<Vec<f64>>,
+    /// Block-CG diagnostics for the single training solve.
+    pub block: BlockCgResult,
+}
+
 /// Build the unit-variance per-dimension Toeplitz columns and the Whittle
 /// (or other) circulant approximations for a product kernel on a grid.
 fn build_kron(kernel: &ProductKernel, grid: &Grid, cfg: &MsgpConfig) -> KronToeplitz {
@@ -379,6 +395,94 @@ impl MsgpModel {
         Self::fit_with_grid(kernel, sigma2, data, grid, cfg)
     }
 
+    /// Fit several outputs observed at the **same inputs** (multi-output
+    /// regression, or restarts against perturbed targets) with **one
+    /// lockstep block-CG training solve**: the grid, `W`, and `K_{U,U}`
+    /// are built once, all `(K_SKI + sigma^2 I) alpha_j = y_j` systems
+    /// advance together through [`cg_solve_block`] (batched real-FFT
+    /// operator applies, active-column compaction as targets converge),
+    /// and every output's fast-mean cache `u_mean_j` comes from one
+    /// batched `K_{U,U}` apply. Per-output results match independent
+    /// [`Self::fit`] calls on the shared grid (each column runs the
+    /// identical scalar CG recurrence).
+    ///
+    /// Returns the model holding output 0's caches plus a [`MultiFit`]
+    /// with every output's `alpha_j` / `u_mean_j`; predict other
+    /// outputs by swapping their `u_mean` in (the interpolation weights
+    /// `W_*` are output-independent).
+    pub fn fit_multi(
+        kernel: KernelSpec,
+        sigma2: f64,
+        x: Vec<f64>,
+        d: usize,
+        targets: &[Vec<f64>],
+        cfg: MsgpConfig,
+    ) -> anyhow::Result<(Self, MultiFit)> {
+        anyhow::ensure!(!targets.is_empty(), "fit_multi needs at least one target");
+        let n = targets[0].len();
+        anyhow::ensure!(n > 0, "fit_multi needs at least one observation");
+        anyhow::ensure!(
+            targets.iter().all(|t| t.len() == n),
+            "all targets must share the input rows"
+        );
+        anyhow::ensure!(x.len() == n * d, "x is n x d row-major");
+        anyhow::ensure!(kernel.dim() == d, "kernel dim {} vs data dim {}", kernel.dim(), d);
+        anyhow::ensure!(cfg.n_per_dim.len() == d, "n_per_dim len vs data dim");
+        let grid = Grid::covering(&x, d, &cfg.n_per_dim, cfg.margin_cells);
+        let data = Dataset { x, d, y: targets[0].clone() };
+        let mut model = Self::build_unsolved(kernel, sigma2, data, grid, cfg);
+        let m = model.m();
+        let cols = targets.len();
+        let mut ystack = vec![0.0; cols * n];
+        for (c, t) in targets.iter().enumerate() {
+            ystack[c * n..(c + 1) * n].copy_from_slice(t);
+        }
+        let mut alphas_flat = vec![0.0; cols * n];
+        let mut wt = vec![0.0; cols * m];
+        let mut ku = vec![0.0; cols * m];
+        let mut fft_ws = FftWorkspace::new();
+        let mut bws = BlockCgWorkspace::new(n, cols);
+        let block = {
+            let this: &Self = &model;
+            cg_solve_block(
+                |v, out| this.mvm_a_batch(v, out, &mut wt, &mut ku, &mut fft_ws),
+                |v, out| out.copy_from_slice(v),
+                &ystack,
+                &mut alphas_flat,
+                n,
+                model.cfg.cg,
+                &mut bws,
+            )
+        };
+        anyhow::ensure!(
+            block.rel_residuals.iter().all(|r| r.is_finite()),
+            "block CG diverged ({:?})",
+            block.rel_residuals
+        );
+        // Every output's fast-mean cache from ONE batched K_UU apply:
+        // u_mean_j = sf2 * K_UU W^T alpha_j.
+        let sf2 = model.kernel.sf2();
+        for c in 0..cols {
+            model
+                .w
+                .tmatvec_into(&alphas_flat[c * n..(c + 1) * n], &mut wt[c * m..(c + 1) * m]);
+        }
+        model.kuu.matvec_batch(&wt[..cols * m], &mut ku[..cols * m], &mut fft_ws);
+        let alphas: Vec<Vec<f64>> =
+            (0..cols).map(|c| alphas_flat[c * n..(c + 1) * n].to_vec()).collect();
+        let u_means: Vec<Vec<f64>> = (0..cols)
+            .map(|c| ku[c * m..(c + 1) * m].iter().map(|&v| sf2 * v).collect())
+            .collect();
+        model.alpha = alphas[0].clone();
+        model.u_mean = u_means[0].clone();
+        model.last_cg = CgResult {
+            iters: block.col_iters[0],
+            rel_residual: block.rel_residuals[0],
+            converged: block.rel_residuals[0] <= model.cfg.cg.tol,
+        };
+        Ok((model, MultiFit { alphas, u_means, block }))
+    }
+
     /// Fit with an explicit grid (e.g. the paper's `[-12, 13]` stress grid).
     pub fn fit_with_grid(
         kernel: KernelSpec,
@@ -387,6 +491,22 @@ impl MsgpModel {
         grid: Grid,
         cfg: MsgpConfig,
     ) -> anyhow::Result<Self> {
+        let mut model = Self::build_unsolved(kernel, sigma2, data, grid, cfg);
+        model.solve_alpha()?;
+        Ok(model)
+    }
+
+    /// Construct the model skeleton (grid, `W`, `K_{U,U}`) without
+    /// running the training solve — shared by [`Self::fit_with_grid`]
+    /// (scalar CG on one target) and [`Self::fit_multi`] (one block-CG
+    /// solve across all targets).
+    fn build_unsolved(
+        kernel: KernelSpec,
+        sigma2: f64,
+        data: Dataset,
+        grid: Grid,
+        cfg: MsgpConfig,
+    ) -> Self {
         let w = SparseInterp::build(&data.x, &grid);
         let kuu = match &kernel {
             KernelSpec::Product(k) => Kuu::Kron(build_kron(k, &grid, &cfg)),
@@ -395,7 +515,7 @@ impl MsgpModel {
                 Kuu::Bttb { op, bccb }
             }
         };
-        let mut model = MsgpModel {
+        MsgpModel {
             kernel,
             sigma2,
             cfg,
@@ -407,9 +527,7 @@ impl MsgpModel {
             u_mean: Vec::new(),
             nu_u: None,
             last_cg: CgResult { iters: 0, rel_residual: 0.0, converged: true },
-        };
-        model.solve_alpha()?;
-        Ok(model)
+        }
     }
 
     /// Number of training points.
@@ -433,6 +551,44 @@ impl MsgpModel {
             *o = sf2 * *o + self.sigma2 * vi;
         }
         out
+    }
+
+    /// Batched SKI covariance MVM over a row-major `k x n` block:
+    /// `out_c = sf2 W K_{U,U} W^T v_c + sigma2 v_c` per column, with the
+    /// FFT-dominant grid-operator part applied through the batched
+    /// real-FFT engine (rfft half spectra + thread-pool fan-out) instead
+    /// of once per column. `wt` / `ku` are caller-owned `>= k x m`
+    /// scratch blocks; the block width is keyed off `v.len()`, so
+    /// block-CG compaction can pass any `k <= cols`. Allocation-free:
+    /// the sparse interpolation applies go through the `*_into` forms.
+    pub fn mvm_a_batch(
+        &self,
+        v: &[f64],
+        out: &mut [f64],
+        wt: &mut [f64],
+        ku: &mut [f64],
+        ws: &mut FftWorkspace,
+    ) {
+        let n = self.n();
+        let m = self.m();
+        assert!(n > 0 && v.len() % n == 0, "v is k x n row-major");
+        let k = v.len() / n;
+        assert_eq!(out.len(), v.len());
+        assert!(wt.len() >= k * m && ku.len() >= k * m, "scratch too small");
+        let sf2 = self.kernel.sf2();
+        for c in 0..k {
+            self.w.tmatvec_into(&v[c * n..(c + 1) * n], &mut wt[c * m..(c + 1) * m]);
+        }
+        self.kuu.matvec_batch(&wt[..k * m], &mut ku[..k * m], ws);
+        for c in 0..k {
+            // W applies straight into the output column (matvec_into
+            // overwrites every element), then the noise shift folds in.
+            let oc = &mut out[c * n..(c + 1) * n];
+            self.w.matvec_into(&ku[c * m..(c + 1) * m], oc);
+            for (o, &vi) in oc.iter_mut().zip(&v[c * n..(c + 1) * n]) {
+                *o = sf2 * *o + self.sigma2 * vi;
+            }
+        }
     }
 
     fn solve_alpha(&mut self) -> anyhow::Result<()> {
@@ -1470,6 +1626,62 @@ mod tests {
                 (a - b).abs() < 5e-3 * (1.0 + b.abs()),
                 "param {i}: analytic {a} vs fd {b}"
             );
+        }
+    }
+
+    /// Acceptance (satellite): the multi-output block fit matches
+    /// independent per-target fits on the shared grid — same alphas,
+    /// same fast-mean caches — while running ONE compacted block solve
+    /// (operator-work accounting strictly below the uncompacted
+    /// lockstep whenever targets converge unevenly).
+    #[test]
+    fn fit_multi_matches_per_target_fits() {
+        let n = 250;
+        let data = gen_stress_1d(n, 0.05, 23);
+        // Three outputs over the same inputs with different structure.
+        let y0 = data.y.clone();
+        let y1: Vec<f64> = data
+            .x
+            .iter()
+            .map(|&x| (0.7 * x).cos() * 0.8 + 0.1)
+            .collect();
+        let y2: Vec<f64> = data.x.iter().map(|&x| 0.5 * (0.3 * x).sin() - 0.2).collect();
+        let targets = vec![y0, y1, y2];
+        let kernel = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0));
+        let cfg = MsgpConfig {
+            n_per_dim: vec![128],
+            cg: CgOptions { tol: 1e-10, max_iter: 3000, ..Default::default() },
+            ..Default::default()
+        };
+        let (model, multi) =
+            MsgpModel::fit_multi(kernel.clone(), 0.01, data.x.clone(), 1, &targets, cfg.clone())
+                .unwrap();
+        assert!(multi.block.converged, "{:?}", multi.block.rel_residuals);
+        assert_eq!(multi.alphas.len(), targets.len());
+        assert_eq!(multi.block.col_iters.len(), targets.len());
+        // Operator-work accounting: never more than the uncompacted
+        // lockstep block.
+        assert!(multi.block.apply_cols <= (multi.block.block_iters + 1) * targets.len());
+        // Per-target reference fits on the identical grid.
+        for (c, y) in targets.iter().enumerate() {
+            let single = MsgpModel::fit_with_grid(
+                kernel.clone(),
+                0.01,
+                Dataset { x: data.x.clone(), d: 1, y: y.clone() },
+                model.grid.clone(),
+                cfg.clone(),
+            )
+            .unwrap();
+            for (a, b) in multi.alphas[c].iter().zip(&single.alpha) {
+                assert!((a - b).abs() < 1e-6, "output {c} alpha: {a} vs {b}");
+            }
+            for (a, b) in multi.u_means[c].iter().zip(&single.u_mean) {
+                assert!((a - b).abs() < 1e-6, "output {c} u_mean: {a} vs {b}");
+            }
+        }
+        // The returned model carries output 0's caches.
+        for (a, b) in model.alpha.iter().zip(&multi.alphas[0]) {
+            assert!((a - b).abs() == 0.0, "{a} vs {b}");
         }
     }
 

@@ -10,11 +10,21 @@
 //!   circulant (with Strang / T. Chan / Tyrtyshnikov / Helgason / Whittle
 //!   approximations), Kronecker, and BTTB/BCCB operators, all built on an
 //!   in-crate FFT ([`linalg::fft`]) with a batched multi-RHS engine:
-//!   cache-blocked panel transforms over `[batch, shape...]` tensors,
-//!   two-for-one packing of real RHS pairs into single complex
-//!   transforms, and allocation-free `matvec_batch` paths on every
-//!   operator (a size-capped thread-local plan cache keeps twiddle /
-//!   bit-reversal setup amortized).
+//!   cache-blocked panel transforms over `[batch, shape...]` tensors, a
+//!   **true real-input rfft** (length-`n/2` last-axis transforms with
+//!   half-form conjugate-symmetric spectra on even axes, two-for-one
+//!   real-pair packing otherwise), and allocation-free `matvec_batch`
+//!   paths on every operator (a size-capped thread-local plan cache
+//!   keeps twiddle / bit-reversal setup amortized).
+//! * **In-tree parallel execution** ([`parallel`]): a dependency-free
+//!   scoped thread pool (`std::thread` workers, chunked work queue,
+//!   `scope(|s| ...)`-style API, `MSGP_THREADS` / [`parallel::configure`]
+//!   override). The batched FFT engine dispatches line chunks, strided
+//!   panels, and real-block row splits onto it — so every structured
+//!   MVM, the spectral preconditioner, and the block-CG refresh use all
+//!   cores *within* one solve, composing with (not oversubscribing) the
+//!   process-level shard workers. Tasks do bit-identical arithmetic on
+//!   disjoint slices, so results are independent of the thread count.
 //! * **Local cubic kernel interpolation** ([`interp`]) à la KISS-GP:
 //!   sparse interpolation matrices `W` with `4^D` entries per row.
 //! * **GP models** ([`gp`]): the MSGP model itself (SKI kernel, CG
@@ -69,6 +79,7 @@
 #![allow(clippy::needless_range_loop)]
 
 pub mod linalg;
+pub mod parallel;
 pub mod structure;
 pub mod grid;
 pub mod interp;

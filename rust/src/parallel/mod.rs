@@ -1,0 +1,617 @@
+//! In-tree data-parallel execution layer: a dependency-free scoped
+//! thread pool for the FFT/CG hot paths.
+//!
+//! Every MSGP hot path — circulant/Toeplitz/BTTB/BCCB MVMs, the
+//! spectral preconditioner, and the block-CG refresh — funnels through
+//! the batched engine in [`crate::linalg::fft`], whose batch axis is
+//! embarrassingly parallel: lines (and cache-blocked panels of lines)
+//! are independent transforms over disjoint slices. This module supplies
+//! the thread pool those kernels dispatch onto:
+//!
+//! * **`std::thread` workers, no dependencies.** A fixed set of worker
+//!   threads parks on a condvar; a parallel region publishes one
+//!   type-erased job (`&dyn Fn(task_index)`) plus a chunked work queue
+//!   (an index counter under the same lock), and workers plus the
+//!   submitting thread claim task indices until the queue drains. The
+//!   submitter returns only after every claimed task has finished, so
+//!   borrowed data outlives all worker access (the classic scoped-pool
+//!   contract).
+//! * **Deterministic by construction.** Tasks write disjoint outputs and
+//!   each task performs bit-identical arithmetic regardless of which
+//!   thread runs it, so results are *identical* across `MSGP_THREADS=1`
+//!   and `MSGP_THREADS=N` — not merely close. The test suite pins this
+//!   for `fftn_batch` and the streaming refresh.
+//! * **Graceful fallback.** With one thread configured, zero tasks, a
+//!   busy pool (another region in flight), or when called from inside a
+//!   pool task (nested parallelism), the region runs inline on the
+//!   calling thread. Nested regions therefore compose safely: S shard
+//!   workers can all call into the batched engine — whichever enters
+//!   first gets the pool, the rest run serially, and nobody
+//!   oversubscribes the machine.
+//! * **Configuration.** `MSGP_THREADS` (environment) sets the default
+//!   thread count; [`configure`] overrides it at runtime (used by the
+//!   `fig8_parallel` bench to sweep thread counts in-process). `0`
+//!   means "auto": `std::thread::available_parallelism()`, capped at
+//!   [`MAX_WORKERS`].
+//!
+//! A panic inside a task is caught on the worker, recorded, and
+//! re-thrown on the submitting thread after the region completes — a
+//! poisoned refresh panics its own caller instead of deadlocking the
+//! pool or killing an unrelated worker.
+
+use std::any::Any;
+use std::cell::Cell;
+use std::ops::Range;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Hard cap on pool worker threads (the FFT hot paths are memory-bound
+/// well before this; an `MSGP_THREADS=10000` typo must not fork-bomb).
+pub const MAX_WORKERS: usize = 16;
+
+/// Runtime override for the pool's thread count.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ParallelConfig {
+    /// Threads to use for parallel regions (including the submitting
+    /// thread). `0` re-resolves the default: `MSGP_THREADS` if set,
+    /// else `available_parallelism()`, capped at [`MAX_WORKERS`].
+    pub threads: usize,
+}
+
+/// Resolved thread count; `0` = not yet resolved.
+static ACTIVE_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Apply a runtime thread-count override (see [`ParallelConfig`]).
+/// Results of parallel regions are identical at every setting — this
+/// only changes how many cores do the work.
+pub fn configure(cfg: ParallelConfig) {
+    let t = if cfg.threads == 0 { resolve_default() } else { cfg.threads.clamp(1, MAX_WORKERS) };
+    ACTIVE_THREADS.store(t, Ordering::SeqCst);
+}
+
+/// The effective thread count for parallel regions (>= 1). Resolves and
+/// caches the `MSGP_THREADS` / hardware default on first call.
+pub fn threads() -> usize {
+    match ACTIVE_THREADS.load(Ordering::SeqCst) {
+        0 => {
+            let t = resolve_default();
+            ACTIVE_THREADS.store(t, Ordering::SeqCst);
+            t
+        }
+        t => t,
+    }
+}
+
+fn resolve_default() -> usize {
+    if let Ok(v) = std::env::var("MSGP_THREADS") {
+        if let Ok(t) = v.trim().parse::<usize>() {
+            if t >= 1 {
+                return t.min(MAX_WORKERS);
+            }
+        }
+    }
+    hardware_threads()
+}
+
+fn hardware_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(MAX_WORKERS)
+}
+
+thread_local! {
+    /// True while this thread is executing a pool task — nested parallel
+    /// regions detect it and run inline.
+    static IN_POOL_TASK: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True when a parallel region started *now* would actually fan out
+/// (more than one thread configured and not already inside a pool
+/// task). Cheap pre-check for callers that want to skip staging work.
+pub fn available() -> bool {
+    threads() > 1 && !IN_POOL_TASK.with(|c| c.get())
+}
+
+/// Guard that restores the previous `IN_POOL_TASK` value (unwind-safe).
+struct TaskFlagGuard {
+    prev: bool,
+}
+
+impl TaskFlagGuard {
+    fn enter() -> Self {
+        let prev = IN_POOL_TASK.with(|c| c.replace(true));
+        TaskFlagGuard { prev }
+    }
+}
+
+impl Drop for TaskFlagGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        IN_POOL_TASK.with(|c| c.set(prev));
+    }
+}
+
+/// Run `n_tasks` independent tasks, `f(i)` for `i in 0..n_tasks`,
+/// returning `true` when the pool actually fanned out (and `false` when
+/// the region ran inline: one thread configured, a single task, a
+/// nested region, or a busy pool). Blocks until every task completed;
+/// a task panic is re-thrown here after the region drains.
+pub fn run_tasks(n_tasks: usize, f: &(dyn Fn(usize) + Sync)) -> bool {
+    if n_tasks == 0 {
+        return false;
+    }
+    let t = threads();
+    if t <= 1 || n_tasks == 1 || IN_POOL_TASK.with(|c| c.get()) {
+        run_inline(n_tasks, f);
+        return false;
+    }
+    let pool = global_pool();
+    if !pool.try_acquire() {
+        // Another region is in flight (e.g. a sibling shard worker);
+        // composing serially keeps the machine exactly subscribed.
+        run_inline(n_tasks, f);
+        return false;
+    }
+    // `try_acquire` succeeded: we own the pool until `run_owned` returns
+    // (its guard releases on every path, including unwind).
+    pool.run_owned(n_tasks, t - 1, f);
+    true
+}
+
+fn run_inline(n_tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+    let _guard = TaskFlagGuard::enter();
+    for i in 0..n_tasks {
+        f(i);
+    }
+}
+
+/// Split `total` items into at most `max_tasks` near-even contiguous
+/// ranges and run `f(range)` for each (in parallel when the pool is
+/// free). Returns the number of tasks the pool fanned out (`0` when the
+/// region ran inline) — the FFT engine feeds this straight into its
+/// dispatch counter.
+pub fn for_each_range(total: usize, max_tasks: usize, f: &(dyn Fn(Range<usize>) + Sync)) -> usize {
+    if total == 0 {
+        return 0;
+    }
+    let n_tasks = max_tasks.clamp(1, total);
+    let chunk = total.div_ceil(n_tasks);
+    let fanned = run_tasks(n_tasks, &|i| {
+        let start = i * chunk;
+        if start < total {
+            f(start..(start + chunk).min(total));
+        }
+    });
+    if fanned {
+        n_tasks
+    } else {
+        0
+    }
+}
+
+/// A scope collecting heterogeneous closures to run as one parallel
+/// region (the `scope(|s| ...)`-style API over the same pool).
+pub struct Scope<'env> {
+    tasks: Vec<Box<dyn FnOnce() + Send + 'env>>,
+}
+
+impl<'env> Scope<'env> {
+    /// Queue one task; all queued tasks run when the scope closes.
+    pub fn spawn(&mut self, f: impl FnOnce() + Send + 'env) {
+        self.tasks.push(Box::new(f));
+    }
+}
+
+/// Run a scoped parallel region: `f` queues tasks on the [`Scope`], all
+/// of which execute (in parallel when the pool is free) before `scope`
+/// returns — so tasks may borrow from the enclosing stack frame.
+pub fn scope<'env, R>(f: impl FnOnce(&mut Scope<'env>) -> R) -> R {
+    let mut s = Scope { tasks: Vec::new() };
+    let out = f(&mut s);
+    if !s.tasks.is_empty() {
+        let slots: Vec<Mutex<Option<Box<dyn FnOnce() + Send + 'env>>>> =
+            s.tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
+        run_tasks(slots.len(), &|i| {
+            let task = slots[i].lock().unwrap().take().expect("scope task runs once");
+            task();
+        });
+    }
+    out
+}
+
+/// Shareable raw view over a mutable slice, for tasks that write
+/// **disjoint** elements of one output buffer. The pool guarantees all
+/// tasks finish before the region returns, so the underlying borrow is
+/// never outlived; disjointness is the caller's obligation (hence the
+/// `unsafe` accessors).
+pub struct SendSlicePtr<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+unsafe impl<T: Send> Send for SendSlicePtr<T> {}
+unsafe impl<T: Send> Sync for SendSlicePtr<T> {}
+
+impl<T> SendSlicePtr<T> {
+    /// Capture a slice for disjoint-range task writes.
+    pub fn new(s: &mut [T]) -> Self {
+        SendSlicePtr { ptr: s.as_mut_ptr(), len: s.len() }
+    }
+
+    /// Length of the captured slice.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the captured slice is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Exclusive sub-slice `r` of the captured buffer.
+    ///
+    /// # Safety
+    /// Concurrent tasks must use non-overlapping ranges, and `r` must be
+    /// in bounds of the captured slice.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn range(&self, r: Range<usize>) -> &mut [T] {
+        debug_assert!(r.start <= r.end && r.end <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(r.start), r.end - r.start)
+    }
+
+    /// Read element `i`.
+    ///
+    /// # Safety
+    /// `i` must be in bounds; no concurrent task may be writing `i`.
+    pub unsafe fn read(&self, i: usize) -> T
+    where
+        T: Copy,
+    {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i)
+    }
+
+    /// Write element `i`.
+    ///
+    /// # Safety
+    /// `i` must be in bounds and written by at most one concurrent task.
+    pub unsafe fn write(&self, i: usize, v: T) {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i) = v;
+    }
+}
+
+/// One published job: a type-erased `&dyn Fn(task_index)` with its
+/// lifetime erased. Sound because the submitter blocks in
+/// [`ThreadPool::run_owned`] until every task completed, so the
+/// referent outlives all dereferences.
+#[derive(Clone, Copy)]
+struct Job {
+    f: *const (dyn Fn(usize) + Sync),
+}
+
+unsafe impl Send for Job {}
+
+/// Pool state behind one mutex: the current job, its chunked work queue
+/// (an index counter), and completion accounting.
+struct State {
+    job: Option<Job>,
+    n_tasks: usize,
+    next_task: usize,
+    /// Tasks claimed-or-unclaimed but not yet finished.
+    pending: usize,
+    /// Workers currently enrolled in the running job.
+    workers_in_job: usize,
+    /// Helper-worker cap for the running job (`threads() - 1` at submit
+    /// time, so a runtime `configure` takes effect per region).
+    allowed: usize,
+    /// Bumped per job so late-waking workers never join a stale epoch.
+    epoch: u64,
+    /// First panic payload from any task, re-thrown on the submitter.
+    panic: Option<Box<dyn Any + Send>>,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers wait here for a new job epoch.
+    work_cv: Condvar,
+    /// The submitter waits here for `pending == 0`.
+    done_cv: Condvar,
+    /// Submitter slot: one region owns the pool at a time; the rest run
+    /// inline (see [`run_tasks`]).
+    busy: AtomicBool,
+}
+
+/// The scoped thread pool. One global instance serves the whole
+/// process; worker threads are spawned lazily on first use and park on
+/// a condvar between jobs.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    /// Spawned helper workers (the submitter is thread `workers + 1`).
+    workers: usize,
+}
+
+fn global_pool() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(ThreadPool::spawn)
+}
+
+impl ThreadPool {
+    /// Spawn the global pool's helper workers: enough for the hardware
+    /// (or a larger `MSGP_THREADS` request), minus the submitting
+    /// thread, capped at [`MAX_WORKERS`]. Idle workers cost one parked
+    /// thread each.
+    fn spawn() -> Self {
+        let target = hardware_threads().max(threads()).min(MAX_WORKERS);
+        let workers = target.saturating_sub(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                job: None,
+                n_tasks: 0,
+                next_task: 0,
+                pending: 0,
+                workers_in_job: 0,
+                allowed: 0,
+                epoch: 0,
+                panic: None,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            busy: AtomicBool::new(false),
+        });
+        for id in 0..workers {
+            let sh = shared.clone();
+            std::thread::Builder::new()
+                .name(format!("msgp-par-{id}"))
+                .spawn(move || worker_loop(&sh))
+                .expect("spawn pool worker");
+        }
+        ThreadPool { shared, workers }
+    }
+
+    /// Helper workers available to parallel regions.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Claim the submitter slot; `false` when another region is running.
+    fn try_acquire(&self) -> bool {
+        self.shared.busy.compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed).is_ok()
+    }
+
+    /// Run one job on the acquired pool: publish it, participate in the
+    /// task loop, wait for stragglers, release the pool, re-throw any
+    /// task panic. Caller must hold the submitter slot (`try_acquire`).
+    fn run_owned(&self, n_tasks: usize, helpers: usize, f: &(dyn Fn(usize) + Sync)) {
+        struct BusyGuard<'a>(&'a Shared);
+        impl Drop for BusyGuard<'_> {
+            fn drop(&mut self) {
+                self.0.busy.store(false, Ordering::Release);
+            }
+        }
+        let _busy = BusyGuard(&self.shared);
+        // SAFETY: `f`'s lifetime is erased to publish it to workers; the
+        // wait loop below does not return until `pending == 0`, i.e.
+        // until no task (hence no dereference of `f`) remains.
+        let job = Job {
+            f: unsafe {
+                std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+            },
+        };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert!(st.job.is_none(), "acquired pool must be idle");
+            st.job = Some(job);
+            st.n_tasks = n_tasks;
+            st.next_task = 0;
+            st.pending = n_tasks;
+            st.workers_in_job = 0;
+            st.allowed = helpers.min(self.workers);
+            st.epoch = st.epoch.wrapping_add(1);
+            st.panic = None;
+        }
+        self.shared.work_cv.notify_all();
+        // Participate: claim and run tasks alongside the workers.
+        let flag = TaskFlagGuard::enter();
+        loop {
+            let t = {
+                let mut st = self.shared.state.lock().unwrap();
+                if st.next_task >= st.n_tasks {
+                    break;
+                }
+                let t = st.next_task;
+                st.next_task += 1;
+                t
+            };
+            run_one(&self.shared, job, t);
+        }
+        drop(flag);
+        // Wait for workers still finishing claimed tasks.
+        let panic_payload = {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.pending > 0 {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            st.job = None;
+            st.panic.take()
+        };
+        if let Some(p) = panic_payload {
+            resume_unwind(p);
+        }
+    }
+}
+
+/// Execute task `t` of `job`, recording a panic instead of unwinding
+/// through the pool, then mark it finished.
+fn run_one(shared: &Shared, job: Job, t: usize) {
+    // SAFETY: the submitter keeps the closure alive until `pending`
+    // reaches zero, and `pending` is decremented only after this call.
+    let res = catch_unwind(AssertUnwindSafe(|| unsafe { (*job.f)(t) }));
+    let mut st = shared.state.lock().unwrap();
+    if let Err(p) = res {
+        // Keep the first payload and cancel the unclaimed tail of the
+        // queue — the cancelled tasks will never run, so they must come
+        // off `pending` too or the submitter would wait forever.
+        if st.panic.is_none() {
+            st.panic = Some(p);
+        }
+        st.pending -= st.n_tasks - st.next_task;
+        st.next_task = st.n_tasks;
+    }
+    st.pending -= 1;
+    if st.pending == 0 {
+        shared.done_cv.notify_all();
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let _flag = TaskFlagGuard::enter(); // workers only ever run pool tasks
+    loop {
+        // Enroll in a job epoch with spare capacity and unclaimed tasks.
+        let (job, epoch) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(job) = st.job {
+                    if st.next_task < st.n_tasks && st.workers_in_job < st.allowed {
+                        st.workers_in_job += 1;
+                        break (job, st.epoch);
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        // Task loop: claim indices until this epoch's queue drains.
+        loop {
+            let t = {
+                let mut st = shared.state.lock().unwrap();
+                if st.epoch != epoch || st.job.is_none() || st.next_task >= st.n_tasks {
+                    // Only undo this worker's own enrollment: if the
+                    // epoch moved on, the counter was reset at publish
+                    // time and belongs to the new job.
+                    if st.epoch == epoch {
+                        st.workers_in_job = st.workers_in_job.saturating_sub(1);
+                    }
+                    break;
+                }
+                let t = st.next_task;
+                st.next_task += 1;
+                t
+            };
+            run_one(shared, job, t);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    /// Tasks over disjoint ranges fill a buffer completely and exactly,
+    /// whatever mix of workers ran them.
+    #[test]
+    fn run_tasks_fills_disjoint_ranges() {
+        let total = 10_000;
+        let mut out = vec![0u64; total];
+        let ptr = SendSlicePtr::new(&mut out);
+        for_each_range(total, 8, &|r| {
+            let s = unsafe { ptr.range(r.clone()) };
+            for (k, v) in s.iter_mut().enumerate() {
+                *v = (r.start + k) as u64 + 1;
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as u64 + 1);
+        }
+    }
+
+    /// Zero-sized regions are a no-op, single-task regions run inline.
+    #[test]
+    fn zero_and_single_task_regions() {
+        assert!(!run_tasks(0, &|_| panic!("must not run")));
+        let hits = AtomicU64::new(0);
+        let fanned = run_tasks(1, &|i| {
+            assert_eq!(i, 0);
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(!fanned, "single task must run inline");
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    /// Nested regions run inline (no deadlock, every task executes).
+    #[test]
+    fn nested_scope_runs_inline() {
+        let outer_hits = AtomicU64::new(0);
+        let inner_hits = AtomicU64::new(0);
+        run_tasks(4, &|_| {
+            outer_hits.fetch_add(1, Ordering::SeqCst);
+            let fanned = run_tasks(4, &|_| {
+                inner_hits.fetch_add(1, Ordering::SeqCst);
+            });
+            assert!(!fanned, "nested region must run inline");
+        });
+        assert_eq!(outer_hits.load(Ordering::SeqCst), 4);
+        assert_eq!(inner_hits.load(Ordering::SeqCst), 16);
+    }
+
+    /// The scope API runs every spawned closure (borrowing the stack)
+    /// before returning.
+    #[test]
+    fn scope_runs_all_spawned_tasks() {
+        let mut parts = vec![0u64; 6];
+        {
+            let slots: Vec<Mutex<&mut u64>> = parts.iter_mut().map(Mutex::new).collect();
+            scope(|s| {
+                for (i, slot) in slots.iter().enumerate() {
+                    s.spawn(move || {
+                        **slot.lock().unwrap() = (i as u64 + 1) * 10;
+                    });
+                }
+            });
+        }
+        assert_eq!(parts, vec![10, 20, 30, 40, 50, 60]);
+    }
+
+    /// A panicking task propagates to the submitter, and the pool stays
+    /// usable afterwards.
+    #[test]
+    fn panic_in_task_propagates_and_pool_survives() {
+        let res = std::panic::catch_unwind(|| {
+            run_tasks(4, &|i| {
+                if i == 2 {
+                    panic!("task exploded");
+                }
+            });
+        });
+        assert!(res.is_err(), "panic must propagate to the submitter");
+        // Pool still works.
+        let hits = AtomicU64::new(0);
+        run_tasks(8, &|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 8);
+    }
+
+    /// `configure` clamps and `threads()` always reports >= 1; results
+    /// are identical at every setting (spot check with a reduction).
+    #[test]
+    fn configure_round_trips_and_results_match() {
+        let sum_with = |t: usize| -> u64 {
+            configure(ParallelConfig { threads: t });
+            assert!(threads() >= 1);
+            let total = 4096;
+            let mut out = vec![0u64; total];
+            let ptr = SendSlicePtr::new(&mut out);
+            for_each_range(total, 8, &|r| {
+                let s = unsafe { ptr.range(r.clone()) };
+                for (k, v) in s.iter_mut().enumerate() {
+                    *v = ((r.start + k) as u64).wrapping_mul(2654435761);
+                }
+            });
+            out.iter().sum()
+        };
+        let s1 = sum_with(1);
+        let s4 = sum_with(4);
+        assert_eq!(s1, s4);
+        configure(ParallelConfig { threads: 0 }); // restore default
+    }
+}

@@ -18,6 +18,17 @@
 //! scaling comes from. Each worker publishes its refreshed
 //! [`ServingModel`] into its slot of the shared [`ShardedServing`]
 //! table; swaps are per-shard and atomic.
+//!
+//! **Intra-shard vs shard-level threading.** The shared
+//! [`refresh_mdomain`] core additionally fans its batched FFT / CG
+//! applies out over the in-tree thread pool ([`crate::parallel`]), so a
+//! *single* shard refreshing on an otherwise idle machine uses all
+//! cores. The pool serves one parallel region at a time and contended
+//! or nested regions run serially, so when all S shard workers refresh
+//! simultaneously the machine stays exactly subscribed: shard-level
+//! parallelism dominates under load, intra-shard parallelism fills in
+//! when shards refresh alone — the two compose without
+//! oversubscription, and results are identical either way.
 
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{self, Receiver, SyncSender};
@@ -237,6 +248,9 @@ impl ShardWorker {
             .last_refresh_us
             .store(wall.as_micros() as u64, Ordering::Relaxed);
         self.metrics.record_refresh(wall);
+        // Process-wide value — every worker stores the same number, so
+        // the multi-writer race on this gauge is benign.
+        self.metrics.record_refresh_threads(crate::parallel::threads() as u64);
     }
 
     fn run(mut self, rx: Receiver<ShardMsg>) {

@@ -32,9 +32,13 @@
 //! [`cg_solve`] bit-for-bit up to operator rounding) while the operator
 //! and preconditioner are applied to the whole block at once — one
 //! batched FFT pass per iteration instead of one per RHS. Columns that
-//! reach tolerance are masked out of the scalar updates and simply ride
-//! along. The streaming m-domain refresh uses this to solve the mean and
-//! all `n_s` variance-probe systems as a single block.
+//! reach tolerance are **physically compacted out** of the block handed
+//! to the operator, so uneven warm starts stop paying for finished
+//! systems ([`BlockCgResult::apply_cols`] accounts for the columns
+//! actually applied). The batched applies themselves fan out over the
+//! in-tree thread pool ([`crate::parallel`]) through the FFT engine.
+//! The streaming m-domain refresh uses this to solve the mean and all
+//! `n_s` variance-probe systems as a single block.
 
 use crate::linalg::dense::{axpy, dot};
 
@@ -216,8 +220,7 @@ pub fn cg_solve(
 /// Outcome of a lockstep multi-RHS CG solve.
 #[derive(Clone, Debug)]
 pub struct BlockCgResult {
-    /// Lockstep block iterations: the number of *batched* operator
-    /// applications is `block_iters + 1` (one for the initial residual).
+    /// Lockstep block iterations (the slowest column's count).
     pub block_iters: usize,
     /// Iteration at which each column converged (or froze on a
     /// non-SPD breakdown / the iteration cap) — comparable to the
@@ -227,20 +230,39 @@ pub struct BlockCgResult {
     pub rel_residuals: Vec<f64>,
     /// Every column reached the tolerance within the iteration cap.
     pub converged: bool,
+    /// Total *columns* pushed through `apply_a` (the initial full-block
+    /// residual plus one **compacted** active block per iteration).
+    /// Without compaction this would be `(block_iters + 1) * cols`;
+    /// with it, converged columns stop paying operator applies, so on
+    /// uneven warm starts `apply_cols` is strictly smaller. The G-apply
+    /// accounting tests pin against this.
+    pub apply_cols: usize,
 }
 
 /// Reusable block-CG buffers (`cols` systems of size `n` each) — keeps
-/// the lockstep hot loop allocation-free.
+/// the lockstep hot loop allocation-free. The `*c` buffers hold the
+/// physically compacted active block handed to the batched operator /
+/// preconditioner.
 #[derive(Clone, Debug, Default)]
 pub struct BlockCgWorkspace {
     r: Vec<f64>,
     z: Vec<f64>,
     p: Vec<f64>,
     ap: Vec<f64>,
+    /// Compacted active search directions (`live x n`).
+    pc: Vec<f64>,
+    /// Compacted operator outputs (`live x n`).
+    apc: Vec<f64>,
+    /// Compacted active residuals (`live x n`).
+    rc: Vec<f64>,
+    /// Compacted preconditioned residuals (`live x n`).
+    zc: Vec<f64>,
     rz: Vec<f64>,
     bnorm: Vec<f64>,
     rel: Vec<f64>,
     active: Vec<bool>,
+    /// Indices of the still-iterating columns, in column order.
+    live: Vec<usize>,
 }
 
 impl BlockCgWorkspace {
@@ -258,6 +280,10 @@ impl BlockCgWorkspace {
             self.z.resize(total, 0.0);
             self.p.resize(total, 0.0);
             self.ap.resize(total, 0.0);
+            self.pc.resize(total, 0.0);
+            self.apc.resize(total, 0.0);
+            self.rc.resize(total, 0.0);
+            self.zc.resize(total, 0.0);
         }
         if self.rz.len() != cols {
             self.rz.resize(cols, 0.0);
@@ -265,6 +291,7 @@ impl BlockCgWorkspace {
             self.rel.resize(cols, 0.0);
             self.active.resize(cols, false);
         }
+        self.live.clear();
     }
 }
 
@@ -281,14 +308,23 @@ impl BlockCgWorkspace {
 /// Each column runs the scalar CG recurrence of [`cg_solve`] with its own
 /// `alpha`/`beta`/residual, so per-column results match `cols` sequential
 /// solves (up to the rounding of the batched operator); converged or
-/// broken-down columns are masked out of the scalar updates while the
-/// block keeps iterating until all columns finish. The payoff: one
-/// batched operator + preconditioner application per iteration instead
-/// of one *solve* per RHS. Note the cost model: masked columns still
-/// ride through the batched applies until the slowest column finishes,
-/// so the win is largest when column iteration counts are similar (the
-/// m-domain refresh: identical operator, similar conditioning per
-/// probe); active-column compaction is a possible future refinement.
+/// broken-down columns stop participating while the block keeps
+/// iterating until all columns finish. The payoff: one batched operator
+/// + preconditioner application per iteration instead of one *solve*
+/// per RHS.
+///
+/// **Active-column compaction**: finished columns are physically
+/// compacted out of the block handed to `apply_a` / `precond` — each
+/// iteration packs the live search directions (and residuals)
+/// contiguously, applies the operator to that `live x n` sub-block
+/// only, and scatters the updates back by column index. Uneven warm
+/// starts therefore never pay full-block operator work until the
+/// slowest column finishes ([`BlockCgResult::apply_cols`] accounts for
+/// exactly the columns applied). Both closures must accept any
+/// `k x n` block with `k <= cols` (all in-crate batched operators key
+/// their width off `v.len()`). Compaction does not change any column's
+/// arithmetic: each column sees the identical scalar recurrence at
+/// every block composition.
 pub fn cg_solve_block(
     mut apply_a: impl FnMut(&[f64], &mut [f64]),
     mut precond: impl FnMut(&[f64], &mut [f64]),
@@ -305,14 +341,17 @@ pub fn cg_solve_block(
     if !opts.warm_start {
         x.fill(0.0);
     }
-    // Initial residual block: one batched apply (covers warm starts).
+    // Initial residual block: one batched full-block apply (covers warm
+    // starts).
     apply_a(x, &mut ws.ap);
+    let mut apply_cols = cols;
     for i in 0..b.len() {
         ws.r[i] = b[i] - ws.ap[i];
     }
     precond(&ws.r, &mut ws.z);
     ws.p.copy_from_slice(&ws.z);
     let mut col_iters = vec![0usize; cols];
+    ws.live.clear();
     for c in 0..cols {
         let span = c * n..(c + 1) * n;
         let bc = &b[span.clone()];
@@ -327,16 +366,25 @@ pub fn cg_solve_block(
         ws.rz[c] = dot(&ws.r[span.clone()], &ws.z[span.clone()]);
         ws.rel[c] = dot(&ws.r[span.clone()], &ws.r[span.clone()]).sqrt() / ws.bnorm[c];
         ws.active[c] = ws.rel[c] > opts.tol;
+        if ws.active[c] {
+            ws.live.push(c);
+        }
     }
     let mut iters = 0usize;
-    while ws.active.iter().any(|&a| a) && iters < opts.max_iter {
-        apply_a(&ws.p, &mut ws.ap);
-        for c in 0..cols {
-            if !ws.active[c] {
-                continue;
-            }
+    while !ws.live.is_empty() && iters < opts.max_iter {
+        // Compact the live search directions and apply the operator to
+        // the active sub-block only.
+        let nl = ws.live.len();
+        for (j, &c) in ws.live.iter().enumerate() {
+            ws.pc[j * n..(j + 1) * n].copy_from_slice(&ws.p[c * n..(c + 1) * n]);
+        }
+        apply_a(&ws.pc[..nl * n], &mut ws.apc[..nl * n]);
+        apply_cols += nl;
+        for j in 0..nl {
+            let c = ws.live[j];
+            let cspan = j * n..(j + 1) * n;
             let span = c * n..(c + 1) * n;
-            let pap = dot(&ws.p[span.clone()], &ws.ap[span.clone()]);
+            let pap = dot(&ws.pc[cspan.clone()], &ws.apc[cspan.clone()]);
             if pap <= 0.0 || !pap.is_finite() {
                 // This column's operator is not SPD to working precision;
                 // freeze it with what it has (mirrors cg_solve's bail).
@@ -345,8 +393,8 @@ pub fn cg_solve_block(
                 continue;
             }
             let alpha = ws.rz[c] / pap;
-            axpy(&mut x[span.clone()], alpha, &ws.p[span.clone()]);
-            axpy(&mut ws.r[span.clone()], -alpha, &ws.ap[span.clone()]);
+            axpy(&mut x[span.clone()], alpha, &ws.pc[cspan.clone()]);
+            axpy(&mut ws.r[span.clone()], -alpha, &ws.apc[cspan.clone()]);
             ws.rel[c] = dot(&ws.r[span.clone()], &ws.r[span.clone()]).sqrt() / ws.bnorm[c];
             if ws.rel[c] <= opts.tol {
                 ws.active[c] = false;
@@ -354,36 +402,43 @@ pub fn cg_solve_block(
             }
         }
         iters += 1;
-        if !ws.active.iter().any(|&a| a) {
+        // Physically drop finished columns before the preconditioner.
+        let active = &ws.active;
+        ws.live.retain(|&c| active[c]);
+        if ws.live.is_empty() {
             break;
         }
-        precond(&ws.r, &mut ws.z);
-        for c in 0..cols {
-            if !ws.active[c] {
-                continue;
-            }
-            let span = c * n..(c + 1) * n;
-            let rz_new = dot(&ws.r[span.clone()], &ws.z[span.clone()]);
+        let nl = ws.live.len();
+        for (j, &c) in ws.live.iter().enumerate() {
+            ws.rc[j * n..(j + 1) * n].copy_from_slice(&ws.r[c * n..(c + 1) * n]);
+        }
+        precond(&ws.rc[..nl * n], &mut ws.zc[..nl * n]);
+        for j in 0..nl {
+            let c = ws.live[j];
+            let cspan = j * n..(j + 1) * n;
+            let rz_new = dot(&ws.rc[cspan.clone()], &ws.zc[cspan.clone()]);
             let beta = rz_new / ws.rz[c];
             ws.rz[c] = rz_new;
-            for i in span {
-                ws.p[i] = ws.z[i] + beta * ws.p[i];
+            for (pi, &zi) in
+                ws.p[c * n..(c + 1) * n].iter_mut().zip(&ws.zc[cspan.clone()])
+            {
+                *pi = zi + beta * *pi;
             }
         }
     }
-    // Columns still active hit the iteration cap.
-    for c in 0..cols {
-        if ws.active[c] {
-            col_iters[c] = iters;
-            ws.active[c] = false;
-        }
+    // Columns still live hit the iteration cap.
+    for &c in &ws.live {
+        col_iters[c] = iters;
+        ws.active[c] = false;
     }
+    ws.live.clear();
     let converged = ws.rel.iter().all(|&r| r <= opts.tol);
     BlockCgResult {
         block_iters: iters,
         col_iters,
         rel_residuals: ws.rel.clone(),
         converged,
+        apply_cols,
     }
 }
 
@@ -570,12 +625,13 @@ mod tests {
             seq_iters.push(res.iters);
         }
         // Block path: the batched apply runs the identical dense MVM per
-        // column, so iterates match exactly.
+        // column (deriving its width from the compacted block), so
+        // iterates match exactly.
         let mut xs_blk = vec![0.0; cols * n];
         let mut bws = BlockCgWorkspace::new(n, cols);
         let res = cg_solve_block(
             |v, out| {
-                for c in 0..cols {
+                for c in 0..v.len() / n {
                     out[c * n..(c + 1) * n].copy_from_slice(&a.matvec(&v[c * n..(c + 1) * n]));
                 }
             },
@@ -593,49 +649,145 @@ mod tests {
             *seq_iters.iter().max().unwrap(),
             "block iterations = slowest column"
         );
+        // Compaction accounting: never more column-applies than the
+        // uncompacted lockstep, never fewer than one per iteration plus
+        // the initial block.
+        assert!(res.apply_cols <= (res.block_iters + 1) * cols);
+        assert!(res.apply_cols >= res.block_iters + cols);
         for (g, w) in xs_blk.iter().zip(&xs_seq) {
             assert!((g - w).abs() < 1e-12, "{g} vs {w}");
         }
     }
 
-    /// Converged columns are masked: a well-conditioned column stops
-    /// early while an ill-conditioned one keeps iterating, and the
-    /// masked column's solution is untouched afterwards.
+    /// Converged columns are compacted out: a warm-started column stops
+    /// early while a cold one keeps iterating, the finished column's
+    /// solution is untouched afterwards, and the operator-work
+    /// accounting shows it stopped paying for applies.
     #[test]
-    fn block_solve_masks_converged_columns() {
+    fn block_solve_compacts_converged_columns() {
         let n = 48;
-        // Column 0: identity system (converges in one iteration).
-        // Column 1: ill-conditioned SPD system.
-        let mut a_ill = spd(n);
-        for i in 0..n {
-            a_ill[(i, i)] += (i as f64).powi(2) * 5.0;
-        }
+        let a = spd(n);
+        let opts = CgOptions { tol: 1e-10, max_iter: 2000, warm_start: false, ..Default::default() };
+        let apply = |v: &[f64], out: &mut [f64]| {
+            for c in 0..v.len() / n {
+                out[c * n..(c + 1) * n].copy_from_slice(&a.matvec(&v[c * n..(c + 1) * n]));
+            }
+        };
+        let id = |v: &[f64], out: &mut [f64]| out.copy_from_slice(v);
+        // Solve column 0 alone first to get a near-exact warm start.
         let b: Vec<f64> = (0..2 * n).map(|i| 1.0 + (i as f64 * 0.4).cos()).collect();
-        let opts =
-            CgOptions { tol: 1e-10, max_iter: 2000, warm_start: false, ..Default::default() };
+        let mut x0 = vec![0.0; n];
+        let mut ws = CgWorkspace::new(n);
+        let pre = cg_solve(
+            |v, out| out.copy_from_slice(&a.matvec(v)),
+            |v, out| out.copy_from_slice(v),
+            &b[..n],
+            &mut x0,
+            CgOptions { tol: 1e-6, ..opts },
+            &mut ws,
+        );
+        assert!(pre.converged);
+        // Block: column 0 warm-started near its solution, column 1 cold.
         let mut x = vec![0.0; 2 * n];
+        x[..n].copy_from_slice(&x0);
         let mut bws = BlockCgWorkspace::new(n, 2);
+        let res = cg_solve_block(apply, id, &b, &mut x, n, opts.warm(), &mut bws);
+        assert!(res.converged);
+        assert!(
+            res.col_iters[0] < res.col_iters[1],
+            "warm column must finish first: {:?}",
+            res.col_iters
+        );
+        assert_eq!(res.block_iters, res.col_iters[1]);
+        // Compaction: the early column stopped riding through the
+        // operator, so total column-applies are strictly fewer than the
+        // uncompacted lockstep would pay.
+        assert!(
+            res.apply_cols < (res.block_iters + 1) * 2,
+            "apply_cols {} vs uncompacted {}",
+            res.apply_cols,
+            (res.block_iters + 1) * 2
+        );
+        assert_eq!(
+            res.apply_cols,
+            2 + res.col_iters[0] + res.col_iters[1],
+            "each column pays the initial block plus its own iterations"
+        );
+        // The finished column's solution solves its system.
+        let want = {
+            let mut w = vec![0.0; n];
+            let mut ws2 = CgWorkspace::new(n);
+            cg_solve(
+                |v, out| out.copy_from_slice(&a.matvec(v)),
+                |v, out| out.copy_from_slice(v),
+                &b[..n],
+                &mut w,
+                opts,
+                &mut ws2,
+            );
+            w
+        };
+        for (g, w) in x[..n].iter().zip(&want) {
+            assert!((g - w).abs() < 1e-7, "{g} vs {w}");
+        }
+    }
+
+    /// Acceptance (satellite): on a block with one hard and many easy
+    /// columns (uneven warm starts — the refresh scenario where most
+    /// probe systems barely changed), compaction performs strictly
+    /// fewer operator column-applies than the uncompacted lockstep
+    /// block — pinned by counting the columns actually pushed through
+    /// `apply_a`.
+    #[test]
+    fn compaction_beats_uncompacted_on_uneven_block() {
+        let n = 40;
+        let mut a = spd(n);
+        for i in 0..n {
+            a[(i, i)] += (i as f64).powi(2) * 3.0;
+        }
+        let cols = 6;
+        let b: Vec<f64> = (0..cols * n).map(|i| (i as f64 * 0.29).sin() + 0.7).collect();
+        // Easy columns 1.. are warm-started at their exact solutions
+        // (dense solve); the hard column 0 starts cold.
+        let mut x = vec![0.0; cols * n];
+        for c in 1..cols {
+            let sol = a.clone().solve(&b[c * n..(c + 1) * n]).expect("SPD system");
+            x[c * n..(c + 1) * n].copy_from_slice(&sol);
+        }
+        let mut applied_cols = 0usize;
+        let mut bws = BlockCgWorkspace::new(n, cols);
         let res = cg_solve_block(
             |v, out| {
-                out[..n].copy_from_slice(&v[..n]); // A_0 = I
-                out[n..].copy_from_slice(&a_ill.matvec(&v[n..]));
+                let k = v.len() / n;
+                applied_cols += k;
+                for c in 0..k {
+                    out[c * n..(c + 1) * n].copy_from_slice(&a.matvec(&v[c * n..(c + 1) * n]));
+                }
             },
             |v, out| out.copy_from_slice(v),
             &b,
             &mut x,
             n,
-            opts,
+            CgOptions { tol: 1e-8, max_iter: 2000, warm_start: true, ..Default::default() },
             &mut bws,
         );
-        assert!(res.converged);
-        assert_eq!(res.col_iters[0], 1, "identity column converges in one step");
-        assert!(res.col_iters[1] > 1, "ill-conditioned column iterates on");
-        assert_eq!(res.block_iters, res.col_iters[1]);
-        // Column 0's solution is the RHS itself, untouched by the extra
-        // block iterations it sat out.
-        for (g, w) in x[..n].iter().zip(&b[..n]) {
-            assert!((g - w).abs() < 1e-10, "{g} vs {w}");
-        }
+        assert!(res.converged, "{res:?}");
+        assert_eq!(applied_cols, res.apply_cols, "accounting must match the closure's count");
+        assert!(res.block_iters >= 1, "the hard column must actually iterate");
+        let uncompacted = (res.block_iters + 1) * cols;
+        assert!(
+            res.apply_cols < uncompacted,
+            "compaction must save operator work: {} vs {}",
+            res.apply_cols,
+            uncompacted
+        );
+        // Easy columns really finished before the hard one.
+        let max_easy = *res.col_iters[1..].iter().max().unwrap();
+        assert!(
+            max_easy < res.col_iters[0],
+            "easy columns must converge first: {:?}",
+            res.col_iters
+        );
     }
 
     /// Warm-started block solves honor per-column initial guesses, just
@@ -651,7 +803,7 @@ mod tests {
         let mut x = vec![0.0; cols * n];
         let mut bws = BlockCgWorkspace::new(n, cols);
         let apply = |v: &[f64], out: &mut [f64]| {
-            for c in 0..cols {
+            for c in 0..v.len() / n {
                 out[c * n..(c + 1) * n].copy_from_slice(&a.matvec(&v[c * n..(c + 1) * n]));
             }
         };
@@ -690,7 +842,7 @@ mod tests {
         let mut bws = BlockCgWorkspace::new(n, 2);
         let res = cg_solve_block(
             |v, out| {
-                for c in 0..2 {
+                for c in 0..v.len() / n {
                     out[c * n..(c + 1) * n].copy_from_slice(&a.matvec(&v[c * n..(c + 1) * n]));
                 }
             },

@@ -1,5 +1,11 @@
 //! Iterative solvers: scalar preconditioned CG and its lockstep
-//! multi-RHS block form (one batched operator apply per iteration).
+//! multi-RHS block form — one batched operator apply per iteration,
+//! converged columns physically compacted out of the block, and the
+//! batched applies fanned out over the in-tree thread pool
+//! ([`crate::parallel`]) by the FFT engine underneath. Intra-solve
+//! threading composes with shard-level worker threads: the pool serves
+//! one region at a time, so concurrent shard refreshes run their solves
+//! serially per shard while a lone refresh uses every core.
 
 pub mod cg;
 

@@ -43,7 +43,12 @@
 //!   per-column `x0`): per iteration, `S` and the preconditioner are
 //!   applied to the whole block through the batched two-for-one FFT
 //!   engine ([`crate::linalg::fft`]), with converged columns masked
-//!   out. Solves run under a pluggable
+//!   out (and physically compacted from the batched applies), the
+//!   block's rows split across the in-tree thread pool
+//!   ([`crate::parallel`], `MSGP_THREADS`) so one refresh uses all
+//!   cores — intra-shard threading that composes with, and never
+//!   oversubscribes against, the per-shard worker threads of
+//!   [`crate::shard`]. Solves run under a pluggable
 //!   [`crate::solver::Preconditioner`]: `Jacobi`
 //!   scales by `diag(B) ~= sigma^2 + sf2 s0^2 diag(G)` from the
 //!   tracked Gram diagonal, while `Spectral` (the default) inverts

@@ -6,13 +6,25 @@
 //! probe — against the *identical* operator `B = sigma^2 I + sf2 S G S`.
 //! [`refresh_mdomain`] therefore runs **one lockstep block-CG solve**
 //! ([`crate::solver::cg_solve_block`]): per iteration, `S` is applied to
-//! the whole block through the batched two-for-one FFT engine
+//! the whole block through the batched real-FFT engine
 //! ([`crate::linalg::fft`]) and each column keeps its own scalar CG
-//! recurrence with convergence masking, so results match the historical
-//! sequential path (kept as [`refresh_mdomain_sequential`] for A/B
-//! validation and `benches/fig7_batched.rs`) while the FFT work per
-//! iteration drops from `n_s + 1` transforms to `ceil((n_s + 1) / 2)`
-//! batched ones.
+//! recurrence, with converged columns physically compacted out of the
+//! batched applies, so results match the historical sequential path
+//! (kept as [`refresh_mdomain_sequential`] for A/B validation and
+//! `benches/fig7_batched.rs`) while the FFT work per iteration drops to
+//! half-length rfft transforms of only the still-active columns.
+//!
+//! The batched operator and preconditioner applies additionally fan out
+//! over the in-tree thread pool ([`crate::parallel`]): within one
+//! refresh the block's rows split across workers, so a single-trainer
+//! (or single-shard) refresh uses all cores. In sharded deployments
+//! this composes with the process-level shard parallelism — the pool
+//! serves one region at a time and nested/contended regions degrade to
+//! serial, so S shard workers never oversubscribe the machine.
+//! Parallel and serial paths produce bit-identical results (pinned by
+//! `refresh_identical_across_thread_counts`); `RefreshStats::threads`
+//! reports the configured pool width and `RefreshStats::parallel`
+//! whether the fan-out actually happened.
 //!
 //! The refresh math lives in [`refresh_mdomain`] so the single-trainer
 //! path here and the per-shard workers in [`crate::shard`] solve the
@@ -101,11 +113,23 @@ pub struct RefreshStats {
     /// Total CG iterations across the variance-probe solves (sum of the
     /// probe columns' convergence points).
     pub var_iters_total: usize,
-    /// Lockstep block-CG iterations of the single multi-RHS solve: the
-    /// refresh performed `block_iters + 1` batched operator
-    /// applications in total. `0` on the sequential reference path
-    /// ([`StreamTrainer::refresh_sequential`]).
+    /// Lockstep block-CG iterations of the single multi-RHS solve
+    /// (`0` on the sequential reference path,
+    /// [`StreamTrainer::refresh_sequential`]). Converged columns are
+    /// compacted out of the batched applies as the block iterates.
     pub block_iters: usize,
+    /// Pool width configured at refresh time
+    /// (`crate::parallel::threads()`). Mirrored to `/metrics` as
+    /// `last_refresh_threads`. A width `> 1` does not by itself mean
+    /// the fan-out happened (a sibling shard may have held the pool);
+    /// [`Self::parallel`] reports that.
+    pub threads: usize,
+    /// Whether the batched FFT engine actually dispatched pool tasks
+    /// while this refresh ran (observed via the engine's process-global
+    /// dispatch counter, so concurrent refreshes on other threads can
+    /// attribute to each other — within one trainer thread it is
+    /// exact). `false` = every hot-path apply ran serially.
+    pub parallel: bool,
     /// Grid size at refresh time.
     pub m: usize,
     /// Points absorbed at refresh time.
@@ -192,6 +216,12 @@ pub(crate) struct RefreshOutcome {
     /// Lockstep iterations of the single block solve (`0` on the
     /// sequential reference path).
     pub block_iters: usize,
+    /// Total columns pushed through the batched m-domain operator
+    /// (initial residual + one compacted active block per iteration;
+    /// see [`crate::solver::BlockCgResult::apply_cols`]). The G-apply
+    /// accounting tests pin against this. On the sequential reference
+    /// path: the equivalent per-solve count, `iters + 1` per system.
+    pub apply_cols: usize,
     /// `true` when a requested preconditioner could not be built and
     /// the solves ran unpreconditioned.
     pub precond_fallback: bool,
@@ -481,12 +511,16 @@ pub(crate) fn refresh_mdomain(
         xblk[(k + 1) * m..(k + 2) * m].copy_from_slice(t);
     }
     let gk = inp.gk;
+    // Width-adaptive batched operator: block CG compacts converged
+    // columns out, so the incoming block can be any `k x m` with
+    // `k <= cols` — every stage keys its width off `v.len()`.
     let mut apply = |v: &[f64], out: &mut [f64]| {
-        gk.sqrt_matvec_batch(v, s1, fft);
-        for c in 0..cols {
+        let k = v.len() / m;
+        gk.sqrt_matvec_batch(v, &mut s1[..k * m], fft);
+        for c in 0..k {
             g_apply(&s1[c * m..(c + 1) * m], &mut s2[c * m..(c + 1) * m]);
         }
-        gk.sqrt_matvec_batch(s2, s1, fft);
+        gk.sqrt_matvec_batch(&s2[..k * m], &mut s1[..k * m], fft);
         for ((o, &s), &vi) in out.iter_mut().zip(s1.iter()).zip(v) {
             *o = sf2 * s + sigma2 * vi;
         }
@@ -526,6 +560,7 @@ pub(crate) fn refresh_mdomain(
         mean_iters: res.col_iters[0],
         var_iters: res.col_iters[1..].iter().sum(),
         block_iters: res.block_iters,
+        apply_cols: res.apply_cols,
         precond_fallback,
     }
 }
@@ -601,12 +636,16 @@ pub(crate) fn refresh_mdomain_sequential(
     for a in acc.iter_mut() {
         *a /= ns as f64;
     }
+    // Sequential accounting mirror: each scalar solve pays `iters + 1`
+    // single-column operator applies (initial residual + per iteration).
+    let apply_cols = (mean_res.iters + 1) + var_iters + inp.g_probes.len();
     RefreshOutcome {
         u_mean,
         nu_u: acc,
         mean_iters: mean_res.iters,
         var_iters,
         block_iters: 0,
+        apply_cols,
         precond_fallback,
     }
 }
@@ -869,6 +908,7 @@ impl StreamTrainer {
 
     fn refresh_impl(&mut self, block: bool) -> RefreshStats {
         let t0 = Instant::now();
+        let panels_before = crate::linalg::fft::parallel_panels_total();
         let m = self.m();
         let opts = self.cfg.msgp.cg.warm();
         // Borrow the read-only operator pieces as disjoint fields so the
@@ -913,6 +953,8 @@ impl StreamTrainer {
             mean_iters: out.mean_iters,
             var_iters_total: out.var_iters,
             block_iters: out.block_iters,
+            threads: crate::parallel::threads(),
+            parallel: crate::linalg::fft::parallel_panels_total() > panels_before,
             m,
             n: self.n(),
             wall: t0.elapsed(),
@@ -1136,11 +1178,13 @@ mod tests {
         }
     }
 
-    /// Acceptance: the refresh performs exactly one block CG solve.
-    /// Counting `G` applications pins it: `n_s` during RHS staging plus
-    /// `(block_iters + 1) * (n_s + 1)` inside the single lockstep solve
-    /// (one batched operator application per iteration plus the initial
-    /// residual) — no per-system solve loop remains.
+    /// Acceptance: the refresh performs exactly one block CG solve with
+    /// active-column compaction. Counting `G` applications pins it:
+    /// `n_s` during RHS staging plus [`RefreshOutcome::apply_cols`]
+    /// inside the single lockstep solve (the initial full block, then
+    /// one *compacted* active block per iteration) — no per-system
+    /// solve loop remains, and converged columns stop paying for
+    /// operator applies.
     #[test]
     fn refresh_is_exactly_one_block_solve() {
         let (grid, ski) = skewed_ski(48, 400);
@@ -1167,12 +1211,65 @@ mod tests {
         assert!(out.block_iters > 0);
         assert_eq!(
             g_calls,
-            ns + (out.block_iters + 1) * (ns + 1),
-            "G applications must account for exactly one block solve"
+            ns + out.apply_cols,
+            "G applications must account for exactly one (compacted) block solve"
         );
+        // The compacted solve never exceeds the uncompacted lockstep
+        // cost and always pays at least one column per iteration plus
+        // the initial full block.
+        assert!(out.apply_cols <= (out.block_iters + 1) * (ns + 1));
+        assert!(out.apply_cols >= out.block_iters + (ns + 1));
         // Per-column counts stay bounded by the lockstep length.
         assert!(out.mean_iters <= out.block_iters);
         assert!(out.var_iters <= ns * out.block_iters);
+    }
+
+    /// Acceptance (tentpole): the m-domain refresh is bit-identical
+    /// across thread counts — the parallel FFT fan-out changes which
+    /// core does the work, never the arithmetic. Grid size and probe
+    /// count are chosen to clear the engine's parallel threshold.
+    #[test]
+    fn refresh_identical_across_thread_counts() {
+        let grid = Grid::new(vec![GridAxis::span(-5.0, 5.0, 512)]);
+        let mut ski = IncrementalSki::new(grid.clone(), 6, 1, 7);
+        let mut rng = Rng::new(33);
+        for i in 0..1500 {
+            let x = if i % 3 == 0 {
+                rng.uniform_in(-4.5, 4.5)
+            } else {
+                rng.uniform_in(-4.5, -2.5)
+            };
+            ski.ingest(&[x], 0.2 * (x * 1.3).sin());
+        }
+        let gk = GridKernel::new(&se_kernel(), &grid, &MsgpConfig::default());
+        let m = ski.m();
+        let ns = ski.probes().len();
+        let g_probes = fixed_probes(m, ns);
+        let opts = CgOptions { tol: 1e-10, max_iter: 4000, ..Default::default() }.spectral();
+        let run_with = |threads: usize| -> (Vec<f64>, Vec<f64>) {
+            crate::parallel::configure(crate::parallel::ParallelConfig { threads });
+            let mut tm = vec![0.0; m];
+            let mut tp: Vec<Vec<f64>> = (0..ns).map(|_| vec![0.0; m]).collect();
+            let mut ws = RefreshWorkspace::new();
+            let mut g_apply = |v: &[f64], out: &mut [f64]| ski.g_matvec_into(v, out);
+            let out = refresh_mdomain(
+                refresh_inputs(&gk, &ski, &g_probes, opts),
+                &mut g_apply,
+                &mut tm,
+                &mut tp,
+                &mut ws,
+            );
+            (out.u_mean, out.nu_u)
+        };
+        let (mean_1, nu_1) = run_with(1);
+        let (mean_4, nu_4) = run_with(4);
+        crate::parallel::configure(crate::parallel::ParallelConfig { threads: 0 });
+        for (a, b) in mean_1.iter().zip(&mean_4) {
+            assert!((a - b).abs() < 1e-12, "u_mean diverged across threads: {a} vs {b}");
+        }
+        for (a, b) in nu_1.iter().zip(&nu_4) {
+            assert!((a - b).abs() < 1e-12, "nu_u diverged across threads: {a} vs {b}");
+        }
     }
 
     /// Satellite regression: a preconditioner request without the

@@ -98,9 +98,9 @@ impl Bttb {
     /// Exact batched MVM `K Y` for a row-major `b x m` block: pairs of
     /// real vectors are scattered into the corners of one complex
     /// embedding tensor each (two-for-one — the embedding spectrum is
-    /// real), transformed with [`fftn_batch`]'s cache-blocked panels,
-    /// scaled, and gathered back. Allocation-free given a warm
-    /// [`Workspace`].
+    /// real), transformed with [`fftn_batch`]'s cache-blocked panels
+    /// (which fan out over the thread pool on large tensors), scaled,
+    /// and gathered back. Allocation-free given a warm [`Workspace`].
     pub fn matvec_batch(&self, block: &[f64], out: &mut [f64], ws: &mut Workspace) {
         let m = self.m();
         assert!(m > 0 && block.len() % m == 0, "block is b x m row-major");
@@ -108,7 +108,7 @@ impl Bttb {
         let rows = block.len() / m;
         let pairs = rows.div_ceil(2);
         let total: usize = self.embed_shape.iter().product();
-        let Workspace { packed, scratch } = ws;
+        let Workspace { packed, scratch, .. } = ws;
         packed.clear();
         packed.resize(pairs * total, C64::ZERO);
         for j in 0..pairs {
@@ -289,7 +289,7 @@ impl Bccb {
         apply_real_spectrum_batch(block, out, &self.shape, &self.eigs, |e| e.max(0.0).sqrt(), ws);
     }
 
-    fn apply_spectrum(&self, x: &[f64], f: impl Fn(f64) -> f64) -> Vec<f64> {
+    fn apply_spectrum(&self, x: &[f64], f: impl Fn(f64) -> f64 + Sync) -> Vec<f64> {
         assert_eq!(x.len(), self.m());
         let mut out = vec![0.0; x.len()];
         with_workspace(|ws| apply_real_spectrum_batch(x, &mut out, &self.shape, &self.eigs, f, ws));

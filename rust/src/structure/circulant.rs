@@ -98,9 +98,11 @@ impl Circulant {
         apply_real_spectrum_batch(y, out, &[self.m()], &self.eigs, |e| e, ws);
     }
 
-    /// Batched MVM `C Y` for a row-major `b x m` block `Y`, two RHS per
-    /// complex transform (the eigenvalues are real, so the two-for-one
-    /// packing is exact). Allocation-free given a warm [`Workspace`].
+    /// Batched MVM `C Y` for a row-major `b x m` block `Y`, routed
+    /// through [`apply_real_spectrum_batch`]: half-length rfft
+    /// transforms on even `m`, two-for-one pair packing on odd `m`, and
+    /// a thread-pool row split on large blocks (results identical at
+    /// any thread count). Allocation-free given a warm [`Workspace`].
     pub fn matvec_batch(&self, block: &[f64], out: &mut [f64], ws: &mut Workspace) {
         apply_real_spectrum_batch(block, out, &[self.m()], &self.eigs, |e| e, ws);
     }

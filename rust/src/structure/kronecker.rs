@@ -221,7 +221,9 @@ impl KronToeplitz {
     /// and each factor's circulant-embedding spectrum is applied along
     /// its axis in cache-blocked panels with per-line zero-padding —
     /// O(P m log m_max) per pair of RHS instead of per RHS.
-    /// Allocation-free given a warm [`Workspace`].
+    /// Allocation-free given a warm [`Workspace`]; the per-axis panel
+    /// passes fan out over the thread pool on large blocks (results
+    /// identical at any thread count).
     pub fn matvec_batch(&self, block: &[f64], out: &mut [f64], ws: &mut Workspace) {
         let shape = self.shape();
         let m = self.m();
@@ -229,7 +231,7 @@ impl KronToeplitz {
         assert_eq!(out.len(), block.len());
         let rows = block.len() / m;
         let pairs = rows.div_ceil(2);
-        let Workspace { packed, scratch } = ws;
+        let Workspace { packed, scratch, .. } = ws;
         pack_real_pairs(block, m, packed);
         for (axis, f) in self.factors.iter().enumerate() {
             let n = shape[axis];

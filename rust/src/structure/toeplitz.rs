@@ -70,14 +70,17 @@ impl SymToeplitz {
     /// is zero-padded into the power-of-two circulant embedding, pairs of
     /// real lines share one complex transform (two-for-one), and the
     /// embedding spectrum is applied with one cached plan for the whole
-    /// block. Allocation-free given a warm [`Workspace`].
+    /// block. Allocation-free given a warm [`Workspace`]; large blocks
+    /// fan their embedding transforms out over the thread pool via
+    /// [`apply_axis_spectrum_packed`] (results identical at any thread
+    /// count).
     pub fn matvec_batch(&self, block: &[f64], out: &mut [f64], ws: &mut Workspace) {
         let m = self.m();
         assert!(block.len() % m == 0, "block is b x m row-major");
         assert_eq!(out.len(), block.len());
         let rows = block.len() / m;
         let pairs = rows.div_ceil(2);
-        let Workspace { packed, scratch } = ws;
+        let Workspace { packed, scratch, .. } = ws;
         pack_real_pairs(block, m, packed);
         apply_axis_spectrum_packed(packed, pairs, m, 1, self.embed_eigs(), scratch);
         unpack_real_pairs(packed, m, rows, out);
