@@ -1,11 +1,12 @@
 //! `cargo bench --bench fig1_circulant` — regenerates Figure 1 (and, with
 //! BENCH_FULL=1, the appendix A.3 sweeps): circulant log-det
 //! approximation quality, plus construction/evaluation timing per
-//! approximation kind.
+//! approximation kind. Timings persist to `BENCH_fig1.json` (see
+//! `bench::recorder`); already-recorded configs are skipped.
 
 use std::time::Duration;
 
-use msgp::bench::{bench_fn, bench_header};
+use msgp::bench::{bench_fn, bench_header, Record, Recorder};
 use msgp::structure::circulant::{circulant_approx, CirculantKind};
 
 fn main() {
@@ -15,41 +16,51 @@ fn main() {
     // Timing: building + logdet per approximation at m = 4096.
     println!("\n# circulant construction + logdet timing, m = 4096, covSE ell = 16");
     bench_header();
+    let mut rec = Recorder::open("fig1");
     let m = 4096usize;
     let ell = 16.0;
     let col: Vec<f64> = (0..m).map(|i| (-0.5 * (i as f64 / ell).powi(2)).exp()).collect();
     let tail = move |lag: usize| (-0.5 * (lag as f64 / ell).powi(2)).exp();
     for kind in [CirculantKind::Strang, CirculantKind::Chan, CirculantKind::Helgason] {
-        let stats = bench_fn(
-            &format!("circulant/{}/m4096", kind.name()),
-            Duration::from_millis(200),
-            1000,
-            || {
+        let name = format!("circulant/{}/m4096", kind.name());
+        let ran = rec.record_if_new(&name, || {
+            let stats = bench_fn(&name, Duration::from_millis(200), 1000, || {
                 let c = circulant_approx(kind, &col, 0, None);
                 std::hint::black_box(c.logdet(0.01));
-            },
-        );
-        println!("{}", stats.line());
+            });
+            println!("{}", stats.line());
+            Record::from_stats(&stats)
+        });
+        if !ran {
+            println!("{name:<44} already recorded — skipped");
+        }
     }
-    let stats = bench_fn(
-        "circulant/whittle/m4096",
-        Duration::from_millis(200),
-        1000,
-        || {
+    let name = "circulant/whittle/m4096";
+    let ran = rec.record_if_new(name, || {
+        let stats = bench_fn(name, Duration::from_millis(200), 1000, || {
             let c = circulant_approx(CirculantKind::Whittle, &col, 3, Some(&tail));
             std::hint::black_box(c.logdet(0.01));
-        },
-    );
-    println!("{}", stats.line());
+        });
+        println!("{}", stats.line());
+        Record::from_stats(&stats)
+    });
+    if !ran {
+        println!("{name:<44} already recorded — skipped");
+    }
     // The O(m^2) reference the circulant approach replaces.
     let t = msgp::structure::toeplitz::SymToeplitz::new(col.clone());
-    let stats = bench_fn(
-        "toeplitz-levinson-logdet/m4096",
-        Duration::from_millis(500),
-        50,
-        || {
+    let name = "toeplitz-levinson-logdet/m4096";
+    let ran = rec.record_if_new(name, || {
+        let stats = bench_fn(name, Duration::from_millis(500), 50, || {
             std::hint::black_box(t.logdet_levinson(0.01));
-        },
-    );
-    println!("{}", stats.line());
+        });
+        println!("{}", stats.line());
+        Record::from_stats(&stats)
+    });
+    if !ran {
+        println!("{name:<44} already recorded — skipped");
+    }
+    if let Err(e) = rec.save() {
+        eprintln!("failed to save {:?}: {e}", rec.path());
+    }
 }

@@ -1,8 +1,25 @@
 //! `cargo bench --bench fig2_training` — regenerates Figure 2: one
 //! marginal-likelihood + derivatives evaluation per method across n and
-//! m. BENCH_FULL=1 enables the larger sweeps (n up to 10^6).
+//! m. BENCH_FULL=1 enables the larger sweeps (n up to 10^6). The total
+//! wall-clock persists to `BENCH_fig2.json`; an already-recorded run is
+//! skipped (delete the artifact or point MSGP_BENCH_DIR elsewhere to
+//! re-measure).
+
+use msgp::bench::{Record, Recorder};
+use msgp::util::timing::time_once;
 
 fn main() {
     let full = std::env::var("BENCH_FULL").is_ok();
-    msgp::bench::experiments::fig2_training(full);
+    let mut rec = Recorder::open("fig2");
+    let config = format!("fig2_training full={full}");
+    let ran = rec.record_if_new(&config, || {
+        let ((), wall) = time_once(|| msgp::bench::experiments::fig2_training(full));
+        Record::from_duration(&config, wall)
+    });
+    if !ran {
+        println!("# {config}: already recorded in {:?} — skipped", rec.path());
+    }
+    if let Err(e) = rec.save() {
+        eprintln!("failed to save {:?}: {e}", rec.path());
+    }
 }

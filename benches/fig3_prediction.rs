@@ -1,10 +1,34 @@
 //! `cargo bench --bench fig3_prediction` — regenerates Figure 3
 //! (prediction runtime) and Figure 4 (fast-vs-slow prediction accuracy).
-//! BENCH_FULL=1 enables the larger sweeps.
+//! BENCH_FULL=1 enables the larger sweeps. Wall-clocks persist to
+//! `BENCH_fig3.json`; already-recorded sections are skipped.
+
+use msgp::bench::{Record, Recorder};
+use msgp::util::timing::time_once;
 
 fn main() {
     let full = std::env::var("BENCH_FULL").is_ok();
-    msgp::bench::experiments::fig3_prediction(full);
+    let mut rec = Recorder::open("fig3");
+
+    let config = format!("fig3_prediction full={full}");
+    let ran = rec.record_if_new(&config, || {
+        let ((), wall) = time_once(|| msgp::bench::experiments::fig3_prediction(full));
+        Record::from_duration(&config, wall)
+    });
+    if !ran {
+        println!("# {config}: already recorded in {:?} — skipped", rec.path());
+    }
+
     println!();
-    msgp::bench::experiments::fig4_accuracy(full);
+    let config = format!("fig4_accuracy full={full}");
+    let ran = rec.record_if_new(&config, || {
+        let ((), wall) = time_once(|| msgp::bench::experiments::fig4_accuracy(full));
+        Record::from_duration(&config, wall)
+    });
+    if !ran {
+        println!("# {config}: already recorded in {:?} — skipped", rec.path());
+    }
+    if let Err(e) = rec.save() {
+        eprintln!("failed to save {:?}: {e}", rec.path());
+    }
 }

@@ -2,8 +2,10 @@
 //! ingest throughput (points/s), refresh latency vs n (the O(m log m)
 //! claim: refresh cost must *not* grow with n), and staleness (time from
 //! an ingest ack to the refreshed snapshot being live). BENCH_FULL=1
-//! enables the larger sweep.
+//! enables the larger sweep. Per-checkpoint refresh timings persist to
+//! `BENCH_fig4.json`.
 
+use msgp::bench::{Record, Recorder};
 use msgp::data::gen_stress_1d;
 use msgp::gp::msgp::{KernelSpec, MsgpConfig};
 use msgp::grid::{Grid, GridAxis};
@@ -23,6 +25,7 @@ fn main() {
     };
     let mut trainer = StreamTrainer::new(kernel, 0.01, grid, cfg);
     let data = gen_stress_1d(total, 0.05, 7);
+    let mut rec = Recorder::open("fig4");
 
     println!("# fig4_streaming: m = {m}, total = {total}");
     println!("# n ingest_pts_per_s refresh_ms mean_iters staleness_ms");
@@ -52,6 +55,15 @@ fn main() {
                 stats.mean_iters,
                 staleness.as_secs_f64() * 1e3,
             );
+            rec.record(
+                Record::from_duration(&format!("refresh m={m} n={ingested}"), stats.wall)
+                    .with_extra("ingest_pts_per_s", ingested as f64 / ingest_secs)
+                    .with_extra("mean_iters", stats.mean_iters as f64)
+                    .with_extra("staleness_ms", staleness.as_secs_f64() * 1e3),
+            );
         }
+    }
+    if let Err(e) = rec.save() {
+        eprintln!("failed to save {:?}: {e}", rec.path());
     }
 }

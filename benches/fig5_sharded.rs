@@ -2,14 +2,16 @@
 //! per-shard refresh wall-clock vs a single whole-domain trainer (the
 //! ~1/S claim: each shard solves an m/S-sized system on its own core),
 //! plus routed ingest throughput. BENCH_FULL=1 enables the larger sweep.
+//! Per-config refresh timings persist to `BENCH_fig5.json`.
 
+use msgp::bench::{Record, Recorder};
 use msgp::data::gen_stress_1d;
 use msgp::gp::msgp::{KernelSpec, MsgpConfig};
 use msgp::grid::{Grid, GridAxis};
 use msgp::kernels::{KernelType, ProductKernel};
 use msgp::shard::{ShardConfig, ShardedTrainer};
 use msgp::stream::{StreamConfig, StreamTrainer};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 fn main() {
     let full = std::env::var("BENCH_FULL").is_ok();
@@ -48,6 +50,14 @@ fn main() {
         single_refresh * 1e3,
         1.0
     );
+    let mut rec = Recorder::open("fig5");
+    rec.record(
+        Record::from_duration(
+            &format!("refresh single m={m} n={n}"),
+            Duration::from_secs_f64(single_refresh),
+        )
+        .with_extra("ingest_pts_per_s", n as f64 / single_ingest),
+    );
 
     for &s in &[2usize, 4, 8] {
         if s > cores.max(2) {
@@ -83,5 +93,16 @@ fn main() {
             shard_refresh * 1e3,
             single_refresh / shard_refresh
         );
+        rec.record(
+            Record::from_duration(
+                &format!("refresh S={s} m={m} n={n}"),
+                Duration::from_secs_f64(shard_refresh),
+            )
+            .with_extra("ingest_pts_per_s", n as f64 / shard_ingest)
+            .with_extra("speedup_vs_single", single_refresh / shard_refresh),
+        );
+    }
+    if let Err(e) = rec.save() {
+        eprintln!("failed to save {:?}: {e}", rec.path());
     }
 }

@@ -5,8 +5,10 @@
 //! sweep of grid sizes. The iteration count — not the per-MVM cost —
 //! dominates refresh latency on ill-conditioned grids, which is exactly
 //! where the spectral BCCB inverse earns its O(m log m) application.
-//! BENCH_FULL=1 enables the larger sweep.
+//! BENCH_FULL=1 enables the larger sweep. Per-config refresh timings
+//! persist to `BENCH_fig6.json`.
 
+use msgp::bench::{Record, Recorder};
 use msgp::gp::msgp::{KernelSpec, MsgpConfig};
 use msgp::grid::{Grid, GridAxis};
 use msgp::kernels::{KernelType, ProductKernel};
@@ -43,6 +45,7 @@ fn main() {
     let (xs, ys) = skewed_stream(n, 7);
     println!("# fig6_precond: n = {n}, n_s = {ns}, skewed stream, cg tol = 1e-8");
     println!("# m precond mean_iters var_iters_total refresh_wall_ms speedup_vs_none");
+    let mut rec = Recorder::open("fig6");
     for &m in sizes {
         let mut none_wall = 0.0f64;
         for precond in [Preconditioner::None, Preconditioner::Jacobi, Preconditioner::Spectral] {
@@ -74,6 +77,18 @@ fn main() {
                 wall * 1e3,
                 none_wall / wall
             );
+            rec.record(
+                Record::from_duration(
+                    &format!("refresh m={m} precond={}", precond.name()),
+                    std::time::Duration::from_secs_f64(wall),
+                )
+                .with_extra("mean_iters", stats.mean_iters as f64)
+                .with_extra("var_iters_total", stats.var_iters_total as f64)
+                .with_extra("speedup_vs_none", none_wall / wall),
+            );
         }
+    }
+    if let Err(e) = rec.save() {
+        eprintln!("failed to save {:?}: {e}", rec.path());
     }
 }

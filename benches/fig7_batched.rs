@@ -10,8 +10,10 @@
 //!    solves (`StreamTrainer::refresh_sequential`) on the fig4/fig6
 //!    skewed-stream workload.
 //!
-//! BENCH_FULL=1 enables the larger sweep.
+//! BENCH_FULL=1 enables the larger sweep. Per-config timings persist to
+//! `BENCH_fig7.json`.
 
+use msgp::bench::{Record, Recorder};
 use msgp::gp::msgp::{KernelSpec, MsgpConfig};
 use msgp::grid::{Grid, GridAxis};
 use msgp::kernels::{KernelType, ProductKernel};
@@ -52,6 +54,7 @@ fn skewed_stream(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
 
 fn main() {
     let full = std::env::var("BENCH_FULL").is_ok();
+    let mut rec = Recorder::open("fig7");
 
     // --- 1. batched vs per-line multi-dimensional FFT (2-D grid) ---
     let sides: &[usize] = if full { &[64, 128, 256] } else { &[64, 128] };
@@ -84,6 +87,14 @@ fn main() {
             batched * 1e3,
             per_line / batched
         );
+        rec.record(
+            Record::from_duration(
+                &format!("fftn_batch side={side} batch={batch}"),
+                std::time::Duration::from_secs_f64(batched),
+            )
+            .with_extra("per_line_ms", per_line * 1e3)
+            .with_extra("speedup", per_line / batched),
+        );
     }
 
     // --- 2. two-for-one real circulant MVM ---
@@ -114,6 +125,14 @@ fn main() {
             per_vec * 1e3,
             batched * 1e3,
             per_vec / batched
+        );
+        rec.record(
+            Record::from_duration(
+                &format!("circulant_mvm_batch m={m} rhs={rhs}"),
+                std::time::Duration::from_secs_f64(batched),
+            )
+            .with_extra("per_vec_ms", per_vec * 1e3)
+            .with_extra("speedup", per_vec / batched),
         );
     }
 
@@ -164,6 +183,17 @@ fn main() {
                 wall * 1e3,
                 seq_wall / wall
             );
+            rec.record(
+                Record::from_duration(
+                    &format!("refresh m={m} mode={mode}"),
+                    std::time::Duration::from_secs_f64(wall),
+                )
+                .with_extra("mean_iters", stats.mean_iters as f64)
+                .with_extra("speedup_vs_sequential", seq_wall / wall),
+            );
         }
+    }
+    if let Err(e) = rec.save() {
+        eprintln!("failed to save {:?}: {e}", rec.path());
     }
 }

@@ -11,8 +11,9 @@
 //!
 //! Results are identical at every thread count (pinned by the test
 //! suite); this bench measures wall-clock only. BENCH_FULL=1 enables
-//! the larger sweep.
+//! the larger sweep. Per-config timings persist to `BENCH_fig8.json`.
 
+use msgp::bench::{Record, Recorder};
 use msgp::gp::msgp::{KernelSpec, MsgpConfig};
 use msgp::grid::{Grid, GridAxis};
 use msgp::kernels::{KernelType, ProductKernel};
@@ -55,6 +56,7 @@ fn skewed_stream(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
 fn main() {
     let full = std::env::var("BENCH_FULL").is_ok();
     let thread_sweep: &[usize] = if full { &[1, 2, 4, 8] } else { &[1, 2, 4] };
+    let mut rec = Recorder::open("fig8");
 
     // --- 1. batched FFT throughput vs thread count (2-D grid) ---
     let side: usize = if full { 256 } else { 128 };
@@ -80,6 +82,13 @@ fn main() {
             base_ms = secs * 1e3;
         }
         println!("{:>8} {:>10.3} {:>12.2}", t, secs * 1e3, base_ms / (secs * 1e3));
+        rec.record(
+            Record::from_duration(
+                &format!("fftn_batch threads={t} side={side}"),
+                std::time::Duration::from_secs_f64(secs),
+            )
+            .with_extra("speedup_vs_1t", base_ms / (secs * 1e3)),
+        );
     }
 
     // --- 2. block-refresh wall-clock vs thread count (m >= 4096) ---
@@ -116,6 +125,14 @@ fn main() {
             stats.block_iters,
             wall,
             base_refresh / wall
+        );
+        rec.record(
+            Record::from_duration(
+                &format!("refresh threads={t} m={m}"),
+                std::time::Duration::from_secs_f64(wall / 1e3),
+            )
+            .with_extra("block_iters", stats.block_iters as f64)
+            .with_extra("speedup_vs_1t", base_refresh / wall),
         );
     }
 
@@ -160,6 +177,18 @@ fn main() {
             full_ms / rfft_ms,
             half_lines
         );
+        rec.record(
+            Record::from_duration(
+                &format!("rfft_half m={m} rows={rows}"),
+                std::time::Duration::from_secs_f64(rfft_ms),
+            )
+            .with_extra("full_complex_ms", full_ms * 1e3)
+            .with_extra("speedup", full_ms / rfft_ms)
+            .with_extra("half_lines", half_lines as f64),
+        );
     }
     parallel::configure(ParallelConfig { threads: 0 });
+    if let Err(e) = rec.save() {
+        eprintln!("failed to save {:?}: {e}", rec.path());
+    }
 }

@@ -2,10 +2,11 @@
 //! the MSGP hot path, used by the performance pass (EXPERIMENTS.md §Perf):
 //! FFT, Toeplitz/BCCB MVM, sparse interpolation, one full SKI MVM, one CG
 //! training solve, and the end-to-end serving throughput of both engines.
+//! Every measurement persists to `BENCH_hot_paths.json`.
 
 use std::time::Duration;
 
-use msgp::bench::{bench_fn, bench_header};
+use msgp::bench::{bench_fn, bench_header, BenchStats, Record, Recorder};
 use msgp::coordinator::EngineSpec;
 use msgp::data::gen_stress_1d;
 use msgp::gp::msgp::{KernelSpec, MsgpConfig, MsgpModel};
@@ -19,6 +20,11 @@ use msgp::structure::toeplitz::SymToeplitz;
 
 fn main() {
     bench_header();
+    let mut rec = Recorder::open("hot_paths");
+    let mut emit = |stats: &BenchStats| {
+        println!("{}", stats.line());
+        rec.record(Record::from_stats(stats));
+    };
     let quick = Duration::from_millis(300);
 
     // FFT at the serving grid sizes.
@@ -28,7 +34,7 @@ fn main() {
         let stats = bench_fn(&format!("fft/pow2/m{m}"), quick, 100_000, || {
             p.forward(&mut buf);
         });
-        println!("{}", stats.line());
+        emit(&stats);
     }
     // Bluestein (non-power-of-two).
     {
@@ -38,7 +44,7 @@ fn main() {
         let stats = bench_fn("fft/bluestein/m1000", quick, 100_000, || {
             p.forward(&mut buf);
         });
-        println!("{}", stats.line());
+        emit(&stats);
     }
 
     // Toeplitz MVM (the inner K_UU multiply).
@@ -51,7 +57,7 @@ fn main() {
         let stats = bench_fn(&format!("toeplitz-mvm/m{m}"), quick, 10_000, || {
             t.matvec_into(&v, &mut out, &mut scratch);
         });
-        println!("{}", stats.line());
+        emit(&stats);
     }
 
     // BCCB MVM (2-D grid).
@@ -65,7 +71,7 @@ fn main() {
         let stats = bench_fn("bccb-mvm/64x64", quick, 10_000, || {
             std::hint::black_box(b.matvec(&v));
         });
-        println!("{}", stats.line());
+        emit(&stats);
     }
 
     // Sparse interpolation (gather + scatter) at serving scale.
@@ -82,15 +88,15 @@ fn main() {
         let stats = bench_fn("interp/W-gather/n1e5", quick, 10_000, || {
             w.matvec_into(&gv, &mut out_n);
         });
-        println!("{}", stats.line());
+        emit(&stats);
         let stats = bench_fn("interp/Wt-scatter/n1e5", quick, 10_000, || {
             w.tmatvec_into(&nv, &mut out_m);
         });
-        println!("{}", stats.line());
+        emit(&stats);
         let stats = bench_fn("interp/build-W/n1e5", quick, 100, || {
             std::hint::black_box(SparseInterp::build(&data.x, &grid));
         });
-        println!("{}", stats.line());
+        emit(&stats);
     }
 
     // Full SKI MVM + training solve.
@@ -108,24 +114,24 @@ fn main() {
         let stats = bench_fn("ski-mvm/n5e4-m1e4", quick, 1000, || {
             std::hint::black_box(model.mvm_a(&v));
         });
-        println!("{}", stats.line());
+        emit(&stats);
         let stats = bench_fn("train-solve/n5e4-m1e4", Duration::from_secs(2), 20, || {
             std::hint::black_box(
                 MsgpModel::fit_with_grid(kernel.clone(), 0.01, data.clone(), grid.clone(), cfg.clone())
                     .unwrap(),
             );
         });
-        println!("{}", stats.line());
+        emit(&stats);
         let stats = bench_fn("lml-grad/n5e4-m1e4", Duration::from_secs(1), 20, || {
             std::hint::black_box(model.lml_grad());
         });
-        println!("{}", stats.line());
+        emit(&stats);
         // Fast predictions.
         let test: Vec<f64> = (0..1000).map(|i| -9.0 + 0.018 * i as f64).collect();
         let stats = bench_fn("predict-mean-fast/1000pts", quick, 10_000, || {
             std::hint::black_box(model.predict_mean(&test));
         });
-        println!("{}", stats.line());
+        emit(&stats);
     }
 
     // End-to-end serving throughput (both engines).
@@ -138,8 +144,21 @@ fn main() {
             4,
         );
         println!("serve/pjrt: {thr:.0} pred/s, p50<={p50}us p99<={p99}us");
+        rec.record(
+            Record::from_duration("serve/pjrt/20k-4t", Duration::from_micros(p50))
+                .with_extra("pred_per_s", thr)
+                .with_extra("p99_us", p99 as f64),
+        );
     }
     let (thr, p50, p99, _) =
         msgp::bench::experiments::serving_benchmark(EngineSpec::Native, 20_000, 4);
     println!("serve/native: {thr:.0} pred/s, p50<={p50}us p99<={p99}us");
+    rec.record(
+        Record::from_duration("serve/native/20k-4t", Duration::from_micros(p50))
+            .with_extra("pred_per_s", thr)
+            .with_extra("p99_us", p99 as f64),
+    );
+    if let Err(e) = rec.save() {
+        eprintln!("failed to save {:?}: {e}", rec.path());
+    }
 }

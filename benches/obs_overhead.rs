@@ -1,0 +1,75 @@
+//! `cargo bench --bench obs_overhead` — pins the observability tax on
+//! the refresh hot path. Runs the same `refresh_mdomain` workload with
+//! tracing disabled (one relaxed atomic load + branch per span site)
+//! and enabled (seqlock ring push per span), and records both medians
+//! plus their ratio into `BENCH_obs.json` via the bench recorder. The
+//! acceptance bar is a < 2% disabled-path regression; the recorded
+//! `overhead_ratio_on_off` documents the enabled-path cost too.
+
+use msgp::bench::{Record, Recorder};
+use msgp::gp::msgp::{KernelSpec, MsgpConfig};
+use msgp::grid::{Grid, GridAxis};
+use msgp::kernels::{KernelType, ProductKernel};
+use msgp::obs::Tracer;
+use msgp::stream::{StreamConfig, StreamTrainer};
+use msgp::util::timing::{bench_fn, bench_header};
+use msgp::util::Rng;
+use std::time::Duration;
+
+fn build_trainer(m: usize, n: usize) -> StreamTrainer {
+    let kernel = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0));
+    let grid = Grid::new(vec![GridAxis::span(-11.0, 11.0, m)]);
+    let mcfg = MsgpConfig { n_per_dim: vec![m], n_var_samples: 4, ..Default::default() };
+    let mut trainer = StreamTrainer::new(
+        kernel,
+        0.01,
+        grid,
+        StreamConfig { msgp: mcfg, ..Default::default() },
+    );
+    let mut rng = Rng::new(17);
+    let mut xs = Vec::with_capacity(n);
+    let mut ys = Vec::with_capacity(n);
+    for _ in 0..n {
+        let x = rng.uniform_in(-10.0, 10.0);
+        xs.push(x);
+        ys.push(msgp::data::stress_fn(x) + 0.05 * rng.normal());
+    }
+    trainer.ingest_batch(&xs, &ys);
+    trainer
+}
+
+fn main() {
+    let full = std::env::var("BENCH_FULL").is_ok();
+    let m = if full { 4096 } else { 1024 };
+    let n = if full { 40_000 } else { 8_000 };
+    let min_time = Duration::from_millis(if full { 2000 } else { 400 });
+    let mut trainer = build_trainer(m, n);
+    println!("# obs_overhead: m = {m}, n = {n}, tracing off vs on");
+    bench_header();
+
+    Tracer::set_enabled(false);
+    let off = bench_fn(&format!("refresh_mdomain m={m} trace=off"), min_time, 200, || {
+        let _ = trainer.refresh();
+    });
+    println!("{}", off.line());
+
+    Tracer::set_enabled(true);
+    let on = bench_fn(&format!("refresh_mdomain m={m} trace=on"), min_time, 200, || {
+        let _ = trainer.refresh();
+    });
+    println!("{}", on.line());
+    Tracer::set_enabled(false);
+    Tracer::clear();
+
+    let ratio = on.median.as_nanos() as f64 / off.median.as_nanos().max(1) as f64;
+    println!("# enabled/disabled median ratio = {ratio:.4}");
+
+    let mut rec = Recorder::open("obs");
+    rec.record(Record::from_stats(&off));
+    rec.record(Record::from_stats(&on).with_extra("overhead_ratio_on_off", ratio));
+    if let Err(e) = rec.save() {
+        eprintln!("failed to save {:?}: {e}", rec.path());
+    } else {
+        println!("# recorded -> {:?}", rec.path());
+    }
+}

@@ -1,0 +1,278 @@
+//! Persistent benchmark artifact recording.
+//!
+//! Every `benches/fig*_*.rs` target writes its timings through a
+//! [`Recorder`], which persists them as `BENCH_<figure>.json` in the
+//! directory named by `MSGP_BENCH_DIR` (default: the working
+//! directory). The file is an append-only map keyed by a free-form
+//! config string, so re-running a bench **skips configs that are
+//! already recorded** ([`Recorder::record_if_new`]) — the perf
+//! trajectory across PRs accumulates instead of being overwritten.
+//!
+//! Entry shape (per config key):
+//!
+//! ```json
+//! {
+//!   "config": "m=4096 probes=8",
+//!   "config_hash": "9e1c2f0a63b14d7b",
+//!   "median_ns": 1234567, "mean_ns": 1300000,
+//!   "min_ns": 1200000, "max_ns": 1500000, "iters": 11,
+//!   "extra": {"mean_iters": 9.5}
+//! }
+//! ```
+//!
+//! `extra` carries bench-specific scalars (CG iteration counts, span
+//! breakdowns, speedup ratios). Writes go through a tmp-file + rename
+//! so a crashed bench never truncates the artifact; [`Recorder`] also
+//! saves on `Drop`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use crate::util::json::Json;
+use crate::util::timing::BenchStats;
+
+/// FNV-1a hash of a config string, hex-encoded — a stable short id for
+/// cross-referencing configs between artifacts and logs.
+pub fn config_hash(config: &str) -> String {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in config.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    format!("{h:016x}")
+}
+
+/// One recorded measurement.
+#[derive(Clone, Debug)]
+pub struct Record {
+    /// Config key (free-form, e.g. `"m=4096 probes=8"`).
+    pub config: String,
+    /// Median / mean / min / max in nanoseconds and iteration count.
+    pub median_ns: u64,
+    /// Mean duration, nanoseconds.
+    pub mean_ns: u64,
+    /// Minimum duration, nanoseconds.
+    pub min_ns: u64,
+    /// Maximum duration, nanoseconds.
+    pub max_ns: u64,
+    /// Timed iterations behind the stats.
+    pub iters: u64,
+    /// Bench-specific scalars (span breakdowns, iteration counts, ...).
+    pub extra: Vec<(String, f64)>,
+}
+
+impl Record {
+    /// Build from [`BenchStats`] (name becomes the config key).
+    pub fn from_stats(stats: &BenchStats) -> Record {
+        Record {
+            config: stats.name.clone(),
+            median_ns: stats.median.as_nanos() as u64,
+            mean_ns: stats.mean.as_nanos() as u64,
+            min_ns: stats.min.as_nanos() as u64,
+            max_ns: stats.max.as_nanos() as u64,
+            iters: stats.iters as u64,
+            extra: Vec::new(),
+        }
+    }
+
+    /// Build from a single wall-clock measurement.
+    pub fn from_duration(config: &str, wall: Duration) -> Record {
+        let ns = wall.as_nanos() as u64;
+        Record {
+            config: config.to_string(),
+            median_ns: ns,
+            mean_ns: ns,
+            min_ns: ns,
+            max_ns: ns,
+            iters: 1,
+            extra: Vec::new(),
+        }
+    }
+
+    /// Attach a bench-specific scalar.
+    pub fn with_extra(mut self, key: &str, value: f64) -> Record {
+        self.extra.push((key.to_string(), value));
+        self
+    }
+
+    fn to_json(&self) -> Json {
+        let extra = Json::Obj(
+            self.extra.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect(),
+        );
+        Json::obj(vec![
+            ("config", Json::Str(self.config.clone())),
+            ("config_hash", Json::Str(config_hash(&self.config))),
+            ("median_ns", Json::Num(self.median_ns as f64)),
+            ("mean_ns", Json::Num(self.mean_ns as f64)),
+            ("min_ns", Json::Num(self.min_ns as f64)),
+            ("max_ns", Json::Num(self.max_ns as f64)),
+            ("iters", Json::Num(self.iters as f64)),
+            ("extra", extra),
+        ])
+    }
+}
+
+/// Append-only per-figure benchmark artifact (`BENCH_<figure>.json`).
+#[derive(Debug)]
+pub struct Recorder {
+    path: PathBuf,
+    figure: String,
+    entries: BTreeMap<String, Json>,
+    dirty: bool,
+}
+
+impl Recorder {
+    /// Open (or create) the artifact for `figure` — e.g. `"fig4"` maps
+    /// to `BENCH_fig4.json` under `MSGP_BENCH_DIR` (default `.`).
+    pub fn open(figure: &str) -> Recorder {
+        let dir = std::env::var("MSGP_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
+        Recorder::open_in(Path::new(&dir), figure)
+    }
+
+    /// Open the artifact in an explicit directory (tests use this).
+    pub fn open_in(dir: &Path, figure: &str) -> Recorder {
+        let path = dir.join(format!("BENCH_{figure}.json"));
+        let mut entries = BTreeMap::new();
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            if let Ok(Json::Obj(doc)) = Json::parse(&text) {
+                if let Some(Json::Obj(existing)) = doc.get("entries") {
+                    entries = existing.clone();
+                }
+            }
+        }
+        Recorder { path, figure: figure.to_string(), entries, dirty: false }
+    }
+
+    /// Artifact file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Is this config already recorded?
+    pub fn has(&self, config: &str) -> bool {
+        self.entries.contains_key(config)
+    }
+
+    /// Number of recorded configs.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Insert (or overwrite) a record.
+    pub fn record(&mut self, rec: Record) {
+        self.entries.insert(rec.config.clone(), rec.to_json());
+        self.dirty = true;
+    }
+
+    /// The skip-if-already-recorded idiom: when `config` is present the
+    /// (possibly expensive) measurement closure is not run at all.
+    /// Returns `true` when the measurement ran.
+    pub fn record_if_new(&mut self, config: &str, measure: impl FnOnce() -> Record) -> bool {
+        if self.has(config) {
+            return false;
+        }
+        let mut rec = measure();
+        rec.config = config.to_string();
+        self.record(rec);
+        true
+    }
+
+    /// Persist to disk (tmp file + rename; also runs on drop).
+    pub fn save(&mut self) -> std::io::Result<()> {
+        if !self.dirty {
+            return Ok(());
+        }
+        let doc = Json::obj(vec![
+            ("figure", Json::Str(self.figure.clone())),
+            ("format", Json::Num(1.0)),
+            ("entries", Json::Obj(self.entries.clone())),
+        ]);
+        let tmp = self.path.with_extension("json.tmp");
+        std::fs::write(&tmp, doc.to_string())?;
+        std::fs::rename(&tmp, &self.path)?;
+        self.dirty = false;
+        Ok(())
+    }
+}
+
+impl Drop for Recorder {
+    fn drop(&mut self) {
+        if self.dirty {
+            if let Err(e) = self.save() {
+                crate::log_warn!("bench recorder save failed for {:?}: {e}", self.path);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("msgp_recorder_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn roundtrip_and_skip_idiom() {
+        let dir = temp_dir("roundtrip");
+        let mut r = Recorder::open_in(&dir, "test");
+        assert!(r.is_empty());
+        let ran = r.record_if_new("m=64", || {
+            Record::from_duration("m=64", Duration::from_micros(250)).with_extra("iters", 7.0)
+        });
+        assert!(ran);
+        r.save().unwrap();
+
+        // Reopen: entry survives, closure is skipped.
+        let mut r2 = Recorder::open_in(&dir, "test");
+        assert!(r2.has("m=64"));
+        assert_eq!(r2.len(), 1);
+        let ran2 = r2.record_if_new("m=64", || panic!("must not re-measure"));
+        assert!(!ran2);
+
+        // Artifact is well-formed JSON with the expected fields.
+        let text = std::fs::read_to_string(r2.path()).unwrap();
+        let doc = Json::parse(&text).unwrap();
+        assert_eq!(doc.get("figure").and_then(|f| f.as_str()), Some("test"));
+        let entry = doc.get("entries").and_then(|e| e.get("m=64")).unwrap();
+        assert_eq!(entry.get("median_ns").and_then(|v| v.as_f64()), Some(250_000.0));
+        assert_eq!(
+            entry.get("config_hash").and_then(|v| v.as_str()),
+            Some(config_hash("m=64").as_str())
+        );
+        let extra = entry.get("extra").and_then(|e| e.get("iters"));
+        assert_eq!(extra.and_then(|v| v.as_f64()), Some(7.0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn save_on_drop() {
+        let dir = temp_dir("drop");
+        {
+            let mut r = Recorder::open_in(&dir, "drop");
+            r.record(Record::from_duration("cfg", Duration::from_nanos(42)));
+        }
+        let r2 = Recorder::open_in(&dir, "drop");
+        assert!(r2.has("cfg"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn config_hash_is_stable_fnv1a() {
+        // FNV-1a reference value for the empty string is the offset
+        // basis; a known vector pins the implementation.
+        assert_eq!(config_hash(""), "cbf29ce484222325");
+        assert_eq!(config_hash("a"), config_hash("a"));
+        assert_ne!(config_hash("a"), config_hash("b"));
+    }
+}

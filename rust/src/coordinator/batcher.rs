@@ -219,6 +219,7 @@ fn flush_sharded(pending: &mut Vec<Request>, serving: &ShardedServing, metrics: 
     if pending.is_empty() {
         return;
     }
+    let _sp = crate::span!("predict.flush_sharded");
     let d = serving.plan().global().dim();
     let nshards = serving.plan().shards();
     let mut groups: Vec<Vec<Request>> = (0..nshards).map(|_| Vec::new()).collect();
@@ -260,6 +261,7 @@ fn flush(
     if pending.is_empty() {
         return;
     }
+    let _sp = crate::span!("predict.flush");
     let d = model.dim();
     let k = pending.len();
     let mut points = Vec::with_capacity(k * d);

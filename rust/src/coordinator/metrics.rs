@@ -1,123 +1,131 @@
-//! Lightweight serving metrics: counters and a log-scale latency
-//! histogram, all lock-free on the hot path.
+//! Serving metrics: a typed registry of named counters, gauges and a
+//! log-scale latency histogram — all wait-free on the hot path, built
+//! from the [`crate::obs::metrics`] primitives.
+//!
+//! Two renderings of the same registry:
+//!
+//! - [`Metrics::summary`] — the legacy one-line `key=value` format
+//!   (the default `/metrics` payload; every pre-existing key is kept).
+//! - [`Metrics::render_prometheus`] — Prometheus text exposition
+//!   (`/metrics?format=prom`) with per-shard labels and real
+//!   `_bucket`/`_sum`/`_count` series from the latency histogram.
+//!
+//! See `docs/METRICS.md` for the full metric-name reference.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::Ordering;
 use std::time::Duration;
 
-/// Number of log-scale latency buckets (1us .. ~1000s).
-const NBUCKETS: usize = 64;
+use crate::obs::metrics::{Counter, Gauge, LogHistogram, PromWriter};
 
 /// Per-shard counters for sharded deployments (one entry per spatial
 /// shard; see [`crate::shard`]). All wait-free atomics.
 #[derive(Debug, Default)]
 pub struct ShardMetrics {
     /// Owned observations absorbed by this shard's trainer.
-    pub ingested: AtomicU64,
+    pub ingested: Counter,
     /// Halo copies absorbed (points owned by a neighbor but within this
     /// shard's overlap coverage).
-    pub halo_ingested: AtomicU64,
+    pub halo_ingested: Counter,
     /// Refresh + publish cycles completed by this shard.
-    pub refreshes: AtomicU64,
+    pub refreshes: Counter,
     /// Cumulative refresh CG iterations (mean + probe solves) on this
     /// shard — the per-shard view of the preconditioner win (the
     /// global `last_refresh_*` gauges are unsharded-only; S workers
     /// racing one gauge would make its reading meaningless).
-    pub refresh_cg_iters: AtomicU64,
+    pub refresh_cg_iters: Counter,
     /// Wall-clock of this shard's most recent refresh, microseconds
     /// (single-writer: only the owning worker stores it) — the
     /// per-shard counterpart of the global `last_refresh_us` gauge, so
     /// the block-refresh speedup is observable in production on both
     /// server shapes.
-    pub last_refresh_us: AtomicU64,
+    pub last_refresh_us: Gauge,
     /// Messages currently queued to this shard's worker (ingest
     /// back-pressure signal).
-    pub queue_depth: AtomicU64,
+    pub queue_depth: Gauge,
     /// Prediction requests routed to this shard by the batcher.
-    pub routed_predictions: AtomicU64,
+    pub routed_predictions: Counter,
+    /// Points currently held in this shard's reservoir (re-optimization
+    /// snapshot pool; single-writer like `last_refresh_us`).
+    pub reservoir_points: Gauge,
 }
 
-/// Serving metrics. All methods are thread-safe and wait-free.
-#[derive(Debug)]
+/// Serving metrics registry. All methods are thread-safe and wait-free.
+#[derive(Debug, Default)]
 pub struct Metrics {
     /// Requests submitted.
-    pub submitted: AtomicU64,
+    pub submitted: Counter,
     /// Requests completed (replies delivered).
-    pub completed: AtomicU64,
+    pub completed: Counter,
     /// Batches executed.
-    pub batches: AtomicU64,
+    pub batches: Counter,
     /// Sum of padded slots (for padding-overhead accounting).
-    pub padded_slots: AtomicU64,
+    pub padded_slots: Counter,
     /// Batches executed on the PJRT backend.
-    pub pjrt_batches: AtomicU64,
+    pub pjrt_batches: Counter,
     /// Batches executed on the native backend.
-    pub native_batches: AtomicU64,
+    pub native_batches: Counter,
     /// Streaming: observations absorbed by the ingest pipeline.
-    pub ingested_points_total: AtomicU64,
+    pub ingested_points_total: Counter,
     /// Streaming: per-point trainer-admission rejections (grid
     /// expansion cap; also non-finite values when the front-door batch
     /// check in `Server::ingest` is bypassed — that check errors whole
     /// batches before they reach the trainer, so those points are not
     /// counted here).
-    pub ingest_rejected_total: AtomicU64,
+    pub ingest_rejected_total: Counter,
     /// Streaming: ingest batches applied.
-    pub ingest_batches: AtomicU64,
+    pub ingest_batches: Counter,
     /// Streaming: cache refreshes + model swaps completed.
-    pub refresh_count: AtomicU64,
+    pub refresh_count: Counter,
     /// Streaming: wall-clock of the most recent refresh, microseconds.
-    pub last_refresh_us: AtomicU64,
+    pub last_refresh_us: Gauge,
+    /// Streaming: trace-epoch timestamp (µs, see
+    /// [`crate::obs::now_us`]) of the most recent refresh; `0` = no
+    /// refresh yet. `/healthz` derives last-refresh *age* from this.
+    pub last_refresh_at_us: Gauge,
+    /// Streaming: stage-RHS wall-clock of the most recent refresh, µs
+    /// (staging `W^T y` + probes through `S = K_UU^{1/2}` and `G`).
+    /// Sourced from the same measurements that feed the tracer spans.
+    pub last_refresh_stage_rhs_us: Gauge,
+    /// Streaming: lockstep block-CG wall-clock of the most recent
+    /// refresh, µs (the sequential-refresh path reports its whole solve
+    /// loop here).
+    pub last_refresh_block_solve_us: Gauge,
+    /// Streaming: map-back wall-clock of the most recent refresh, µs
+    /// (batched `S·x` + scaling + probe accumulation).
+    pub last_refresh_map_back_us: Gauge,
+    /// Streaming: wall-clock of the most recent model slot swap, µs.
+    pub last_swap_us: Gauge,
     /// Streaming: CG iterations of the most recent refresh's mean
     /// solve (the preconditioner win is directly observable here).
     /// Unsharded servers only — sharded workers report per-shard
     /// cumulative counts in [`ShardMetrics::refresh_cg_iters`] instead
     /// of racing this gauge.
-    pub last_refresh_mean_iters: AtomicU64,
+    pub last_refresh_mean_iters: Gauge,
     /// Streaming: total CG iterations across the most recent refresh's
     /// variance-probe solves (unsharded servers only, like
     /// [`Self::last_refresh_mean_iters`]).
-    pub last_refresh_var_iters: AtomicU64,
+    pub last_refresh_var_iters: Gauge,
     /// Streaming: cumulative refresh CG iterations (mean + probes)
     /// across all refreshes — the long-run iteration budget a
     /// preconditioner change moves.
-    pub refresh_cg_iters_total: AtomicU64,
+    pub refresh_cg_iters_total: Counter,
     /// Streaming: refreshes that requested a preconditioner but had to
     /// degrade to unpreconditioned CG (misconfigured refresh inputs).
-    pub precond_fallbacks: AtomicU64,
+    pub precond_fallbacks: Counter,
     /// Streaming: thread count the in-tree pool had available during
     /// the most recent refresh (`1` = the batched FFT hot paths ran
     /// serially). Stored from `RefreshStats::threads` by the ingest
     /// loops; the live pool width is also exported as `pool_threads`.
-    pub last_refresh_threads: AtomicU64,
+    pub last_refresh_threads: Gauge,
     /// Streaming: hyperparameter re-optimizations completed.
-    pub reopt_count: AtomicU64,
+    pub reopt_count: Counter,
+    /// Streaming: points currently held in the trainer's reservoir
+    /// (unsharded servers; sharded deployments report per-shard
+    /// [`ShardMetrics::reservoir_points`]).
+    pub reservoir_points: Gauge,
     /// Sharded serving: per-shard counters (empty on unsharded servers).
     pub shards: Vec<ShardMetrics>,
-    hist: [AtomicU64; NBUCKETS],
-}
-
-impl Default for Metrics {
-    fn default() -> Self {
-        Metrics {
-            submitted: AtomicU64::new(0),
-            completed: AtomicU64::new(0),
-            batches: AtomicU64::new(0),
-            padded_slots: AtomicU64::new(0),
-            pjrt_batches: AtomicU64::new(0),
-            native_batches: AtomicU64::new(0),
-            ingested_points_total: AtomicU64::new(0),
-            ingest_rejected_total: AtomicU64::new(0),
-            ingest_batches: AtomicU64::new(0),
-            refresh_count: AtomicU64::new(0),
-            last_refresh_us: AtomicU64::new(0),
-            last_refresh_mean_iters: AtomicU64::new(0),
-            last_refresh_var_iters: AtomicU64::new(0),
-            refresh_cg_iters_total: AtomicU64::new(0),
-            precond_fallbacks: AtomicU64::new(0),
-            last_refresh_threads: AtomicU64::new(0),
-            reopt_count: AtomicU64::new(0),
-            shards: Vec::new(),
-            hist: std::array::from_fn(|_| AtomicU64::new(0)),
-        }
-    }
+    hist: LogHistogram,
 }
 
 impl Metrics {
@@ -134,38 +142,27 @@ impl Metrics {
         }
     }
 
-    fn bucket(d: Duration) -> usize {
-        let us = d.as_micros().max(1) as u64;
-        (63 - us.leading_zeros() as usize).min(NBUCKETS - 1)
-    }
-
     /// Record one request latency.
     pub fn record_latency(&self, d: Duration) {
-        self.hist[Self::bucket(d)].fetch_add(1, Ordering::Relaxed);
+        self.hist.record(d);
     }
 
-    /// Approximate latency quantile (upper bucket edge), in microseconds.
+    /// Approximate latency quantile (upper bucket edge), in
+    /// microseconds. A quantile that lands in the top (overflow) bucket
+    /// has no finite upper edge and saturates to `u64::MAX` — the same
+    /// value the exhausted-scan path reports, so saturation is
+    /// consistent.
     pub fn latency_quantile_us(&self, q: f64) -> u64 {
-        let counts: Vec<u64> = self.hist.iter().map(|c| c.load(Ordering::Relaxed)).collect();
-        let total: u64 = counts.iter().sum();
-        if total == 0 {
-            return 0;
-        }
-        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
-        let mut acc = 0;
-        for (i, c) in counts.iter().enumerate() {
-            acc += c;
-            if acc >= target {
-                return 1u64 << (i + 1).min(63);
-            }
-        }
-        u64::MAX
+        self.hist.quantile_upper_us(q)
     }
 
-    /// Record a completed refresh (count + latency, one call so the two
-    /// stay consistent).
+    /// Record a completed refresh (count + latency + timestamp, one
+    /// call so the three stay consistent).
     pub fn record_refresh(&self, d: Duration) {
         self.last_refresh_us.store(d.as_micros() as u64, Ordering::Relaxed);
+        // `.max(1)` keeps 0 reserved for "never refreshed" even for a
+        // refresh landing in the trace epoch's first microsecond.
+        self.last_refresh_at_us.store(crate::obs::now_us().max(1), Ordering::Relaxed);
         self.refresh_count.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -189,8 +186,42 @@ impl Metrics {
         self.last_refresh_threads.store(threads, Ordering::Relaxed);
     }
 
-    /// One-line summary (the `/metrics` endpoint payload). Sharded
-    /// servers append one `shard[i] ...` clause per shard.
+    /// Record the most recent refresh's per-stage wall-clocks (µs) —
+    /// the gauge-side mirror of the `refresh.stage_rhs` /
+    /// `refresh.block_solve` / `refresh.map_back` tracer spans, sourced
+    /// from the same measurements. Unsharded ingest loop only (the
+    /// `last_*` single-writer rule).
+    pub fn record_refresh_stages(&self, rhs_us: u64, solve_us: u64, map_us: u64) {
+        self.last_refresh_stage_rhs_us.store(rhs_us, Ordering::Relaxed);
+        self.last_refresh_block_solve_us.store(solve_us, Ordering::Relaxed);
+        self.last_refresh_map_back_us.store(map_us, Ordering::Relaxed);
+    }
+
+    /// Age of the most recent refresh in microseconds, or `None` if no
+    /// refresh has completed yet.
+    pub fn last_refresh_age_us(&self) -> Option<u64> {
+        let at = self.last_refresh_at_us.get();
+        if at == 0 {
+            return None;
+        }
+        Some(crate::obs::now_us().saturating_sub(at))
+    }
+
+    /// Deepest per-shard worker queue (0 on unsharded servers) — the
+    /// back-pressure signal `/healthz` reports.
+    pub fn max_shard_queue_depth(&self) -> u64 {
+        self.shards.iter().map(|s| s.queue_depth.get()).max().unwrap_or(0)
+    }
+
+    /// Total reservoir points across the deployment (the unsharded
+    /// gauge plus every shard's).
+    pub fn total_reservoir_points(&self) -> u64 {
+        let sharded: u64 = self.shards.iter().map(|s| s.reservoir_points.get()).sum();
+        self.reservoir_points.get() + sharded
+    }
+
+    /// One-line summary (the default `/metrics` endpoint payload).
+    /// Sharded servers append one `shard[i] ...` clause per shard.
     /// `pool_threads` and `fft_parallel_panels_total` are read live from
     /// the in-tree parallel layer ([`crate::parallel`] /
     /// [`crate::linalg::fft`]) so they stay accurate even for refreshes
@@ -200,43 +231,222 @@ impl Metrics {
             "submitted={} completed={} batches={} (pjrt={} native={}) padding={} p50<={}us p99<={}us \
              ingested_points_total={} ingest_rejected_total={} ingest_batches={} refresh_count={} last_refresh_us={} \
              last_refresh_mean_iters={} last_refresh_var_iters={} refresh_cg_iters_total={} precond_fallbacks={} reopt_count={} \
-             pool_threads={} fft_parallel_panels_total={} last_refresh_threads={}",
-            self.submitted.load(Ordering::Relaxed),
-            self.completed.load(Ordering::Relaxed),
-            self.batches.load(Ordering::Relaxed),
-            self.pjrt_batches.load(Ordering::Relaxed),
-            self.native_batches.load(Ordering::Relaxed),
-            self.padded_slots.load(Ordering::Relaxed),
+             pool_threads={} fft_parallel_panels_total={} last_refresh_threads={} \
+             last_refresh_stage_rhs_us={} last_refresh_block_solve_us={} last_refresh_map_back_us={} \
+             last_swap_us={} reservoir_points={}",
+            self.submitted.get(),
+            self.completed.get(),
+            self.batches.get(),
+            self.pjrt_batches.get(),
+            self.native_batches.get(),
+            self.padded_slots.get(),
             self.latency_quantile_us(0.5),
             self.latency_quantile_us(0.99),
-            self.ingested_points_total.load(Ordering::Relaxed),
-            self.ingest_rejected_total.load(Ordering::Relaxed),
-            self.ingest_batches.load(Ordering::Relaxed),
-            self.refresh_count.load(Ordering::Relaxed),
-            self.last_refresh_us.load(Ordering::Relaxed),
-            self.last_refresh_mean_iters.load(Ordering::Relaxed),
-            self.last_refresh_var_iters.load(Ordering::Relaxed),
-            self.refresh_cg_iters_total.load(Ordering::Relaxed),
-            self.precond_fallbacks.load(Ordering::Relaxed),
-            self.reopt_count.load(Ordering::Relaxed),
+            self.ingested_points_total.get(),
+            self.ingest_rejected_total.get(),
+            self.ingest_batches.get(),
+            self.refresh_count.get(),
+            self.last_refresh_us.get(),
+            self.last_refresh_mean_iters.get(),
+            self.last_refresh_var_iters.get(),
+            self.refresh_cg_iters_total.get(),
+            self.precond_fallbacks.get(),
+            self.reopt_count.get(),
             crate::parallel::threads(),
             crate::linalg::fft::parallel_panels_total(),
-            self.last_refresh_threads.load(Ordering::Relaxed),
+            self.last_refresh_threads.get(),
+            self.last_refresh_stage_rhs_us.get(),
+            self.last_refresh_block_solve_us.get(),
+            self.last_refresh_map_back_us.get(),
+            self.last_swap_us.get(),
+            self.reservoir_points.get(),
         );
         for (i, sh) in self.shards.iter().enumerate() {
             s.push_str(&format!(
                 " shard[{i}] ingested={} halo={} refreshes={} cg_iters={} last_refresh_us={} \
-                 queue_depth={} routed={}",
-                sh.ingested.load(Ordering::Relaxed),
-                sh.halo_ingested.load(Ordering::Relaxed),
-                sh.refreshes.load(Ordering::Relaxed),
-                sh.refresh_cg_iters.load(Ordering::Relaxed),
-                sh.last_refresh_us.load(Ordering::Relaxed),
-                sh.queue_depth.load(Ordering::Relaxed),
-                sh.routed_predictions.load(Ordering::Relaxed),
+                 queue_depth={} routed={} reservoir={}",
+                sh.ingested.get(),
+                sh.halo_ingested.get(),
+                sh.refreshes.get(),
+                sh.refresh_cg_iters.get(),
+                sh.last_refresh_us.get(),
+                sh.queue_depth.get(),
+                sh.routed_predictions.get(),
+                sh.reservoir_points.get(),
             ));
         }
         s
+    }
+
+    /// Prometheus text exposition (the `/metrics?format=prom` payload):
+    /// every pre-existing metric name from [`Self::summary`], the
+    /// latency histogram as cumulative `_bucket`/`_sum`/`_count`
+    /// series, per-stage refresh gauges, and per-shard families labeled
+    /// `{shard="i"}`.
+    pub fn render_prometheus(&self) -> String {
+        let mut w = PromWriter::new();
+        let no_labels: Vec<(&str, String)> = Vec::new();
+        let scalar = |w: &mut PromWriter, kind: &str, name: &str, help: &str, v: u64| {
+            let samples = [(&no_labels[..], v)];
+            match kind {
+                "counter" => w.counter(name, help, &samples),
+                _ => w.gauge(name, help, &samples),
+            }
+        };
+        let counters: [(&str, &str, u64); 13] = [
+            ("submitted", "Prediction requests submitted.", self.submitted.get()),
+            ("completed", "Prediction requests completed.", self.completed.get()),
+            ("batches", "Prediction batches executed.", self.batches.get()),
+            ("pjrt_batches", "Batches executed on the PJRT backend.", self.pjrt_batches.get()),
+            ("native_batches", "Batches executed natively.", self.native_batches.get()),
+            ("padded_slots", "Padded batch slots (padding overhead).", self.padded_slots.get()),
+            (
+                "ingested_points_total",
+                "Observations absorbed by the ingest pipeline.",
+                self.ingested_points_total.get(),
+            ),
+            (
+                "ingest_rejected_total",
+                "Per-point trainer-admission rejections.",
+                self.ingest_rejected_total.get(),
+            ),
+            ("ingest_batches", "Ingest batches applied.", self.ingest_batches.get()),
+            ("refresh_count", "Refresh + model swap cycles.", self.refresh_count.get()),
+            (
+                "refresh_cg_iters_total",
+                "Cumulative refresh CG iterations (mean + probes).",
+                self.refresh_cg_iters_total.get(),
+            ),
+            (
+                "precond_fallbacks",
+                "Refreshes degraded to unpreconditioned CG.",
+                self.precond_fallbacks.get(),
+            ),
+            ("reopt_count", "Hyperparameter re-optimizations.", self.reopt_count.get()),
+        ];
+        for (name, help, v) in counters {
+            scalar(&mut w, "counter", name, help, v);
+        }
+        let gauges: [(&str, &str, u64); 12] = [
+            ("last_refresh_us", "Most recent refresh wall-clock, us.", self.last_refresh_us.get()),
+            (
+                "last_refresh_at_us",
+                "Trace-epoch timestamp of the most recent refresh, us (0 = never).",
+                self.last_refresh_at_us.get(),
+            ),
+            (
+                "last_refresh_stage_rhs_us",
+                "Most recent refresh: stage-RHS wall-clock, us.",
+                self.last_refresh_stage_rhs_us.get(),
+            ),
+            (
+                "last_refresh_block_solve_us",
+                "Most recent refresh: block-CG solve wall-clock, us.",
+                self.last_refresh_block_solve_us.get(),
+            ),
+            (
+                "last_refresh_map_back_us",
+                "Most recent refresh: map-back wall-clock, us.",
+                self.last_refresh_map_back_us.get(),
+            ),
+            ("last_swap_us", "Most recent model slot swap, us.", self.last_swap_us.get()),
+            (
+                "last_refresh_mean_iters",
+                "CG iterations of the most recent refresh mean solve.",
+                self.last_refresh_mean_iters.get(),
+            ),
+            (
+                "last_refresh_var_iters",
+                "CG iterations across the most recent refresh probe solves.",
+                self.last_refresh_var_iters.get(),
+            ),
+            (
+                "last_refresh_threads",
+                "Pool threads available during the most recent refresh.",
+                self.last_refresh_threads.get(),
+            ),
+            (
+                "reservoir_points",
+                "Points in the trainer reservoir (unsharded).",
+                self.reservoir_points.get(),
+            ),
+            ("pool_threads", "Live in-tree pool width.", crate::parallel::threads() as u64),
+            (
+                "fft_parallel_panels_total",
+                "FFT panel batches dispatched to the pool (process-wide).",
+                crate::linalg::fft::parallel_panels_total(),
+            ),
+        ];
+        for (name, help, v) in gauges {
+            scalar(&mut w, "gauge", name, help, v);
+        }
+        w.histogram(
+            "request_latency_us",
+            "Prediction request latency, us (log2 buckets).",
+            &no_labels,
+            &self.hist.snapshot(),
+        );
+        if !self.shards.is_empty() {
+            let labels: Vec<Vec<(&str, String)>> =
+                (0..self.shards.len()).map(|i| vec![("shard", i.to_string())]).collect();
+            let family = |w: &mut PromWriter,
+                          kind: &str,
+                          name: &str,
+                          help: &str,
+                          get: &dyn Fn(&ShardMetrics) -> u64| {
+                let samples: Vec<(&[(&str, String)], u64)> = self
+                    .shards
+                    .iter()
+                    .zip(labels.iter())
+                    .map(|(s, l)| (&l[..], get(s)))
+                    .collect();
+                match kind {
+                    "counter" => w.counter(name, help, &samples),
+                    _ => w.gauge(name, help, &samples),
+                }
+            };
+            family(&mut w, "counter", "shard_ingested", "Owned points absorbed.", &|s| {
+                s.ingested.get()
+            });
+            family(&mut w, "counter", "shard_halo_ingested", "Halo copies absorbed.", &|s| {
+                s.halo_ingested.get()
+            });
+            family(&mut w, "counter", "shard_refreshes", "Refresh cycles completed.", &|s| {
+                s.refreshes.get()
+            });
+            family(
+                &mut w,
+                "counter",
+                "shard_refresh_cg_iters",
+                "Cumulative refresh CG iterations.",
+                &|s| s.refresh_cg_iters.get(),
+            );
+            family(
+                &mut w,
+                "gauge",
+                "shard_last_refresh_us",
+                "Most recent shard refresh wall-clock, us.",
+                &|s| s.last_refresh_us.get(),
+            );
+            family(&mut w, "gauge", "shard_queue_depth", "Queued worker messages.", &|s| {
+                s.queue_depth.get()
+            });
+            family(
+                &mut w,
+                "counter",
+                "shard_routed_predictions",
+                "Predictions routed to this shard.",
+                &|s| s.routed_predictions.get(),
+            );
+            family(
+                &mut w,
+                "gauge",
+                "shard_reservoir_points",
+                "Points in this shard's reservoir.",
+                &|s| s.reservoir_points.get(),
+            );
+        }
+        w.finish()
     }
 }
 
@@ -264,6 +474,18 @@ mod tests {
     fn empty_histogram_is_zero() {
         let m = Metrics::new();
         assert_eq!(m.latency_quantile_us(0.99), 0);
+    }
+
+    #[test]
+    fn overflow_bucket_quantile_saturates_consistently() {
+        // A latency in the top (overflow) bucket has no finite upper
+        // edge: the quantile must report u64::MAX both when the scan
+        // stops at the last bucket and when it exhausts the loop — not
+        // a silent 2^63 us.
+        let m = Metrics::new();
+        m.record_latency(Duration::from_micros(u64::MAX));
+        assert_eq!(m.latency_quantile_us(0.5), u64::MAX);
+        assert_eq!(m.latency_quantile_us(1.0), u64::MAX);
     }
 
     #[test]
@@ -300,9 +522,9 @@ mod tests {
         let m = Metrics::new();
         m.record_refresh_cg(12, 80);
         m.record_refresh_cg(7, 40);
-        assert_eq!(m.last_refresh_mean_iters.load(Ordering::Relaxed), 7);
-        assert_eq!(m.last_refresh_var_iters.load(Ordering::Relaxed), 40);
-        assert_eq!(m.refresh_cg_iters_total.load(Ordering::Relaxed), 139);
+        assert_eq!(m.last_refresh_mean_iters.get(), 7);
+        assert_eq!(m.last_refresh_var_iters.get(), 40);
+        assert_eq!(m.refresh_cg_iters_total.get(), 139);
         m.precond_fallbacks.fetch_add(2, Ordering::Relaxed);
         let s = m.summary();
         assert!(s.contains("last_refresh_mean_iters=7"), "{s}");
@@ -321,5 +543,68 @@ mod tests {
         // pool_threads reads the live pool width; concurrent tests may
         // reconfigure it between reads, so only pin its presence.
         assert!(s.contains("pool_threads="), "{s}");
+    }
+
+    #[test]
+    fn stage_gauges_and_health_helpers() {
+        let m = Metrics::new();
+        assert_eq!(m.last_refresh_age_us(), None);
+        m.record_refresh_stages(100, 800, 50);
+        m.last_swap_us.store(9, Ordering::Relaxed);
+        m.reservoir_points.store(321, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("last_refresh_stage_rhs_us=100"), "{s}");
+        assert!(s.contains("last_refresh_block_solve_us=800"), "{s}");
+        assert!(s.contains("last_refresh_map_back_us=50"), "{s}");
+        assert!(s.contains("last_swap_us=9"), "{s}");
+        assert!(s.contains("reservoir_points=321"), "{s}");
+        m.record_refresh(Duration::from_micros(456));
+        assert!(m.last_refresh_age_us().is_some());
+        let sharded = Metrics::with_shards(2);
+        sharded.shards[1].queue_depth.store(4, Ordering::Relaxed);
+        sharded.shards[0].reservoir_points.store(10, Ordering::Relaxed);
+        sharded.shards[1].reservoir_points.store(5, Ordering::Relaxed);
+        assert_eq!(sharded.max_shard_queue_depth(), 4);
+        assert_eq!(sharded.total_reservoir_points(), 15);
+    }
+
+    #[test]
+    fn prometheus_exposes_every_preexisting_name() {
+        let m = Metrics::with_shards(2);
+        m.submitted.fetch_add(5, Ordering::Relaxed);
+        m.record_latency(Duration::from_micros(200));
+        m.shards[1].routed_predictions.fetch_add(2, Ordering::Relaxed);
+        let text = m.render_prometheus();
+        for name in [
+            "submitted",
+            "completed",
+            "batches",
+            "pjrt_batches",
+            "native_batches",
+            "padded_slots",
+            "ingested_points_total",
+            "ingest_rejected_total",
+            "ingest_batches",
+            "refresh_count",
+            "last_refresh_us",
+            "last_refresh_mean_iters",
+            "last_refresh_var_iters",
+            "refresh_cg_iters_total",
+            "precond_fallbacks",
+            "last_refresh_threads",
+            "reopt_count",
+            "pool_threads",
+            "fft_parallel_panels_total",
+            "last_refresh_stage_rhs_us",
+            "last_refresh_block_solve_us",
+            "last_refresh_map_back_us",
+        ] {
+            assert!(text.contains(&format!("# TYPE {name} ")), "missing {name}:\n{text}");
+        }
+        assert!(text.contains("submitted 5"), "{text}");
+        assert!(text.contains("request_latency_us_bucket{le=\"+Inf\"} 1"), "{text}");
+        assert!(text.contains("request_latency_us_count 1"), "{text}");
+        assert!(text.contains("shard_routed_predictions{shard=\"1\"} 2"), "{text}");
+        assert!(text.contains("shard_queue_depth{shard=\"0\"} 0"), "{text}");
     }
 }

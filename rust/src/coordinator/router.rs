@@ -32,7 +32,7 @@ impl EngineSpec {
             EngineSpec::Pjrt(dir) => match Runtime::load(dir) {
                 Ok(rt) => Engine::Pjrt(rt),
                 Err(e) => {
-                    eprintln!("PJRT unavailable ({e}); using native engine");
+                    crate::log_warn!("PJRT unavailable ({e}); using native engine");
                     Engine::Native
                 }
             },
@@ -66,6 +66,36 @@ pub enum Route {
     /// Shard-layout introspection (sharded servers: per-shard owned
     /// slab, grid size, ingest/refresh counters, queue depth).
     Shards,
+    /// Readiness / liveness probe (JSON: readiness, last-refresh age,
+    /// reservoir size, max shard queue depth).
+    Health,
+    /// Chrome trace-event JSON dump of the current tracing window
+    /// (see [`crate::obs::trace`]).
+    Trace,
+}
+
+/// Rendering requested for the `/metrics` route.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricsFormat {
+    /// Legacy one-line `key=value` summary (the default).
+    Summary,
+    /// Prometheus text exposition (`?format=prom`).
+    Prometheus,
+}
+
+/// Parse the `/metrics` format selector from a request path's query
+/// string (`format=prom` | `format=prometheus` → Prometheus; anything
+/// else → the legacy summary).
+pub fn metrics_format(path: &str) -> MetricsFormat {
+    let Some((_, query)) = path.split_once('?') else {
+        return MetricsFormat::Summary;
+    };
+    for pair in query.split('&') {
+        if matches!(pair, "format=prom" | "format=prometheus") {
+            return MetricsFormat::Prometheus;
+        }
+    }
+    MetricsFormat::Summary
 }
 
 impl Route {
@@ -78,6 +108,8 @@ impl Route {
             "/metrics" | "metrics" => Some(Route::Metrics),
             "/models" | "models" => Some(Route::Models),
             "/shards" | "shards" => Some(Route::Shards),
+            "/healthz" | "healthz" | "/health" | "health" => Some(Route::Health),
+            "/trace" | "trace" => Some(Route::Trace),
             _ => None,
         }
     }
@@ -205,7 +237,21 @@ mod tests {
         assert_eq!(Route::parse("/models"), Some(Route::Models));
         assert_eq!(Route::parse("/shards"), Some(Route::Shards));
         assert_eq!(Route::parse("/shards?verbose=1"), Some(Route::Shards));
+        assert_eq!(Route::parse("/healthz"), Some(Route::Health));
+        assert_eq!(Route::parse("/healthz/"), Some(Route::Health));
+        assert_eq!(Route::parse("/trace"), Some(Route::Trace));
         assert_eq!(Route::parse("/nope"), None);
+    }
+
+    #[test]
+    fn metrics_format_parses_query() {
+        assert_eq!(metrics_format("/metrics"), MetricsFormat::Summary);
+        assert_eq!(metrics_format("/metrics?format=prom"), MetricsFormat::Prometheus);
+        assert_eq!(metrics_format("/metrics?format=prometheus"), MetricsFormat::Prometheus);
+        assert_eq!(metrics_format("/metrics?a=1&format=prom"), MetricsFormat::Prometheus);
+        assert_eq!(metrics_format("/metrics?format=txt"), MetricsFormat::Summary);
+        // The format selector never changes the route itself.
+        assert_eq!(Route::parse("/metrics?format=prom"), Some(Route::Metrics));
     }
 
     #[test]

@@ -11,10 +11,12 @@ use std::time::Instant;
 
 use super::batcher::{self, BatcherConfig, IngestBatch, Job, Prediction, Request};
 use super::metrics::Metrics;
-use super::router::EngineSpec;
+use super::router::{metrics_format, EngineSpec, MetricsFormat, Route};
 use super::state::{ModelSlot, ServingModel};
+use crate::obs::trace::Tracer;
 use crate::shard::ShardedTrainer;
-use crate::stream::StreamTrainer;
+use crate::stream::{RefreshStats, StreamTrainer};
+use crate::util::json::Json;
 
 /// A running prediction (and optionally ingestion) server for one model
 /// — or, via [`Server::start_sharded`], for a spatially sharded fleet of
@@ -65,6 +67,8 @@ impl Server {
         ingest_tx: Option<SyncSender<IngestBatch>>,
         ingest_loop: Option<(Receiver<IngestBatch>, StreamTrainer)>,
     ) -> Server {
+        crate::obs::trace::init_from_env();
+        crate::obs::log::init_from_env();
         let metrics = Arc::new(Metrics::new());
         let (tx, rx) = mpsc::sync_channel::<Job>(4096);
         let dim = slot.get().dim();
@@ -102,6 +106,8 @@ impl Server {
     /// and hot-swap their slots independently. The server shares the
     /// trainer's metrics, so `/metrics` carries the per-shard counters.
     pub fn start_sharded(trainer: ShardedTrainer, cfg: BatcherConfig) -> Server {
+        crate::obs::trace::init_from_env();
+        crate::obs::log::init_from_env();
         let trainer = Arc::new(trainer);
         let metrics = trainer.metrics.clone();
         let serving = trainer.serving();
@@ -133,6 +139,73 @@ impl Server {
     /// `/shards` introspection payload (sharded servers only).
     pub fn shards_summary(&self) -> Option<String> {
         self.sharded.as_ref().map(|t| t.summary())
+    }
+
+    /// `/metrics` payload in the requested rendering (the legacy
+    /// one-line summary or Prometheus text exposition).
+    pub fn metrics_text(&self, format: MetricsFormat) -> String {
+        match format {
+            MetricsFormat::Summary => self.metrics.summary(),
+            MetricsFormat::Prometheus => self.metrics.render_prometheus(),
+        }
+    }
+
+    /// `/healthz` payload: a JSON readiness probe with last-refresh
+    /// age, reservoir size, and the deepest shard queue — the signals
+    /// a load harness needs to know whether the deployment is keeping
+    /// up. A static (non-streaming) server is ready by construction
+    /// and reports `last_refresh_age_us: null`.
+    pub fn healthz(&self) -> String {
+        let age = self.metrics.last_refresh_age_us();
+        // Both start paths publish a serving snapshot before accepting
+        // traffic, so readiness here means "the serving threads are
+        // alive" — which holds as long as the server object does.
+        Json::obj(vec![
+            ("status", Json::Str("ok".to_string())),
+            ("streaming", Json::Bool(self.streaming)),
+            ("shards", Json::Num(self.metrics.shards.len() as f64)),
+            (
+                "refresh_count",
+                Json::Num(self.metrics.refresh_count.get() as f64),
+            ),
+            (
+                "last_refresh_age_us",
+                match age {
+                    Some(us) => Json::Num(us as f64),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "reservoir_points",
+                Json::Num(self.metrics.total_reservoir_points() as f64),
+            ),
+            (
+                "max_shard_queue_depth",
+                Json::Num(self.metrics.max_shard_queue_depth() as f64),
+            ),
+            (
+                "ingested_points_total",
+                Json::Num(self.metrics.ingested_points_total.get() as f64),
+            ),
+        ])
+        .to_string()
+    }
+
+    /// Dispatch a GET-style route to its text payload — the in-process
+    /// equivalent of the HTTP front door (tests and the CI smoke job
+    /// drive the router through this). Returns `None` for body-carrying
+    /// routes (`/predict`, `/ingest` — use [`Self::predict`] /
+    /// [`Self::ingest`]), for `/models` (served from installed-artifact
+    /// state, not the server), for `/shards` on unsharded servers, and
+    /// for unknown paths.
+    pub fn handle_path(&self, path: &str) -> Option<String> {
+        match Route::parse(path)? {
+            Route::Metrics => Some(self.metrics_text(metrics_format(path))),
+            Route::Health => Some(self.healthz()),
+            Route::Trace => Some(Tracer::dump_json()),
+            Route::Shards => self.shards_summary(),
+            Route::Predict | Route::Ingest | Route::Models => None,
+        }
     }
 
     /// Submit a point; returns a receiver for the reply.
@@ -229,6 +302,19 @@ impl Drop for Server {
     }
 }
 
+/// Mirror one refresh's [`RefreshStats`] into the metrics registry
+/// (wall, CG iterations, pool width, per-stage wall-clocks).
+fn record_refresh_metrics(metrics: &Metrics, s: &RefreshStats) {
+    metrics.record_refresh(s.wall);
+    metrics.record_refresh_cg(s.mean_iters as u64, s.var_iters_total as u64);
+    metrics.record_refresh_threads(s.threads as u64);
+    metrics.record_refresh_stages(
+        s.stage_rhs.as_micros() as u64,
+        s.block_solve.as_micros() as u64,
+        s.map_back.as_micros() as u64,
+    );
+}
+
 /// The ingest/refresh loop (the online server's background thread): apply
 /// batches to the stream trainer, count them, and publish refreshed
 /// snapshots on the configured cadence.
@@ -250,6 +336,7 @@ fn run_ingest(
     // whenever `reopt_every <= refresh_every`.
     let mut since_swap = 0usize;
     while let Ok(batch) = rx.recv() {
+        let _sp_batch = crate::span!("ingest.batch");
         let k = batch.ys.len();
         let rejected_before = trainer.rejected_points;
         trainer.ingest_batch(&batch.xs, &batch.ys);
@@ -264,6 +351,7 @@ fn run_ingest(
             since_reopt += applied;
             since_swap += applied;
         }
+        metrics.reservoir_points.store(trainer.reservoir_len() as u64, Ordering::Relaxed);
         // Ack as soon as the points are absorbed — a cadence-triggered
         // refresh must not stall the ingest caller (and, transitively,
         // overflow the ingest queue). `flush_stream` callers asked for a
@@ -281,35 +369,37 @@ fn run_ingest(
                 Ok(Some(_)) => {
                     metrics.reopt_count.fetch_add(1, Ordering::Relaxed);
                     // reoptimize() ran a full refresh internally.
-                    metrics.record_refresh(trainer.last_refresh.wall);
-                    metrics.record_refresh_cg(
-                        trainer.last_refresh.mean_iters as u64,
-                        trainer.last_refresh.var_iters_total as u64,
-                    );
-                    metrics.record_refresh_threads(trainer.last_refresh.threads as u64);
+                    record_refresh_metrics(&metrics, &trainer.last_refresh);
                     need_swap = true; // new hypers + refreshed caches: publish
                 }
                 Ok(None) => {}
-                Err(e) => eprintln!("stream re-optimization failed (keeping hypers): {e}"),
+                Err(e) => {
+                    crate::log_error!("stream re-optimization failed (keeping hypers): {e}")
+                }
             }
         }
         if since_swap >= refresh_every {
             need_swap = true;
         }
         if need_swap {
+            // The "refresh" span wraps the whole publish cycle, so a
+            // trace decomposes it into the stage children recorded by
+            // `refresh_mdomain` (stage_rhs / block_solve / map_back)
+            // plus the slot swap below.
+            let _sp_refresh = crate::span!("refresh");
             let refreshes_before = trainer.refresh_count;
             let sm = trainer.serving_model(); // refreshes if dirty
-            slot.swap(sm);
+            let t_swap = Instant::now();
+            {
+                let _sp_swap = crate::span!("refresh.slot_swap");
+                slot.swap(sm);
+            }
+            metrics.last_swap_us.store(t_swap.elapsed().as_micros() as u64, Ordering::Relaxed);
             since_swap = 0;
             // Only count a refresh when one actually ran (a flush on a
             // clean trainer republishes the cached snapshot).
             if trainer.refresh_count > refreshes_before {
-                metrics.record_refresh(trainer.last_refresh.wall);
-                metrics.record_refresh_cg(
-                    trainer.last_refresh.mean_iters as u64,
-                    trainer.last_refresh.var_iters_total as u64,
-                );
-                metrics.record_refresh_threads(trainer.last_refresh.threads as u64);
+                record_refresh_metrics(&metrics, &trainer.last_refresh);
             }
         }
         if trainer.precond_fallbacks > fallbacks_seen {
@@ -428,6 +518,54 @@ mod tests {
         assert!(server.metrics.refresh_count.load(Ordering::Relaxed) >= 1);
         let s = server.metrics.summary();
         assert!(s.contains("ingested_points_total=800"), "{s}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn healthz_and_handle_path_serve_observability_routes() {
+        let server = Server::start(serving_model(), EngineSpec::Native, BatcherConfig::default());
+        // /healthz: well-formed JSON with the probe fields.
+        let health = Json::parse(&server.healthz()).expect("healthz is JSON");
+        assert_eq!(health.get("status").and_then(|v| v.as_str()), Some("ok"));
+        assert_eq!(health.get("last_refresh_age_us"), Some(&Json::Null));
+        assert_eq!(health.get("max_shard_queue_depth").and_then(|v| v.as_f64()), Some(0.0));
+        // handle_path dispatches the GET routes.
+        let via_route = server.handle_path("/healthz").expect("healthz routed");
+        assert_eq!(Json::parse(&via_route).unwrap(), health);
+        let summary = server.handle_path("/metrics").expect("metrics routed");
+        assert!(summary.contains("submitted="), "{summary}");
+        let prom = server.handle_path("/metrics?format=prom").expect("prom routed");
+        assert!(prom.contains("# TYPE submitted counter"), "{prom}");
+        let trace = server.handle_path("/trace").expect("trace routed");
+        assert!(Json::parse(&trace).unwrap().get("traceEvents").is_some());
+        // Body-carrying / inapplicable routes are not served here.
+        assert!(server.handle_path("/predict").is_none());
+        assert!(server.handle_path("/shards").is_none());
+        assert!(server.handle_path("/nope").is_none());
+        server.shutdown();
+    }
+
+    #[test]
+    fn online_ingest_updates_health_probe_fields() {
+        let kernel = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0));
+        let grid = Grid::new(vec![GridAxis::span(-12.0, 13.0, 64)]);
+        let cfg = StreamConfig {
+            msgp: MsgpConfig { n_per_dim: vec![64], n_var_samples: 4, ..Default::default() },
+            refresh_every: 1_000_000,
+            ..Default::default()
+        };
+        let trainer = StreamTrainer::new(kernel, 0.01, grid, cfg);
+        let server = Server::start_online(trainer, EngineSpec::Native, BatcherConfig::default());
+        let data = gen_stress_1d(200, 0.05, 11);
+        server.ingest(data.x.clone(), data.y.clone()).unwrap();
+        server.flush_stream().unwrap();
+        let health = Json::parse(&server.healthz()).unwrap();
+        assert_eq!(health.get("ingested_points_total").and_then(|v| v.as_f64()), Some(200.0));
+        assert!(health.get("last_refresh_age_us").and_then(|v| v.as_f64()).is_some());
+        assert_eq!(health.get("reservoir_points").and_then(|v| v.as_f64()), Some(200.0));
+        // The flush published a refresh: the per-stage gauges carry it.
+        let s = server.metrics.summary();
+        assert!(s.contains("last_refresh_block_solve_us="), "{s}");
         server.shutdown();
     }
 }

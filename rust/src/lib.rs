@@ -70,6 +70,17 @@
 //!   routes each prediction to its owning shard in O(1), blending
 //!   across seams with partition-of-unity weights.
 //!
+//! * **Observability** ([`obs`]): dependency-free tracing
+//!   (`span!`-guarded scopes on per-thread lock-free ring buffers,
+//!   exported as Chrome trace-event JSON via `/trace` and
+//!   [`obs::Tracer::dump_json`]; one atomic-load branch when disabled),
+//!   typed metric primitives behind the coordinator's `/metrics` route
+//!   (legacy one-line summary plus Prometheus text exposition at
+//!   `/metrics?format=prom`, with per-shard labels and per-stage
+//!   refresh gauges), a `/healthz` readiness probe, an `MSGP_LOG`-gated
+//!   leveled logger, and a bench recorder persisting `BENCH_*.json`
+//!   artifacts ([`bench::recorder`]). See `docs/METRICS.md`.
+//!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-reproduction results.
 
@@ -91,6 +102,7 @@ pub mod coordinator;
 pub mod stream;
 pub mod shard;
 pub mod runtime;
+pub mod obs;
 pub mod bench;
 pub mod data;
 pub mod util;

@@ -557,6 +557,7 @@ pub fn fftn_batch(
     inverse: bool,
     scratch: &mut FftScratch,
 ) {
+    let _sp = crate::span!("fft.fftn_batch");
     fftn_batch_axes(data, batch, shape, shape.len(), inverse, scratch)
 }
 
@@ -797,6 +798,7 @@ pub fn apply_real_spectrum_batch<F: Fn(f64) -> f64 + Sync>(
     f: F,
     ws: &mut Workspace,
 ) {
+    let _sp = crate::span!("fft.real_spectrum_batch");
     let m: usize = shape.iter().product();
     assert_eq!(spec.len(), m, "spectrum length vs shape");
     assert!(m > 0 && block.len() % m == 0, "block is b x m row-major");

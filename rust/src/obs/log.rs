@@ -1,0 +1,189 @@
+//! A tiny leveled logger gated by the `MSGP_LOG` environment variable.
+//!
+//! The serving stack used to fall back to bare once-per-process
+//! `eprintln!` calls for diagnostics (preconditioner degradation, PJRT
+//! unavailability, stream re-optimization failures). Those paths now go
+//! through [`log_error!`] / [`log_warn!`] / [`log_info!`] /
+//! [`log_debug!`], which print to stderr with a level + module prefix
+//! and are filtered by a process-wide level parsed **once** from
+//! `MSGP_LOG` (`off`, `error`, `warn` (default), `info`, `debug`; a
+//! bare number 0–4 also works). The per-call cost when filtered out is
+//! one relaxed atomic load and a compare — cheap enough for refresh
+//! threads. The level can also be set programmatically with
+//! [`set_level`] (tests use this).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Once;
+
+/// Log verbosity, ordered: messages at or below the current level
+/// print.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Nothing prints.
+    Off = 0,
+    /// Hard failures only.
+    Error = 1,
+    /// Degradations worth knowing about (default).
+    Warn = 2,
+    /// Lifecycle events.
+    Info = 3,
+    /// Everything.
+    Debug = 4,
+}
+
+impl Level {
+    fn from_u8(v: u8) -> Level {
+        match v {
+            0 => Level::Off,
+            1 => Level::Error,
+            2 => Level::Warn,
+            3 => Level::Info,
+            _ => Level::Debug,
+        }
+    }
+
+    /// Parse a level name (case-insensitive) or a bare digit.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "none" | "0" => Some(Level::Off),
+            "error" | "1" => Some(Level::Error),
+            "warn" | "warning" | "2" => Some(Level::Warn),
+            "info" | "3" => Some(Level::Info),
+            "debug" | "trace" | "4" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Off => "OFF",
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Warn as u8);
+static INIT: Once = Once::new();
+
+/// Parse `MSGP_LOG` once per process; later calls are no-ops. Invoked
+/// lazily by [`enabled`], so call sites never need explicit init.
+pub fn init_from_env() {
+    INIT.call_once(|| {
+        if let Ok(v) = std::env::var("MSGP_LOG") {
+            if let Some(level) = Level::parse(&v) {
+                LEVEL.store(level as u8, Ordering::Relaxed);
+            }
+        }
+    });
+}
+
+/// Override the level programmatically (also marks env init done).
+pub fn set_level(level: Level) {
+    INIT.call_once(|| {});
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Current level.
+pub fn level() -> Level {
+    init_from_env();
+    Level::from_u8(LEVEL.load(Ordering::Relaxed))
+}
+
+/// Would a message at `at` print right now?
+pub fn enabled(at: Level) -> bool {
+    at <= level() && at != Level::Off
+}
+
+/// Print one formatted record to stderr (called by the macros after
+/// the level check passed).
+pub fn emit(at: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    eprintln!("[{:<5} {}] {}", at.tag(), module, msg);
+}
+
+/// Log at [`Level::Error`].
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Error) {
+            $crate::obs::log::emit(
+                $crate::obs::log::Level::Error,
+                module_path!(),
+                format_args!($($arg)*),
+            );
+        }
+    };
+}
+
+/// Log at [`Level::Warn`].
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Warn) {
+            $crate::obs::log::emit(
+                $crate::obs::log::Level::Warn,
+                module_path!(),
+                format_args!($($arg)*),
+            );
+        }
+    };
+}
+
+/// Log at [`Level::Info`].
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Info) {
+            $crate::obs::log::emit(
+                $crate::obs::log::Level::Info,
+                module_path!(),
+                format_args!($($arg)*),
+            );
+        }
+    };
+}
+
+/// Log at [`Level::Debug`].
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Debug) {
+            $crate::obs::log::emit(
+                $crate::obs::log::Level::Debug,
+                module_path!(),
+                format_args!($($arg)*),
+            );
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parse_names_and_digits() {
+        assert_eq!(Level::parse("warn"), Some(Level::Warn));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("0"), Some(Level::Off));
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("bogus"), None);
+    }
+
+    #[test]
+    fn level_ordering_gates_messages() {
+        assert!(Level::Error <= Level::Warn);
+        assert!(Level::Debug > Level::Info);
+        // enabled() is monotone in the configured level; Off never
+        // prints regardless.
+        set_level(Level::Info);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Off);
+        assert!(!enabled(Level::Error));
+        set_level(Level::Warn); // restore default for other tests
+    }
+}

@@ -1,0 +1,422 @@
+//! Typed metric primitives and Prometheus text exposition.
+//!
+//! [`Counter`], [`Gauge`] and [`LogHistogram`] are thin wrappers over
+//! `AtomicU64` that carry their metric *kind* in the type — the
+//! coordinator's [`crate::coordinator::metrics::Metrics`] registry is
+//! built from them, so the Prometheus renderer ([`PromWriter`]) can
+//! emit the right `# TYPE` line per family and the hand-rolled legacy
+//! one-line summary keeps reading the same wait-free atomics. `Counter`
+//! and `Gauge` deliberately expose the `fetch_add` / `load` / `store`
+//! signatures of `AtomicU64`, so swapping field types is source
+//! compatible for every existing call site.
+//!
+//! The histogram is the serving layer's 64-bucket log₂-scale latency
+//! histogram with an exact running sum/count, renderable both as the
+//! legacy `p50<=`/`p99<=` quantile pair and as a proper Prometheus
+//! `_bucket`/`_sum`/`_count` series with cumulative monotone buckets.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of log₂-scale latency buckets (1 µs .. 2⁶³ µs; the top bucket
+/// is the overflow bucket with no finite upper edge).
+pub const NBUCKETS: usize = 64;
+
+/// A monotonically increasing counter (wait-free).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Counter starting at `v`.
+    pub const fn new(v: u64) -> Self {
+        Counter(AtomicU64::new(v))
+    }
+
+    /// Add `v`; returns the previous value (AtomicU64-compatible).
+    pub fn fetch_add(&self, v: u64, order: Ordering) -> u64 {
+        self.0.fetch_add(v, order)
+    }
+
+    /// Increment by one.
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Current value (AtomicU64-compatible).
+    pub fn load(&self, order: Ordering) -> u64 {
+        self.0.load(order)
+    }
+
+    /// Current value with relaxed ordering.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A gauge: a value that can move both ways (wait-free).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    /// Gauge starting at `v`.
+    pub const fn new(v: u64) -> Self {
+        Gauge(AtomicU64::new(v))
+    }
+
+    /// Set the value (AtomicU64-compatible).
+    pub fn store(&self, v: u64, order: Ordering) {
+        self.0.store(v, order)
+    }
+
+    /// Add `v`; returns the previous value (AtomicU64-compatible).
+    pub fn fetch_add(&self, v: u64, order: Ordering) -> u64 {
+        self.0.fetch_add(v, order)
+    }
+
+    /// Subtract `v`; returns the previous value (AtomicU64-compatible).
+    pub fn fetch_sub(&self, v: u64, order: Ordering) -> u64 {
+        self.0.fetch_sub(v, order)
+    }
+
+    /// Current value (AtomicU64-compatible).
+    pub fn load(&self, order: Ordering) -> u64 {
+        self.0.load(order)
+    }
+
+    /// Current value with relaxed ordering.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A 64-bucket log₂-scale histogram of microsecond values with an exact
+/// running sum and count. Bucket `i` holds values in `[2^i, 2^(i+1))`
+/// µs (values below 1 µs clamp into bucket 0; the last bucket is the
+/// overflow bucket). All operations are wait-free.
+#[derive(Debug)]
+pub struct LogHistogram {
+    buckets: [AtomicU64; NBUCKETS],
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_us: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+/// A point-in-time copy of a [`LogHistogram`] (one relaxed load per
+/// word; buckets/sum/count may be mutually torn under concurrent
+/// writes, like any scrape of live counters).
+#[derive(Clone, Debug)]
+pub struct HistogramSnapshot {
+    /// Per-bucket counts.
+    pub buckets: [u64; NBUCKETS],
+    /// Exact sum of recorded values, microseconds.
+    pub sum_us: u64,
+    /// Total recorded values.
+    pub count: u64,
+}
+
+impl HistogramSnapshot {
+    /// Finite upper bucket edge in µs, or `None` for the overflow
+    /// bucket (rendered as `+Inf`).
+    pub fn upper_edge_us(i: usize) -> Option<u64> {
+        if i + 1 >= NBUCKETS {
+            None
+        } else {
+            Some(1u64 << (i + 1))
+        }
+    }
+}
+
+impl LogHistogram {
+    /// Fresh (empty) histogram.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bucket(us: u64) -> usize {
+        (63 - us.max(1).leading_zeros() as usize).min(NBUCKETS - 1)
+    }
+
+    /// Record one value in microseconds.
+    pub fn record_us(&self, us: u64) {
+        self.buckets[Self::bucket(us)].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one duration (sub-µs durations clamp to 1 µs, matching
+    /// the bucket floor so `_sum`/`_count` stay consistent with the
+    /// buckets).
+    pub fn record(&self, d: Duration) {
+        self.record_us((d.as_micros() as u64).max(1));
+    }
+
+    /// Approximate quantile as an upper bucket edge in microseconds.
+    /// `0` when empty. Values that landed in the overflow bucket have
+    /// no finite upper edge, so a quantile that falls there saturates
+    /// to `u64::MAX` — consistently, whether the scan stops at the last
+    /// bucket or exhausts the loop.
+    pub fn quantile_upper_us(&self, q: f64) -> u64 {
+        let snap = self.snapshot();
+        let total = snap.count_from_buckets();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in snap.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Self::upper_or_saturate(i);
+            }
+        }
+        u64::MAX
+    }
+
+    fn upper_or_saturate(i: usize) -> u64 {
+        match HistogramSnapshot::upper_edge_us(i) {
+            Some(edge) => edge,
+            None => u64::MAX,
+        }
+    }
+
+    /// Point-in-time copy (relaxed loads).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+            count: self.count.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl HistogramSnapshot {
+    /// Total count derived from the buckets (used by the quantile scan
+    /// so one snapshot is internally consistent even under concurrent
+    /// writes).
+    pub fn count_from_buckets(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+}
+
+/// Escape a Prometheus label *value*: `\` → `\\`, `"` → `\"`, newline →
+/// `\n` (the exposition-format rules).
+pub fn escape_label_value(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Escape `# HELP` text: `\` → `\\`, newline → `\n`.
+pub fn escape_help(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Label set: `(name, value)` pairs, rendered as
+/// `{name="escaped-value",...}` (empty set renders nothing).
+pub type Labels<'a> = [(&'a str, String)];
+
+fn write_labels(out: &mut String, labels: &Labels<'_>) {
+    if labels.is_empty() {
+        return;
+    }
+    out.push('{');
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(k);
+        out.push_str("=\"");
+        out.push_str(&escape_label_value(v));
+        out.push('"');
+    }
+    out.push('}');
+}
+
+fn write_header(out: &mut String, name: &str, help: &str, kind: &str) {
+    out.push_str("# HELP ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(&escape_help(help));
+    out.push('\n');
+    out.push_str("# TYPE ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(kind);
+    out.push('\n');
+}
+
+/// Incremental Prometheus text-exposition writer. One `counter` /
+/// `gauge` / `histogram` call renders one metric *family* (`# HELP` +
+/// `# TYPE` + all its label-set samples), so per-shard series share one
+/// header.
+#[derive(Debug, Default)]
+pub struct PromWriter {
+    out: String,
+}
+
+impl PromWriter {
+    /// Fresh writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// One counter family: `samples` are `(labels, value)` pairs.
+    pub fn counter(&mut self, name: &str, help: &str, samples: &[(&Labels<'_>, u64)]) {
+        write_header(&mut self.out, name, help, "counter");
+        for (labels, v) in samples {
+            self.sample(name, labels, *v as f64);
+        }
+    }
+
+    /// One gauge family.
+    pub fn gauge(&mut self, name: &str, help: &str, samples: &[(&Labels<'_>, u64)]) {
+        write_header(&mut self.out, name, help, "gauge");
+        for (labels, v) in samples {
+            self.sample(name, labels, *v as f64);
+        }
+    }
+
+    /// One histogram family from a [`HistogramSnapshot`]: cumulative
+    /// `_bucket{le=...}` series (the overflow bucket folds into
+    /// `+Inf`), then `_sum` and `_count`.
+    pub fn histogram(
+        &mut self,
+        name: &str,
+        help: &str,
+        labels: &Labels<'_>,
+        snap: &HistogramSnapshot,
+    ) {
+        write_header(&mut self.out, name, help, "histogram");
+        let mut acc = 0u64;
+        for (i, &c) in snap.buckets.iter().enumerate() {
+            acc += c;
+            let Some(edge) = HistogramSnapshot::upper_edge_us(i) else { break };
+            let mut with_le: Vec<(&str, String)> = labels.to_vec();
+            with_le.push(("le", edge.to_string()));
+            self.named_sample(&format!("{name}_bucket"), &with_le, acc as f64);
+        }
+        let total = snap.count_from_buckets();
+        let mut with_inf: Vec<(&str, String)> = labels.to_vec();
+        with_inf.push(("le", "+Inf".to_string()));
+        self.named_sample(&format!("{name}_bucket"), &with_inf, total as f64);
+        self.named_sample(&format!("{name}_sum"), labels, snap.sum_us as f64);
+        self.named_sample(&format!("{name}_count"), labels, snap.count as f64);
+    }
+
+    fn sample(&mut self, name: &str, labels: &Labels<'_>, v: f64) {
+        self.named_sample(name, labels, v);
+    }
+
+    fn named_sample(&mut self, name: &str, labels: &Labels<'_>, v: f64) {
+        self.out.push_str(name);
+        write_labels(&mut self.out, labels);
+        self.out.push(' ');
+        if v.fract() == 0.0 && v.abs() < 9e15 {
+            self.out.push_str(&format!("{}", v as i64));
+        } else {
+            self.out.push_str(&format!("{v}"));
+        }
+        self.out.push('\n');
+    }
+
+    /// Finish and return the exposition text.
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_bracket_values() {
+        let h = LogHistogram::new();
+        for _ in 0..100 {
+            h.record(Duration::from_micros(100));
+        }
+        for _ in 0..5 {
+            h.record(Duration::from_millis(10));
+        }
+        let p50 = h.quantile_upper_us(0.5);
+        let p99 = h.quantile_upper_us(0.99);
+        assert!(p50 >= 100 && p50 < 1000, "p50 {p50}");
+        assert!(p99 >= 8_000, "p99 {p99}");
+        assert!(p50 <= p99);
+        assert_eq!(h.snapshot().count, 105);
+        assert_eq!(h.snapshot().sum_us, 100 * 100 + 5 * 10_000);
+    }
+
+    #[test]
+    fn overflow_bucket_saturates_to_max_consistently() {
+        // A value at/above 2^63 µs lands in the overflow bucket, which
+        // has no finite upper edge: every quantile that falls there
+        // must report u64::MAX (not a silent 2^63).
+        let h = LogHistogram::new();
+        h.record_us(u64::MAX);
+        assert_eq!(h.quantile_upper_us(0.5), u64::MAX);
+        assert_eq!(h.quantile_upper_us(1.0), u64::MAX);
+        // One bucket below the overflow bucket still reports its finite
+        // edge 2^63 — the saturation is exactly at the top.
+        let h2 = LogHistogram::new();
+        h2.record_us(1u64 << 62);
+        assert_eq!(h2.quantile_upper_us(0.5), 1u64 << 63);
+    }
+
+    #[test]
+    fn prom_histogram_is_cumulative_and_consistent() {
+        let h = LogHistogram::new();
+        h.record_us(3);
+        h.record_us(300);
+        h.record_us(300_000);
+        let mut w = PromWriter::new();
+        w.histogram("request_latency_us", "Latency.", &[], &h.snapshot());
+        let text = w.finish();
+        assert!(text.contains("# TYPE request_latency_us histogram"), "{text}");
+        assert!(text.contains("request_latency_us_bucket{le=\"+Inf\"} 3"), "{text}");
+        assert!(text.contains("request_latency_us_count 3"), "{text}");
+        assert!(text.contains("request_latency_us_sum 300303"), "{text}");
+        // Cumulative monotone bucket counts.
+        let mut prev = 0i64;
+        for line in text.lines().filter(|l| l.starts_with("request_latency_us_bucket")) {
+            let v: i64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= prev, "{text}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn label_escaping() {
+        assert_eq!(escape_label_value("a\\b\"c\nd"), "a\\\\b\\\"c\\nd");
+        let mut w = PromWriter::new();
+        let labels: Vec<(&str, String)> = vec![("shard", "a\"0".to_string())];
+        w.gauge("g", "Help with \\ and\nnewline.", &[(&labels[..], 7)]);
+        let text = w.finish();
+        assert!(text.contains("g{shard=\"a\\\"0\"} 7"), "{text}");
+        assert!(text.contains("# HELP g Help with \\\\ and\\nnewline."), "{text}");
+    }
+}

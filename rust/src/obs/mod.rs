@@ -1,0 +1,27 @@
+//! Observability: tracing, metric primitives, and leveled logging.
+//!
+//! Three dependency-free layers, designed so the serving hot paths pay
+//! (close to) nothing when observability is off:
+//!
+//! - [`trace`] — `span!("refresh.block_solve")`-style RAII spans on
+//!   thread-local lock-free ring buffers. Disabled cost is one relaxed
+//!   `AtomicBool` load and a branch; enabled cost is two `Instant`
+//!   reads and four atomic stores per span. [`trace::Tracer::dump_json`]
+//!   exports Chrome trace-event JSON loadable in `chrome://tracing` /
+//!   Perfetto, also served by the coordinator's `/trace` route. Enable
+//!   with `MSGP_TRACE=1` or `Tracer::set_enabled(true)`.
+//! - [`metrics`] — typed [`metrics::Counter`] / [`metrics::Gauge`] /
+//!   [`metrics::LogHistogram`] primitives (drop-in `AtomicU64`
+//!   signatures) plus a Prometheus text-exposition writer used by
+//!   `/metrics?format=prom`.
+//! - [`log`] — `log_warn!`-style leveled stderr logging gated by the
+//!   `MSGP_LOG` env var (default `warn`).
+//!
+//! See `docs/METRICS.md` for the metric-name reference and a tracing
+//! walkthrough.
+
+pub mod log;
+pub mod metrics;
+pub mod trace;
+
+pub use trace::{now_us, SpanEvent, SpanGuard, Tracer};

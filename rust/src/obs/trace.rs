@@ -1,0 +1,442 @@
+//! Always-on-capable tracing: RAII span guards feeding per-thread
+//! lock-free ring buffers, drained into Chrome trace-event JSON.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Disabled cost is one branch.** [`SpanGuard::enter`] loads one
+//!    `Relaxed` [`AtomicBool`] and returns an inert guard when tracing
+//!    is off — no clock read, no thread-local touch. The numeric hot
+//!    paths (`fftn_batch`, `cg_solve_block`) carry spans permanently
+//!    because of this.
+//! 2. **Enabled cost is tens of nanoseconds and wait-free.** Each
+//!    thread owns one ring ([`RING_CAP`] slots of four `AtomicU64`
+//!    words); recording a span is a handful of `Relaxed` stores plus
+//!    two `Release` stores — no locks, no allocation after the ring
+//!    exists. Overflow overwrites the oldest events (a trace is a
+//!    window, not a log).
+//! 3. **Draining never stops the world.** [`dump_json`] snapshots every
+//!    ring through a per-slot sequence word (seqlock discipline, all
+//!    words atomic so there is no UB to discuss): a slot overwritten
+//!    mid-read fails its sequence check and is skipped.
+//!
+//! Span names are interned once per call site: the [`span!`] macro
+//! expands to a `static` [`SpanSite`] whose id is registered on first
+//! traced use, so the per-event payload is three integers.
+//!
+//! The exported JSON is the Chrome trace-event format (`ph: "X"`
+//! complete events with microsecond `ts`/`dur`) — load it at
+//! `chrome://tracing` or <https://ui.perfetto.dev>. Nesting needs no
+//! explicit parent links: events on one `tid` nest by time containment.
+
+use std::cell::{Cell, OnceCell};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Events retained per thread (power of two; ~0.5 MiB per ring). A full
+/// refresh cycle emits well under a hundred spans, so the window covers
+/// many cycles even with the FFT hot-path spans firing.
+pub const RING_CAP: usize = 8192;
+
+/// Words per ring slot: sequence, packed id/depth, start, duration.
+const WORDS: usize = 4;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Enable or disable span capture process-wide. Spans already recorded
+/// stay in their rings (use [`clear`] to discard them).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Release);
+}
+
+/// Whether span capture is on. This is the whole disabled-path cost of
+/// an instrumented scope.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Enable tracing when the `MSGP_TRACE` env var is set to anything but
+/// `0` / empty. Called by the server start paths; safe to call often.
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("MSGP_TRACE") {
+        if !v.is_empty() && v != "0" {
+            set_enabled(true);
+        }
+    }
+}
+
+/// Process-wide trace epoch: every timestamp is nanoseconds since the
+/// first call. Shared with the metrics layer (`last_refresh_at_us`) so
+/// trace timestamps and gauge ages agree.
+fn epoch() -> &'static Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the trace epoch.
+#[inline]
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+/// Microseconds since the trace epoch (the gauge-friendly unit).
+#[inline]
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// Interned span names, 1-based (id 0 = unregistered sentinel).
+fn names() -> &'static Mutex<Vec<&'static str>> {
+    static NAMES: OnceLock<Mutex<Vec<&'static str>>> = OnceLock::new();
+    NAMES.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// One instrumented call site: a `&'static` name plus its lazily
+/// assigned intern id. Created by the [`span!`] macro as a `static`, so
+/// after the first traced pass a span records no string work at all.
+pub struct SpanSite {
+    name: &'static str,
+    id: AtomicU32,
+}
+
+impl SpanSite {
+    /// Const constructor (the macro places these in `static`s).
+    pub const fn new(name: &'static str) -> Self {
+        SpanSite { name, id: AtomicU32::new(0) }
+    }
+
+    /// Intern id, registering the name on first use.
+    fn id(&self) -> u32 {
+        let id = self.id.load(Ordering::Relaxed);
+        if id != 0 {
+            return id;
+        }
+        let mut v = names().lock().unwrap();
+        // Re-check under the lock: another thread may have registered
+        // this site while we waited.
+        let id = self.id.load(Ordering::Relaxed);
+        if id != 0 {
+            return id;
+        }
+        v.push(self.name);
+        let id = v.len() as u32;
+        self.id.store(id, Ordering::Relaxed);
+        id
+    }
+}
+
+/// One thread's event ring. Single writer (the owning thread); any
+/// thread may read via the per-slot sequence words.
+struct Ring {
+    /// Stable reader-facing thread index (registration order).
+    tid: u32,
+    /// Monotone count of events ever pushed.
+    head: AtomicU64,
+    /// Events below this absolute index are hidden from drains
+    /// (advanced by [`clear`]).
+    floor: AtomicU64,
+    /// `RING_CAP * WORDS` atomics; slot `e % RING_CAP` holds
+    /// `[seq, id<<16|depth, start_ns, dur_ns]` with `seq = 2*(e+1)`
+    /// once stable and odd while being written.
+    slots: Box<[AtomicU64]>,
+}
+
+impl Ring {
+    fn new(tid: u32) -> Self {
+        Ring {
+            tid,
+            head: AtomicU64::new(0),
+            floor: AtomicU64::new(0),
+            slots: (0..RING_CAP * WORDS).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Record one completed span. Wait-free; called only by the owning
+    /// thread.
+    fn push(&self, id: u32, depth: u16, start_ns: u64, dur_ns: u64) {
+        let e = self.head.load(Ordering::Relaxed);
+        let base = (e as usize & (RING_CAP - 1)) * WORDS;
+        let s = &self.slots;
+        // Seqlock write: odd marker, payload, even generation marker.
+        s[base].store(2 * e + 1, Ordering::Release);
+        s[base + 1].store(((id as u64) << 16) | depth as u64, Ordering::Relaxed);
+        s[base + 2].store(start_ns, Ordering::Relaxed);
+        s[base + 3].store(dur_ns, Ordering::Relaxed);
+        s[base].store(2 * (e + 1), Ordering::Release);
+        self.head.store(e + 1, Ordering::Release);
+    }
+}
+
+/// Ring registry: one entry per thread that ever recorded a span.
+/// Locked only on thread registration and drain — never on the record
+/// path.
+fn registry() -> &'static Mutex<Vec<std::sync::Arc<Ring>>> {
+    static REG: OnceLock<Mutex<Vec<std::sync::Arc<Ring>>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    /// This thread's ring (registered on first recorded span).
+    static RING: OnceCell<std::sync::Arc<Ring>> = const { OnceCell::new() };
+    /// Live span nesting depth on this thread.
+    static DEPTH: Cell<u16> = const { Cell::new(0) };
+}
+
+fn with_ring(f: impl FnOnce(&Ring)) {
+    RING.with(|cell| {
+        let ring = cell.get_or_init(|| {
+            let mut reg = registry().lock().unwrap();
+            let ring = std::sync::Arc::new(Ring::new(reg.len() as u32));
+            reg.push(ring.clone());
+            ring
+        });
+        f(ring)
+    });
+}
+
+/// RAII span: records `[enter, drop)` into the owning thread's ring on
+/// drop. Construct through the [`span!`] macro.
+pub struct SpanGuard {
+    /// `None` when tracing was disabled at entry (the guard is inert).
+    live: Option<(&'static SpanSite, u64)>,
+}
+
+impl SpanGuard {
+    /// Begin a span at `site`. One atomic load when tracing is off.
+    #[inline]
+    pub fn enter(site: &'static SpanSite) -> SpanGuard {
+        if !enabled() {
+            return SpanGuard { live: None };
+        }
+        DEPTH.with(|d| d.set(d.get().saturating_add(1)));
+        SpanGuard { live: Some((site, now_ns())) }
+    }
+}
+
+impl Drop for SpanGuard {
+    #[inline]
+    fn drop(&mut self) {
+        if let Some((site, start)) = self.live {
+            let dur = now_ns().saturating_sub(start);
+            let depth = DEPTH.with(|d| {
+                let v = d.get();
+                d.set(v.saturating_sub(1));
+                v
+            });
+            with_ring(|r| r.push(site.id(), depth, start, dur));
+        }
+    }
+}
+
+/// Open a traced span for the rest of the enclosing scope:
+/// `let _s = span!("refresh.block_solve");`. Cost when tracing is
+/// disabled: one relaxed atomic load and a branch.
+#[macro_export]
+macro_rules! span {
+    ($name:literal) => {{
+        static __MSGP_SPAN_SITE: $crate::obs::trace::SpanSite =
+            $crate::obs::trace::SpanSite::new($name);
+        $crate::obs::trace::SpanGuard::enter(&__MSGP_SPAN_SITE)
+    }};
+}
+
+/// One drained span event (decoded ring slot).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpanEvent {
+    /// Interned span name.
+    pub name: &'static str,
+    /// Reader-facing thread index (ring registration order).
+    pub tid: u32,
+    /// Nesting depth at record time (1 = top level).
+    pub depth: u16,
+    /// Start, nanoseconds since the trace epoch.
+    pub start_ns: u64,
+    /// Duration, nanoseconds.
+    pub dur_ns: u64,
+}
+
+/// Snapshot every ring (newest [`RING_CAP`] events per thread), sorted
+/// by start time. Slots overwritten while being read are skipped.
+pub fn drain() -> Vec<SpanEvent> {
+    let names: Vec<&'static str> = names().lock().unwrap().clone();
+    let rings: Vec<std::sync::Arc<Ring>> = registry().lock().unwrap().clone();
+    let mut events = Vec::new();
+    for ring in &rings {
+        let head = ring.head.load(Ordering::Acquire);
+        let lo = head.saturating_sub(RING_CAP as u64).max(ring.floor.load(Ordering::Acquire));
+        for e in lo..head {
+            let base = (e as usize & (RING_CAP - 1)) * WORDS;
+            let want = 2 * (e + 1);
+            let seq1 = ring.slots[base].load(Ordering::Acquire);
+            if seq1 != want {
+                continue; // being overwritten (or already lapped)
+            }
+            let meta = ring.slots[base + 1].load(Ordering::Relaxed);
+            let start_ns = ring.slots[base + 2].load(Ordering::Relaxed);
+            let dur_ns = ring.slots[base + 3].load(Ordering::Relaxed);
+            if ring.slots[base].load(Ordering::Acquire) != want {
+                continue; // overwritten mid-read: payload untrusted
+            }
+            let id = (meta >> 16) as usize;
+            let Some(&name) = names.get(id.wrapping_sub(1)) else { continue };
+            let depth = (meta & 0xffff) as u16;
+            events.push(SpanEvent { name, tid: ring.tid, depth, start_ns, dur_ns });
+        }
+    }
+    events.sort_by_key(|e| (e.start_ns, std::cmp::Reverse(e.dur_ns)));
+    events
+}
+
+/// Hide everything recorded so far from future drains (rings are not
+/// freed; writers are unaffected).
+pub fn clear() {
+    let rings: Vec<std::sync::Arc<Ring>> = registry().lock().unwrap().clone();
+    for ring in &rings {
+        ring.floor.store(ring.head.load(Ordering::Acquire), Ordering::Release);
+    }
+}
+
+/// Render the current trace window as a Chrome trace-event JSON
+/// document (`chrome://tracing` / Perfetto loadable). Timestamps and
+/// durations are microseconds (fractional) since the trace epoch.
+pub fn dump_json() -> String {
+    let events: Vec<Json> = drain()
+        .into_iter()
+        .map(|e| {
+            Json::obj(vec![
+                ("name", Json::Str(e.name.to_string())),
+                ("cat", Json::Str("msgp".to_string())),
+                ("ph", Json::Str("X".to_string())),
+                ("ts", Json::Num(e.start_ns as f64 / 1e3)),
+                ("dur", Json::Num(e.dur_ns as f64 / 1e3)),
+                ("pid", Json::Num(0.0)),
+                ("tid", Json::Num(e.tid as f64)),
+                ("args", Json::obj(vec![("depth", Json::Num(e.depth as f64))])),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ])
+    .to_string()
+}
+
+/// Facade matching the issue-facing API (`Tracer::dump_json`); all
+/// methods forward to the module functions.
+pub struct Tracer;
+
+impl Tracer {
+    /// See [`set_enabled`].
+    pub fn set_enabled(on: bool) {
+        set_enabled(on)
+    }
+
+    /// See [`enabled`].
+    pub fn enabled() -> bool {
+        enabled()
+    }
+
+    /// See [`dump_json`].
+    pub fn dump_json() -> String {
+        dump_json()
+    }
+
+    /// See [`drain`].
+    pub fn drain() -> Vec<SpanEvent> {
+        drain()
+    }
+
+    /// See [`clear`].
+    pub fn clear() {
+        clear()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The enable flag is process-global; serialize the tests that
+    /// toggle it so parallel test threads cannot interleave windows.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _g = lock();
+        set_enabled(false);
+        clear();
+        {
+            let _s = crate::span!("test.disabled");
+        }
+        assert!(drain().iter().all(|e| e.name != "test.disabled"));
+    }
+
+    #[test]
+    fn spans_nest_by_time_containment() {
+        let _g = lock();
+        set_enabled(true);
+        {
+            let _outer = crate::span!("test.outer");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            {
+                let _inner = crate::span!("test.inner");
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        }
+        set_enabled(false);
+        let events = drain();
+        let outer = events.iter().find(|e| e.name == "test.outer").expect("outer recorded");
+        let inner = events.iter().find(|e| e.name == "test.inner").expect("inner recorded");
+        assert_eq!(inner.tid, outer.tid);
+        assert!(inner.depth > outer.depth, "{} vs {}", inner.depth, outer.depth);
+        assert!(inner.start_ns >= outer.start_ns);
+        assert!(inner.start_ns + inner.dur_ns <= outer.start_ns + outer.dur_ns);
+        clear();
+    }
+
+    #[test]
+    fn dump_json_is_chrome_trace_shaped() {
+        let _g = lock();
+        set_enabled(true);
+        {
+            let _s = crate::span!("test.json");
+        }
+        set_enabled(false);
+        let doc = Json::parse(&dump_json()).expect("valid JSON");
+        let events = doc.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents");
+        let ev = events
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("test.json"))
+            .expect("span present");
+        assert_eq!(ev.get("ph").and_then(|p| p.as_str()), Some("X"));
+        assert!(ev.get("ts").and_then(|t| t.as_f64()).is_some());
+        assert!(ev.get("dur").and_then(|t| t.as_f64()).is_some());
+        assert!(ev.get("tid").and_then(|t| t.as_f64()).is_some());
+        clear();
+    }
+
+    #[test]
+    fn ring_overflow_keeps_newest_events() {
+        let _g = lock();
+        set_enabled(true);
+        for _ in 0..RING_CAP + 64 {
+            let _s = crate::span!("test.flood");
+        }
+        {
+            let _last = crate::span!("test.flood_last");
+        }
+        set_enabled(false);
+        let events = drain();
+        assert!(events.iter().any(|e| e.name == "test.flood_last"));
+        assert!(events.iter().filter(|e| e.name == "test.flood").count() <= RING_CAP);
+        clear();
+    }
+}

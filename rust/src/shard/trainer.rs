@@ -130,6 +130,7 @@ struct ShardWorker {
 
 impl ShardWorker {
     fn ingest(&mut self, xs: &[f64], ys: &[f64], is_halo: bool) -> usize {
+        let _sp = crate::span!("shard.ingest");
         let d = self.grid.dim();
         let target = if is_halo { &mut self.halo } else { &mut self.own };
         for (i, &y) in ys.iter().enumerate() {
@@ -142,6 +143,9 @@ impl ShardWorker {
             for (i, &y) in ys.iter().enumerate() {
                 res.offer(&xs[i * d..(i + 1) * d], y, self.cfg.reservoir, &mut self.res_rng);
             }
+            self.metrics.shards[self.id]
+                .reservoir_points
+                .store(res.y.len() as u64, Ordering::Relaxed);
         }
         self.dirty += ys.len() as f64 * if is_halo { 0.5 } else { 1.0 };
         let counter = if is_halo {
@@ -159,6 +163,7 @@ impl ShardWorker {
     /// with the Gram apply, `W^T y`, probe accumulators, and `diag(G)`
     /// each summed across the two accumulators.
     fn refresh_and_publish(&mut self) {
+        let _sp = crate::span!("shard.refresh");
         let t0 = Instant::now();
         let m = self.grid.m();
         let has_halo = self.halo.n() > 0;

@@ -169,6 +169,7 @@ pub fn cg_solve(
     opts: CgOptions,
     ws: &mut CgWorkspace,
 ) -> CgResult {
+    let _sp = crate::span!("cg.solve");
     let n = b.len();
     assert_eq!(x.len(), n);
     ws.resize(n);
@@ -334,6 +335,7 @@ pub fn cg_solve_block(
     opts: CgOptions,
     ws: &mut BlockCgWorkspace,
 ) -> BlockCgResult {
+    let _sp = crate::span!("cg.block_solve");
     assert!(n > 0 && b.len() % n == 0, "b is cols x n row-major");
     let cols = b.len() / n;
     assert_eq!(x.len(), b.len());

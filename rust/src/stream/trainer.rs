@@ -136,6 +136,19 @@ pub struct RefreshStats {
     pub n: usize,
     /// Wall-clock time of the refresh.
     pub wall: Duration,
+    /// Wall-clock of the RHS-staging stage (batched `S` applies +
+    /// probe assembly). Mirrored to `/metrics` as
+    /// `last_refresh_stage_rhs_us` and traced as `refresh.stage_rhs`.
+    pub stage_rhs: Duration,
+    /// Wall-clock of the lockstep block-CG solve (the sequential
+    /// reference path reports its whole solve loop here). Mirrored as
+    /// `last_refresh_block_solve_us` / traced as
+    /// `refresh.block_solve`.
+    pub block_solve: Duration,
+    /// Wall-clock of the map-back stage (batched `S` to the u-domain +
+    /// probe accumulation). Mirrored as `last_refresh_map_back_us` /
+    /// traced as `refresh.map_back`.
+    pub map_back: Duration,
     /// Whether a requested preconditioner could not be built and the
     /// refresh degraded to unpreconditioned CG.
     pub precond_fallback: bool,
@@ -225,6 +238,11 @@ pub(crate) struct RefreshOutcome {
     /// `true` when a requested preconditioner could not be built and
     /// the solves ran unpreconditioned.
     pub precond_fallback: bool,
+    /// Per-stage wall-clocks (stage-RHS, block-solve, map-back) — the
+    /// same measurements that feed the `refresh.*` tracer spans, so
+    /// gauges and traces agree. The sequential reference path reports
+    /// its whole solve loop as `block_solve`.
+    pub stage_wall: [Duration; 3],
 }
 
 /// Reusable buffers for one m-domain refresh: the lockstep block-CG
@@ -357,7 +375,7 @@ pub(crate) fn build_precond(inp: &RefreshInputs<'_>) -> (PrecondApply, bool) {
             Some(g) => g,
             None => {
                 PRECOND_FALLBACK_WARN.call_once(|| {
-                    eprintln!(
+                    crate::log_warn!(
                         "refresh preconditioner ({}) requested but diag(G) was not \
                          supplied; degrading to unpreconditioned CG",
                         inp.opts.precondition.name()
@@ -484,6 +502,8 @@ pub(crate) fn refresh_mdomain(
     ws.resize(m, cols);
     let RefreshWorkspace { cg, fft, fft_p, rhs, xblk, s1, s2, .. } = ws;
     // --- stage the RHS block: one batched S over [b | g_1 .. g_ns] ---
+    let t_stage = Instant::now();
+    let sp_rhs = crate::span!("refresh.stage_rhs");
     s2[..m].copy_from_slice(inp.wty);
     for (k, g) in inp.g_probes.iter().enumerate() {
         s2[(k + 1) * m..(k + 2) * m].copy_from_slice(g);
@@ -505,7 +525,11 @@ pub(crate) fn refresh_mdomain(
     if ns > 0 {
         inp.gk.sqrt_matvec_batch(&s2[..ns * m], &mut rhs[m..cols * m], fft);
     }
+    drop(sp_rhs);
+    let stage_rhs = t_stage.elapsed();
     // --- warm starts in, ONE block solve (mean + probes), warm starts out ---
+    let t_solve = Instant::now();
+    let sp_solve = crate::span!("refresh.block_solve");
     xblk[..m].copy_from_slice(t_mean);
     for (k, t) in t_probes.iter().enumerate() {
         xblk[(k + 1) * m..(k + 2) * m].copy_from_slice(t);
@@ -538,7 +562,11 @@ pub(crate) fn refresh_mdomain(
     for (k, t) in t_probes.iter_mut().enumerate() {
         t.copy_from_slice(&xblk[(k + 1) * m..(k + 2) * m]);
     }
+    drop(sp_solve);
+    let block_solve = t_solve.elapsed();
     // --- one batched S maps every solution to the u-domain ---
+    let t_map = Instant::now();
+    let sp_map = crate::span!("refresh.map_back");
     inp.gk.sqrt_matvec_batch(&xblk[..cols * m], &mut s1[..cols * m], fft);
     let mut u_mean = s1[..m].to_vec();
     for v in u_mean.iter_mut() {
@@ -554,6 +582,8 @@ pub(crate) fn refresh_mdomain(
     for a in acc.iter_mut() {
         *a /= ns.max(1) as f64;
     }
+    drop(sp_map);
+    let map_back = t_map.elapsed();
     RefreshOutcome {
         u_mean,
         nu_u: acc,
@@ -562,6 +592,7 @@ pub(crate) fn refresh_mdomain(
         block_iters: res.block_iters,
         apply_cols: res.apply_cols,
         precond_fallback,
+        stage_wall: [stage_rhs, block_solve, map_back],
     }
 }
 
@@ -580,6 +611,11 @@ pub(crate) fn refresh_mdomain_sequential(
     let m = inp.wty.len();
     let sf2 = inp.sf2;
     let sigma2 = inp.sigma2;
+    // The sequential path interleaves staging / solving / map-back per
+    // probe, so the stage split does not apply: its whole solve loop
+    // reports as `block_solve` (and traces as one span).
+    let t_total = Instant::now();
+    let _sp = crate::span!("refresh.sequential_solves");
     let (mut precond, precond_fallback) = build_precond(&inp);
     let mut gout = vec![0.0f64; m];
     // --- mean solve ---
@@ -647,6 +683,7 @@ pub(crate) fn refresh_mdomain_sequential(
         block_iters: 0,
         apply_cols,
         precond_fallback,
+        stage_wall: [Duration::ZERO, t_total.elapsed(), Duration::ZERO],
     }
 }
 
@@ -784,10 +821,17 @@ impl StreamTrainer {
         (res.x.clone(), res.y.clone())
     }
 
+    /// Points currently held in the reservoir (for the
+    /// `reservoir_points` gauge and `/healthz`).
+    pub fn reservoir_len(&self) -> usize {
+        self.reservoir.lock().unwrap().y.len()
+    }
+
     /// Absorb a batch of observations (row-major `k x D` inputs).
     /// O(4^D) per point; rebuilds the grid operator and remaps all
     /// warm-start state if the grid auto-expanded.
     pub fn ingest_batch(&mut self, xs: &[f64], ys: &[f64]) {
+        let _sp = crate::span!("ingest.absorb");
         let d = self.ski.grid().dim();
         assert_eq!(xs.len(), ys.len() * d, "xs is k x D row-major, ys length k");
         let old_grid = self.ski.grid().clone();
@@ -958,6 +1002,9 @@ impl StreamTrainer {
             m,
             n: self.n(),
             wall: t0.elapsed(),
+            stage_rhs: out.stage_wall[0],
+            block_solve: out.stage_wall[1],
+            map_back: out.stage_wall[2],
             precond_fallback: out.precond_fallback,
         };
         self.last_refresh = stats.clone();
@@ -989,6 +1036,7 @@ impl StreamTrainer {
     /// the stream the reservoir still describes, so hypers fit to that
     /// stale snapshot would be adopted against near-zero statistics).
     pub fn reoptimize(&mut self) -> anyhow::Result<Option<f64>> {
+        let _sp = crate::span!("reopt");
         if self.ski.weight() < MIN_EFFECTIVE_MASS {
             return Ok(None);
         }

@@ -1,0 +1,256 @@
+//! Observability subsystem, end to end: concurrent metric hammering
+//! against the Prometheus renderer, the tracer's refresh-span
+//! decomposition through a live online server, the bench artifact
+//! recorder, and the in-process route dispatch (`/metrics?format=prom`,
+//! `/healthz`, `/trace`) the CI smoke job drives.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use msgp::bench::{config_hash, Record, Recorder};
+use msgp::coordinator::{BatcherConfig, EngineSpec, Metrics, Server, ServingModel};
+use msgp::data::gen_stress_1d;
+use msgp::gp::msgp::{KernelSpec, MsgpConfig, MsgpModel};
+use msgp::grid::{Grid, GridAxis};
+use msgp::kernels::{KernelType, ProductKernel};
+use msgp::obs::Tracer;
+use msgp::stream::{StreamConfig, StreamTrainer};
+use msgp::util::json::Json;
+
+fn se_kernel() -> KernelSpec {
+    KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0))
+}
+
+fn serving_model() -> ServingModel {
+    let data = gen_stress_1d(150, 0.05, 9);
+    let cfg = MsgpConfig { n_per_dim: vec![96], n_var_samples: 6, ..Default::default() };
+    let mut model = MsgpModel::fit(se_kernel(), 0.01, data, cfg).unwrap();
+    ServingModel::from_msgp(&mut model)
+}
+
+/// Parse the cumulative buckets of `family` out of a Prometheus text
+/// rendering: `(le, count)` pairs in exposition order.
+fn buckets_of(prom: &str, family: &str) -> Vec<(String, u64)> {
+    let prefix = format!("{family}_bucket{{le=\"");
+    prom.lines()
+        .filter_map(|l| {
+            let rest = l.strip_prefix(&prefix)?;
+            let (le, tail) = rest.split_once("\"}")?;
+            Some((le.to_string(), tail.trim().parse::<u64>().ok()?))
+        })
+        .collect()
+}
+
+fn sample_of(prom: &str, name: &str) -> Option<u64> {
+    prom.lines().find_map(|l| {
+        let rest = l.strip_prefix(name)?;
+        rest.strip_prefix(' ')?.trim().parse::<u64>().ok()
+    })
+}
+
+/// Satellite (d): hammer counters and the latency histogram from N
+/// threads while another thread drains the Prometheus rendering, then
+/// assert exact totals and text-format validity on the final scrape.
+#[test]
+fn concurrent_hammer_preserves_exact_totals_and_prom_validity() {
+    const THREADS: usize = 8;
+    const PER_THREAD: u64 = 10_000;
+    const LATENCIES: u64 = 1_000;
+    let metrics = Arc::new(Metrics::with_shards(2));
+    let stop = Arc::new(AtomicBool::new(false));
+
+    // Scraper: every rendering mid-hammer must already be valid text.
+    let scraper = {
+        let m = metrics.clone();
+        let stop = stop.clone();
+        thread::spawn(move || {
+            let mut scrapes = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                let prom = m.render_prometheus();
+                for line in prom.lines() {
+                    if line.starts_with('#') || line.is_empty() {
+                        continue;
+                    }
+                    let (_, value) = line.rsplit_once(' ').expect("sample line");
+                    value.parse::<f64>().unwrap_or_else(|_| {
+                        panic!("non-numeric sample value in {line:?}")
+                    });
+                }
+                // Cumulative buckets must be monotone in every scrape,
+                // not just the final quiescent one.
+                let buckets = buckets_of(&prom, "request_latency_us");
+                assert!(!buckets.is_empty());
+                assert_eq!(buckets.last().unwrap().0, "+Inf");
+                for w in buckets.windows(2) {
+                    assert!(w[0].1 <= w[1].1, "non-monotone buckets: {w:?}");
+                }
+                scrapes += 1;
+            }
+            scrapes
+        })
+    };
+
+    let workers: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let m = metrics.clone();
+            thread::spawn(move || {
+                for i in 0..PER_THREAD {
+                    m.submitted.fetch_add(1, Ordering::Relaxed);
+                    m.completed.inc();
+                    m.shards[t % 2].ingested.fetch_add(1, Ordering::Relaxed);
+                    if i < LATENCIES {
+                        m.record_latency(Duration::from_micros(5));
+                    }
+                }
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+    stop.store(true, Ordering::Relaxed);
+    let scrapes = scraper.join().unwrap();
+    assert!(scrapes > 0, "scraper never ran");
+
+    let total = THREADS as u64 * PER_THREAD;
+    let prom = metrics.render_prometheus();
+    assert_eq!(sample_of(&prom, "submitted"), Some(total));
+    assert_eq!(sample_of(&prom, "completed"), Some(total));
+    assert_eq!(sample_of(&prom, "shard_ingested{shard=\"0\"}"), Some(total / 2));
+    assert_eq!(sample_of(&prom, "shard_ingested{shard=\"1\"}"), Some(total / 2));
+    let n_lat = THREADS as u64 * LATENCIES;
+    assert_eq!(sample_of(&prom, "request_latency_us_count"), Some(n_lat));
+    assert_eq!(sample_of(&prom, "request_latency_us_sum"), Some(5 * n_lat));
+    let buckets = buckets_of(&prom, "request_latency_us");
+    assert_eq!(buckets.last().unwrap().1, n_lat, "+Inf bucket == count");
+    // 5us lands in the (4, 8] bucket: everything at le >= 8 sees it.
+    for (le, count) in &buckets {
+        if let Ok(edge) = le.parse::<u64>() {
+            assert_eq!(*count, if edge >= 8 { n_lat } else { 0 }, "le={le}");
+        }
+    }
+    // The legacy one-line summary coexists with the same totals.
+    let summary = metrics.summary();
+    assert!(summary.contains(&format!("submitted={total}")), "{summary}");
+}
+
+/// Tentpole acceptance: with tracing enabled, a full ingest -> refresh
+/// -> predict cycle produces a Chrome-trace JSON whose `refresh` span
+/// decomposes into the stage-RHS / block-solve / map-back / slot-swap
+/// child spans (time-contained, same thread).
+#[test]
+fn trace_json_decomposes_refresh_into_stage_spans() {
+    Tracer::clear();
+    Tracer::set_enabled(true);
+    let data = gen_stress_1d(400, 0.05, 21);
+    let grid = Grid::new(vec![GridAxis::span(-12.0, 13.0, 64)]);
+    let mcfg = MsgpConfig { n_per_dim: vec![64], n_var_samples: 4, ..Default::default() };
+    let trainer = StreamTrainer::new(
+        se_kernel(),
+        0.01,
+        grid,
+        StreamConfig { msgp: mcfg, ..Default::default() },
+    );
+    let server = Server::start_online(trainer, EngineSpec::Native, BatcherConfig::default());
+    server.ingest(data.x.clone(), data.y.clone()).expect("ingest");
+    server.flush_stream().expect("flush");
+    let _ = server.predict(vec![0.5]).expect("predict");
+    // The flush span guard drops just *after* the reply is sent, so
+    // give the batcher thread a beat to publish it before dumping.
+    let mut dump = Tracer::dump_json();
+    for _ in 0..400 {
+        if dump.contains("predict.flush") {
+            break;
+        }
+        thread::sleep(Duration::from_millis(5));
+        dump = Tracer::dump_json();
+    }
+    server.shutdown();
+    Tracer::set_enabled(false);
+
+    let doc = Json::parse(&dump).expect("trace dump parses");
+    let events = doc.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents");
+    let field = |e: &Json, k: &str| e.get(k).and_then(|v| v.as_f64()).unwrap();
+    let named = |name: &str| -> Vec<(f64, f64, f64)> {
+        events
+            .iter()
+            .filter(|e| e.get("name").and_then(|n| n.as_str()) == Some(name))
+            .map(|e| (field(e, "tid"), field(e, "ts"), field(e, "dur")))
+            .collect()
+    };
+    let refreshes = named("refresh");
+    assert!(!refreshes.is_empty(), "no refresh span in trace");
+    let (tid, ts, dur) = refreshes[0];
+    let children =
+        ["refresh.stage_rhs", "refresh.block_solve", "refresh.map_back", "refresh.slot_swap"];
+    for child in children {
+        let inside = named(child).iter().any(|&(ctid, cts, cdur)| {
+            ctid == tid && cts >= ts - 1e-3 && cts + cdur <= ts + dur + 1e-3
+        });
+        assert!(inside, "{child} not nested inside the refresh span");
+    }
+    // The batched predict path is covered too.
+    assert!(!named("predict.flush").is_empty(), "no predict.flush span");
+    // Every event is a complete-phase slice with sane geometry.
+    for e in events {
+        assert_eq!(e.get("ph").and_then(|p| p.as_str()), Some("X"));
+        assert!(field(e, "dur") >= 0.0);
+    }
+}
+
+/// Satellite (f) prerequisite: the recorder writes a well-formed
+/// `BENCH_*.json` and skips configs that are already recorded.
+#[test]
+fn recorder_persists_well_formed_artifact() {
+    let dir = std::env::temp_dir().join(format!("msgp_obs_it_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut rec = Recorder::open_in(&dir, "it");
+    assert!(rec.record_if_new("m=64", || {
+        Record::from_duration("m=64", Duration::from_micros(120)).with_extra("iters", 3.0)
+    }));
+    rec.save().unwrap();
+
+    let text = std::fs::read_to_string(dir.join("BENCH_it.json")).unwrap();
+    let doc = Json::parse(&text).expect("artifact parses");
+    assert_eq!(doc.get("figure").and_then(|f| f.as_str()), Some("it"));
+    let entry = doc.get("entries").and_then(|e| e.get("m=64")).expect("entry");
+    assert_eq!(entry.get("median_ns").and_then(|v| v.as_f64()), Some(120_000.0));
+    assert_eq!(
+        entry.get("config_hash").and_then(|v| v.as_str()),
+        Some(config_hash("m=64").as_str())
+    );
+
+    let mut rec2 = Recorder::open_in(&dir, "it");
+    assert!(!rec2.record_if_new("m=64", || panic!("must skip recorded config")));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite (f): the in-process route dispatch the CI smoke job uses —
+/// `/metrics?format=prom`, `/healthz`, and `/trace` all answer through
+/// the router against a live server.
+#[test]
+fn in_process_routes_serve_prometheus_health_and_trace() {
+    let server = Server::start(serving_model(), EngineSpec::Native, BatcherConfig::default());
+    let _ = server.predict(vec![0.0]).expect("predict");
+
+    let prom = server.handle_path("/metrics?format=prom").expect("prom route");
+    for family in ["submitted", "completed", "batches", "request_latency_us", "refresh_count"] {
+        assert!(prom.contains(&format!("# TYPE {family} ")), "missing {family}");
+    }
+    assert_eq!(sample_of(&prom, "submitted"), Some(1));
+    let legacy = server.handle_path("/metrics").expect("summary route");
+    assert!(legacy.starts_with("submitted=1 "), "{legacy}");
+
+    let health = server.handle_path("/healthz").expect("health route");
+    let doc = Json::parse(&health).expect("healthz parses");
+    assert_eq!(doc.get("status").and_then(|s| s.as_str()), Some("ok"));
+    assert_eq!(doc.get("last_refresh_age_us"), Some(&Json::Null));
+
+    let trace = server.handle_path("/trace").expect("trace route");
+    assert!(Json::parse(&trace).unwrap().get("traceEvents").is_some());
+    assert_eq!(server.handle_path("/nope"), None);
+    server.shutdown();
+}
