@@ -1,0 +1,21 @@
+//! `cargo bench --bench fig9_serving` — the HTTP front-door serving
+//! sweep. Boots sharded servers behind the real TCP transport, drives
+//! the fixed seeded closed-loop predict/ingest mix at two
+//! (shards, clients) configs plus an interleaved tracing-on/off
+//! overhead measurement, and records p50/p99/p999 and sustained QPS
+//! into `BENCH_fig9_serving.json` (under `MSGP_BENCH_DIR`, default
+//! `.`). Same entry point as `loadgen --smoke`, so CI and local runs
+//! produce the same artifact.
+
+use std::path::Path;
+
+fn main() {
+    let dir = std::env::var("MSGP_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
+    match msgp::bench::loadgen::smoke(Path::new(&dir)) {
+        Ok(path) => println!("# recorded -> {}", path.display()),
+        Err(e) => {
+            eprintln!("fig9_serving failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}

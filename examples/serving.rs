@@ -1,96 +1,87 @@
-//! End-to-end serving driver (the DESIGN.md E2E validation): train an
-//! MSGP model on a real (synthetic) workload, freeze its O(1)-prediction
-//! state, load the AOT-compiled JAX/Pallas artifacts through PJRT, and
-//! serve a stream of batched prediction requests through the coordinator,
-//! reporting throughput and latency percentiles.
+//! End-to-end serving walkthrough: train an MSGP model on a synthetic
+//! workload, boot a sharded streaming server behind the real HTTP
+//! front door on a loopback port, drive it over actual sockets with
+//! the loadgen harness, and read the observability surfaces
+//! (`/metrics?format=prom`, `/healthz`, `/shards?verbose=1`, `/trace`)
+//! back over the wire.
 //!
-//! Run after `make artifacts`:
 //! `cargo run --release --example serving`
 //!
-//! Without artifacts it degrades gracefully to the native Rust engine
-//! (same numerics; the comparison between the two is part of the output).
+//! While it runs, the printed `curl` commands work from another shell;
+//! set `MSGP_TRACE=1` / `MSGP_SLOW_MS=50` to see spans and slow-request
+//! logging. For a long-lived server to poke at, use
+//! `cargo run --release --bin loadgen -- --serve`.
 
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Instant;
 
-use msgp::coordinator::{BatcherConfig, EngineSpec, Server, ServingModel};
+use msgp::bench::loadgen::{HttpClient, LoadConfig};
+use msgp::coordinator::{BatcherConfig, HttpConfig, HttpServer, Server};
 use msgp::data::gen_stress_1d;
-use msgp::gp::msgp::{KernelSpec, MsgpConfig, MsgpModel};
+use msgp::gp::msgp::{KernelSpec, MsgpConfig};
 use msgp::grid::{Grid, GridAxis};
 use msgp::kernels::{KernelType, ProductKernel};
-use msgp::util::Rng;
-
-/// Open-loop pipelined load generator: keeps `window` requests in flight.
-fn run_load(server: &std::sync::Arc<Server>, total: usize, window: usize) -> f64 {
-    let mut rng = Rng::new(100);
-    let t0 = Instant::now();
-    let mut inflight: std::collections::VecDeque<
-        std::sync::mpsc::Receiver<anyhow::Result<msgp::coordinator::Prediction>>,
-    > = std::collections::VecDeque::with_capacity(window);
-    for _ in 0..total {
-        if inflight.len() >= window {
-            let rx = inflight.pop_front().unwrap();
-            let p = rx.recv().expect("reply").expect("prediction");
-            assert!(p.mean.is_finite() && p.var >= 0.0);
-        }
-        let x = rng.uniform_in(-10.0, 10.0);
-        inflight.push_back(server.submit(vec![x]).expect("submit"));
-    }
-    for rx in inflight {
-        let p = rx.recv().expect("reply").expect("prediction");
-        assert!(p.mean.is_finite());
-    }
-    total as f64 / t0.elapsed().as_secs_f64()
-}
+use msgp::shard::{ShardConfig, ShardedTrainer};
 
 fn main() -> anyhow::Result<()> {
-    // --- Train (offline phase) ---
+    // --- Train (offline phase): a 2-shard streaming trainer. ---
     let n = 20_000;
-    println!("training MSGP: n = {n}, m = 512 (grid matches the AOT artifacts)...");
-    let data = gen_stress_1d(n, 0.05, 11);
+    let shards = 2;
+    println!("training sharded MSGP: n = {n}, m = 512, {shards} shards...");
     let kernel = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0));
     let grid = Grid::new(vec![GridAxis::span(-12.0, 13.0, 512)]);
-    let cfg = MsgpConfig { n_per_dim: vec![512], ..Default::default() };
-    let t0 = Instant::now();
-    let mut model = MsgpModel::fit_with_grid(kernel, 0.01, data, grid, cfg)?;
-    model.train(10, 0.1)?;
-    let serving = ServingModel::from_msgp(&mut model);
-    println!(
-        "trained + froze serving state in {:.2}s (LML {:.1}, CG iters {})",
-        t0.elapsed().as_secs_f64(),
-        model.lml(),
-        model.last_cg.iters
-    );
-
-    // --- Serve (online phase) ---
-    let total = 200_000;
-    let window = 256; // in-flight requests
-    let batch_cfg = BatcherConfig { max_wait: Duration::from_millis(1), max_batch: 256, eager: true };
-
-    // PJRT path (falls back to native if artifacts are missing).
-    let art_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let spec = if art_dir.join("manifest.json").exists() {
-        println!("serving via PJRT artifacts from {art_dir:?}");
-        EngineSpec::Pjrt(art_dir)
-    } else {
-        println!("no artifacts found; serving via the native engine");
-        EngineSpec::Native
+    let cfg = ShardConfig {
+        shards,
+        refresh_every: 8192,
+        msgp: MsgpConfig { n_per_dim: vec![512], n_var_samples: 4, ..Default::default() },
+        ..Default::default()
     };
-    let server = std::sync::Arc::new(Server::start(serving.clone(), spec, batch_cfg.clone()));
-    let thr = run_load(&server, total, window);
-    println!("-- PJRT/auto backend --");
-    println!("throughput: {thr:.0} predictions/s ({window} requests in flight)");
-    println!(
-        "latency: p50 <= {} us, p99 <= {} us",
-        server.metrics.latency_quantile_us(0.5),
-        server.metrics.latency_quantile_us(0.99)
-    );
-    println!("metrics: {}", server.metrics.summary());
+    let trainer = ShardedTrainer::start(kernel, 0.01, grid, cfg);
+    let data = gen_stress_1d(n, 0.05, 11);
+    let t0 = Instant::now();
+    trainer.ingest_batch(&data.x, &data.y);
+    trainer.flush();
+    println!("ingested + refreshed in {:.2}s", t0.elapsed().as_secs_f64());
 
-    // Native engine for comparison.
-    let native = std::sync::Arc::new(Server::start(serving, EngineSpec::Native, batch_cfg));
-    let thr_native = run_load(&native, total, window);
-    println!("-- native backend --");
-    println!("throughput: {thr_native:.0} predictions/s");
-    println!("metrics: {}", native.metrics.summary());
+    // --- Serve (online phase): the HTTP front door on loopback. ---
+    let server = Arc::new(Server::start_sharded(trainer, BatcherConfig::default()));
+    let http = HttpServer::bind(server, "127.0.0.1:0", HttpConfig::default())?;
+    let addr = http.local_addr();
+    println!("front door up on http://{addr}; from another shell:");
+    println!("  curl -s -X POST http://{addr}/predict -d '{{\"points\": [0.5, 1.5]}}'");
+    println!("  curl -s -X POST http://{addr}/ingest -d '{{\"xs\": [2.0], \"ys\": [0.4]}}'");
+    println!("  curl -s http://{addr}/healthz");
+    println!("  curl -s 'http://{addr}/shards?verbose=1'");
+    println!("  curl -s 'http://{addr}/metrics?format=prom' | grep http_");
+    println!("  curl -s 'http://{addr}/trace?clear=1' > trace.json   # chrome://tracing");
+
+    // One request by hand, then a short closed-loop load.
+    let mut client = HttpClient::new(addr);
+    let (status, body) =
+        client.request("POST", "/predict", Some(r#"{"points": [0.5, 1.5, 4.0]}"#))?;
+    println!("POST /predict -> {status} {body}");
+
+    println!("running a closed-loop load (4 clients, 90% reads)...");
+    let report = msgp::bench::loadgen::run(&LoadConfig {
+        addr,
+        clients: 4,
+        requests_per_client: 500,
+        ..LoadConfig::default()
+    });
+    println!("{}", report.summary_line());
+
+    // --- Observe: the wire-level view of what just happened. ---
+    let (_, health) = client.request("GET", "/healthz", None)?;
+    println!("GET /healthz -> {health}");
+    let (_, shards_txt) = client.request("GET", "/shards?verbose=1", None)?;
+    print!("GET /shards?verbose=1 ->\n{shards_txt}");
+    let (_, prom) = client.request("GET", "/metrics?format=prom", None)?;
+    println!("front-door families from /metrics?format=prom:");
+    for line in prom.lines().filter(|l| l.starts_with("http_") && !l.contains("_bucket")) {
+        println!("  {line}");
+    }
+    drop(client);
+    http.shutdown();
+    println!("front door drained and joined; done.");
     Ok(())
 }

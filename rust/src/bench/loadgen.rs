@@ -1,0 +1,475 @@
+//! Reproducible load generation against the HTTP front door.
+//!
+//! The harness the perf trajectory is measured with (`fig9`): a
+//! keep-alive [`HttpClient`], a multi-client [`run`] driver producing a
+//! [`LoadReport`] with exact latency quantiles, and the CI [`smoke`]
+//! sweep persisting `BENCH_fig9_serving.json` through
+//! [`crate::bench::Recorder`].
+//!
+//! Two pacing modes:
+//!
+//! - **Closed loop** (`target_qps == 0`): each client fires its next
+//!   request the moment the previous reply lands. Measures max
+//!   sustained throughput; latency is response time.
+//! - **Open loop** (`target_qps > 0`): requests are pre-scheduled on a
+//!   fixed global cadence and latency is measured from the *scheduled*
+//!   send time, so a stalled server accrues the queueing delay it
+//!   caused instead of silently pausing the clock (no coordinated
+//!   omission).
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::bench::recorder::{Record, Recorder};
+use crate::coordinator::{BatcherConfig, HttpConfig, HttpServer, Server};
+use crate::data::{gen_stress_1d, stress_fn};
+use crate::gp::msgp::{KernelSpec, MsgpConfig};
+use crate::grid::{Grid, GridAxis};
+use crate::kernels::{KernelType, ProductKernel};
+use crate::obs::Tracer;
+use crate::shard::{ShardConfig, ShardedTrainer};
+use crate::util::json::Json;
+use crate::util::Rng;
+
+/// A minimal keep-alive HTTP/1.1 client: one persistent connection,
+/// lazily (re)connected, dropped on any I/O error or a
+/// `Connection: close` response.
+pub struct HttpClient {
+    addr: SocketAddr,
+    stream: Option<TcpStream>,
+    timeout: Duration,
+}
+
+impl HttpClient {
+    /// Client for `addr` with a 10 s I/O timeout.
+    pub fn new(addr: SocketAddr) -> Self {
+        HttpClient { addr, stream: None, timeout: Duration::from_secs(10) }
+    }
+
+    /// Issue one request and read the full framed response. Returns
+    /// `(status, body)`. The connection is reused across calls unless
+    /// the server asked to close or an error occurred.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> io::Result<(u16, String)> {
+        let res = self.request_inner(method, path, body);
+        if res.is_err() {
+            self.stream = None;
+        }
+        res
+    }
+
+    fn request_inner(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> io::Result<(u16, String)> {
+        if self.stream.is_none() {
+            let s = TcpStream::connect(self.addr)?;
+            s.set_read_timeout(Some(self.timeout))?;
+            s.set_write_timeout(Some(self.timeout))?;
+            s.set_nodelay(true)?;
+            self.stream = Some(s);
+        }
+        let stream = self.stream.as_mut().expect("connected above");
+        let b = body.unwrap_or("");
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: msgp\r\nContent-Length: {}\r\n\r\n",
+            b.len()
+        );
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(b.as_bytes())?;
+        stream.flush()?;
+        let (status, close, payload) = read_response(stream)?;
+        if close {
+            self.stream = None;
+        }
+        Ok((status, payload))
+    }
+}
+
+fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+/// Read one `Content-Length`-framed response off `stream`:
+/// `(status, connection-close, body)`.
+fn read_response(stream: &mut TcpStream) -> io::Result<(u16, bool, String)> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let head_end = loop {
+        if let Some(p) = find_subslice(&buf, b"\r\n\r\n") {
+            break p;
+        }
+        let mut tmp = [0u8; 4096];
+        let n = stream.read(&mut tmp)?;
+        if n == 0 {
+            return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "eof in response head"));
+        }
+        buf.extend_from_slice(&tmp[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..head_end]).to_string();
+    let mut lines = head.split("\r\n");
+    let status: u16 = lines
+        .next()
+        .unwrap_or("")
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "bad status line"))?;
+    let mut len = 0usize;
+    let mut close = false;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            let v = v.trim();
+            if k.eq_ignore_ascii_case("content-length") {
+                len = v.parse().unwrap_or(0);
+            } else if k.eq_ignore_ascii_case("connection") {
+                close = v.eq_ignore_ascii_case("close");
+            }
+        }
+    }
+    let total = head_end + 4 + len;
+    while buf.len() < total {
+        let mut tmp = [0u8; 4096];
+        let n = stream.read(&mut tmp)?;
+        if n == 0 {
+            return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "eof in response body"));
+        }
+        buf.extend_from_slice(&tmp[..n]);
+    }
+    let body = String::from_utf8_lossy(&buf[head_end + 4..total]).to_string();
+    Ok((status, close, body))
+}
+
+/// Load-run shape: who sends what, how fast, against which address.
+#[derive(Clone, Debug)]
+pub struct LoadConfig {
+    /// Front-door address.
+    pub addr: SocketAddr,
+    /// Concurrent client connections (one thread each).
+    pub clients: usize,
+    /// Requests issued per client.
+    pub requests_per_client: usize,
+    /// Open-loop target rate across all clients, requests/s
+    /// (`0` = closed loop).
+    pub target_qps: f64,
+    /// Fraction of requests that are `/predict` reads (the rest are
+    /// `/ingest` writes).
+    pub read_frac: f64,
+    /// Points per `/predict` request.
+    pub predict_batch: usize,
+    /// Observations per `/ingest` request.
+    pub ingest_batch: usize,
+    /// Input dimensionality.
+    pub dim: usize,
+    /// Coordinate range sampled uniformly per axis.
+    pub lo: f64,
+    /// Upper end of the coordinate range.
+    pub hi: f64,
+    /// RNG seed (each client derives its own stream from it).
+    pub seed: u64,
+}
+
+impl Default for LoadConfig {
+    fn default() -> Self {
+        LoadConfig {
+            addr: SocketAddr::from(([127, 0, 0, 1], 0)),
+            clients: 2,
+            requests_per_client: 200,
+            target_qps: 0.0,
+            read_frac: 0.9,
+            predict_batch: 8,
+            ingest_batch: 16,
+            dim: 1,
+            lo: -10.0,
+            hi: 11.0,
+            seed: 7,
+        }
+    }
+}
+
+/// Outcome of one [`run`]: request counts and exact latency quantiles
+/// (every request's latency is kept and sorted — no bucketing error).
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    /// Requests issued (success + failure).
+    pub requests: u64,
+    /// Non-200 responses plus transport errors.
+    pub errors: u64,
+    /// `/predict` requests issued.
+    pub predict_requests: u64,
+    /// `/ingest` requests issued.
+    pub ingest_requests: u64,
+    /// Wall-clock of the whole run.
+    pub elapsed: Duration,
+    /// Sustained request throughput over the run.
+    pub qps: f64,
+    /// Per-request latencies, microseconds, ascending. Open-loop runs
+    /// measure from the scheduled send time (coordinated-omission
+    /// aware); closed-loop runs from the actual send.
+    pub latencies_us: Vec<u64>,
+}
+
+impl LoadReport {
+    /// Exact latency quantile (nearest-rank) in microseconds.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let n = self.latencies_us.len();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * n as f64).ceil() as usize).clamp(1, n);
+        self.latencies_us[rank - 1]
+    }
+
+    /// One human-readable line: counts, throughput, p50/p99/p999.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "requests={} (predict={} ingest={}) errors={} elapsed={:.2}s qps={:.0} \
+             p50={}us p99={}us p999={}us",
+            self.requests,
+            self.predict_requests,
+            self.ingest_requests,
+            self.errors,
+            self.elapsed.as_secs_f64(),
+            self.qps,
+            self.quantile_us(0.5),
+            self.quantile_us(0.99),
+            self.quantile_us(0.999),
+        )
+    }
+}
+
+/// Drive `cfg.clients` concurrent clients against `cfg.addr` and
+/// collect every per-request latency.
+pub fn run(cfg: &LoadConfig) -> LoadReport {
+    let start = Instant::now();
+    let interval = if cfg.target_qps > 0.0 {
+        Some(Duration::from_secs_f64(1.0 / cfg.target_qps))
+    } else {
+        None
+    };
+    let per_client: Vec<ClientStats> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..cfg.clients)
+            .map(|t| s.spawn(move || client_loop(cfg, t, start, interval)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("loadgen client panicked")).collect()
+    });
+    let elapsed = start.elapsed();
+    let mut latencies_us = Vec::new();
+    let (mut errors, mut predicts, mut ingests) = (0u64, 0u64, 0u64);
+    for c in per_client {
+        latencies_us.extend(c.latencies_us);
+        errors += c.errors;
+        predicts += c.predicts;
+        ingests += c.ingests;
+    }
+    latencies_us.sort_unstable();
+    let requests = latencies_us.len() as u64;
+    LoadReport {
+        requests,
+        errors,
+        predict_requests: predicts,
+        ingest_requests: ingests,
+        elapsed,
+        qps: requests as f64 / elapsed.as_secs_f64().max(1e-9),
+        latencies_us,
+    }
+}
+
+struct ClientStats {
+    latencies_us: Vec<u64>,
+    errors: u64,
+    predicts: u64,
+    ingests: u64,
+}
+
+fn client_loop(
+    cfg: &LoadConfig,
+    t: usize,
+    start: Instant,
+    interval: Option<Duration>,
+) -> ClientStats {
+    let mut rng = Rng::new(cfg.seed.wrapping_add(t as u64).wrapping_mul(0x9E3779B97F4A7C15));
+    let mut client = HttpClient::new(cfg.addr);
+    let mut stats = ClientStats {
+        latencies_us: Vec::with_capacity(cfg.requests_per_client),
+        errors: 0,
+        predicts: 0,
+        ingests: 0,
+    };
+    for k in 0..cfg.requests_per_client {
+        // Open loop: clients interleave on one global tick sequence.
+        let scheduled = interval.map(|iv| start + iv * (k * cfg.clients + t) as u32);
+        if let Some(at) = scheduled {
+            let now = Instant::now();
+            if at > now {
+                std::thread::sleep(at - now);
+            }
+        }
+        let read = rng.uniform() < cfg.read_frac;
+        let (path, body) = if read {
+            stats.predicts += 1;
+            ("/predict", predict_body(cfg, &mut rng))
+        } else {
+            stats.ingests += 1;
+            ("/ingest", ingest_body(cfg, &mut rng))
+        };
+        let t0 = Instant::now();
+        let outcome = client.request("POST", path, Some(&body));
+        let from = scheduled.unwrap_or(t0);
+        let us = Instant::now().saturating_duration_since(from).as_micros() as u64;
+        stats.latencies_us.push(us.max(1));
+        match outcome {
+            Ok((200, _)) => {}
+            Ok(_) | Err(_) => stats.errors += 1,
+        }
+    }
+    stats
+}
+
+fn predict_body(cfg: &LoadConfig, rng: &mut Rng) -> String {
+    let pts = (0..cfg.predict_batch * cfg.dim)
+        .map(|_| Json::Num(rng.uniform_in(cfg.lo, cfg.hi)))
+        .collect();
+    Json::obj(vec![("points", Json::Arr(pts))]).to_string()
+}
+
+fn ingest_body(cfg: &LoadConfig, rng: &mut Rng) -> String {
+    let mut xs = Vec::with_capacity(cfg.ingest_batch * cfg.dim);
+    let mut ys = Vec::with_capacity(cfg.ingest_batch);
+    for _ in 0..cfg.ingest_batch {
+        let x0 = rng.uniform_in(cfg.lo, cfg.hi);
+        xs.push(Json::Num(x0));
+        for _ in 1..cfg.dim {
+            xs.push(Json::Num(rng.uniform_in(cfg.lo, cfg.hi)));
+        }
+        ys.push(Json::Num(stress_fn(x0) + 0.05 * rng.normal()));
+    }
+    Json::obj(vec![("xs", Json::Arr(xs)), ("ys", Json::Arr(ys))]).to_string()
+}
+
+/// Boot a sharded server behind a front door, run one fixed closed-loop
+/// load (seeded, deterministic mix), tear down. Returns the report and
+/// the load phase's wall-clock.
+pub fn run_one_smoke(shards: usize, clients: usize, trace: bool) -> (LoadReport, Duration) {
+    let kernel = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0));
+    let grid = Grid::new(vec![GridAxis::span(-12.0, 13.0, 128)]);
+    let cfg = ShardConfig {
+        shards,
+        refresh_every: 4096,
+        msgp: MsgpConfig { n_per_dim: vec![128], n_var_samples: 4, ..Default::default() },
+        ..Default::default()
+    };
+    let trainer = ShardedTrainer::start(kernel, 0.01, grid, cfg);
+    let warm = gen_stress_1d(2000, 0.05, 3);
+    trainer.ingest_batch(&warm.x, &warm.y);
+    trainer.flush();
+    let server = Arc::new(Server::start_sharded(trainer, BatcherConfig::default()));
+    let http = HttpServer::bind(
+        server.clone(),
+        "127.0.0.1:0",
+        HttpConfig { workers: clients.max(1), ..Default::default() },
+    )
+    .expect("bind loopback front door");
+    Tracer::set_enabled(trace);
+    let load = LoadConfig {
+        addr: http.local_addr(),
+        clients,
+        requests_per_client: 400,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let report = run(&load);
+    let wall = t0.elapsed();
+    Tracer::set_enabled(false);
+    http.shutdown();
+    (report, wall)
+}
+
+/// The CI smoke sweep: two (shards, clients) closed-loop configs plus
+/// an interleaved tracing-on/off overhead measurement, persisted as
+/// `BENCH_fig9_serving.json` in `dir` (skip-if-recorded per config).
+/// Returns the artifact path.
+pub fn smoke(dir: &Path) -> anyhow::Result<PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let mut rec = Recorder::open_in(dir, "fig9_serving");
+    for (shards, clients) in [(2usize, 2usize), (4, 4)] {
+        let key = format!("smoke shards={shards} clients={clients} batch=8 read=0.9 mode=closed");
+        rec.record_if_new(&key, || {
+            let (report, wall) = run_one_smoke(shards, clients, false);
+            crate::log_info!("fig9 {key}: {}", report.summary_line());
+            Record::from_duration(&key, wall)
+                .with_extra("shards", shards as f64)
+                .with_extra("clients", clients as f64)
+                .with_extra("requests", report.requests as f64)
+                .with_extra("errors", report.errors as f64)
+                .with_extra("qps", report.qps)
+                .with_extra("p50_us", report.quantile_us(0.5) as f64)
+                .with_extra("p99_us", report.quantile_us(0.99) as f64)
+                .with_extra("p999_us", report.quantile_us(0.999) as f64)
+        });
+    }
+    let key = "smoke trace_overhead shards=2 clients=2";
+    rec.record_if_new(key, || {
+        // Interleave off/on pairs and keep each mode's best, so drift
+        // on a noisy CI box hits both modes symmetrically.
+        let (mut qps_off, mut qps_on) = (0.0f64, 0.0f64);
+        let mut wall = Duration::ZERO;
+        for _ in 0..3 {
+            let (off, w_off) = run_one_smoke(2, 2, false);
+            let (on, w_on) = run_one_smoke(2, 2, true);
+            qps_off = qps_off.max(off.qps);
+            qps_on = qps_on.max(on.qps);
+            wall += w_off + w_on;
+        }
+        Record::from_duration(key, wall)
+            .with_extra("qps_off", qps_off)
+            .with_extra("qps_on", qps_on)
+            .with_extra("overhead_ratio_off_on", qps_off / qps_on.max(1e-9))
+    });
+    rec.save()?;
+    Ok(rec.path().to_path_buf())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_are_nearest_rank_and_monotone() {
+        let report = LoadReport {
+            requests: 4,
+            errors: 0,
+            predict_requests: 4,
+            ingest_requests: 0,
+            elapsed: Duration::from_secs(1),
+            qps: 4.0,
+            latencies_us: vec![10, 20, 30, 1000],
+        };
+        assert_eq!(report.quantile_us(0.0), 10);
+        assert_eq!(report.quantile_us(0.5), 20);
+        assert_eq!(report.quantile_us(0.75), 30);
+        assert_eq!(report.quantile_us(0.99), 1000);
+        assert_eq!(report.quantile_us(1.0), 1000);
+        let empty = LoadReport { latencies_us: Vec::new(), requests: 0, ..report };
+        assert_eq!(empty.quantile_us(0.5), 0);
+    }
+
+    #[test]
+    fn bodies_are_valid_json_with_the_configured_shapes() {
+        let cfg = LoadConfig { predict_batch: 3, ingest_batch: 2, dim: 2, ..Default::default() };
+        let mut rng = Rng::new(1);
+        let p = Json::parse(&predict_body(&cfg, &mut rng)).expect("predict body parses");
+        assert_eq!(p.get("points").and_then(|v| v.as_arr()).map(|a| a.len()), Some(6));
+        let i = Json::parse(&ingest_body(&cfg, &mut rng)).expect("ingest body parses");
+        assert_eq!(i.get("xs").and_then(|v| v.as_arr()).map(|a| a.len()), Some(4));
+        assert_eq!(i.get("ys").and_then(|v| v.as_arr()).map(|a| a.len()), Some(2));
+    }
+}

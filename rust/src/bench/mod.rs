@@ -10,6 +10,7 @@
 //! reproduction target — see EXPERIMENTS.md.
 
 pub mod experiments;
+pub mod loadgen;
 pub mod recorder;
 
 pub use crate::util::timing::{bench_fn, bench_header, fmt_dur, BenchStats};

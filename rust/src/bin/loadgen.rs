@@ -1,0 +1,127 @@
+//! `loadgen` — reproducible load generator for the HTTP front door.
+//!
+//! Modes:
+//!
+//! * `loadgen --smoke` — the CI sweep: boots sharded servers on
+//!   loopback, runs the fixed seeded closed-loop mix for two
+//!   (shards, clients) configs plus a tracing-overhead measurement, and
+//!   writes `BENCH_fig9_serving.json` (under `MSGP_BENCH_DIR`, default
+//!   `.`) through the bench recorder.
+//! * `loadgen --serve [--port P] [--shards S]` — boot a sharded demo
+//!   server and keep it up for manual poking (`curl`/external loadgen).
+//! * `loadgen --addr HOST:PORT [...]` — drive an already-running front
+//!   door and print the latency/throughput report.
+
+use std::net::SocketAddr;
+use std::path::Path;
+use std::sync::Arc;
+
+use msgp::bench::loadgen::{run, smoke, LoadConfig};
+use msgp::coordinator::{BatcherConfig, HttpConfig, HttpServer, Server};
+use msgp::data::gen_stress_1d;
+use msgp::gp::msgp::{KernelSpec, MsgpConfig};
+use msgp::grid::{Grid, GridAxis};
+use msgp::kernels::{KernelType, ProductKernel};
+use msgp::shard::{ShardConfig, ShardedTrainer};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage:\n  loadgen --smoke\n  loadgen --serve [--port P] [--shards S]\n  \
+         loadgen --addr HOST:PORT [--clients N] [--requests N] [--qps Q] [--read-frac F]\n          \
+         [--batch B] [--dim D] [--seed S]"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--smoke") {
+        return run_smoke();
+    }
+    if args.iter().any(|a| a == "--serve") {
+        return run_serve(&args);
+    }
+    run_external(&args)
+}
+
+fn run_smoke() -> anyhow::Result<()> {
+    let dir = std::env::var("MSGP_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
+    let path = smoke(Path::new(&dir))?;
+    let text = std::fs::read_to_string(&path)?;
+    println!("# recorded -> {}", path.display());
+    println!("{text}");
+    Ok(())
+}
+
+fn run_serve(args: &[String]) -> anyhow::Result<()> {
+    let mut port = 8080u16;
+    let mut shards = 2usize;
+    let mut iter = args.iter();
+    while let Some(a) = iter.next() {
+        match a.as_str() {
+            "--serve" => {}
+            "--port" => port = iter.next().and_then(|v| v.parse().ok()).unwrap_or(port),
+            "--shards" => shards = iter.next().and_then(|v| v.parse().ok()).unwrap_or(shards),
+            _ => usage(),
+        }
+    }
+    let kernel = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0));
+    let grid = Grid::new(vec![GridAxis::span(-12.0, 13.0, 128)]);
+    let cfg = ShardConfig {
+        shards,
+        refresh_every: 4096,
+        msgp: MsgpConfig { n_per_dim: vec![128], n_var_samples: 4, ..Default::default() },
+        ..Default::default()
+    };
+    let trainer = ShardedTrainer::start(kernel, 0.01, grid, cfg);
+    let warm = gen_stress_1d(2000, 0.05, 3);
+    trainer.ingest_batch(&warm.x, &warm.y);
+    trainer.flush();
+    let server = Arc::new(Server::start_sharded(trainer, BatcherConfig::default()));
+    let http = HttpServer::bind(server, &format!("127.0.0.1:{port}"), HttpConfig::default())?;
+    let addr = http.local_addr();
+    println!("serving on http://{addr} ({shards} shards); try:");
+    println!("  curl -s -X POST http://{addr}/predict -d '{{\"points\": [0.5, 1.5]}}'");
+    println!("  curl -s 'http://{addr}/metrics?format=prom' | head");
+    println!("  curl -s 'http://{addr}/shards?verbose=1'");
+    println!("ctrl-c to stop");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn run_external(args: &[String]) -> anyhow::Result<()> {
+    let mut cfg = LoadConfig::default();
+    let mut addr: Option<SocketAddr> = None;
+    let mut iter = args.iter();
+    while let Some(a) = iter.next() {
+        let mut take = || iter.next().cloned().unwrap_or_default();
+        match a.as_str() {
+            "--addr" => addr = take().parse().ok(),
+            "--clients" => cfg.clients = take().parse().unwrap_or(cfg.clients),
+            "--requests" => {
+                cfg.requests_per_client = take().parse().unwrap_or(cfg.requests_per_client)
+            }
+            "--qps" => cfg.target_qps = take().parse().unwrap_or(cfg.target_qps),
+            "--read-frac" => cfg.read_frac = take().parse().unwrap_or(cfg.read_frac),
+            "--batch" => cfg.predict_batch = take().parse().unwrap_or(cfg.predict_batch),
+            "--dim" => cfg.dim = take().parse().unwrap_or(cfg.dim),
+            "--seed" => cfg.seed = take().parse().unwrap_or(cfg.seed),
+            _ => usage(),
+        }
+    }
+    let Some(addr) = addr else { usage() };
+    cfg.addr = addr;
+    let mode = if cfg.target_qps > 0.0 {
+        format!("open loop @ {:.0} req/s", cfg.target_qps)
+    } else {
+        "closed loop".to_string()
+    };
+    println!(
+        "# driving {addr}: {} clients x {} requests, {mode}, read_frac={}",
+        cfg.clients, cfg.requests_per_client, cfg.read_frac
+    );
+    let report = run(&cfg);
+    println!("{}", report.summary_line());
+    Ok(())
+}

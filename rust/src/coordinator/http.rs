@@ -1,0 +1,656 @@
+//! The real network front door: a dependency-free HTTP/1.1 transport
+//! over the coordinator's [`Route`] table, instrumented from birth.
+//!
+//! Design:
+//!
+//! - **Transport.** One acceptor thread owns the [`TcpListener`] and
+//!   hands accepted connections to a small worker pool over a bounded
+//!   queue (back-pressure: a full queue answers `503` inline instead of
+//!   stalling the accept loop). Each worker serves one connection at a
+//!   time with keep-alive and request pipelining: requests are parsed
+//!   out of a persistent per-connection buffer, so bytes of request
+//!   `k+1` that arrive with request `k` are not lost. Read/write
+//!   timeouts bound every blocking call; graceful shutdown sets a flag
+//!   and wakes the blocking accept with a loopback connection.
+//! - **Observability.** Every connection and request gets a monotone id
+//!   carried into [`crate::obs::trace`] spans (`http.accept` around the
+//!   connection, `http.request` around each dispatch — handler child
+//!   spans such as `predict.flush` / `refresh` then nest by time), so a
+//!   `/trace` dump decomposes a slow request end to end. Per-route
+//!   latency histograms and status-class counters land in
+//!   `/metrics?format=prom` as `http_request_latency_us{route=...}` /
+//!   `http_requests_total{route=...,class=...}`; failures increment
+//!   `http_errors_total{class=...}`; live connection and queue-depth
+//!   gauges track saturation. Requests slower than `MSGP_SLOW_MS`
+//!   milliseconds (or [`HttpConfig::slow_ms`]) emit one `WARN` line
+//!   through the leveled logger.
+//! - **Routes.** `GET` routes dispatch through
+//!   [`Server::handle_path`] (query strings included, so
+//!   `/metrics?format=prom`, `/shards?verbose=1` and `/trace?clear=1`
+//!   work over the wire). `POST /predict` takes
+//!   `{"points": [x0, x1, ...]}` (flat, or an array of per-point rows)
+//!   and answers `{"mean": [...], "var": [...]}`; `POST /ingest` takes
+//!   `{"xs": [...], "ys": [...], "flush": bool}` and answers
+//!   `{"applied": k}`. Malformed input — oversized heads, bad
+//!   content-length, early disconnects, unknown routes — is answered
+//!   with 4xx/5xx and counted, never worker-fatal.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::metrics::{HttpErrClass, HttpMetrics};
+use super::router::{metrics_format, MetricsFormat, Route};
+use super::server::Server;
+use crate::util::json::Json;
+
+/// Monotone connection ids (process-wide, never 0).
+static CONN_IDS: AtomicU64 = AtomicU64::new(0);
+/// Monotone request ids (process-wide, never 0).
+static REQ_IDS: AtomicU64 = AtomicU64::new(0);
+
+/// Front-door tuning knobs. The defaults suit tests and modest
+/// deployments; raise `workers`/`queue` for load.
+#[derive(Clone, Debug)]
+pub struct HttpConfig {
+    /// Worker threads serving connections (>= 1).
+    pub workers: usize,
+    /// Per-read socket timeout; also the keep-alive idle bound.
+    pub read_timeout: Duration,
+    /// Per-write socket timeout.
+    pub write_timeout: Duration,
+    /// Cap on request line + headers, bytes (431 beyond).
+    pub max_head_bytes: usize,
+    /// Cap on a declared request body, bytes (413 beyond).
+    pub max_body_bytes: usize,
+    /// Requests served per connection before it is closed
+    /// (0 = unlimited).
+    pub max_requests_per_conn: usize,
+    /// Accepted connections queued for workers before the acceptor
+    /// answers 503 inline.
+    pub queue: usize,
+    /// Slow-request log threshold in milliseconds; `None` reads
+    /// `MSGP_SLOW_MS` from the environment at bind time (unset/invalid
+    /// = no slow logging).
+    pub slow_ms: Option<u64>,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            workers: 4,
+            read_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(5),
+            max_head_bytes: 16 * 1024,
+            max_body_bytes: 4 * 1024 * 1024,
+            max_requests_per_conn: 0,
+            queue: 256,
+            slow_ms: None,
+        }
+    }
+}
+
+/// A bound, running HTTP front door over a [`Server`]. Dropping it (or
+/// calling [`Self::shutdown`]) stops the acceptor, drains the workers,
+/// and joins every thread.
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    server: Arc<Server>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start serving `server` on a worker pool.
+    pub fn bind(server: Arc<Server>, addr: &str, cfg: HttpConfig) -> anyhow::Result<HttpServer> {
+        let mut cfg = cfg;
+        cfg.workers = cfg.workers.max(1);
+        if cfg.slow_ms.is_none() {
+            cfg.slow_ms = std::env::var("MSGP_SLOW_MS").ok().and_then(|v| v.parse().ok());
+        }
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("http bind {addr}: {e}"))?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = mpsc::sync_channel::<TcpStream>(cfg.queue.max(1));
+        let shared_rx = Arc::new(Mutex::new(rx));
+
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for i in 0..cfg.workers {
+            let rx = shared_rx.clone();
+            let srv = server.clone();
+            let wcfg = cfg.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("msgp-http-{i}"))
+                    .spawn(move || worker_loop(rx, srv, wcfg))
+                    .expect("spawn http worker"),
+            );
+        }
+
+        let acc_server = server.clone();
+        let acc_stop = stop.clone();
+        let acc_cfg = cfg.clone();
+        let acceptor = std::thread::Builder::new()
+            .name("msgp-http-accept".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if acc_stop.load(Ordering::Acquire) {
+                        break; // the wake-up connection lands here too
+                    }
+                    let http = &acc_server.metrics.http;
+                    match conn {
+                        Ok(stream) => {
+                            http.connections_total.inc();
+                            http.queue_depth.fetch_add(1, Ordering::Relaxed);
+                            match tx.try_send(stream) {
+                                Ok(()) => {}
+                                Err(TrySendError::Full(stream)) => {
+                                    http.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                                    http.error(HttpErrClass::Overload);
+                                    reject_overloaded(stream, &acc_cfg);
+                                }
+                                Err(TrySendError::Disconnected(_)) => {
+                                    http.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                                    break;
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            crate::log_warn!("http accept error: {e}");
+                        }
+                    }
+                }
+                // Dropping `tx` here closes the queue; workers drain
+                // whatever was accepted and then exit.
+            })
+            .expect("spawn http acceptor");
+
+        Ok(HttpServer { addr: local, stop, acceptor: Some(acceptor), workers, server })
+    }
+
+    /// The bound socket address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The coordinator behind this front door.
+    pub fn server(&self) -> &Arc<Server> {
+        &self.server
+    }
+
+    /// Graceful shutdown: stop accepting, drain queued connections,
+    /// join every thread. (In-flight keep-alive connections close on
+    /// their next idle read timeout at the latest.)
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        if self.stop.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        // Wake the blocking accept so the flag is observed.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// Best-effort inline 503 from the acceptor thread when the worker
+/// queue is full (bounded by the write timeout; errors ignored — the
+/// client is being shed either way).
+fn reject_overloaded(stream: TcpStream, cfg: &HttpConfig) {
+    let mut stream = stream;
+    let _ = stream.set_write_timeout(Some(cfg.write_timeout));
+    let body = error_body("overloaded: worker queue full");
+    let _ = write_response(&mut stream, 503, "application/json", &body, true);
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<TcpStream>>>, server: Arc<Server>, cfg: HttpConfig) {
+    loop {
+        let conn = rx.lock().unwrap_or_else(|e| e.into_inner()).recv();
+        let Ok(stream) = conn else { break };
+        let http = &server.metrics.http;
+        http.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        http.connections_live.fetch_add(1, Ordering::Relaxed);
+        let cid = CONN_IDS.fetch_add(1, Ordering::Relaxed) + 1;
+        serve_connection(&server, &cfg, stream, cid);
+        http.connections_live.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// One parsed HTTP/1.1 request.
+struct RawRequest {
+    method: String,
+    target: String,
+    body: Vec<u8>,
+    close: bool,
+}
+
+/// Outcome of trying to parse the next request off a connection.
+enum ReadOutcome {
+    /// A complete request (consumed from the buffer).
+    Req(RawRequest),
+    /// Clean close at a request boundary (EOF or idle timeout with an
+    /// empty buffer) — not an error.
+    Clean,
+    /// Client hung up mid-request.
+    Disconnect,
+    /// Read timed out mid-request.
+    Timeout,
+    /// Request line + headers exceeded [`HttpConfig::max_head_bytes`].
+    TooLargeHead,
+    /// Declared body exceeds [`HttpConfig::max_body_bytes`].
+    TooLargeBody,
+    /// Unparseable request line / headers / content-length.
+    Malformed,
+}
+
+fn serve_connection(server: &Server, cfg: &HttpConfig, mut stream: TcpStream, cid: u64) {
+    let _ = stream.set_read_timeout(Some(cfg.read_timeout));
+    let _ = stream.set_write_timeout(Some(cfg.write_timeout));
+    let _ = stream.set_nodelay(true);
+    let _sp_conn = crate::span_arg!("http.accept", cid);
+    let http = &server.metrics.http;
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut served = 0usize;
+    loop {
+        let req = match read_request(&mut stream, &mut buf, cfg) {
+            ReadOutcome::Req(r) => r,
+            ReadOutcome::Clean => break,
+            ReadOutcome::Disconnect => {
+                http.error(HttpErrClass::Disconnect);
+                break;
+            }
+            ReadOutcome::Timeout => {
+                http.error(HttpErrClass::Timeout);
+                let body = error_body("read timed out mid-request");
+                let _ = write_response(&mut stream, 408, "application/json", &body, true);
+                break;
+            }
+            ReadOutcome::TooLargeHead => {
+                http.error(HttpErrClass::TooLarge);
+                let body = error_body("request head too large");
+                let _ = write_response(&mut stream, 431, "application/json", &body, true);
+                break;
+            }
+            ReadOutcome::TooLargeBody => {
+                http.error(HttpErrClass::TooLarge);
+                let body = error_body("request body too large");
+                let _ = write_response(&mut stream, 413, "application/json", &body, true);
+                break;
+            }
+            ReadOutcome::Malformed => {
+                http.error(HttpErrClass::BadRequest);
+                let body = error_body("malformed request");
+                let _ = write_response(&mut stream, 400, "application/json", &body, true);
+                break;
+            }
+        };
+        served += 1;
+        let req_id = REQ_IDS.fetch_add(1, Ordering::Relaxed) + 1;
+        let t0 = Instant::now();
+        let (status, ctype, body, ridx) = {
+            let _sp_req = crate::span_arg!("http.request", req_id);
+            dispatch(server, &req)
+        };
+        let close = req.close
+            || (cfg.max_requests_per_conn > 0 && served >= cfg.max_requests_per_conn);
+        let write_ok = write_response(&mut stream, status, ctype, &body, close).is_ok();
+        let elapsed = t0.elapsed();
+        http.record(ridx, status, elapsed);
+        if let Some(slow_ms) = cfg.slow_ms {
+            if elapsed.as_millis() as u64 >= slow_ms {
+                http.slow_total.inc();
+                crate::log_warn!(
+                    "slow http request #{req_id} {} {} -> {status} in {}ms (threshold {slow_ms}ms)",
+                    req.method,
+                    req.target,
+                    elapsed.as_millis()
+                );
+            }
+        }
+        if !write_ok {
+            http.error(HttpErrClass::Disconnect);
+            break;
+        }
+        if close {
+            break;
+        }
+    }
+}
+
+/// Parse one request out of `buf`, reading more bytes from `stream` as
+/// needed. Leftover bytes (pipelined next requests) stay in `buf`.
+fn read_request(stream: &mut TcpStream, buf: &mut Vec<u8>, cfg: &HttpConfig) -> ReadOutcome {
+    let head_end = loop {
+        if let Some(pos) = find_subslice(buf, b"\r\n\r\n") {
+            break pos;
+        }
+        if buf.len() > cfg.max_head_bytes {
+            return ReadOutcome::TooLargeHead;
+        }
+        match fill(stream, buf) {
+            Fill::Bytes => {}
+            Fill::Eof => {
+                return if buf.is_empty() { ReadOutcome::Clean } else { ReadOutcome::Disconnect }
+            }
+            Fill::Timeout => {
+                return if buf.is_empty() { ReadOutcome::Clean } else { ReadOutcome::Timeout }
+            }
+            Fill::Error => return ReadOutcome::Disconnect,
+        }
+    };
+    let head = match std::str::from_utf8(&buf[..head_end]) {
+        Ok(h) => h.to_string(),
+        Err(_) => return ReadOutcome::Malformed,
+    };
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let (method, target, version) =
+        (parts.next().unwrap_or(""), parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    if method.is_empty() || target.is_empty() || !version.starts_with("HTTP/1") {
+        return ReadOutcome::Malformed;
+    }
+    let mut content_len = 0usize;
+    let mut close = false;
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let Some((k, v)) = line.split_once(':') else { return ReadOutcome::Malformed };
+        let v = v.trim();
+        if k.eq_ignore_ascii_case("content-length") {
+            match v.parse::<usize>() {
+                Ok(n) => content_len = n,
+                Err(_) => return ReadOutcome::Malformed,
+            }
+        } else if k.eq_ignore_ascii_case("connection") {
+            close = v.eq_ignore_ascii_case("close");
+        } else if k.eq_ignore_ascii_case("transfer-encoding") {
+            // Chunked bodies are not supported by this front door.
+            return ReadOutcome::Malformed;
+        }
+    }
+    if content_len > cfg.max_body_bytes {
+        return ReadOutcome::TooLargeBody;
+    }
+    let total = head_end + 4 + content_len;
+    while buf.len() < total {
+        match fill(stream, buf) {
+            Fill::Bytes => {}
+            Fill::Eof | Fill::Error => return ReadOutcome::Disconnect,
+            Fill::Timeout => return ReadOutcome::Timeout,
+        }
+    }
+    let body = buf[head_end + 4..total].to_vec();
+    let req = RawRequest {
+        method: method.to_string(),
+        target: target.to_string(),
+        body,
+        close,
+    };
+    buf.drain(..total);
+    ReadOutcome::Req(req)
+}
+
+enum Fill {
+    Bytes,
+    Eof,
+    Timeout,
+    Error,
+}
+
+fn fill(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Fill {
+    let mut tmp = [0u8; 4096];
+    match stream.read(&mut tmp) {
+        Ok(0) => Fill::Eof,
+        Ok(n) => {
+            buf.extend_from_slice(&tmp[..n]);
+            Fill::Bytes
+        }
+        Err(e) if e.kind() == io::ErrorKind::WouldBlock || e.kind() == io::ErrorKind::TimedOut => {
+            Fill::Timeout
+        }
+        Err(e) if e.kind() == io::ErrorKind::Interrupted => Fill::Bytes,
+        Err(_) => Fill::Error,
+    }
+}
+
+fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+/// Route a parsed request to its handler. Returns
+/// `(status, content-type, body, route index)`.
+fn dispatch(server: &Server, req: &RawRequest) -> (u16, &'static str, String, usize) {
+    let route = Route::parse(&req.target);
+    let ridx = HttpMetrics::route_index(route);
+    let http = &server.metrics.http;
+    match (req.method.as_str(), route) {
+        ("POST", Some(Route::Predict)) => match handle_predict(server, &req.body) {
+            Ok(body) => (200, "application/json", body, ridx),
+            Err((status, msg)) => {
+                http.error(if status >= 500 {
+                    HttpErrClass::Internal
+                } else {
+                    HttpErrClass::BadRequest
+                });
+                (status, "application/json", error_body(&msg), ridx)
+            }
+        },
+        ("POST", Some(Route::Ingest)) => match handle_ingest(server, &req.body) {
+            Ok(body) => (200, "application/json", body, ridx),
+            Err((status, msg)) => {
+                http.error(if status >= 500 {
+                    HttpErrClass::Internal
+                } else {
+                    HttpErrClass::BadRequest
+                });
+                (status, "application/json", error_body(&msg), ridx)
+            }
+        },
+        ("GET", Some(r)) => match server.handle_path(&req.target) {
+            Some(text) => (200, get_content_type(r, &req.target), text, ridx),
+            None if matches!(r, Route::Predict | Route::Ingest) => {
+                http.error(HttpErrClass::BadRequest);
+                (405, "application/json", error_body("use POST with a JSON body"), ridx)
+            }
+            None => (404, "application/json", error_body("no payload for this route"), ridx),
+        },
+        (_, None) => {
+            http.error(HttpErrClass::UnknownRoute);
+            (404, "application/json", error_body("unknown route"), ridx)
+        }
+        (_, Some(_)) => {
+            http.error(HttpErrClass::BadRequest);
+            (405, "application/json", error_body("method not allowed"), ridx)
+        }
+    }
+}
+
+fn get_content_type(route: Route, target: &str) -> &'static str {
+    match route {
+        Route::Health | Route::Trace => "application/json",
+        Route::Metrics if metrics_format(target) == MetricsFormat::Prometheus => {
+            "text/plain; version=0.0.4"
+        }
+        _ => "text/plain; charset=utf-8",
+    }
+}
+
+/// `POST /predict` body: `{"points": [x00, x01, ...]}` — a flat
+/// row-major array of `k * dim` coordinates, or an array of `k`
+/// per-point rows. Every point is submitted before any reply is
+/// awaited, so one HTTP request becomes (at most) one batcher flush.
+fn handle_predict(server: &Server, body: &[u8]) -> Result<String, (u16, String)> {
+    let doc = parse_json_body(body)?;
+    let pts = doc
+        .get("points")
+        .and_then(|p| p.as_arr())
+        .ok_or_else(|| (400, "missing \"points\" array".to_string()))?;
+    let dim = server.dim();
+    let mut flat: Vec<f64> = Vec::new();
+    for v in pts {
+        match v {
+            Json::Num(x) => flat.push(*x),
+            Json::Arr(row) => {
+                for c in row {
+                    let x = c
+                        .as_f64()
+                        .ok_or_else(|| (400, "non-numeric coordinate".to_string()))?;
+                    flat.push(x);
+                }
+            }
+            _ => return Err((400, "points must be numbers or rows".to_string())),
+        }
+    }
+    if flat.is_empty() || flat.len() % dim != 0 {
+        return Err((400, format!("need a multiple of dim={dim} coordinates, got {}", flat.len())));
+    }
+    let n = flat.len() / dim;
+    let mut pending = Vec::with_capacity(n);
+    for point in flat.chunks(dim) {
+        let rx = server.submit(point.to_vec()).map_err(|e| (500, e.to_string()))?;
+        pending.push(rx);
+    }
+    let mut means = Vec::with_capacity(n);
+    let mut vars = Vec::with_capacity(n);
+    for rx in pending {
+        match rx.recv() {
+            Ok(Ok(p)) => {
+                means.push(Json::Num(p.mean));
+                vars.push(Json::Num(p.var));
+            }
+            Ok(Err(e)) => return Err((500, e.to_string())),
+            Err(_) => return Err((500, "server dropped reply".to_string())),
+        }
+    }
+    Ok(Json::obj(vec![("mean", Json::Arr(means)), ("var", Json::Arr(vars))]).to_string())
+}
+
+/// `POST /ingest` body: `{"xs": [...], "ys": [...], "flush": bool}`.
+/// Empty `xs`/`ys` with `"flush": true` forces a refresh + swap only.
+fn handle_ingest(server: &Server, body: &[u8]) -> Result<String, (u16, String)> {
+    let doc = parse_json_body(body)?;
+    let xs = num_array(&doc, "xs")?;
+    let ys = num_array(&doc, "ys")?;
+    let flush = matches!(doc.get("flush"), Some(Json::Bool(true)));
+    let applied = if xs.is_empty() && ys.is_empty() {
+        if !flush {
+            return Err((400, "empty ingest without \"flush\": true".to_string()));
+        }
+        0
+    } else {
+        server.ingest(xs, ys).map_err(|e| (400, e.to_string()))?
+    };
+    if flush {
+        server.flush_stream().map_err(|e| (400, e.to_string()))?;
+    }
+    Ok(Json::obj(vec![
+        ("applied", Json::Num(applied as f64)),
+        ("flushed", Json::Bool(flush)),
+    ])
+    .to_string())
+}
+
+fn parse_json_body(body: &[u8]) -> Result<Json, (u16, String)> {
+    let text = std::str::from_utf8(body).map_err(|_| (400, "body is not UTF-8".to_string()))?;
+    Json::parse(text).map_err(|e| (400, format!("body is not JSON: {e}")))
+}
+
+fn num_array(doc: &Json, key: &str) -> Result<Vec<f64>, (u16, String)> {
+    match doc.get(key) {
+        None => Ok(Vec::new()),
+        Some(Json::Arr(items)) => items
+            .iter()
+            .map(|v| v.as_f64().ok_or_else(|| (400, format!("non-numeric value in \"{key}\""))))
+            .collect(),
+        Some(_) => Err((400, format!("\"{key}\" must be an array"))),
+    }
+}
+
+fn error_body(msg: &str) -> String {
+    Json::obj(vec![("error", Json::Str(msg.to_string()))]).to_string()
+}
+
+fn reason_phrase(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Error",
+    }
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    ctype: &str,
+    body: &str,
+    close: bool,
+) -> io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        reason_phrase(status),
+        body.len(),
+        if close { "close" } else { "keep-alive" },
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subslice_search_finds_header_terminator() {
+        assert_eq!(find_subslice(b"GET / HTTP/1.1\r\n\r\nrest", b"\r\n\r\n"), Some(14));
+        assert_eq!(find_subslice(b"partial\r\n", b"\r\n\r\n"), None);
+        assert_eq!(find_subslice(b"", b"\r\n\r\n"), None);
+    }
+
+    #[test]
+    fn reason_phrases_cover_the_status_codes_in_use() {
+        for status in [200u16, 400, 404, 405, 408, 413, 431, 500, 503] {
+            assert_ne!(reason_phrase(status), "Error", "status {status}");
+        }
+        assert_eq!(reason_phrase(599), "Error");
+    }
+
+    #[test]
+    fn json_body_helpers_validate_shapes() {
+        let doc = parse_json_body(br#"{"xs": [1.0, 2.5], "flush": true}"#).unwrap();
+        assert_eq!(num_array(&doc, "xs").unwrap(), vec![1.0, 2.5]);
+        assert_eq!(num_array(&doc, "ys").unwrap(), Vec::<f64>::new());
+        assert!(num_array(&doc, "flush").is_err());
+        assert!(parse_json_body(b"not json").is_err());
+        assert!(parse_json_body(&[0xff, 0xfe]).is_err());
+    }
+}

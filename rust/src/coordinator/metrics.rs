@@ -15,7 +15,130 @@
 use std::sync::atomic::Ordering;
 use std::time::Duration;
 
-use crate::obs::metrics::{Counter, Gauge, LogHistogram, PromWriter};
+use super::router::Route;
+use crate::obs::metrics::{Counter, Gauge, HistogramSnapshot, LogHistogram, PromWriter};
+
+/// Route label values for the per-route HTTP families, indexed by
+/// [`HttpMetrics::route_index`]. The last slot aggregates unknown paths.
+pub const HTTP_ROUTE_NAMES: [&str; 8] =
+    ["predict", "ingest", "metrics", "models", "shards", "healthz", "trace", "other"];
+
+/// `class` label values of `http_errors_total`, indexed by
+/// [`HttpErrClass`] discriminants.
+pub const HTTP_ERROR_CLASSES: [&str; 7] =
+    ["bad_request", "too_large", "unknown_route", "disconnect", "timeout", "internal", "overload"];
+
+/// Front-door failure classes (the `class` label of
+/// `http_errors_total`). Discriminants index [`HTTP_ERROR_CLASSES`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HttpErrClass {
+    /// Unparseable request line/headers/body, bad content-length, or a
+    /// method the route does not support.
+    BadRequest = 0,
+    /// Request line + headers or declared body exceeded the configured
+    /// caps (431 / 413).
+    TooLarge = 1,
+    /// Path matched no [`Route`].
+    UnknownRoute = 2,
+    /// Client hung up mid-request.
+    Disconnect = 3,
+    /// Read timed out mid-request (408).
+    Timeout = 4,
+    /// Handler failure surfaced as a 500.
+    Internal = 5,
+    /// Accept queue full; connection refused with a 503.
+    Overload = 6,
+}
+
+/// Per-route HTTP serving signals: one latency histogram plus
+/// status-class counters.
+#[derive(Debug, Default)]
+pub struct HttpRoute {
+    /// Transport-level request latency (first byte parsed → response
+    /// written), microseconds.
+    pub hist: LogHistogram,
+    /// Responses with 2xx/3xx status.
+    pub c2xx: Counter,
+    /// Responses with 4xx status.
+    pub c4xx: Counter,
+    /// Responses with 5xx status.
+    pub c5xx: Counter,
+}
+
+/// HTTP front-door metrics (see [`crate::coordinator::http`]). All
+/// wait-free; one [`HttpRoute`] block per route label.
+#[derive(Debug)]
+pub struct HttpMetrics {
+    /// Connections accepted since start.
+    pub connections_total: Counter,
+    /// Connections currently being served by a worker.
+    pub connections_live: Gauge,
+    /// Accepted connections queued for a worker (dispatch back-pressure).
+    pub queue_depth: Gauge,
+    /// HTTP requests answered (any status).
+    pub requests_total: Counter,
+    /// Requests that exceeded the `MSGP_SLOW_MS` slow-log threshold.
+    pub slow_total: Counter,
+    /// Per-route latency + status counters, indexed like
+    /// [`HTTP_ROUTE_NAMES`].
+    pub routes: [HttpRoute; 8],
+    /// Failure counters, indexed like [`HTTP_ERROR_CLASSES`].
+    pub errors: [Counter; 7],
+}
+
+impl Default for HttpMetrics {
+    fn default() -> Self {
+        HttpMetrics {
+            connections_total: Counter::default(),
+            connections_live: Gauge::default(),
+            queue_depth: Gauge::default(),
+            requests_total: Counter::default(),
+            slow_total: Counter::default(),
+            routes: std::array::from_fn(|_| HttpRoute::default()),
+            errors: std::array::from_fn(|_| Counter::default()),
+        }
+    }
+}
+
+impl HttpMetrics {
+    /// Index into [`Self::routes`] / [`HTTP_ROUTE_NAMES`] for a parsed
+    /// route (`None` = unknown path → the `other` slot).
+    pub fn route_index(route: Option<Route>) -> usize {
+        match route {
+            Some(Route::Predict) => 0,
+            Some(Route::Ingest) => 1,
+            Some(Route::Metrics) => 2,
+            Some(Route::Models) => 3,
+            Some(Route::Shards) => 4,
+            Some(Route::Health) => 5,
+            Some(Route::Trace) => 6,
+            None => 7,
+        }
+    }
+
+    /// Record one answered request: total, per-route latency, and the
+    /// status-class counter.
+    pub fn record(&self, route_idx: usize, status: u16, d: Duration) {
+        self.requests_total.inc();
+        let r = &self.routes[route_idx.min(self.routes.len() - 1)];
+        r.hist.record(d);
+        match status {
+            200..=399 => r.c2xx.inc(),
+            400..=499 => r.c4xx.inc(),
+            _ => r.c5xx.inc(),
+        }
+    }
+
+    /// Count one front-door failure.
+    pub fn error(&self, class: HttpErrClass) {
+        self.errors[class as usize].inc();
+    }
+
+    /// Sum of every failure class (the summary-line aggregate).
+    pub fn errors_total(&self) -> u64 {
+        self.errors.iter().map(|c| c.get()).sum()
+    }
+}
 
 /// Per-shard counters for sharded deployments (one entry per spatial
 /// shard; see [`crate::shard`]). All wait-free atomics.
@@ -125,6 +248,9 @@ pub struct Metrics {
     pub reservoir_points: Gauge,
     /// Sharded serving: per-shard counters (empty on unsharded servers).
     pub shards: Vec<ShardMetrics>,
+    /// HTTP front-door counters (zero until an
+    /// [`crate::coordinator::http::HttpServer`] is bound).
+    pub http: HttpMetrics,
     hist: LogHistogram,
 }
 
@@ -261,6 +387,16 @@ impl Metrics {
             self.last_swap_us.get(),
             self.reservoir_points.get(),
         );
+        s.push_str(&format!(
+            " http_connections_total={} http_connections={} http_queue_depth={} \
+             http_requests_total={} http_errors_total={} http_slow_total={}",
+            self.http.connections_total.get(),
+            self.http.connections_live.get(),
+            self.http.queue_depth.get(),
+            self.http.requests_total.get(),
+            self.http.errors_total(),
+            self.http.slow_total.get(),
+        ));
         for (i, sh) in self.shards.iter().enumerate() {
             s.push_str(&format!(
                 " shard[{i}] ingested={} halo={} refreshes={} cg_iters={} last_refresh_us={} \
@@ -446,7 +582,88 @@ impl Metrics {
                 &|s| s.reservoir_points.get(),
             );
         }
+        self.render_http(&mut w, &scalar);
         w.finish()
+    }
+
+    /// Append the `http_*` front-door families (always emitted, zeroed
+    /// until an HTTP server is bound, so dashboards can pre-wire them).
+    fn render_http(
+        &self,
+        w: &mut PromWriter,
+        scalar: &dyn Fn(&mut PromWriter, &str, &str, &str, u64),
+    ) {
+        let h = &self.http;
+        scalar(
+            w,
+            "counter",
+            "http_connections_total",
+            "Connections accepted by the front door.",
+            h.connections_total.get(),
+        );
+        scalar(
+            w,
+            "gauge",
+            "http_connections",
+            "Connections currently being served.",
+            h.connections_live.get(),
+        );
+        scalar(
+            w,
+            "gauge",
+            "http_queue_depth",
+            "Accepted connections awaiting a worker.",
+            h.queue_depth.get(),
+        );
+        scalar(
+            w,
+            "counter",
+            "http_slow_requests_total",
+            "Requests over the MSGP_SLOW_MS threshold.",
+            h.slow_total.get(),
+        );
+        let classes = ["2xx", "4xx", "5xx"];
+        let mut req_labels: Vec<Vec<(&str, String)>> = Vec::new();
+        let mut req_values: Vec<u64> = Vec::new();
+        for (ri, r) in h.routes.iter().enumerate() {
+            for (ci, cls) in classes.iter().enumerate() {
+                req_labels.push(vec![
+                    ("route", HTTP_ROUTE_NAMES[ri].to_string()),
+                    ("class", cls.to_string()),
+                ]);
+                req_values.push(match ci {
+                    0 => r.c2xx.get(),
+                    1 => r.c4xx.get(),
+                    _ => r.c5xx.get(),
+                });
+            }
+        }
+        let req_samples: Vec<(&[(&str, String)], u64)> =
+            req_labels.iter().zip(req_values.iter()).map(|(l, &v)| (&l[..], v)).collect();
+        w.counter(
+            "http_requests_total",
+            "HTTP requests answered, by route and status class.",
+            &req_samples,
+        );
+        let err_labels: Vec<Vec<(&str, String)>> =
+            HTTP_ERROR_CLASSES.iter().map(|c| vec![("class", c.to_string())]).collect();
+        let err_samples: Vec<(&[(&str, String)], u64)> =
+            err_labels.iter().zip(h.errors.iter()).map(|(l, c)| (&l[..], c.get())).collect();
+        w.counter("http_errors_total", "Front-door failures, by class.", &err_samples);
+        let snaps: Vec<HistogramSnapshot> = h.routes.iter().map(|r| r.hist.snapshot()).collect();
+        let route_labels: Vec<Vec<(&str, String)>> =
+            HTTP_ROUTE_NAMES.iter().map(|n| vec![("route", n.to_string())]).collect();
+        let series: Vec<(&[(&str, String)], &HistogramSnapshot)> = route_labels
+            .iter()
+            .zip(snaps.iter())
+            .filter(|(_, s)| s.count_from_buckets() > 0)
+            .map(|(l, s)| (&l[..], s))
+            .collect();
+        w.histogram_family(
+            "http_request_latency_us",
+            "HTTP request latency by route, us (log2 buckets).",
+            &series,
+        );
     }
 }
 
@@ -606,5 +823,68 @@ mod tests {
         assert!(text.contains("request_latency_us_count 1"), "{text}");
         assert!(text.contains("shard_routed_predictions{shard=\"1\"} 2"), "{text}");
         assert!(text.contains("shard_queue_depth{shard=\"0\"} 0"), "{text}");
+    }
+
+    #[test]
+    fn http_metrics_route_index_covers_every_route() {
+        let routes = [
+            (Some(Route::Predict), "predict"),
+            (Some(Route::Ingest), "ingest"),
+            (Some(Route::Metrics), "metrics"),
+            (Some(Route::Models), "models"),
+            (Some(Route::Shards), "shards"),
+            (Some(Route::Health), "healthz"),
+            (Some(Route::Trace), "trace"),
+            (None, "other"),
+        ];
+        let mut seen = [false; 8];
+        for (r, name) in routes {
+            let i = HttpMetrics::route_index(r);
+            assert_eq!(HTTP_ROUTE_NAMES[i], name);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "route indices not a bijection");
+    }
+
+    #[test]
+    fn http_families_render_in_summary_and_prometheus() {
+        let m = Metrics::new();
+        let pi = HttpMetrics::route_index(Some(Route::Predict));
+        m.http.connections_total.inc();
+        m.http.record(pi, 200, Duration::from_micros(120));
+        m.http.record(pi, 200, Duration::from_micros(90));
+        m.http.record(pi, 400, Duration::from_micros(10));
+        m.http.error(HttpErrClass::BadRequest);
+        m.http.error(HttpErrClass::UnknownRoute);
+        m.http.error(HttpErrClass::UnknownRoute);
+
+        let s = m.summary();
+        // Pre-existing keys stay first; http keys append before shards.
+        assert!(s.starts_with("submitted=0 "), "{s}");
+        assert!(s.contains("http_connections_total=1"), "{s}");
+        assert!(s.contains("http_requests_total=3"), "{s}");
+        assert!(s.contains("http_errors_total=3"), "{s}");
+
+        let text = m.render_prometheus();
+        assert!(text.contains("http_connections_total 1"), "{text}");
+        assert!(
+            text.contains("http_requests_total{route=\"predict\",class=\"2xx\"} 2"),
+            "{text}"
+        );
+        assert!(
+            text.contains("http_requests_total{route=\"predict\",class=\"4xx\"} 1"),
+            "{text}"
+        );
+        assert!(text.contains("http_errors_total{class=\"unknown_route\"} 2"), "{text}");
+        assert!(text.contains("http_errors_total{class=\"timeout\"} 0"), "{text}");
+        assert!(
+            text.contains("http_request_latency_us_bucket{route=\"predict\",le=\"+Inf\"} 3"),
+            "{text}"
+        );
+        assert!(text.contains("http_request_latency_us_count{route=\"predict\"} 3"), "{text}");
+        // Quiet routes are filtered out of the histogram family; the
+        // header itself is always present.
+        assert!(!text.contains("http_request_latency_us_count{route=\"trace\"}"), "{text}");
+        assert_eq!(text.matches("# TYPE http_request_latency_us histogram").count(), 1);
     }
 }

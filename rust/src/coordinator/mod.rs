@@ -21,8 +21,13 @@
 //!   route and hot-swaps refreshed snapshots into the live
 //!   [`state::ModelSlot`].
 //! * [`metrics`] — latency histograms, throughput counters, the
-//!   streaming ingest/refresh counters, and per-shard
-//!   ingest/refresh/queue-depth counters for sharded servers.
+//!   streaming ingest/refresh counters, per-shard
+//!   ingest/refresh/queue-depth counters for sharded servers, and the
+//!   per-route `http_*` front-door families.
+//! * [`http`] — the real network front door: a dependency-free
+//!   HTTP/1.1 transport ([`http::HttpServer`]) with keep-alive,
+//!   pipelining, a worker pool, per-request trace spans, and per-route
+//!   latency/status metrics, dispatching into [`server::Server`].
 //!
 //! Sharded deployments ([`server::Server::start_sharded`]) swap the
 //! single [`state::ModelSlot`] for a [`state::ShardSlots`] table inside
@@ -33,11 +38,13 @@
 pub mod state;
 pub mod router;
 pub mod batcher;
+pub mod http;
 pub mod metrics;
 pub mod server;
 
 pub use batcher::{BatcherConfig, IngestBatch, Job, Prediction, Request};
-pub use metrics::{Metrics, ShardMetrics};
+pub use http::{HttpConfig, HttpServer};
+pub use metrics::{HttpErrClass, HttpMetrics, Metrics, ShardMetrics};
 pub use router::{Engine, EngineSpec, Route, Router};
 pub use server::Server;
 pub use state::{ModelSlot, ModelStore, ServingModel, ShardSlots};

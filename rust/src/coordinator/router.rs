@@ -83,19 +83,47 @@ pub enum MetricsFormat {
     Prometheus,
 }
 
+/// Split a request path into `(path, query)` at the first `?`.
+pub fn split_query(path: &str) -> (&str, Option<&str>) {
+    match path.split_once('?') {
+        Some((p, q)) => (p, Some(q)),
+        None => (path, None),
+    }
+}
+
+/// Look up a query parameter by key: `query_param("/t?a=1&b", "a")` →
+/// `Some("1")`; a bare key (`"b"`) yields `Some("")`; a missing key
+/// yields `None`.
+pub fn query_param<'a>(path: &'a str, key: &str) -> Option<&'a str> {
+    let (_, query) = split_query(path);
+    for pair in query?.split('&') {
+        match pair.split_once('=') {
+            Some((k, v)) if k == key => return Some(v),
+            None if pair == key => return Some(""),
+            _ => {}
+        }
+    }
+    None
+}
+
+/// True when `key` is present and not explicitly disabled: `?clear=1`,
+/// `?clear=true`, and bare `?clear` all enable; `?clear=0`,
+/// `?clear=false`, and an absent key do not.
+pub fn query_flag(path: &str, key: &str) -> bool {
+    match query_param(path, key) {
+        Some(v) => v != "0" && v != "false",
+        None => false,
+    }
+}
+
 /// Parse the `/metrics` format selector from a request path's query
 /// string (`format=prom` | `format=prometheus` → Prometheus; anything
 /// else → the legacy summary).
 pub fn metrics_format(path: &str) -> MetricsFormat {
-    let Some((_, query)) = path.split_once('?') else {
-        return MetricsFormat::Summary;
-    };
-    for pair in query.split('&') {
-        if matches!(pair, "format=prom" | "format=prometheus") {
-            return MetricsFormat::Prometheus;
-        }
+    match query_param(path, "format") {
+        Some("prom") | Some("prometheus") => MetricsFormat::Prometheus,
+        _ => MetricsFormat::Summary,
     }
-    MetricsFormat::Summary
 }
 
 impl Route {
@@ -252,6 +280,23 @@ mod tests {
         assert_eq!(metrics_format("/metrics?format=txt"), MetricsFormat::Summary);
         // The format selector never changes the route itself.
         assert_eq!(Route::parse("/metrics?format=prom"), Some(Route::Metrics));
+    }
+
+    #[test]
+    fn query_helpers_parse_params_and_flags() {
+        assert_eq!(split_query("/trace?clear=1"), ("/trace", Some("clear=1")));
+        assert_eq!(split_query("/trace"), ("/trace", None));
+        assert_eq!(query_param("/s?verbose=1&x=a%20b", "x"), Some("a%20b"));
+        assert_eq!(query_param("/s?verbose=1", "verbose"), Some("1"));
+        assert_eq!(query_param("/s?verbose", "verbose"), Some(""));
+        assert_eq!(query_param("/s?verbose=1", "missing"), None);
+        assert_eq!(query_param("/s", "verbose"), None);
+        assert!(query_flag("/trace?clear=1", "clear"));
+        assert!(query_flag("/trace?clear=true", "clear"));
+        assert!(query_flag("/trace?clear", "clear"));
+        assert!(!query_flag("/trace?clear=0", "clear"));
+        assert!(!query_flag("/trace?clear=false", "clear"));
+        assert!(!query_flag("/trace", "clear"));
     }
 
     #[test]

@@ -11,7 +11,7 @@ use std::time::Instant;
 
 use super::batcher::{self, BatcherConfig, IngestBatch, Job, Prediction, Request};
 use super::metrics::Metrics;
-use super::router::{metrics_format, EngineSpec, MetricsFormat, Route};
+use super::router::{metrics_format, query_flag, EngineSpec, MetricsFormat, Route};
 use super::state::{ModelSlot, ServingModel};
 use crate::obs::trace::Tracer;
 use crate::shard::ShardedTrainer;
@@ -141,6 +141,18 @@ impl Server {
         self.sharded.as_ref().map(|t| t.summary())
     }
 
+    /// `/shards?verbose=1` payload: the per-shard layout lines extended
+    /// with the shard's live metric counters (sharded servers only).
+    pub fn shards_summary_verbose(&self) -> Option<String> {
+        self.sharded.as_ref().map(|t| t.summary_verbose())
+    }
+
+    /// Input dimensionality the server was started with (points posted
+    /// to `/predict` carry `dim` coordinates each).
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
     /// `/metrics` payload in the requested rendering (the legacy
     /// one-line summary or Prometheus text exposition).
     pub fn metrics_text(&self, format: MetricsFormat) -> String {
@@ -192,18 +204,33 @@ impl Server {
     }
 
     /// Dispatch a GET-style route to its text payload — the in-process
-    /// equivalent of the HTTP front door (tests and the CI smoke job
-    /// drive the router through this). Returns `None` for body-carrying
-    /// routes (`/predict`, `/ingest` — use [`Self::predict`] /
-    /// [`Self::ingest`]), for `/models` (served from installed-artifact
-    /// state, not the server), for `/shards` on unsharded servers, and
-    /// for unknown paths.
+    /// half of the HTTP front door ([`super::http::HttpServer`] and the
+    /// CI smoke job both drive the router through this). The raw query
+    /// string is honored: `/metrics?format=prom`, `/shards?verbose=1`,
+    /// and `/trace?clear=1` (drain the rings after the dump, so
+    /// repeated scrapes don't re-export stale spans). Returns `None`
+    /// for body-carrying routes (`/predict`, `/ingest` — use
+    /// [`Self::predict`] / [`Self::ingest`]), for `/models` (served
+    /// from installed-artifact state, not the server), for `/shards` on
+    /// unsharded servers, and for unknown paths.
     pub fn handle_path(&self, path: &str) -> Option<String> {
         match Route::parse(path)? {
             Route::Metrics => Some(self.metrics_text(metrics_format(path))),
             Route::Health => Some(self.healthz()),
-            Route::Trace => Some(Tracer::dump_json()),
-            Route::Shards => self.shards_summary(),
+            Route::Trace => {
+                let dump = Tracer::dump_json();
+                if query_flag(path, "clear") {
+                    Tracer::clear();
+                }
+                Some(dump)
+            }
+            Route::Shards => {
+                if query_flag(path, "verbose") {
+                    self.shards_summary_verbose()
+                } else {
+                    self.shards_summary()
+                }
+            }
             Route::Predict | Route::Ingest | Route::Models => None,
         }
     }

@@ -80,6 +80,20 @@
 //!   refresh gauges), a `/healthz` readiness probe, an `MSGP_LOG`-gated
 //!   leveled logger, and a bench recorder persisting `BENCH_*.json`
 //!   artifacts ([`bench::recorder`]). See `docs/METRICS.md`.
+//! * **A real HTTP front door** ([`coordinator::http`]): a
+//!   dependency-free HTTP/1.1 transport (`std::net::TcpListener`,
+//!   worker pool, keep-alive, request pipelining, bounded accept queue
+//!   with inline 503 shedding, graceful shutdown) serving every route
+//!   over actual sockets — `POST /predict` / `POST /ingest` with JSON
+//!   bodies, query-aware GET routes (`/metrics?format=prom`,
+//!   `/shards?verbose=1`, `/trace?clear=1`). Each connection and
+//!   request carries a monotone id into the trace spans (`http.accept`
+//!   / `http.request`), per-route latency histograms and status/error
+//!   counters land in the `http_*` metric families, and slow requests
+//!   log through `MSGP_SLOW_MS`. The [`bench::loadgen`] harness (and
+//!   the `loadgen` binary) drives open- or closed-loop predict/ingest
+//!   mixes against it, recording p50/p99/p999 + sustained QPS into
+//!   `BENCH_fig9_serving.json`. See `examples/serving.rs`.
 //!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-reproduction results.

@@ -310,7 +310,25 @@ impl PromWriter {
         labels: &Labels<'_>,
         snap: &HistogramSnapshot,
     ) {
+        self.histogram_family(name, help, &[(labels, snap)]);
+    }
+
+    /// One histogram family with *multiple* label sets (e.g. one series
+    /// per HTTP route) under a single `# HELP`/`# TYPE` header — the
+    /// exposition format forbids repeating the header per series.
+    pub fn histogram_family(
+        &mut self,
+        name: &str,
+        help: &str,
+        series: &[(&Labels<'_>, &HistogramSnapshot)],
+    ) {
         write_header(&mut self.out, name, help, "histogram");
+        for (labels, snap) in series {
+            self.histogram_series(name, labels, snap);
+        }
+    }
+
+    fn histogram_series(&mut self, name: &str, labels: &Labels<'_>, snap: &HistogramSnapshot) {
         let mut acc = 0u64;
         for (i, &c) in snap.buckets.iter().enumerate() {
             acc += c;
@@ -407,6 +425,25 @@ mod tests {
             assert!(v >= prev, "{text}");
             prev = v;
         }
+    }
+
+    #[test]
+    fn histogram_family_shares_one_header_across_series() {
+        let ha = LogHistogram::new();
+        ha.record_us(3);
+        let hb = LogHistogram::new();
+        hb.record_us(700);
+        hb.record_us(900);
+        let la: Vec<(&str, String)> = vec![("route", "predict".to_string())];
+        let lb: Vec<(&str, String)> = vec![("route", "ingest".to_string())];
+        let (sa, sb) = (ha.snapshot(), hb.snapshot());
+        let mut w = PromWriter::new();
+        w.histogram_family("h", "Help.", &[(&la[..], &sa), (&lb[..], &sb)]);
+        let text = w.finish();
+        assert_eq!(text.matches("# TYPE h histogram").count(), 1, "{text}");
+        assert!(text.contains("h_bucket{route=\"predict\",le=\"+Inf\"} 1"), "{text}");
+        assert!(text.contains("h_bucket{route=\"ingest\",le=\"+Inf\"} 2"), "{text}");
+        assert!(text.contains("h_count{route=\"ingest\"} 2"), "{text}");
     }
 
     #[test]

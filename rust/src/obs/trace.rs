@@ -9,7 +9,7 @@
 //!    paths (`fftn_batch`, `cg_solve_block`) carry spans permanently
 //!    because of this.
 //! 2. **Enabled cost is tens of nanoseconds and wait-free.** Each
-//!    thread owns one ring ([`RING_CAP`] slots of four `AtomicU64`
+//!    thread owns one ring ([`RING_CAP`] slots of five `AtomicU64`
 //!    words); recording a span is a handful of `Relaxed` stores plus
 //!    two `Release` stores — no locks, no allocation after the ring
 //!    exists. Overflow overwrites the oldest events (a trace is a
@@ -19,9 +19,11 @@
 //!    words atomic so there is no UB to discuss): a slot overwritten
 //!    mid-read fails its sequence check and is skipped.
 //!
-//! Span names are interned once per call site: the [`span!`] macro
-//! expands to a `static` [`SpanSite`] whose id is registered on first
-//! traced use, so the per-event payload is three integers.
+//! Span names are interned once per call site: the [`span!`] /
+//! [`span_arg!`](crate::span_arg) macros expand to a `static`
+//! [`SpanSite`] whose id is registered on first traced use, so the
+//! per-event payload is a few integers (`span_arg!` adds one `u64`
+//! argument — e.g. an HTTP request id — exported as `args.id`).
 //!
 //! The exported JSON is the Chrome trace-event format (`ph: "X"`
 //! complete events with microsecond `ts`/`dur`) — load it at
@@ -35,13 +37,14 @@ use std::time::Instant;
 
 use crate::util::json::Json;
 
-/// Events retained per thread (power of two; ~0.5 MiB per ring). A full
+/// Events retained per thread (power of two; ~0.3 MiB per ring). A full
 /// refresh cycle emits well under a hundred spans, so the window covers
 /// many cycles even with the FFT hot-path spans firing.
 pub const RING_CAP: usize = 8192;
 
-/// Words per ring slot: sequence, packed id/depth, start, duration.
-const WORDS: usize = 4;
+/// Words per ring slot: sequence, packed id/depth, start, duration,
+/// user argument (e.g. the HTTP request id; 0 = none).
+const WORDS: usize = 5;
 
 static ENABLED: AtomicBool = AtomicBool::new(false);
 
@@ -139,7 +142,7 @@ struct Ring {
     /// (advanced by [`clear`]).
     floor: AtomicU64,
     /// `RING_CAP * WORDS` atomics; slot `e % RING_CAP` holds
-    /// `[seq, id<<16|depth, start_ns, dur_ns]` with `seq = 2*(e+1)`
+    /// `[seq, id<<16|depth, start_ns, dur_ns, arg]` with `seq = 2*(e+1)`
     /// once stable and odd while being written.
     slots: Box<[AtomicU64]>,
 }
@@ -156,7 +159,7 @@ impl Ring {
 
     /// Record one completed span. Wait-free; called only by the owning
     /// thread.
-    fn push(&self, id: u32, depth: u16, start_ns: u64, dur_ns: u64) {
+    fn push(&self, id: u32, depth: u16, start_ns: u64, dur_ns: u64, arg: u64) {
         let e = self.head.load(Ordering::Relaxed);
         let base = (e as usize & (RING_CAP - 1)) * WORDS;
         let s = &self.slots;
@@ -165,6 +168,7 @@ impl Ring {
         s[base + 1].store(((id as u64) << 16) | depth as u64, Ordering::Relaxed);
         s[base + 2].store(start_ns, Ordering::Relaxed);
         s[base + 3].store(dur_ns, Ordering::Relaxed);
+        s[base + 4].store(arg, Ordering::Relaxed);
         s[base].store(2 * (e + 1), Ordering::Release);
         self.head.store(e + 1, Ordering::Release);
     }
@@ -201,32 +205,40 @@ fn with_ring(f: impl FnOnce(&Ring)) {
 /// drop. Construct through the [`span!`] macro.
 pub struct SpanGuard {
     /// `None` when tracing was disabled at entry (the guard is inert).
-    live: Option<(&'static SpanSite, u64)>,
+    live: Option<(&'static SpanSite, u64, u64)>,
 }
 
 impl SpanGuard {
     /// Begin a span at `site`. One atomic load when tracing is off.
     #[inline]
     pub fn enter(site: &'static SpanSite) -> SpanGuard {
+        Self::enter_with(site, 0)
+    }
+
+    /// Begin a span at `site` carrying a user argument (e.g. the HTTP
+    /// request id; `0` = no argument). Exported in the Chrome trace as
+    /// `args.id`, so every slice of one request is greppable by id.
+    #[inline]
+    pub fn enter_with(site: &'static SpanSite, arg: u64) -> SpanGuard {
         if !enabled() {
             return SpanGuard { live: None };
         }
         DEPTH.with(|d| d.set(d.get().saturating_add(1)));
-        SpanGuard { live: Some((site, now_ns())) }
+        SpanGuard { live: Some((site, arg, now_ns())) }
     }
 }
 
 impl Drop for SpanGuard {
     #[inline]
     fn drop(&mut self) {
-        if let Some((site, start)) = self.live {
+        if let Some((site, arg, start)) = self.live {
             let dur = now_ns().saturating_sub(start);
             let depth = DEPTH.with(|d| {
                 let v = d.get();
                 d.set(v.saturating_sub(1));
                 v
             });
-            with_ring(|r| r.push(site.id(), depth, start, dur));
+            with_ring(|r| r.push(site.id(), depth, start, dur, arg));
         }
     }
 }
@@ -243,6 +255,17 @@ macro_rules! span {
     }};
 }
 
+/// Like [`span!`], but carries a `u64` argument (request / connection
+/// id) into the recorded event: `let _s = span_arg!("http.request", id);`
+#[macro_export]
+macro_rules! span_arg {
+    ($name:literal, $arg:expr) => {{
+        static __MSGP_SPAN_SITE: $crate::obs::trace::SpanSite =
+            $crate::obs::trace::SpanSite::new($name);
+        $crate::obs::trace::SpanGuard::enter_with(&__MSGP_SPAN_SITE, ($arg) as u64)
+    }};
+}
+
 /// One drained span event (decoded ring slot).
 #[derive(Clone, Debug, PartialEq)]
 pub struct SpanEvent {
@@ -256,6 +279,8 @@ pub struct SpanEvent {
     pub start_ns: u64,
     /// Duration, nanoseconds.
     pub dur_ns: u64,
+    /// User argument (request / connection id; 0 = none).
+    pub arg: u64,
 }
 
 /// Snapshot every ring (newest [`RING_CAP`] events per thread), sorted
@@ -277,13 +302,14 @@ pub fn drain() -> Vec<SpanEvent> {
             let meta = ring.slots[base + 1].load(Ordering::Relaxed);
             let start_ns = ring.slots[base + 2].load(Ordering::Relaxed);
             let dur_ns = ring.slots[base + 3].load(Ordering::Relaxed);
+            let arg = ring.slots[base + 4].load(Ordering::Relaxed);
             if ring.slots[base].load(Ordering::Acquire) != want {
                 continue; // overwritten mid-read: payload untrusted
             }
             let id = (meta >> 16) as usize;
             let Some(&name) = names.get(id.wrapping_sub(1)) else { continue };
             let depth = (meta & 0xffff) as u16;
-            events.push(SpanEvent { name, tid: ring.tid, depth, start_ns, dur_ns });
+            events.push(SpanEvent { name, tid: ring.tid, depth, start_ns, dur_ns, arg });
         }
     }
     events.sort_by_key(|e| (e.start_ns, std::cmp::Reverse(e.dur_ns)));
@@ -306,6 +332,10 @@ pub fn dump_json() -> String {
     let events: Vec<Json> = drain()
         .into_iter()
         .map(|e| {
+            let mut args = vec![("depth", Json::Num(e.depth as f64))];
+            if e.arg != 0 {
+                args.push(("id", Json::Num(e.arg as f64)));
+            }
             Json::obj(vec![
                 ("name", Json::Str(e.name.to_string())),
                 ("cat", Json::Str("msgp".to_string())),
@@ -314,7 +344,7 @@ pub fn dump_json() -> String {
                 ("dur", Json::Num(e.dur_ns as f64 / 1e3)),
                 ("pid", Json::Num(0.0)),
                 ("tid", Json::Num(e.tid as f64)),
-                ("args", Json::obj(vec![("depth", Json::Num(e.depth as f64))])),
+                ("args", Json::obj(args)),
             ])
         })
         .collect();
@@ -420,6 +450,38 @@ mod tests {
         assert!(ev.get("ts").and_then(|t| t.as_f64()).is_some());
         assert!(ev.get("dur").and_then(|t| t.as_f64()).is_some());
         assert!(ev.get("tid").and_then(|t| t.as_f64()).is_some());
+        clear();
+    }
+
+    #[test]
+    fn span_arg_carries_id_into_drain_and_dump() {
+        let _g = lock();
+        set_enabled(true);
+        {
+            let _s = crate::span_arg!("test.arg", 42u64);
+        }
+        {
+            let _s = crate::span!("test.noarg");
+        }
+        set_enabled(false);
+        let events = drain();
+        let with = events.iter().find(|e| e.name == "test.arg").expect("arg span recorded");
+        assert_eq!(with.arg, 42);
+        let without = events.iter().find(|e| e.name == "test.noarg").expect("plain span");
+        assert_eq!(without.arg, 0);
+        let doc = Json::parse(&dump_json()).expect("valid JSON");
+        let dumped = doc.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents");
+        let ev = dumped
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("test.arg"))
+            .expect("span present");
+        let id = ev.get("args").and_then(|a| a.get("id")).and_then(|v| v.as_f64());
+        assert_eq!(id, Some(42.0));
+        let plain = dumped
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("test.noarg"))
+            .expect("plain span present");
+        assert!(plain.get("args").and_then(|a| a.get("id")).is_none(), "no id for arg=0");
         clear();
     }
 

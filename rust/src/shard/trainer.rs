@@ -699,6 +699,41 @@ impl ShardedTrainer {
         s
     }
 
+    /// `/shards?verbose=1` payload: [`Self::summary`] with each shard
+    /// line extended by the remaining live metric counters (CG
+    /// iterations, last refresh wall-clock, routed predictions,
+    /// reservoir occupancy).
+    pub fn summary_verbose(&self) -> String {
+        let ax = &self.plan.global().axes[self.plan.axis()];
+        let mut s = format!(
+            "shards={} axis={} halo={} blend={}\n",
+            self.plan.shards(),
+            self.plan.axis(),
+            self.plan.halo(),
+            self.plan.blend()
+        );
+        for i in 0..self.plan.shards() {
+            let (lo, hi) = (self.plan.cuts()[i], self.plan.cuts()[i + 1]);
+            let sm = &self.metrics.shards[i];
+            s.push_str(&format!(
+                "shard[{i}] owns=[{:.3}, {:.3}) m={} ingested={} halo={} refreshes={} \
+                 queue_depth={} cg_iters={} last_refresh_us={} routed={} reservoir={}\n",
+                ax.coord(lo),
+                ax.coord(hi),
+                self.plan.local_grid(i).m(),
+                sm.ingested.load(Ordering::Relaxed),
+                sm.halo_ingested.load(Ordering::Relaxed),
+                sm.refreshes.load(Ordering::Relaxed),
+                sm.queue_depth.load(Ordering::Relaxed),
+                sm.refresh_cg_iters.load(Ordering::Relaxed),
+                sm.last_refresh_us.load(Ordering::Relaxed),
+                sm.routed_predictions.load(Ordering::Relaxed),
+                sm.reservoir_points.load(Ordering::Relaxed),
+            ));
+        }
+        s
+    }
+
     fn shutdown_inner(&mut self) {
         self.txs.clear(); // closing every channel stops the workers
         for h in self.handles.drain(..) {
