@@ -1,0 +1,23 @@
+// Fixture: allocations inside a hot function must be flagged, while
+// the cold function further down (line 20+) allocates freely.
+
+// lint:hot
+pub fn hot_kernel(xs: &[f64]) -> f64 {
+    let tmp = vec![0.0f64; xs.len()];
+    let copied = xs.to_vec();
+    let cloned = copied.clone();
+    let doubled: Vec<f64> = xs.iter().map(|v| v * 2.0).collect();
+    let boxed = Box::new(doubled);
+    tmp.len() as f64 + cloned[0] + boxed[0]
+}
+
+// Padding so the cold function sits at a known line for the rule test.
+//
+//
+//
+//
+
+pub fn cold_assemble(xs: &[f64]) -> Vec<f64> {
+    let mut out = xs.to_vec();
+    out.clone()
+}

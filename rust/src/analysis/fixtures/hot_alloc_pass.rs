@@ -1,0 +1,19 @@
+// Fixture: a hot function in the sanctioned buffer-reuse idiom passes;
+// an audited allocation passes under an explicit allow escape.
+
+// lint:hot
+pub fn hot_kernel(xs: &[f64], buf: &mut Vec<f64>, out: &mut [f64]) -> f64 {
+    buf.resize(xs.len(), 0.0);
+    buf.fill(0.0);
+    let mut acc = 0.0;
+    for (o, x) in out.iter_mut().zip(xs) {
+        *o = *x * 2.0;
+        acc += *o;
+    }
+    let snapshot = buf.to_vec(); // lint:allow(alloc, "audited: snapshot handed to caller")
+    acc + snapshot.len() as f64
+}
+
+pub fn cold_assemble(xs: &[f64]) -> Vec<f64> {
+    xs.to_vec()
+}

@@ -1,0 +1,14 @@
+// Fixture: acquiring a lower-ranked lock while a higher rank is held
+// must be flagged, as must nesting a lock the table does not declare.
+
+pub fn inverted(&self) {
+    let hy = self.hypers.lock().unwrap();
+    let res = self.reservoir.lock().unwrap();
+    let _ = (hy.len(), res.len());
+}
+
+pub fn undeclared_nested(&self) {
+    let st = self.state.lock().unwrap();
+    let q = self.mystery_queue.lock().unwrap();
+    let _ = (st.len(), q.len());
+}

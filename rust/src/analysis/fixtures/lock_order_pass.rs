@@ -1,0 +1,23 @@
+// Fixture: locks acquired in declared rank order (ops before
+// reservoir before hypers), guards released by scope or by drop, and a
+// leaf lock taken alone.
+
+pub fn ordered(&self) {
+    let _ops = self.ops.lock().unwrap();
+    let res = self.reservoir.lock().unwrap();
+    let n = res.len();
+    drop(res);
+    let hy = self.hypers.lock().unwrap();
+    let _ = (n, hy.len());
+}
+
+pub fn leaf_only(&self) {
+    let st = self.state.lock().unwrap();
+    let _ = st.len();
+}
+
+pub fn temporary_under_facade(&self) {
+    let _ops = self.ops.lock().unwrap();
+    let snapshot = self.hypers.lock().unwrap().clone();
+    let _ = snapshot;
+}

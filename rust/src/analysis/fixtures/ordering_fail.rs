@@ -1,0 +1,11 @@
+// Fixture: bare SeqCst and unannotated acquire/release must be flagged.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+pub fn publish(flag: &AtomicBool) {
+    flag.store(true, Ordering::SeqCst);
+}
+
+pub fn consume(flag: &AtomicBool) -> bool {
+    flag.load(Ordering::Acquire)
+}

@@ -1,0 +1,22 @@
+// Fixture: annotated orderings pass; bare Relaxed counters are fine in
+// an ordinary (non-handoff) module.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+pub fn publish(flag: &AtomicBool, hits: &AtomicUsize) {
+    hits.fetch_add(1, Ordering::Relaxed);
+    // ORDERING: Release pairs with the Acquire load in `consume`; it
+    // publishes every write sequenced before this store.
+    flag.store(true, Ordering::Release);
+}
+
+pub fn consume(flag: &AtomicBool) -> bool {
+    // ORDERING: Acquire pairs with the Release store in `publish`.
+    flag.load(Ordering::Acquire)
+}
+
+pub fn fence_all(flag: &AtomicBool) {
+    // ORDERING: SeqCst is required here because this flag arbitrates
+    // between two independent store-load races (Dekker-style).
+    flag.store(true, Ordering::SeqCst);
+}

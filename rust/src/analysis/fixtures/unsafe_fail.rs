@@ -1,0 +1,9 @@
+// Fixture: unsafe sites with no SAFETY justification must be flagged.
+
+pub fn read_first(xs: &[f64]) -> f64 {
+    unsafe { *xs.get_unchecked(0) }
+}
+
+pub unsafe fn read_at(xs: &[f64], i: usize) -> f64 {
+    *xs.get_unchecked(i)
+}

@@ -1,0 +1,14 @@
+// Fixture: every unsafe site carries a SAFETY justification.
+
+pub fn read_first(xs: &[f64]) -> f64 {
+    // SAFETY: callers guarantee `xs` is non-empty (checked at the API
+    // boundary), so index 0 is in bounds.
+    unsafe { *xs.get_unchecked(0) }
+}
+
+/// # Safety
+/// `i` must be in bounds for `xs`.
+pub unsafe fn read_at(xs: &[f64], i: usize) -> f64 {
+    // SAFETY: the function contract requires `i < xs.len()`.
+    unsafe { *xs.get_unchecked(i) }
+}

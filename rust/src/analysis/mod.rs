@@ -1,0 +1,368 @@
+//! # In-tree correctness analyzer (`msgp-lint`)
+//!
+//! A dependency-free static-analysis pass over the crate's own source,
+//! run as a blocking CI gate via the `msgp-lint` binary and as the
+//! in-crate self-check test. It enforces the concurrency and hot-path
+//! invariants the engine relies on but `rustc` cannot see:
+//!
+//! 1. **unsafe-audit** — every `unsafe` token carries a `SAFETY:`
+//!    justification, and the per-file census must match the checked-in
+//!    registry (`unsafe_registry.txt`), so new unsafe is an explicit
+//!    reviewed diff.
+//! 2. **atomic-ordering** — `SeqCst` is denied by default; acquire/
+//!    release sites need an `ORDERING:` comment naming their pairing;
+//!    inside declared handoff modules even `Relaxed` must be justified.
+//! 3. **hot-alloc** — functions marked hot must stay allocation-free
+//!    (the PR 3–5 refresh/CG/FFT invariant), with a narrow
+//!    `lint:allow(alloc, ...)` escape for audited result assembly.
+//! 4. **lock-order** — nested `.lock()` scopes must follow the
+//!    declared [`LOCK_ORDER`] ranking.
+//!
+//! The scanner ([`scan`]) is lexical, not a parser: strings and
+//! comments are split off so rule patterns never fire on look-alikes,
+//! and `#[cfg(test)]` modules are exempt. See `docs/ANALYSIS.md`.
+
+pub mod rules;
+pub mod scan;
+
+use rules::OrderingCounts;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// One analyzer diagnostic.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Path relative to the crate source root (`/`-separated).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule family id (`unsafe-audit`, `atomic-ordering`, `hot-alloc`,
+    /// `lock-order`, `unsafe-registry`).
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Files whose atomics form cross-thread handoff protocols: here every
+/// ordering — `Relaxed` included — must carry an `ORDERING:` comment.
+pub const HANDOFF_FILES: &[&str] = &["parallel/mod.rs", "obs/trace.rs"];
+
+/// The declared lock acquisition order, as (receiver name, rank).
+/// A lock may only be taken while locks of *strictly lower* rank are
+/// held. Receivers sharing a rank must never nest with each other.
+/// Names are the `.lock()` receiver's last path component
+/// (`self.reservoir.lock()` → `reservoir`).
+pub const LOCK_ORDER: &[(&str, u32)] = &[
+    // Shard facade: serializes public ShardedTrainer entry points and
+    // is taken before any per-shard state.
+    ("ops", 10),
+    // Reservoir snapshots (stream trainer + per-shard workers).
+    ("reservoir", 20),
+    ("reservoirs", 20),
+    // Hyperparameter cells: broadcast under `ops` after reservoirs.
+    ("hypers", 30),
+    // Leaf locks — never hold anything else while these are held.
+    ("state", 40),    // thread-pool scope state
+    ("names", 50),    // trace span-site interning
+    ("registry", 60), // trace ring registry
+    ("rx", 70),       // http worker receive end
+    ("slots", 80),    // scope-API slot store
+    ("slot", 80),
+];
+
+/// True when `rel_path` is a declared handoff module for the
+/// atomic-ordering rule.
+pub fn is_handoff(rel_path: &str) -> bool {
+    HANDOFF_FILES.iter().any(|h| rel_path == *h)
+}
+
+/// The checked-in census of audited unsafe sites.
+pub const UNSAFE_REGISTRY: &str = include_str!("unsafe_registry.txt");
+
+/// Per-file analysis result.
+#[derive(Debug)]
+pub struct FileReport {
+    pub rel_path: String,
+    pub findings: Vec<Finding>,
+    /// Non-test `unsafe` tokens in the file.
+    pub unsafe_count: usize,
+    pub ordering: OrderingCounts,
+}
+
+/// Whole-crate analysis result.
+#[derive(Debug)]
+pub struct CrateReport {
+    pub files: Vec<FileReport>,
+    /// All findings: per-file rule findings plus registry mismatches.
+    pub findings: Vec<Finding>,
+    pub unsafe_total: usize,
+    pub ordering_total: OrderingCounts,
+}
+
+/// Run the four per-file rules on one source text.
+pub fn analyze_source(rel_path: &str, src: &str) -> FileReport {
+    let file = scan::scan(rel_path, src);
+    let mut findings = Vec::new();
+    let unsafe_count = rules::unsafe_audit(&file, &mut findings);
+    let ordering = rules::ordering_audit(&file, is_handoff(&file.rel_path), &mut findings);
+    rules::hot_alloc(&file, &mut findings);
+    rules::lock_order(&file, &mut findings);
+    FileReport { rel_path: file.rel_path, findings, unsafe_count, ordering }
+}
+
+/// Compare the measured per-file unsafe census against a registry text
+/// (`path count` lines, `#` comments). Any drift — new unsafe files,
+/// removed files, changed counts — is a finding, so the diff to
+/// `unsafe_registry.txt` is always explicit in review.
+pub fn check_registry(
+    registry: &str,
+    counts: &[(String, usize)],
+    findings: &mut Vec<Finding>,
+) {
+    let mut expected: Vec<(&str, usize)> = Vec::new();
+    for raw in registry.lines() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let (Some(path), Some(n)) = (parts.next(), parts.next()) else {
+            continue;
+        };
+        if let Ok(n) = n.parse::<usize>() {
+            expected.push((path, n));
+        }
+    }
+    for &(path, want) in &expected {
+        let got = counts
+            .iter()
+            .find(|(p, _)| p == path)
+            .map(|&(_, n)| n)
+            .unwrap_or(0);
+        if got != want {
+            findings.push(Finding {
+                file: path.to_string(),
+                line: 0,
+                rule: "unsafe-registry",
+                msg: format!(
+                    "registry expects {want} unsafe site(s), source has {got}; \
+                     audit the change and update unsafe_registry.txt"
+                ),
+            });
+        }
+    }
+    for (path, got) in counts {
+        if *got > 0 && !expected.iter().any(|(p, _)| p == path) {
+            findings.push(Finding {
+                file: path.clone(),
+                line: 0,
+                rule: "unsafe-registry",
+                msg: format!(
+                    "{got} unsafe site(s) in a file not in unsafe_registry.txt; \
+                     audit them and register the file"
+                ),
+            });
+        }
+    }
+}
+
+/// Walk `src_root` (the crate's `rust/src`), analyze every `.rs` file,
+/// and run the registry check. Fixture snippets under
+/// `analysis/fixtures/` are rule test-vectors, not crate code, and are
+/// skipped.
+pub fn analyze_crate(src_root: &Path) -> io::Result<CrateReport> {
+    let mut rel_paths = Vec::new();
+    collect_rs(src_root, Path::new(""), &mut rel_paths)?;
+    rel_paths.sort();
+    let mut files = Vec::new();
+    let mut findings = Vec::new();
+    let mut unsafe_total = 0usize;
+    let mut ordering_total = OrderingCounts::default();
+    let mut counts = Vec::new();
+    for rel in &rel_paths {
+        let src = fs::read_to_string(src_root.join(rel))?;
+        let report = analyze_source(rel, &src);
+        findings.extend(report.findings.iter().cloned());
+        unsafe_total += report.unsafe_count;
+        ordering_total.add(&report.ordering);
+        counts.push((report.rel_path.clone(), report.unsafe_count));
+        files.push(report);
+    }
+    check_registry(UNSAFE_REGISTRY, &counts, &mut findings);
+    Ok(CrateReport { files, findings, unsafe_total, ordering_total })
+}
+
+fn collect_rs(
+    root: &Path,
+    rel: &Path,
+    out: &mut Vec<String>,
+) -> io::Result<()> {
+    let dir = root.join(rel);
+    for entry in fs::read_dir(&dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy().into_owned();
+        let child = rel.join(&name);
+        let child_str = child.to_string_lossy().replace('\\', "/");
+        if entry.file_type()?.is_dir() {
+            if child_str == "analysis/fixtures" {
+                continue;
+            }
+            collect_rs(root, &child, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(child_str);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn findings_for(rel: &str, src: &str) -> Vec<Finding> {
+        analyze_source(rel, src).findings
+    }
+
+    fn rules_hit(findings: &[Finding]) -> Vec<&'static str> {
+        let mut r: Vec<_> = findings.iter().map(|f| f.rule).collect();
+        r.dedup();
+        r
+    }
+
+    #[test]
+    fn fixture_unsafe_pass() {
+        let f = findings_for("fx/unsafe_pass.rs", include_str!("fixtures/unsafe_pass.rs"));
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn fixture_unsafe_fail() {
+        let f = findings_for("fx/unsafe_fail.rs", include_str!("fixtures/unsafe_fail.rs"));
+        assert!(rules_hit(&f).contains(&"unsafe-audit"), "{f:?}");
+    }
+
+    #[test]
+    fn fixture_ordering_pass() {
+        let f = findings_for(
+            "fx/ordering_pass.rs",
+            include_str!("fixtures/ordering_pass.rs"),
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn fixture_ordering_fail() {
+        let f = findings_for(
+            "fx/ordering_fail.rs",
+            include_str!("fixtures/ordering_fail.rs"),
+        );
+        assert!(rules_hit(&f).contains(&"atomic-ordering"), "{f:?}");
+        // Both the bare SeqCst and the unannotated Acquire must fire.
+        assert!(f.len() >= 2, "{f:?}");
+    }
+
+    #[test]
+    fn fixture_ordering_handoff_relaxed() {
+        // The same Relaxed store is clean in an ordinary file but must
+        // be annotated in a declared handoff module.
+        let src = include_str!("fixtures/ordering_pass.rs");
+        assert!(findings_for("fx/ordering_pass.rs", src).is_empty());
+        let in_handoff = analyze_source("obs/trace.rs", "fn f(a: &AtomicUsize) { a.store(1, Ordering::Relaxed); }");
+        assert!(rules_hit(&in_handoff.findings).contains(&"atomic-ordering"));
+    }
+
+    #[test]
+    fn fixture_hot_alloc_pass() {
+        let f = findings_for(
+            "fx/hot_alloc_pass.rs",
+            include_str!("fixtures/hot_alloc_pass.rs"),
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn fixture_hot_alloc_fail() {
+        let f = findings_for(
+            "fx/hot_alloc_fail.rs",
+            include_str!("fixtures/hot_alloc_fail.rs"),
+        );
+        let hits: Vec<_> = f.iter().filter(|x| x.rule == "hot-alloc").collect();
+        // vec!, .to_vec(, .clone( and .collect in the hot body; the
+        // cold function below the hot one allocates freely.
+        assert!(hits.len() >= 4, "{f:?}");
+        assert!(!f.iter().any(|x| x.line >= 20), "cold fn was flagged: {f:?}");
+    }
+
+    #[test]
+    fn fixture_lock_order_pass() {
+        let f = findings_for(
+            "fx/lock_order_pass.rs",
+            include_str!("fixtures/lock_order_pass.rs"),
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn fixture_lock_order_fail() {
+        let f = findings_for(
+            "fx/lock_order_fail.rs",
+            include_str!("fixtures/lock_order_fail.rs"),
+        );
+        assert!(rules_hit(&f).contains(&"lock-order"), "{f:?}");
+    }
+
+    #[test]
+    fn registry_detects_drift_both_ways() {
+        let reg = "a.rs 2\nb.rs 1\n";
+        let mut f = Vec::new();
+        check_registry(
+            reg,
+            &[("a.rs".into(), 2), ("b.rs".into(), 1)],
+            &mut f,
+        );
+        assert!(f.is_empty(), "{f:?}");
+        // Count drift.
+        check_registry(reg, &[("a.rs".into(), 3), ("b.rs".into(), 1)], &mut f);
+        assert_eq!(f.len(), 1);
+        // New unsafe file.
+        f.clear();
+        check_registry(
+            reg,
+            &[("a.rs".into(), 2), ("b.rs".into(), 1), ("c.rs".into(), 1)],
+            &mut f,
+        );
+        assert_eq!(f.len(), 1);
+        // Registry entry with no unsafe left.
+        f.clear();
+        check_registry(reg, &[("a.rs".into(), 2)], &mut f);
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn test_modules_are_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t(a: &A) { unsafe { a.go() }; a.x.store(1, Ordering::SeqCst); }\n}\n";
+        let f = findings_for("fx/t.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    /// The gate itself: the crate's own source must be lint-clean.
+    /// This is the same check CI runs via `cargo run --bin msgp-lint`.
+    #[test]
+    fn crate_is_lint_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+        let report = analyze_crate(&root).expect("walk crate source");
+        assert!(report.files.len() > 30, "suspiciously few files scanned");
+        let msgs: Vec<String> =
+            report.findings.iter().map(|f| f.to_string()).collect();
+        assert!(msgs.is_empty(), "crate not lint-clean:\n{}", msgs.join("\n"));
+        assert!(report.unsafe_total > 0, "expected audited unsafe sites");
+        assert!(report.ordering_total.total() > 0);
+    }
+}

@@ -1,0 +1,405 @@
+//! The four rule families enforced by `msgp-lint`.
+//!
+//! Each rule consumes a scanned [`SourceFile`] and appends
+//! [`Finding`]s. All rules skip `#[cfg(test)]` regions — test code may
+//! allocate, take locks in odd orders, and use `SeqCst` freely; the
+//! production invariants are what the gate protects. See
+//! `docs/ANALYSIS.md` for the policy rationale and the marker grammar.
+
+use super::scan::{find_word, SourceFile};
+use super::{Finding, LOCK_ORDER};
+
+/// How many preceding lines an annotation marker covers (inclusive of
+/// the site line itself).
+pub const ANNOTATION_WINDOW: usize = 4;
+
+/// Allocation-adjacent patterns denied inside `lint:hot` functions.
+/// `.resize(` / `.fill(` / `.clear(` are deliberately absent: growing a
+/// *reusable* buffer to a steady-state size is the crate's sanctioned
+/// idiom for allocation-free hot paths.
+pub const HOT_DENY: &[&str] = &[
+    "Vec::new",
+    "vec!",
+    ".to_vec(",
+    ".clone(",
+    ".collect",
+    "Box::new",
+    "String::new",
+    ".to_string(",
+    "format!",
+    "with_capacity",
+];
+
+/// Per-variant `Ordering::*` call-site counts for the summary report.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct OrderingCounts {
+    pub seqcst: usize,
+    pub acqrel: usize,
+    pub acquire: usize,
+    pub release: usize,
+    pub relaxed: usize,
+}
+
+impl OrderingCounts {
+    pub fn total(&self) -> usize {
+        self.seqcst + self.acqrel + self.acquire + self.release + self.relaxed
+    }
+    pub fn add(&mut self, other: &OrderingCounts) {
+        self.seqcst += other.seqcst;
+        self.acqrel += other.acqrel;
+        self.acquire += other.acquire;
+        self.release += other.release;
+        self.relaxed += other.relaxed;
+    }
+}
+
+fn window_comments<'a>(
+    file: &'a SourceFile,
+    line_idx: usize,
+) -> impl Iterator<Item = &'a str> {
+    let lo = line_idx.saturating_sub(ANNOTATION_WINDOW);
+    file.lines[lo..=line_idx].iter().map(|l| l.comment.as_str())
+}
+
+/// True when a comment within the window carries the given marker as
+/// its leading token (leading-position match keeps prose *mentions* of
+/// a marker from arming or satisfying a rule).
+fn window_has_leading(file: &SourceFile, line_idx: usize, marker: &str) -> bool {
+    window_comments(file, line_idx).any(|c| c.trim_start().starts_with(marker))
+}
+
+/// True when a comment within the window contains the marker anywhere
+/// (used for `SAFETY:` / `ORDERING:`, where multi-sentence comments and
+/// `/// # Safety` doc sections both count).
+fn window_contains(file: &SourceFile, line_idx: usize, marker: &str) -> bool {
+    window_comments(file, line_idx).any(|c| c.contains(marker))
+}
+
+/// Rule 1 — unsafe-audit: every standalone `unsafe` token (block, fn,
+/// impl) outside test code must have a `SAFETY:` comment (or a
+/// `# Safety` doc section) within the annotation window. Returns the
+/// number of non-test unsafe tokens found, for the registry check.
+pub fn unsafe_audit(file: &SourceFile, findings: &mut Vec<Finding>) -> usize {
+    let mut count = 0usize;
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let mut from = 0usize;
+        while let Some(at) = find_word(&line.code, "unsafe", from) {
+            count += 1;
+            from = at + "unsafe".len();
+            if !window_contains(file, idx, "SAFETY:")
+                && !window_contains(file, idx, "# Safety")
+            {
+                findings.push(Finding {
+                    file: file.rel_path.clone(),
+                    line: idx + 1,
+                    rule: "unsafe-audit",
+                    msg: "unsafe site without a SAFETY: justification within 4 lines"
+                        .to_string(),
+                });
+            }
+        }
+    }
+    count
+}
+
+/// Rule 2 — atomic-ordering audit. Policy:
+///
+/// * `SeqCst` is denied by default everywhere: either relax it to the
+///   ordering the algorithm actually needs, or keep it with an
+///   `ORDERING:` comment explaining why sequential consistency is
+///   required.
+/// * `Acquire` / `Release` / `AcqRel` are by definition cross-thread
+///   handoff: they require an `ORDERING:` comment naming their pairing
+///   partner, in every file.
+/// * `Relaxed` is free in ordinary counter/gauge code, but inside
+///   declared handoff modules (`is_handoff`, e.g. the seqlock ring and
+///   the thread pool) *every* ordering — Relaxed included — must be
+///   annotated, because there Relaxed is a claim that the surrounding
+///   fences/operations provide the synchronization.
+pub fn ordering_audit(
+    file: &SourceFile,
+    is_handoff: bool,
+    findings: &mut Vec<Finding>,
+) -> OrderingCounts {
+    let mut counts = OrderingCounts::default();
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let mut from = 0usize;
+        while let Some(at) = line.code[from..].find("Ordering::") {
+            let start = from + at + "Ordering::".len();
+            let variant: String = line.code[start..]
+                .chars()
+                .take_while(|c| c.is_alphanumeric())
+                .collect();
+            from = start;
+            let needs_annotation = match variant.as_str() {
+                "SeqCst" => {
+                    counts.seqcst += 1;
+                    true
+                }
+                "AcqRel" => {
+                    counts.acqrel += 1;
+                    true
+                }
+                "Acquire" => {
+                    counts.acquire += 1;
+                    true
+                }
+                "Release" => {
+                    counts.release += 1;
+                    true
+                }
+                "Relaxed" => {
+                    counts.relaxed += 1;
+                    is_handoff
+                }
+                _ => continue,
+            };
+            if needs_annotation && !window_contains(file, idx, "ORDERING:") {
+                let why = if variant == "SeqCst" {
+                    "bare SeqCst denied: relax it or justify with an ORDERING: comment"
+                } else {
+                    "handoff ordering requires an ORDERING: comment naming its pairing"
+                };
+                findings.push(Finding {
+                    file: file.rel_path.clone(),
+                    line: idx + 1,
+                    rule: "atomic-ordering",
+                    msg: format!("Ordering::{variant}: {why}"),
+                });
+            }
+        }
+    }
+    counts
+}
+
+/// Rule 3 — hot-path allocation lint: a `lint:hot` marker arms the next
+/// `fn`; inside its body every [`HOT_DENY`] pattern is an error unless
+/// the line carries a `lint:allow(alloc, "...")` escape within the
+/// annotation window.
+pub fn hot_alloc(file: &SourceFile, findings: &mut Vec<Finding>) {
+    let mut armed = false;
+    // Depth the hot fn's signature sits at; `None` = not in a hot fn.
+    let mut hot_base: Option<u32> = None;
+    let mut body_opened = false;
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        if line.comment.trim_start().starts_with("lint:hot") {
+            armed = true;
+        }
+        if hot_base.is_none() && armed && find_word(&line.code, "fn", 0).is_some() {
+            hot_base = Some(line.depth_start);
+            body_opened = false;
+            armed = false;
+        }
+        if let Some(base) = hot_base {
+            if line.code.contains('{') {
+                body_opened = true;
+            }
+            for pat in HOT_DENY {
+                if find_word(&line.code, pat, 0).is_some()
+                    && !window_has_leading(file, idx, "lint:allow(alloc")
+                {
+                    findings.push(Finding {
+                        file: file.rel_path.clone(),
+                        line: idx + 1,
+                        rule: "hot-alloc",
+                        msg: format!(
+                            "`{pat}` inside a lint:hot function (allocation-free \
+                             invariant); reuse a buffer or add lint:allow(alloc, ...)"
+                        ),
+                    });
+                }
+            }
+            if body_opened && line.depth_end <= base {
+                hot_base = None;
+            }
+        }
+    }
+}
+
+/// Rule 4 — lock-order audit: `.lock()` receivers must be acquired in
+/// strictly increasing rank per the [`LOCK_ORDER`] table. Guards held
+/// across statements (a `let g = recv.lock().unwrap();`-shaped binding)
+/// stay on a per-file stack until their scope closes or they are
+/// `drop`ped; chained temporaries (`recv.lock().unwrap().clone()`)
+/// are checked against the held stack but not pushed. Receivers absent
+/// from the table are only an error when taken while another lock is
+/// held. Known limitation (documented): calls into functions that
+/// themselves lock are not traced — the table must be kept coarse
+/// enough that each function's direct acquisitions tell the story.
+pub fn lock_order(file: &SourceFile, findings: &mut Vec<Finding>) {
+    // (receiver, rank-or-None, depth at acquisition)
+    let mut held: Vec<(String, Option<u32>, u32)> = Vec::new();
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            held.clear();
+            continue;
+        }
+        // Scopes that closed before this line release their guards.
+        held.retain(|&(_, _, d)| line.depth_start >= d);
+        // Explicit drop(guard) releases by name (else the top guard).
+        if let Some(p) = line.code.find("drop(") {
+            let name: String = line.code[p + "drop(".len()..]
+                .chars()
+                .take_while(|c| c.is_alphanumeric() || *c == '_')
+                .collect();
+            if let Some(pos) = held.iter().rposition(|(n, _, _)| *n == name) {
+                held.remove(pos);
+            } else if !held.is_empty() {
+                held.pop();
+            }
+        }
+        let mut from = 0usize;
+        while let Some(at) = line.code[from..].find(".lock()") {
+            let at = from + at;
+            from = at + ".lock()".len();
+            let recv = receiver_before(&line.code, at);
+            let rank = LOCK_ORDER
+                .iter()
+                .find(|(n, _)| *n == recv)
+                .map(|&(_, r)| r);
+            if let Some((top_name, top_rank, _)) = held.last() {
+                let ordered = match (rank, top_rank) {
+                    (Some(r), Some(t)) => r > *t,
+                    // A lock outside the table nested under anything,
+                    // or anything nested under an unranked lock, is a
+                    // violation: the table must name every lock that
+                    // participates in nesting.
+                    _ => false,
+                };
+                if !ordered && !window_has_leading(file, idx, "lint:allow(lock_order") {
+                    findings.push(Finding {
+                        file: file.rel_path.clone(),
+                        line: idx + 1,
+                        rule: "lock-order",
+                        msg: format!(
+                            "lock `{recv}` (rank {rank:?}) acquired while `{top_name}` \
+                             (rank {top_rank:?}) is held; declared order violated"
+                        ),
+                    });
+                }
+            }
+            if is_held_binding(&line.code, from) {
+                held.push((recv, rank, line.depth_end));
+            }
+        }
+    }
+}
+
+/// Extract the receiver identifier immediately before a `.lock()` call
+/// at byte offset `dot`: walks back over balanced `()` / `[]` groups
+/// and path/field chains, returning the last path component
+/// (`self.reservoir` → `reservoir`, `registry()` → `registry`).
+fn receiver_before(code: &str, dot: usize) -> String {
+    let bytes = code.as_bytes();
+    let mut i = dot;
+    // Walk left over one balanced trailing group, e.g. `registry()`.
+    while i > 0 && (bytes[i - 1] == b')' || bytes[i - 1] == b']') {
+        let close = bytes[i - 1];
+        let open = if close == b')' { b'(' } else { b'[' };
+        let mut depth = 0i32;
+        while i > 0 {
+            i -= 1;
+            if bytes[i] == close {
+                depth += 1;
+            } else if bytes[i] == open {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+        }
+    }
+    let end = i;
+    while i > 0 && (bytes[i - 1].is_ascii_alphanumeric() || bytes[i - 1] == b'_') {
+        i -= 1;
+    }
+    code[i..end].to_string()
+}
+
+/// True when the `.lock()` call at hand is a guard *binding*: the line
+/// is a `let` statement and the lock is immediately unwrapped and bound
+/// (`.unwrap();` or `.unwrap_or_else(..);`), so the guard outlives the
+/// statement. Anything else (further chained calls, expression
+/// position) is a temporary whose guard dies at the semicolon.
+fn is_held_binding(code: &str, after_lock: usize) -> bool {
+    if !code.trim_start().starts_with("let ") {
+        return false;
+    }
+    let rest = &code[after_lock..];
+    for unwrap in [".unwrap()", ".expect(\"\")"] {
+        if let Some(r) = rest.strip_prefix(unwrap) {
+            return r.trim_start().starts_with(';');
+        }
+    }
+    if let Some(r) = rest.strip_prefix(".unwrap_or_else(") {
+        // Skip the balanced closure argument.
+        let bytes = r.as_bytes();
+        let mut depth = 1i32;
+        for (j, &b) in bytes.iter().enumerate() {
+            if b == b'(' {
+                depth += 1;
+            } else if b == b')' {
+                depth -= 1;
+                if depth == 0 {
+                    return r[j + 1..].trim_start().starts_with(';');
+                }
+            }
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::scan::scan;
+
+    #[test]
+    fn receiver_extraction() {
+        let code = "let g = self.reservoir.lock().unwrap();";
+        let at = code.find(".lock()").unwrap();
+        assert_eq!(receiver_before(code, at), "reservoir");
+        let code2 = "let mut reg = registry().lock().unwrap();";
+        assert_eq!(receiver_before(code2, code2.find(".lock()").unwrap()), "registry");
+        let code3 = "slots[i].lock().unwrap();";
+        assert_eq!(receiver_before(code3, code3.find(".lock()").unwrap()), "slots");
+    }
+
+    #[test]
+    fn held_vs_temporary_bindings() {
+        let code = "let g = self.hypers.lock().unwrap();";
+        let after = code.find(".lock()").unwrap() + ".lock()".len();
+        assert!(is_held_binding(code, after));
+        let tmp = "let h = self.hypers.lock().unwrap().clone();";
+        let after = tmp.find(".lock()").unwrap() + ".lock()".len();
+        assert!(!is_held_binding(tmp, after));
+        let poisoned = "let rx = rx.lock().unwrap_or_else(|e| e.into_inner());";
+        let after = poisoned.find(".lock()").unwrap() + ".lock()".len();
+        assert!(is_held_binding(poisoned, after));
+        let expr = "self.state.lock().unwrap().pending += 1;";
+        let after = expr.find(".lock()").unwrap() + ".lock()".len();
+        assert!(!is_held_binding(expr, after));
+    }
+
+    #[test]
+    fn ordering_counts_accumulate() {
+        let f = scan(
+            "t.rs",
+            "a.store(1, Ordering::Relaxed);\nb.load(Ordering::Acquire); // ORDERING: pairs with store",
+        );
+        let mut out = Vec::new();
+        let c = ordering_audit(&f, false, &mut out);
+        assert_eq!(c.relaxed, 1);
+        assert_eq!(c.acquire, 1);
+        assert!(out.is_empty(), "{out:?}");
+    }
+}

@@ -1,0 +1,321 @@
+//! A lightweight lexical scanner for Rust source: the substrate the
+//! [`rules`](super::rules) run on.
+//!
+//! This is deliberately *not* a parser. The correctness analyzer needs
+//! four things done exactly — comment/string stripping (so a deny
+//! pattern inside a string literal or a doc comment never fires), brace
+//! depth (so scopes and function bodies can be delimited), `#[cfg(test)]`
+//! module tracking (test code is exempt from the production rules), and
+//! per-line comment text (so `SAFETY:` / `ORDERING:` / `lint:` markers
+//! can be matched) — and nothing else. Everything token-level beyond
+//! that (raw strings, char-vs-lifetime `'`, nested block comments,
+//! escapes) is handled so the four rule families never misfire on
+//! lexical look-alikes.
+
+/// One scanned source line.
+#[derive(Debug, Clone)]
+pub struct Line {
+    /// The line's code with comments removed and string/char-literal
+    /// *contents* blanked (delimiters kept). Rule patterns match here.
+    pub code: String,
+    /// The line's comment text (contents of `//`, `///`, and any
+    /// `/* .. */` parts, block comments contributing to every line they
+    /// span). Marker patterns match here.
+    pub comment: String,
+    /// Brace depth at the start of the line (code braces only).
+    pub depth_start: u32,
+    /// Brace depth at the end of the line.
+    pub depth_end: u32,
+    /// True inside a `#[cfg(test)]` module (attribute line included):
+    /// production rules skip these lines.
+    pub in_test: bool,
+}
+
+/// A scanned file: the unit the rules consume.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Path relative to the crate source root, `/`-separated.
+    pub rel_path: String,
+    /// Scanned lines, in order.
+    pub lines: Vec<Line>,
+}
+
+/// Cross-line lexer mode.
+enum Mode {
+    Code,
+    /// Inside `/* .. */`, with nesting level (Rust block comments nest).
+    Block(u32),
+    /// Inside a `"` string literal.
+    Str,
+    /// Inside a raw string `r##"`, with the closing hash count.
+    RawStr(u32),
+}
+
+/// Scan `src` into lines of separated code and comment text with brace
+/// depth and test-module tracking.
+pub fn scan(rel_path: &str, src: &str) -> SourceFile {
+    let mut mode = Mode::Code;
+    let mut depth: u32 = 0;
+    let mut lines = Vec::new();
+    // `#[cfg(test)]` seen; the next opened brace starts the test region.
+    let mut pending_cfg_test = false;
+    // Depth inside the active test region (`0` = none).
+    let mut test_region_depth: u32 = 0;
+
+    for raw in src.lines() {
+        let depth_start = depth;
+        let mut code = String::with_capacity(raw.len());
+        let mut comment = String::new();
+        let chars: Vec<char> = raw.chars().collect();
+        let mut i = 0usize;
+        while i < chars.len() {
+            let c = chars[i];
+            match mode {
+                Mode::Code => {
+                    if c == '/' && chars.get(i + 1) == Some(&'/') {
+                        comment.push_str(&raw_tail(&chars, i + 2));
+                        break;
+                    }
+                    if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        mode = Mode::Block(1);
+                        i += 2;
+                        continue;
+                    }
+                    if c == '"' {
+                        code.push('"');
+                        mode = Mode::Str;
+                        i += 1;
+                        continue;
+                    }
+                    if c == 'r' && !prev_is_ident(&code) {
+                        // Possible raw string: `r"` or `r#..#"`.
+                        let mut j = i + 1;
+                        let mut hashes = 0u32;
+                        while chars.get(j) == Some(&'#') {
+                            hashes += 1;
+                            j += 1;
+                        }
+                        if chars.get(j) == Some(&'"') {
+                            code.push('"');
+                            mode = Mode::RawStr(hashes);
+                            i = j + 1;
+                            continue;
+                        }
+                    }
+                    if c == '\'' {
+                        // Char literal vs lifetime: a backslash or a
+                        // closing quote two ahead means char literal.
+                        if chars.get(i + 1) == Some(&'\\') {
+                            // Escaped char literal: skip to closing quote.
+                            let mut j = i + 2;
+                            if chars.get(j).is_some() {
+                                j += 1; // the escaped character
+                            }
+                            while j < chars.len() && chars[j] != '\'' {
+                                j += 1;
+                            }
+                            code.push('\'');
+                            code.push('\'');
+                            i = j + 1;
+                            continue;
+                        }
+                        if chars.get(i + 2) == Some(&'\'') {
+                            code.push('\'');
+                            code.push('\'');
+                            i += 3;
+                            continue;
+                        }
+                        // Lifetime (or stray quote): keep as code.
+                        code.push('\'');
+                        i += 1;
+                        continue;
+                    }
+                    if c == '{' {
+                        depth += 1;
+                    }
+                    if c == '}' {
+                        depth = depth.saturating_sub(1);
+                        // Leaving the test region?
+                        if test_region_depth > 0 && depth < test_region_depth {
+                            // Mark the closing line below (flag still set
+                            // when the line record is built).
+                        }
+                    }
+                    code.push(c);
+                    i += 1;
+                }
+                Mode::Block(level) => {
+                    if c == '*' && chars.get(i + 1) == Some(&'/') {
+                        if level == 1 {
+                            mode = Mode::Code;
+                        } else {
+                            mode = Mode::Block(level - 1);
+                        }
+                        i += 2;
+                        continue;
+                    }
+                    if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        mode = Mode::Block(level + 1);
+                        i += 2;
+                        continue;
+                    }
+                    comment.push(c);
+                    i += 1;
+                }
+                Mode::Str => {
+                    if c == '\\' {
+                        i += 2; // skip the escaped character
+                        continue;
+                    }
+                    if c == '"' {
+                        code.push('"');
+                        mode = Mode::Code;
+                    }
+                    i += 1;
+                }
+                Mode::RawStr(hashes) => {
+                    if c == '"' {
+                        let mut ok = true;
+                        for k in 0..hashes as usize {
+                            if chars.get(i + 1 + k) != Some(&'#') {
+                                ok = false;
+                                break;
+                            }
+                        }
+                        if ok {
+                            code.push('"');
+                            mode = Mode::Code;
+                            i += 1 + hashes as usize;
+                            continue;
+                        }
+                    }
+                    i += 1;
+                }
+            }
+        }
+
+        // Test-region bookkeeping (on the stripped code).
+        let mut in_test = test_region_depth > 0;
+        if code.contains("#[cfg(test)]") {
+            pending_cfg_test = true;
+            in_test = true;
+        } else if pending_cfg_test && depth > depth_start {
+            // First brace after the attribute opens the test module.
+            test_region_depth = depth_start + 1;
+            pending_cfg_test = false;
+            in_test = true;
+        } else if pending_cfg_test {
+            // Attribute not yet attached to a braced item (e.g. the
+            // `mod tests` line split); keep waiting, mark the gap.
+            in_test = true;
+        }
+        if test_region_depth > 0 && depth < test_region_depth {
+            // This line closed the test module; it is still test code.
+            in_test = true;
+            test_region_depth = 0;
+        }
+
+        lines.push(Line { code, comment, depth_start, depth_end: depth, in_test });
+    }
+    SourceFile { rel_path: rel_path.replace('\\', "/"), lines }
+}
+
+fn raw_tail(chars: &[char], from: usize) -> String {
+    chars[from.min(chars.len())..].iter().collect()
+}
+
+fn prev_is_ident(code: &str) -> bool {
+    code.chars().last().is_some_and(|p| p.is_alphanumeric() || p == '_')
+}
+
+/// True when `line`'s code contains `word` as a standalone word (not a
+/// substring of a longer identifier).
+pub fn code_has_word(code: &str, word: &str) -> bool {
+    find_word(code, word, 0).is_some()
+}
+
+/// Byte offset of the next standalone occurrence of `word` in `code` at
+/// or after `from`. A boundary is only required on a side where the
+/// pattern itself ends in an identifier character — `.clone(` matches
+/// after any receiver, while `unsafe` must not match `not_unsafe_fn`.
+pub fn find_word(code: &str, word: &str, from: usize) -> Option<usize> {
+    let bytes = code.as_bytes();
+    let first_ident = word.as_bytes().first().is_some_and(|&b| is_ident_byte(b));
+    let last_ident = word.as_bytes().last().is_some_and(|&b| is_ident_byte(b));
+    let mut start = from;
+    while let Some(pos) = code.get(start..).and_then(|s| s.find(word)) {
+        let at = start + pos;
+        let before_ok = !first_ident || at == 0 || !is_ident_byte(bytes[at - 1]);
+        let end = at + word.len();
+        let after_ok = !last_ident || end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if before_ok && after_ok {
+            return Some(at);
+        }
+        start = at + 1;
+    }
+    None
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_stripped() {
+        let f = scan(
+            "t.rs",
+            "let x = \"unsafe Ordering::SeqCst { }\"; // unsafe in comment\nlet y = 1;",
+        );
+        assert!(!f.lines[0].code.contains("unsafe"));
+        assert!(!f.lines[0].code.contains('{'));
+        assert!(f.lines[0].comment.contains("unsafe in comment"));
+        assert_eq!(f.lines[0].depth_end, 0);
+        assert_eq!(f.lines[1].code.trim(), "let y = 1;");
+    }
+
+    #[test]
+    fn raw_strings_and_char_literals_do_not_confuse_depth() {
+        let src = "let a = r#\"{ } \"quoted\" { \"#;\nlet b = '{';\nlet c = '}';\nlet l: &'static str = \"x\";\nfn f() { let q = '\\''; }";
+        let f = scan("t.rs", src);
+        for l in &f.lines[..4] {
+            assert_eq!(l.depth_end, 0, "line {:?}", l.code);
+        }
+        assert_eq!(f.lines[4].depth_end, 0);
+        assert!(f.lines[3].code.contains("&'static"));
+    }
+
+    #[test]
+    fn block_comments_span_lines_and_nest() {
+        let src = "/* outer { /* inner } */ still } comment */ let x = 1; { }";
+        let f = scan("t.rs", src);
+        assert!(f.lines[0].comment.contains("still"));
+        assert!(f.lines[0].code.contains("let x = 1;"));
+        assert_eq!(f.lines[0].depth_end, 0);
+        let f2 = scan("t.rs", "/* a\nb { }\nc */ fn g() {");
+        assert_eq!(f2.lines[1].depth_end, 0);
+        assert!(f2.lines[1].comment.contains('b'));
+        assert_eq!(f2.lines[2].depth_end, 1);
+    }
+
+    #[test]
+    fn cfg_test_modules_are_flagged() {
+        let src = "fn prod() {}\n#[cfg(test)]\nmod tests {\n    fn t() { let x = 1; }\n}\nfn prod2() {}";
+        let f = scan("t.rs", src);
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[1].in_test, "attribute line");
+        assert!(f.lines[2].in_test && f.lines[3].in_test && f.lines[4].in_test);
+        assert!(!f.lines[5].in_test, "code after the test module is production");
+    }
+
+    #[test]
+    fn word_matching_requires_boundaries() {
+        assert!(code_has_word("unsafe {", "unsafe"));
+        assert!(!code_has_word("not_unsafe_fn()", "unsafe"));
+        assert!(code_has_word("x.clone();", ".clone("));
+        assert_eq!(find_word("a unsafe b unsafe", "unsafe", 9), Some(11));
+    }
+}

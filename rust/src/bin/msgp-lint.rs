@@ -1,0 +1,55 @@
+//! `msgp-lint` — the in-tree correctness analyzer, run as a blocking
+//! CI gate (`cargo run --release --bin msgp-lint`).
+//!
+//! Walks the crate's own source (`rust/src`, or a root passed as the
+//! first argument) and enforces the four rule families from
+//! [`msgp::analysis`]: unsafe-audit (+ registry census),
+//! atomic-ordering audit, hot-path allocation lint, and lock-order
+//! audit. Prints a per-family summary and every finding; exits
+//! non-zero when findings exist, so CI fails closed.
+
+use msgp::analysis::{analyze_crate, HANDOFF_FILES, LOCK_ORDER};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let root = std::env::args().nth(1).map(PathBuf::from).unwrap_or_else(|| {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/src")
+    });
+    let report = match analyze_crate(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("msgp-lint: cannot walk {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    println!("msgp-lint: scanned {} files under {}", report.files.len(), root.display());
+    println!(
+        "  unsafe sites (non-test): {} across {} file(s), registry-checked",
+        report.unsafe_total,
+        report.files.iter().filter(|f| f.unsafe_count > 0).count()
+    );
+    let o = report.ordering_total;
+    println!(
+        "  atomic orderings (non-test): {} total — SeqCst {}, AcqRel {}, Acquire {}, Release {}, Relaxed {}",
+        o.total(),
+        o.seqcst,
+        o.acqrel,
+        o.acquire,
+        o.release,
+        o.relaxed
+    );
+    println!("  handoff modules (all orderings annotated): {}", HANDOFF_FILES.join(", "));
+    println!("  lock-order table: {} receivers", LOCK_ORDER.len());
+
+    if report.findings.is_empty() {
+        println!("msgp-lint: clean");
+        return ExitCode::SUCCESS;
+    }
+    println!("msgp-lint: {} finding(s):", report.findings.len());
+    for f in &report.findings {
+        println!("  {f}");
+    }
+    ExitCode::FAILURE
+}

@@ -141,6 +141,9 @@ impl HttpServer {
             .name("msgp-http-accept".into())
             .spawn(move || {
                 for conn in listener.incoming() {
+                    // ORDERING: Acquire pairs with the AcqRel swap in
+                    // `shutdown_inner`, so the acceptor observes any
+                    // state written before shutdown was requested.
                     if acc_stop.load(Ordering::Acquire) {
                         break; // the wake-up connection lands here too
                     }
@@ -193,6 +196,10 @@ impl HttpServer {
     }
 
     fn shutdown_inner(&mut self) {
+        // ORDERING: AcqRel — the Release half publishes pre-shutdown
+        // writes to the acceptor's Acquire load; the Acquire half makes
+        // the second caller of a racing double-shutdown see the first
+        // caller's teardown before returning early.
         if self.stop.swap(true, Ordering::AcqRel) {
             return;
         }

@@ -74,6 +74,7 @@ pub fn stencil_1d(u: f64, n: usize) -> Stencil1D {
 /// of that tap. Tap order and arithmetic are identical to
 /// [`SparseInterp::build`], so streaming accumulators built tap-by-tap
 /// match a from-scratch batch build bit-for-bit up to summation order.
+// lint:hot
 pub fn for_each_tap(point: &[f64], grid: &Grid, mut f: impl FnMut(usize, f64, &[usize])) {
     /// Fixed scratch bound — keeps this per-point hot path free of heap
     /// allocation (the streaming ingester calls it once per observation).

@@ -95,6 +95,16 @@
 //!   mixes against it, recording p50/p99/p999 + sustained QPS into
 //!   `BENCH_fig9_serving.json`. See `examples/serving.rs`.
 //!
+//! * **In-tree correctness analyzer** ([`analysis`] + the `msgp-lint`
+//!   binary): a dependency-free static-analysis gate over the crate's
+//!   own source enforcing the invariants `rustc` cannot — audited
+//!   `unsafe` (SAFETY comments + a checked-in census), an
+//!   atomic-ordering policy (no bare `SeqCst`; annotated handoff
+//!   sites), allocation-free hot paths (`lint:hot` functions), and a
+//!   declared lock-acquisition order. CI runs it as a blocking step
+//!   and pairs it with nightly Miri / ThreadSanitizer jobs over the
+//!   concurrency suite. See `docs/ANALYSIS.md`.
+//!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-reproduction results.
 
@@ -102,7 +112,12 @@
 // iterator chains in the numeric kernels; keep clippy focused on the
 // lints that catch real defects.
 #![allow(clippy::needless_range_loop)]
+// Every unsafe operation must sit in its own audited `unsafe { .. }`
+// block, even inside `unsafe fn` — msgp-lint requires a SAFETY comment
+// per block, so the justification granularity matches the operation.
+#![deny(unsafe_op_in_unsafe_fn)]
 
+pub mod analysis;
 pub mod linalg;
 pub mod parallel;
 pub mod structure;

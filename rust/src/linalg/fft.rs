@@ -550,6 +550,7 @@ const PANEL: usize = 8;
 /// independent transforms over disjoint elements, so the parallel result
 /// is bit-identical to the serial one. With one thread (or a busy /
 /// nested pool) the serial path below runs unchanged.
+// lint:hot
 pub fn fftn_batch(
     data: &mut [C64],
     batch: usize,
@@ -564,6 +565,7 @@ pub fn fftn_batch(
 /// [`fftn_batch`] over only the first `upto` axes of each tensor — the
 /// rfft half-spectrum pipeline transforms the leading axes of the half
 /// tensor with this and handles the (half-length) last axis itself.
+// lint:hot
 fn fftn_batch_axes(
     data: &mut [C64],
     batch: usize,
@@ -790,6 +792,7 @@ pub fn split_packed_spectrum(z: &[C64], x_spec: &mut [C64], y_spec: &mut [C64]) 
 /// independent on the rfft path, so results are bit-identical across
 /// thread counts (the pair path chunks on pair boundaries for the same
 /// guarantee).
+// lint:hot
 pub fn apply_real_spectrum_batch<F: Fn(f64) -> f64 + Sync>(
     block: &[f64],
     out: &mut [f64],
@@ -839,6 +842,7 @@ pub fn apply_real_spectrum_batch<F: Fn(f64) -> f64 + Sync>(
 
 /// Serial kernel behind [`apply_real_spectrum_batch`] (also the per-task
 /// body of its parallel row split).
+// lint:hot
 fn apply_real_spectrum_serial<F: Fn(f64) -> f64>(
     block: &[f64],
     out: &mut [f64],
@@ -874,6 +878,7 @@ fn apply_real_spectrum_serial<F: Fn(f64) -> f64>(
 /// by the half-form spectrum, and invert the pipeline. Exactness rests
 /// on the conjugate-even symmetry of both the real input and the
 /// (symmetric-kernel) spectrum.
+// lint:hot
 fn apply_real_spectrum_rfft<F: Fn(f64) -> f64>(
     block: &[f64],
     out: &mut [f64],
@@ -920,9 +925,14 @@ fn apply_real_spectrum_rfft<F: Fn(f64) -> f64>(
         }
     }
     // --- leading axes transform the half tensor ---
-    let mut shape_h = shape.to_vec();
-    shape_h[d - 1] = h;
-    fftn_batch_axes(half, rows, &shape_h, d - 1, false, scratch);
+    // Half-form shape in a stack buffer: this runs once per structured
+    // MVM, and the grid rank never approaches the cap.
+    assert!(d <= 16, "tensor rank exceeds the rfft stack shape buffer");
+    let mut shape_h_buf = [0usize; 16];
+    shape_h_buf[..d].copy_from_slice(shape);
+    shape_h_buf[d - 1] = h;
+    let shape_h = &shape_h_buf[..d];
+    fftn_batch_axes(half, rows, shape_h, d - 1, false, scratch);
     // --- diagonal scale in half form: spec index (rest, k), k <= n/2 ---
     for row in half.chunks_exact_mut(rest * h) {
         for (r_idx, line) in row.chunks_exact_mut(h).enumerate() {
@@ -933,7 +943,7 @@ fn apply_real_spectrum_rfft<F: Fn(f64) -> f64>(
         }
     }
     // --- inverse: leading axes, then inverse rfft per line ---
-    fftn_batch_axes(half, rows, &shape_h, d - 1, true, scratch);
+    fftn_batch_axes(half, rows, shape_h, d - 1, true, scratch);
     for l in 0..lines {
         let x = &half[l * h..(l + 1) * h];
         let z = &mut packed[l * m2..(l + 1) * m2];
@@ -967,6 +977,7 @@ fn apply_real_spectrum_rfft<F: Fn(f64) -> f64>(
 /// transform — the batched kernel behind the exact Toeplitz and
 /// Kronecker-of-Toeplitz MVMs. `outer` counts line groups before the
 /// axis (batch folded in), `inner` is the trailing stride.
+// lint:hot
 pub(crate) fn apply_axis_spectrum_packed(
     data: &mut [C64],
     outer: usize,
@@ -1066,6 +1077,7 @@ pub(crate) fn apply_axis_spectrum_packed(
 /// Serial contiguous-group kernel of [`apply_axis_spectrum_packed`]
 /// (`inner == 1`): zero-pad each length-`n` line to the embedding length
 /// in cache-blocked panels, transform-scale-invert, truncate back.
+// lint:hot
 fn axis_spectrum_contiguous(
     data: &mut [C64],
     groups: usize,

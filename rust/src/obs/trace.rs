@@ -31,7 +31,7 @@
 //! explicit parent links: events on one `tid` nest by time containment.
 
 use std::cell::{Cell, OnceCell};
-use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::atomic::{fence, AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
@@ -51,13 +51,19 @@ static ENABLED: AtomicBool = AtomicBool::new(false);
 /// Enable or disable span capture process-wide. Spans already recorded
 /// stay in their rings (use [`clear`] to discard them).
 pub fn set_enabled(on: bool) {
-    ENABLED.store(on, Ordering::Release);
+    // ORDERING: Relaxed — a standalone on/off flag guarding no other
+    // memory; every recorded event is published by the ring's own
+    // seqlock protocol, not by this store.
+    ENABLED.store(on, Ordering::Relaxed);
 }
 
 /// Whether span capture is on. This is the whole disabled-path cost of
 /// an instrumented scope.
 #[inline(always)]
 pub fn enabled() -> bool {
+    // ORDERING: Relaxed — pairs with the Relaxed store in
+    // `set_enabled`; a stale read only starts/stops capture one event
+    // late, which the seqlock makes harmless.
     ENABLED.load(Ordering::Relaxed)
 }
 
@@ -113,6 +119,9 @@ impl SpanSite {
 
     /// Intern id, registering the name on first use.
     fn id(&self) -> u32 {
+        // ORDERING: Relaxed — the id is a self-contained integer; the
+        // name it indexes lives behind the `names()` mutex, and drains
+        // tolerate an id they cannot resolve yet by skipping the event.
         let id = self.id.load(Ordering::Relaxed);
         if id != 0 {
             return id;
@@ -120,12 +129,16 @@ impl SpanSite {
         let mut v = names().lock().unwrap();
         // Re-check under the lock: another thread may have registered
         // this site while we waited.
+        // ORDERING: Relaxed — the registration lock is held, so this
+        // read cannot race the store below.
         let id = self.id.load(Ordering::Relaxed);
         if id != 0 {
             return id;
         }
         v.push(self.name);
         let id = v.len() as u32;
+        // ORDERING: Relaxed — publication of the name itself happens
+        // through the mutex; this store only caches the index.
         self.id.store(id, Ordering::Relaxed);
         id
     }
@@ -159,17 +172,35 @@ impl Ring {
 
     /// Record one completed span. Wait-free; called only by the owning
     /// thread.
+    // lint:hot
     fn push(&self, id: u32, depth: u16, start_ns: u64, dur_ns: u64, arg: u64) {
+        // ORDERING: Relaxed — `head` is written only by this (owning)
+        // thread, so its own last store is always visible here.
         let e = self.head.load(Ordering::Relaxed);
         let base = (e as usize & (RING_CAP - 1)) * WORDS;
         let s = &self.slots;
-        // Seqlock write: odd marker, payload, even generation marker.
-        s[base].store(2 * e + 1, Ordering::Release);
+        // Seqlock write (Boehm fence discipline): odd marker, release
+        // fence, relaxed payload, even generation marker. The fence
+        // pairs with the reader's Acquire fence via the payload
+        // atomics: a reader observing any payload word written after
+        // the fence also observes the odd marker at its re-check, so a
+        // torn read is always detected. A Release store on the odd
+        // marker alone would NOT order it before later payload stores.
+        // ORDERING: Relaxed odd marker, ordered by the fence below.
+        s[base].store(2 * e + 1, Ordering::Relaxed);
+        // ORDERING: Release fence — see the seqlock note above.
+        fence(Ordering::Release);
+        // ORDERING: Relaxed payload — fenced above, published below.
         s[base + 1].store(((id as u64) << 16) | depth as u64, Ordering::Relaxed);
         s[base + 2].store(start_ns, Ordering::Relaxed);
         s[base + 3].store(dur_ns, Ordering::Relaxed);
         s[base + 4].store(arg, Ordering::Relaxed);
+        // ORDERING: Release pairs with the reader's Acquire load of the
+        // sequence word: a reader that sees `2*(e+1)` sees the whole
+        // payload written above.
         s[base].store(2 * (e + 1), Ordering::Release);
+        // ORDERING: Release pairs with the Acquire head load in
+        // `drain`/`clear`, publishing every slot at index < head.
         self.head.store(e + 1, Ordering::Release);
     }
 }
@@ -290,20 +321,31 @@ pub fn drain() -> Vec<SpanEvent> {
     let rings: Vec<std::sync::Arc<Ring>> = registry().lock().unwrap().clone();
     let mut events = Vec::new();
     for ring in &rings {
+        // ORDERING: Acquire pairs with the Release head store in
+        // `push`: every slot at index < head is fully published.
         let head = ring.head.load(Ordering::Acquire);
+        // ORDERING: Acquire pairs with the Release floor store in
+        // `clear`; a stale floor only un-hides already-valid events.
         let lo = head.saturating_sub(RING_CAP as u64).max(ring.floor.load(Ordering::Acquire));
         for e in lo..head {
             let base = (e as usize & (RING_CAP - 1)) * WORDS;
             let want = 2 * (e + 1);
+            // ORDERING: Acquire pairs with the writer's Release even-
+            // marker store: seeing `want` publishes the payload words.
             let seq1 = ring.slots[base].load(Ordering::Acquire);
             if seq1 != want {
                 continue; // being overwritten (or already lapped)
             }
+            // ORDERING: Relaxed payload, bracketed by seq Acquire + fence.
             let meta = ring.slots[base + 1].load(Ordering::Relaxed);
             let start_ns = ring.slots[base + 2].load(Ordering::Relaxed);
             let dur_ns = ring.slots[base + 3].load(Ordering::Relaxed);
             let arg = ring.slots[base + 4].load(Ordering::Relaxed);
-            if ring.slots[base].load(Ordering::Acquire) != want {
+            // ORDERING: Acquire fence + Relaxed re-check pair with the
+            // writer's odd-marker + Release fence: a torn payload read
+            // above cannot miss the changed sequence value here.
+            fence(Ordering::Acquire);
+            if ring.slots[base].load(Ordering::Relaxed) != want {
                 continue; // overwritten mid-read: payload untrusted
             }
             let id = (meta >> 16) as usize;
@@ -321,6 +363,8 @@ pub fn drain() -> Vec<SpanEvent> {
 pub fn clear() {
     let rings: Vec<std::sync::Arc<Ring>> = registry().lock().unwrap().clone();
     for ring in &rings {
+        // ORDERING: Acquire head read (pairs with push's Release) and
+        // Release floor store (pairs with drain's Acquire floor load).
         ring.floor.store(ring.head.load(Ordering::Acquire), Ordering::Release);
     }
 }
@@ -489,7 +533,11 @@ mod tests {
     fn ring_overflow_keeps_newest_events() {
         let _g = lock();
         set_enabled(true);
-        for _ in 0..RING_CAP + 64 {
+        // Miri interprets every atomic store; flooding a full ring
+        // would dominate the run, and 64 events already exercise the
+        // push/drain protocol end to end.
+        let flood = if cfg!(miri) { 64 } else { RING_CAP + 64 };
+        for _ in 0..flood {
             let _s = crate::span!("test.flood");
         }
         {

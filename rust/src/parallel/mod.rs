@@ -67,16 +67,23 @@ static ACTIVE_THREADS: AtomicUsize = AtomicUsize::new(0);
 /// only changes how many cores do the work.
 pub fn configure(cfg: ParallelConfig) {
     let t = if cfg.threads == 0 { resolve_default() } else { cfg.threads.clamp(1, MAX_WORKERS) };
-    ACTIVE_THREADS.store(t, Ordering::SeqCst);
+    // ORDERING: Relaxed — a standalone config cell; it guards no other
+    // memory, and each region re-reads it at submit time. Racing
+    // configure/threads calls just resolve the same default twice.
+    ACTIVE_THREADS.store(t, Ordering::Relaxed);
 }
 
 /// The effective thread count for parallel regions (>= 1). Resolves and
 /// caches the `MSGP_THREADS` / hardware default on first call.
 pub fn threads() -> usize {
-    match ACTIVE_THREADS.load(Ordering::SeqCst) {
+    // ORDERING: Relaxed — see `configure`: the cell is self-contained,
+    // so no acquire/release pairing is needed to read or cache it.
+    match ACTIVE_THREADS.load(Ordering::Relaxed) {
         0 => {
             let t = resolve_default();
-            ACTIVE_THREADS.store(t, Ordering::SeqCst);
+            // ORDERING: Relaxed — idempotent cache fill (same value on
+            // every thread that races here).
+            ACTIVE_THREADS.store(t, Ordering::Relaxed);
             t
         }
         t => t,
@@ -228,7 +235,14 @@ pub struct SendSlicePtr<T> {
     len: usize,
 }
 
+// SAFETY: the pointer is derived from an exclusive `&mut [T]` borrow
+// that the scoped-pool contract keeps alive (and un-aliased by the
+// owner) until every task finished; sending it to pool threads is
+// sound for `T: Send` because element accesses stay disjoint.
 unsafe impl<T: Send> Send for SendSlicePtr<T> {}
+// SAFETY: shared use from several tasks is sound under the same
+// disjointness contract — each element is touched by at most one task,
+// so `&SendSlicePtr` hands out no overlapping `&mut` views.
 unsafe impl<T: Send> Sync for SendSlicePtr<T> {}
 
 impl<T> SendSlicePtr<T> {
@@ -255,7 +269,10 @@ impl<T> SendSlicePtr<T> {
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn range(&self, r: Range<usize>) -> &mut [T] {
         debug_assert!(r.start <= r.end && r.end <= self.len);
-        std::slice::from_raw_parts_mut(self.ptr.add(r.start), r.end - r.start)
+        // SAFETY: `r` is in bounds of the captured allocation per the
+        // function contract, and range-disjointness across tasks means
+        // this `&mut` view aliases no other live reference.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(r.start), r.end - r.start) }
     }
 
     /// Read element `i`.
@@ -267,7 +284,9 @@ impl<T> SendSlicePtr<T> {
         T: Copy,
     {
         debug_assert!(i < self.len);
-        *self.ptr.add(i)
+        // SAFETY: `i` is in bounds per the function contract and no
+        // concurrent task writes it, so the read is valid and unraced.
+        unsafe { *self.ptr.add(i) }
     }
 
     /// Write element `i`.
@@ -276,7 +295,9 @@ impl<T> SendSlicePtr<T> {
     /// `i` must be in bounds and written by at most one concurrent task.
     pub unsafe fn write(&self, i: usize, v: T) {
         debug_assert!(i < self.len);
-        *self.ptr.add(i) = v;
+        // SAFETY: `i` is in bounds per the function contract and owned
+        // by this task alone, so the write aliases no other access.
+        unsafe { *self.ptr.add(i) = v }
     }
 }
 
@@ -289,6 +310,9 @@ struct Job {
     f: *const (dyn Fn(usize) + Sync),
 }
 
+// SAFETY: the pointee is `Sync` (shared calls from any thread are
+// fine), and the submitter keeps it alive until the region drains, so
+// shipping the raw pointer to workers cannot outlive the referent.
 unsafe impl Send for Job {}
 
 /// Pool state behind one mutex: the current job, its chunked work queue
@@ -375,6 +399,10 @@ impl ThreadPool {
 
     /// Claim the submitter slot; `false` when another region is running.
     fn try_acquire(&self) -> bool {
+        // ORDERING: Acquire on success pairs with the Release store in
+        // `BusyGuard::drop`, so a new owner observes all pool-state
+        // writes of the previous region; Relaxed on failure — the loser
+        // runs inline and reads no pool state.
         self.shared.busy.compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed).is_ok()
     }
 
@@ -385,6 +413,9 @@ impl ThreadPool {
         struct BusyGuard<'a>(&'a Shared);
         impl Drop for BusyGuard<'_> {
             fn drop(&mut self) {
+                // ORDERING: Release pairs with the Acquire
+                // compare-exchange in `try_acquire`, publishing this
+                // region's pool-state writes to the next owner.
                 self.0.busy.store(false, Ordering::Release);
             }
         }
@@ -510,7 +541,9 @@ mod tests {
     /// whatever mix of workers ran them.
     #[test]
     fn run_tasks_fills_disjoint_ranges() {
-        let total = 10_000;
+        // Shrunk under Miri so the interpreted run stays fast while the
+        // disjoint-write aliasing pattern is still fully exercised.
+        let total = if cfg!(miri) { 512 } else { 10_000 };
         let mut out = vec![0u64; total];
         let ptr = SendSlicePtr::new(&mut out);
         for_each_range(total, 8, &|r| {
@@ -598,7 +631,7 @@ mod tests {
         let sum_with = |t: usize| -> u64 {
             configure(ParallelConfig { threads: t });
             assert!(threads() >= 1);
-            let total = 4096;
+            let total = if cfg!(miri) { 256 } else { 4096 };
             let mut out = vec![0u64; total];
             let ptr = SendSlicePtr::new(&mut out);
             for_each_range(total, 8, &|r| {

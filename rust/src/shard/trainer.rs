@@ -598,8 +598,8 @@ impl ShardedTrainer {
             let _ops = self.ops.lock().unwrap();
             let mut parts: Vec<(Vec<f64>, Vec<f64>, usize)> =
                 Vec::with_capacity(self.reservoirs.len());
-            for r in &self.reservoirs {
-                let g = r.lock().unwrap();
+            for reservoir in &self.reservoirs {
+                let g = reservoir.lock().unwrap();
                 parts.push((g.x.clone(), g.y.clone(), g.seen));
             }
             let (kernel, sigma2) = self.hypers.lock().unwrap().clone();

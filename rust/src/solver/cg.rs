@@ -161,6 +161,7 @@ impl CgWorkspace {
 /// * `precond(v, out)` computes `out = M^{-1} v` (pass an identity copy for
 ///   unpreconditioned CG).
 /// * `x` holds the initial guess on entry and the solution on exit.
+// lint:hot
 pub fn cg_solve(
     mut apply_a: impl FnMut(&[f64], &mut [f64]),
     mut precond: impl FnMut(&[f64], &mut [f64]),
@@ -326,6 +327,7 @@ impl BlockCgWorkspace {
 /// their width off `v.len()`). Compaction does not change any column's
 /// arithmetic: each column sees the identical scalar recurrence at
 /// every block composition.
+// lint:hot
 pub fn cg_solve_block(
     mut apply_a: impl FnMut(&[f64], &mut [f64]),
     mut precond: impl FnMut(&[f64], &mut [f64]),
@@ -352,21 +354,23 @@ pub fn cg_solve_block(
     }
     precond(&ws.r, &mut ws.z);
     ws.p.copy_from_slice(&ws.z);
+    // lint:allow(alloc, "per-solve result buffer, cols words; the per-
+    // iteration loop below is allocation-free")
     let mut col_iters = vec![0usize; cols];
     ws.live.clear();
     for c in 0..cols {
-        let span = c * n..(c + 1) * n;
-        let bc = &b[span.clone()];
+        let (lo, hi) = (c * n, (c + 1) * n);
+        let bc = &b[lo..hi];
         ws.bnorm[c] = dot(bc, bc).sqrt();
         if ws.bnorm[c] == 0.0 {
             // Zero RHS: solution is zero, converged immediately.
-            x[span.clone()].fill(0.0);
+            x[lo..hi].fill(0.0);
             ws.rel[c] = 0.0;
             ws.active[c] = false;
             continue;
         }
-        ws.rz[c] = dot(&ws.r[span.clone()], &ws.z[span.clone()]);
-        ws.rel[c] = dot(&ws.r[span.clone()], &ws.r[span.clone()]).sqrt() / ws.bnorm[c];
+        ws.rz[c] = dot(&ws.r[lo..hi], &ws.z[lo..hi]);
+        ws.rel[c] = dot(&ws.r[lo..hi], &ws.r[lo..hi]).sqrt() / ws.bnorm[c];
         ws.active[c] = ws.rel[c] > opts.tol;
         if ws.active[c] {
             ws.live.push(c);
@@ -384,9 +388,9 @@ pub fn cg_solve_block(
         apply_cols += nl;
         for j in 0..nl {
             let c = ws.live[j];
-            let cspan = j * n..(j + 1) * n;
-            let span = c * n..(c + 1) * n;
-            let pap = dot(&ws.pc[cspan.clone()], &ws.apc[cspan.clone()]);
+            let (clo, chi) = (j * n, (j + 1) * n);
+            let (lo, hi) = (c * n, (c + 1) * n);
+            let pap = dot(&ws.pc[clo..chi], &ws.apc[clo..chi]);
             if pap <= 0.0 || !pap.is_finite() {
                 // This column's operator is not SPD to working precision;
                 // freeze it with what it has (mirrors cg_solve's bail).
@@ -395,9 +399,9 @@ pub fn cg_solve_block(
                 continue;
             }
             let alpha = ws.rz[c] / pap;
-            axpy(&mut x[span.clone()], alpha, &ws.pc[cspan.clone()]);
-            axpy(&mut ws.r[span.clone()], -alpha, &ws.apc[cspan.clone()]);
-            ws.rel[c] = dot(&ws.r[span.clone()], &ws.r[span.clone()]).sqrt() / ws.bnorm[c];
+            axpy(&mut x[lo..hi], alpha, &ws.pc[clo..chi]);
+            axpy(&mut ws.r[lo..hi], -alpha, &ws.apc[clo..chi]);
+            ws.rel[c] = dot(&ws.r[lo..hi], &ws.r[lo..hi]).sqrt() / ws.bnorm[c];
             if ws.rel[c] <= opts.tol {
                 ws.active[c] = false;
                 col_iters[c] = iters + 1;
@@ -417,12 +421,12 @@ pub fn cg_solve_block(
         precond(&ws.rc[..nl * n], &mut ws.zc[..nl * n]);
         for j in 0..nl {
             let c = ws.live[j];
-            let cspan = j * n..(j + 1) * n;
-            let rz_new = dot(&ws.rc[cspan.clone()], &ws.zc[cspan.clone()]);
+            let (clo, chi) = (j * n, (j + 1) * n);
+            let rz_new = dot(&ws.rc[clo..chi], &ws.zc[clo..chi]);
             let beta = rz_new / ws.rz[c];
             ws.rz[c] = rz_new;
             for (pi, &zi) in
-                ws.p[c * n..(c + 1) * n].iter_mut().zip(&ws.zc[cspan.clone()])
+                ws.p[c * n..(c + 1) * n].iter_mut().zip(&ws.zc[clo..chi])
             {
                 *pi = zi + beta * *pi;
             }
@@ -438,6 +442,7 @@ pub fn cg_solve_block(
     BlockCgResult {
         block_iters: iters,
         col_iters,
+        // lint:allow(alloc, "result assembly, once per solve")
         rel_residuals: ws.rel.clone(),
         converged,
         apply_cols,

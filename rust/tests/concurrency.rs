@@ -1,0 +1,230 @@
+//! Contention regression tests for the crate's concurrency
+//! primitives: the hot-swap model slots readers race against trainer
+//! publishes, the per-thread seqlock trace rings race drains against
+//! writers, and the scoped thread pool is entered from many threads at
+//! once. These are the suites the nightly ThreadSanitizer CI job runs
+//! (see `docs/ANALYSIS.md`); under TSan any ordering regression in the
+//! swap or seqlock paths shows up as a data-race report, and natively
+//! the version-encoding assertions below catch torn or mixed-version
+//! snapshots.
+//!
+//! Excluded under Miri: these tests are contention loops tuned for
+//! real parallel hardware, and the lib tests already cover the same
+//! primitives at Miri-friendly sizes.
+#![cfg(not(miri))]
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+
+use msgp::coordinator::state::{ModelSlot, ServingModel, ShardSlots};
+use msgp::grid::Grid;
+use msgp::obs::trace as tracer;
+
+/// A tiny 1-D serving model whose every field encodes `version`, so a
+/// reader can detect a torn (mixed-version) snapshot: `u_mean` and
+/// `nu_u` are constant-`version` vectors, and `kss` / `sigma2` carry
+/// the same value shifted.
+fn versioned_model(version: u64) -> ServingModel {
+    let grid = Grid::covering(&[0.0, 1.0], 1, &[8], 2);
+    let m = grid.m();
+    let v = version as f64;
+    ServingModel::from_parts(grid, vec![v; m], vec![v; m], v + 1.0, v + 0.5)
+}
+
+/// Assert one snapshot is internally consistent and return its version.
+fn decode_version(model: &ServingModel) -> u64 {
+    let v = model.u_mean[0];
+    assert!(
+        model.u_mean.iter().all(|&x| x == v),
+        "torn u_mean: mixed versions in one snapshot"
+    );
+    assert!(
+        model.nu_u.iter().all(|&x| x == v),
+        "torn snapshot: nu_u version {} != u_mean version {v}",
+        model.nu_u[0]
+    );
+    assert_eq!(model.kss, v + 1.0, "torn snapshot: kss from another version");
+    assert_eq!(model.sigma2, v + 0.5, "torn snapshot: sigma2 from another version");
+    v as u64
+}
+
+/// One writer hot-swaps versioned models into a [`ModelSlot`] while
+/// reader threads continuously snapshot it. Every snapshot must be
+/// internally consistent (a single version across all fields) and each
+/// reader must observe versions in non-decreasing order — the
+/// serializable behavior the `RwLock<Arc<_>>` swap path promises.
+#[test]
+fn model_slot_swap_under_contention() {
+    const SWAPS: u64 = 2_000;
+    const READERS: usize = 4;
+    let slot = Arc::new(ModelSlot::new(versioned_model(0)));
+    let done = Arc::new(AtomicBool::new(false));
+    let mut readers = Vec::new();
+    for _ in 0..READERS {
+        let slot = Arc::clone(&slot);
+        let done = Arc::clone(&done);
+        readers.push(thread::spawn(move || {
+            let mut last = 0u64;
+            let mut seen = 0u64;
+            while !done.load(Ordering::Acquire) {
+                let snap = slot.get();
+                let v = decode_version(&snap);
+                assert!(v >= last, "version went backwards: {v} < {last}");
+                last = v;
+                seen += 1;
+            }
+            seen
+        }));
+    }
+    for v in 1..=SWAPS {
+        let old = slot.swap(versioned_model(v));
+        decode_version(&old);
+    }
+    done.store(true, Ordering::Release);
+    for r in readers {
+        let seen = r.join().expect("reader panicked");
+        assert!(seen > 0, "reader never snapshotted the slot");
+    }
+    assert_eq!(decode_version(&slot.get()), SWAPS);
+}
+
+/// Per-shard writers publish independently into a [`ShardSlots`] table
+/// while readers sweep all shards. Versions are encoded per shard
+/// (shard `s` publishes `s * STRIDE + k`), so a snapshot routed to the
+/// wrong slot or torn across a swap fails the decode.
+#[test]
+fn shard_slots_swap_under_contention() {
+    const SHARDS: usize = 4;
+    const SWAPS: u64 = 500;
+    const STRIDE: u64 = 1 << 20;
+    let initial: Vec<ServingModel> =
+        (0..SHARDS).map(|s| versioned_model(s as u64 * STRIDE)).collect();
+    let slots = Arc::new(ShardSlots::new(initial));
+    assert_eq!(slots.len(), SHARDS);
+    let done = Arc::new(AtomicBool::new(false));
+    let mut threads = Vec::new();
+    for s in 0..SHARDS {
+        let slots = Arc::clone(&slots);
+        threads.push(thread::spawn(move || {
+            for k in 1..=SWAPS {
+                slots.swap(s, versioned_model(s as u64 * STRIDE + k));
+            }
+        }));
+    }
+    for _ in 0..2 {
+        let slots = Arc::clone(&slots);
+        let done = Arc::clone(&done);
+        threads.push(thread::spawn(move || {
+            let mut last = [0u64; SHARDS];
+            while !done.load(Ordering::Acquire) {
+                for s in 0..SHARDS {
+                    let v = decode_version(&slots.get(s));
+                    assert_eq!(
+                        (v / STRIDE) as usize,
+                        s,
+                        "snapshot from shard {} surfaced in slot {s}",
+                        v / STRIDE
+                    );
+                    assert!(v >= last[s], "shard {s} version went backwards");
+                    last[s] = v;
+                }
+            }
+        }));
+    }
+    // Writers are the first SHARDS handles; stop readers once they join.
+    for (i, t) in threads.into_iter().enumerate() {
+        t.join().expect("thread panicked");
+        if i == SHARDS - 1 {
+            done.store(true, Ordering::Release);
+        }
+    }
+    for s in 0..SHARDS {
+        assert_eq!(decode_version(&slots.get(s)), s as u64 * STRIDE + SWAPS);
+    }
+}
+
+/// Hammer the per-thread seqlock trace rings: writer threads record
+/// spans flat out while the main thread repeatedly drains. The seqlock
+/// protocol must never surface a torn event — every drained event
+/// carries a registered name, a plausible depth, and a duration that
+/// does not precede its start.
+#[test]
+fn seqlock_drain_under_writers() {
+    const WRITERS: usize = 4;
+    const SPANS_PER_WRITER: usize = 20_000;
+    tracer::set_enabled(true);
+    let mut writers = Vec::new();
+    for _ in 0..WRITERS {
+        writers.push(thread::spawn(move || {
+            for i in 0..SPANS_PER_WRITER {
+                let _outer = msgp::span!("conc.outer");
+                if i % 3 == 0 {
+                    let _inner = msgp::span!("conc.inner");
+                }
+            }
+        }));
+    }
+    let mut drains = 0usize;
+    let mut total = 0usize;
+    while writers.iter().any(|w| !w.is_finished()) || drains == 0 {
+        let events = tracer::drain();
+        for e in &events {
+            assert!(
+                e.name == "conc.outer" || e.name == "conc.inner",
+                "drained an event with an unregistered/foreign name: {:?}",
+                e.name
+            );
+            assert!(e.depth >= 1 && e.depth <= 2, "implausible depth {}", e.depth);
+            assert!((e.tid as usize) < WRITERS + 2, "implausible tid {}", e.tid);
+        }
+        total += events.len();
+        drains += 1;
+    }
+    for w in writers {
+        w.join().expect("writer panicked");
+    }
+    // Final drain after all writers quiesce: the newest RING_CAP events
+    // per ring are intact and readable.
+    let events = tracer::drain();
+    assert!(!events.is_empty(), "quiescent drain saw no events");
+    for w in events.windows(2) {
+        assert!(w[0].start_ns <= w[1].start_ns, "drain output not sorted");
+    }
+    total += events.len();
+    assert!(total > 0, "no events across {drains} contended drains");
+    tracer::set_enabled(false);
+    tracer::clear();
+}
+
+/// Enter the shared thread pool from many threads at once: each entrant
+/// sums a distinct slice range through `for_each_range`. Exactly one
+/// entrant holds the pool per region (`try_acquire` / `BusyGuard`);
+/// the rest run inline — either way the arithmetic must be exact.
+#[test]
+fn pool_regions_from_many_threads() {
+    const ENTRANTS: usize = 8;
+    const N: usize = 100_000;
+    let mut threads = Vec::new();
+    for e in 0..ENTRANTS {
+        threads.push(thread::spawn(move || {
+            let data: Vec<u64> = (0..N as u64).map(|i| i + e as u64).collect();
+            let partials: Vec<std::sync::Mutex<u64>> =
+                (0..16).map(|_| std::sync::Mutex::new(0)).collect();
+            let fanned = msgp::parallel::for_each_range(N, 16, &|r| {
+                let s: u64 = data[r.clone()].iter().sum();
+                let mut cell = partials[r.start * 16 / N].lock().unwrap();
+                *cell += s;
+            });
+            // 0 = ran inline (pool busy with a sibling entrant), else
+            // the full fan-out; both are correct under contention.
+            assert!(fanned == 0 || fanned == 16, "unexpected fan-out {fanned}");
+            let got: u64 = partials.iter().map(|c| *c.lock().unwrap()).sum();
+            let want: u64 = data.iter().sum();
+            assert_eq!(got, want, "entrant {e} lost or duplicated a chunk");
+        }));
+    }
+    for t in threads {
+        t.join().expect("pool entrant panicked");
+    }
+}

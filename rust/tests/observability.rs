@@ -56,8 +56,10 @@ fn sample_of(prom: &str, name: &str) -> Option<u64> {
 #[test]
 fn concurrent_hammer_preserves_exact_totals_and_prom_validity() {
     const THREADS: usize = 8;
-    const PER_THREAD: u64 = 10_000;
-    const LATENCIES: u64 = 1_000;
+    // Miri explores the same interleavings at a fraction of the iteration
+    // count; keep the native run a real hammer.
+    let per_thread: u64 = if cfg!(miri) { 100 } else { 10_000 };
+    let latencies: u64 = if cfg!(miri) { 20 } else { 1_000 };
     let metrics = Arc::new(Metrics::with_shards(2));
     let stop = Arc::new(AtomicBool::new(false));
 
@@ -96,11 +98,11 @@ fn concurrent_hammer_preserves_exact_totals_and_prom_validity() {
         .map(|t| {
             let m = metrics.clone();
             thread::spawn(move || {
-                for i in 0..PER_THREAD {
+                for i in 0..per_thread {
                     m.submitted.fetch_add(1, Ordering::Relaxed);
                     m.completed.inc();
                     m.shards[t % 2].ingested.fetch_add(1, Ordering::Relaxed);
-                    if i < LATENCIES {
+                    if i < latencies {
                         m.record_latency(Duration::from_micros(5));
                     }
                 }
@@ -114,13 +116,13 @@ fn concurrent_hammer_preserves_exact_totals_and_prom_validity() {
     let scrapes = scraper.join().unwrap();
     assert!(scrapes > 0, "scraper never ran");
 
-    let total = THREADS as u64 * PER_THREAD;
+    let total = THREADS as u64 * per_thread;
     let prom = metrics.render_prometheus();
     assert_eq!(sample_of(&prom, "submitted"), Some(total));
     assert_eq!(sample_of(&prom, "completed"), Some(total));
     assert_eq!(sample_of(&prom, "shard_ingested{shard=\"0\"}"), Some(total / 2));
     assert_eq!(sample_of(&prom, "shard_ingested{shard=\"1\"}"), Some(total / 2));
-    let n_lat = THREADS as u64 * LATENCIES;
+    let n_lat = THREADS as u64 * latencies;
     assert_eq!(sample_of(&prom, "request_latency_us_count"), Some(n_lat));
     assert_eq!(sample_of(&prom, "request_latency_us_sum"), Some(5 * n_lat));
     let buckets = buckets_of(&prom, "request_latency_us");
@@ -141,6 +143,7 @@ fn concurrent_hammer_preserves_exact_totals_and_prom_validity() {
 /// decomposes into the stage-RHS / block-solve / map-back / slot-swap
 /// child spans (time-contained, same thread).
 #[test]
+#[cfg_attr(miri, ignore = "full server + FFT refresh cycle is far beyond Miri's budget")]
 fn trace_json_decomposes_refresh_into_stage_spans() {
     Tracer::clear();
     Tracer::set_enabled(true);
@@ -232,6 +235,7 @@ fn recorder_persists_well_formed_artifact() {
 /// `/metrics?format=prom`, `/healthz`, and `/trace` all answer through
 /// the router against a live server.
 #[test]
+#[cfg_attr(miri, ignore = "fits a full MSGP model; far beyond Miri's budget")]
 fn in_process_routes_serve_prometheus_health_and_trace() {
     let server = Server::start(serving_model(), EngineSpec::Native, BatcherConfig::default());
     let _ = server.predict(vec![0.0]).expect("predict");

@@ -98,10 +98,12 @@ fn prop_expansion_remaps_statistics_exactly() {
     let grid = Grid::new(vec![GridAxis::span(-2.0, 2.0, 32)]);
     let mut ski = IncrementalSki::new(grid, 3, 3, 13);
     let mut rng = Rng::new(21);
-    // Phase 1: interior points.
+    // Phase 1: interior points (a handful suffices for the remap
+    // property under Miri's interpreter).
+    let n_interior = if cfg!(miri) { 12 } else { 60 };
     let mut xs = Vec::new();
     let mut ys = Vec::new();
-    for _ in 0..60 {
+    for _ in 0..n_interior {
         let x = rng.uniform_in(-1.5, 1.5);
         let y = rng.normal();
         xs.push(x);
@@ -133,6 +135,7 @@ fn prop_expansion_remaps_statistics_exactly() {
 /// predictions (same grid, same hypers) up to the Whittle-circulant
 /// approximation.
 #[test]
+#[cfg_attr(miri, ignore = "full batch fit at m=256 is far beyond Miri's budget")]
 fn streaming_refresh_matches_batch_predictions() {
     let data = gen_stress_1d(1500, 0.05, 17);
     let grid = Grid::new(vec![GridAxis::span(-12.0, 13.0, 256)]);
@@ -223,7 +226,10 @@ fn prop_snapshot_swap_never_tears_under_concurrent_readers() {
             seen
         }));
     }
-    for i in 0..2000 {
+    // Miri explores interleavings per swap, so a few dozen suffice
+    // there; natively, hammer the slot for real.
+    let swaps = if cfg!(miri) { 64 } else { 2000 };
+    for i in 0..swaps {
         slot.swap(tagged(if i % 2 == 0 { 2.0 } else { 1.0 }));
         if i % 64 == 0 {
             std::thread::yield_now();
@@ -245,6 +251,7 @@ fn prop_snapshot_swap_never_tears_under_concurrent_readers() {
 /// match a batch-trained MSGP on the full dataset within 5%, with O(1)
 /// per-point predict latency.
 #[test]
+#[cfg_attr(miri, ignore = ">=10k-point end-to-end run is far beyond Miri's budget")]
 fn e2e_coordinator_streaming_matches_batch_rmse() {
     let n = 12_000;
     let data = gen_stress_1d(n, 0.05, 1);
@@ -452,6 +459,7 @@ fn decay_downweights_history_exactly_and_tracks_regime_change() {
 /// stream, where the Gram diagonal spans orders of magnitude, without
 /// changing the solution.
 #[test]
+#[cfg_attr(miri, ignore = "4k-point preconditioner comparison is far beyond Miri's budget")]
 fn jacobi_precondition_cuts_refresh_iterations() {
     // All the mass in one tenth of the domain: diag(B) varies from
     // sigma^2 (empty cells) to O(100) (dense cells).
@@ -500,6 +508,7 @@ fn jacobi_precondition_cuts_refresh_iterations() {
 /// solve (the multi-level circulant inverse collapses the spectral
 /// spread a diagonal cannot touch).
 #[test]
+#[cfg_attr(miri, ignore = "three full refresh comparisons are far beyond Miri's budget")]
 fn spectral_beats_jacobi_beats_plain_on_skewed_stream() {
     // Two-thirds of the mass in [-9.5, -6.5], the rest across the full
     // domain: diag(G) spans orders of magnitude while every region
@@ -576,6 +585,7 @@ fn spectral_beats_jacobi_beats_plain_on_skewed_stream() {
 /// normalized statistics must stay finite and hyper re-opt must skip
 /// (returning `None`) instead of refitting against vanished statistics.
 #[test]
+#[cfg_attr(miri, ignore = "re-optimization epochs are far beyond Miri's budget")]
 fn repeated_decay_floors_mass_and_skips_reopt() {
     let data = gen_stress_1d(400, 0.05, 71);
     let grid = Grid::new(vec![GridAxis::span(-12.0, 13.0, 64)]);
