@@ -1,0 +1,102 @@
+//! `cargo bench --bench fig10_recovery` — the crash-recovery cost
+//! curve. For each grid size `m`: (a) the atomic checkpoint write
+//! (encode + tmp + fsync + rename), (b) the validated load
+//! (read + checksum + decode), and (c) the full recovery — rebuild a
+//! trainer from the checkpointed statistics and replay the refresh
+//! that reconstructs every serving cache. Medians land in
+//! `BENCH_fig10_recovery.json` via the bench recorder; the `extra`
+//! field carries the on-disk checkpoint size so the bytes/cell cost is
+//! tracked alongside the wall-clocks.
+
+use msgp::bench::{Record, Recorder};
+use msgp::fault::{load, write_atomic, Checkpoint};
+use msgp::gp::msgp::{KernelSpec, MsgpConfig};
+use msgp::grid::{Grid, GridAxis};
+use msgp::kernels::{KernelType, ProductKernel};
+use msgp::stream::{StreamConfig, StreamTrainer};
+use msgp::util::timing::{bench_fn, bench_header};
+use msgp::util::Rng;
+use std::time::Duration;
+
+fn build_trainer(m: usize, n: usize) -> StreamTrainer {
+    let kernel = KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0));
+    let grid = Grid::new(vec![GridAxis::span(-11.0, 11.0, m)]);
+    let mcfg = MsgpConfig { n_per_dim: vec![m], n_var_samples: 4, ..Default::default() };
+    let mut trainer = StreamTrainer::new(
+        kernel,
+        0.01,
+        grid,
+        StreamConfig { msgp: mcfg, ..Default::default() },
+    );
+    let mut rng = Rng::new(23);
+    let mut xs = Vec::with_capacity(n);
+    let mut ys = Vec::with_capacity(n);
+    for _ in 0..n {
+        let x = rng.uniform_in(-10.0, 10.0);
+        xs.push(x);
+        ys.push(msgp::data::stress_fn(x) + 0.05 * rng.normal());
+    }
+    trainer.ingest_batch(&xs, &ys);
+    trainer
+}
+
+fn main() {
+    let full = std::env::var("BENCH_FULL").is_ok();
+    let sizes: &[usize] = if full { &[256, 1024, 4096, 16384] } else { &[256, 1024, 4096] };
+    let n = if full { 40_000 } else { 8_000 };
+    let min_time = Duration::from_millis(if full { 1000 } else { 250 });
+    let dir = std::env::temp_dir().join(format!("msgp-fig10-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create bench scratch dir");
+    println!("# fig10_recovery: checkpoint write / load / restore+replay vs m (n = {n})");
+    bench_header();
+    let mut rec = Recorder::open("fig10_recovery");
+
+    for &m in sizes {
+        let mut trainer = build_trainer(m, n);
+        trainer.refresh();
+        let ckpt = Checkpoint {
+            seq: 1,
+            kernel: trainer.kernel.clone(),
+            sigma2: trainer.sigma2,
+            skis: vec![trainer.ski().clone()],
+        };
+        let path = dir.join(format!("ski-m{m}.ckpt"));
+
+        let write = bench_fn(&format!("ckpt_write m={m}"), min_time, 200, || {
+            write_atomic(&path, &ckpt).expect("checkpoint write");
+        });
+        println!("{}", write.line());
+        let bytes = std::fs::metadata(&path).map(|md| md.len()).unwrap_or(0);
+
+        let read = bench_fn(&format!("ckpt_load m={m}"), min_time, 200, || {
+            let c = load(&path).expect("checkpoint load");
+            assert_eq!(c.skis.len(), 1);
+        });
+        println!("{}", read.line());
+
+        // Full recovery: decode + rebuild the trainer + replay the
+        // refresh that reconstructs the serving caches from the
+        // statistics alone — the restart-to-serving latency.
+        let cfg = trainer.cfg.clone();
+        let restore = bench_fn(&format!("ckpt_restore_replay m={m}"), min_time, 50, || {
+            let c = load(&path).expect("checkpoint load");
+            let ski = c.skis.into_iter().next().expect("one accumulator");
+            let mut t = StreamTrainer::from_stats(c.kernel, c.sigma2, cfg.clone(), ski);
+            let sm = t.serving_model(); // replays the refresh (trainer is dirty)
+            assert!(sm.predict_batch(&[0.0]).0[0].is_finite());
+        });
+        println!("{}", restore.line());
+
+        rec.record(Record::from_stats(&write).with_extra("ckpt_bytes", bytes as f64));
+        rec.record(Record::from_stats(&read));
+        rec.record(Record::from_stats(&restore).with_extra("n_points", n as f64));
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+    if let Err(e) = rec.save() {
+        eprintln!("failed to save {:?}: {e}", rec.path());
+    } else {
+        println!("# recorded -> {:?}", rec.path());
+    }
+}

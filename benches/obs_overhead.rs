@@ -5,8 +5,14 @@
 //! plus their ratio into `BENCH_obs.json` via the bench recorder. The
 //! acceptance bar is a < 2% disabled-path regression; the recorded
 //! `overhead_ratio_on_off` documents the enabled-path cost too.
+//!
+//! The same workload also pins the failpoint tax: disarmed sites are
+//! one relaxed load, and an *armed-but-inactive* registry (a failpoint
+//! configured on a name the refresh path never reaches) must keep the
+//! refresh wall-clock ratio at or under 1.02.
 
 use msgp::bench::{Record, Recorder};
+use msgp::fault;
 use msgp::gp::msgp::{KernelSpec, MsgpConfig};
 use msgp::grid::{Grid, GridAxis};
 use msgp::kernels::{KernelType, ProductKernel};
@@ -64,9 +70,23 @@ fn main() {
     let ratio = on.median.as_nanos() as f64 / off.median.as_nanos().max(1) as f64;
     println!("# enabled/disabled median ratio = {ratio:.4}");
 
+    // Failpoint tax: arm the registry with an entry no refresh-path
+    // site matches, so every `failpoint!` site pays the full armed cost
+    // (registry lookup miss) without any action ever firing.
+    fault::clear_all();
+    fault::configure("bench.inactive=error@0.0").expect("arm inactive failpoint");
+    let armed = bench_fn(&format!("refresh_mdomain m={m} failpoints=armed"), min_time, 200, || {
+        let _ = trainer.refresh();
+    });
+    println!("{}", armed.line());
+    fault::clear_all();
+    let fp_ratio = armed.median.as_nanos() as f64 / off.median.as_nanos().max(1) as f64;
+    println!("# armed-but-inactive/disarmed median ratio = {fp_ratio:.4} (budget 1.02)");
+
     let mut rec = Recorder::open("obs");
     rec.record(Record::from_stats(&off));
     rec.record(Record::from_stats(&on).with_extra("overhead_ratio_on_off", ratio));
+    rec.record(Record::from_stats(&armed).with_extra("failpoint_armed_ratio", fp_ratio));
     if let Err(e) = rec.save() {
         eprintln!("failed to save {:?}: {e}", rec.path());
     } else {

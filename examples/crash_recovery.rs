@@ -1,0 +1,178 @@
+//! Crash/restore drill with a real `SIGKILL`:
+//!
+//! ```sh
+//! cargo run --release --example crash_recovery
+//! ```
+//!
+//! The parent re-executes itself as a victim serving process
+//! (`--serve <ckpt-dir>`) that streams observations into an online
+//! server, checkpointing every 100 points. Once the victim has at
+//! least one valid checkpoint on disk the parent kills it — hard, no
+//! graceful shutdown, deliberately racing the atomic checkpoint write.
+//! It then reads back whatever survived (a torn final write falls back
+//! to the rotated file), restarts a server that restores and replays
+//! the statistics, streams the not-yet-durable remainder of the same
+//! data, and verifies the served predictions against an uninterrupted
+//! in-process trainer to 1e-10. Prints `RECOVERY OK` on success — the
+//! CI chaos job greps for it.
+
+use msgp::coordinator::{BatcherConfig, EngineSpec, Server};
+use msgp::data::gen_stress_1d;
+use msgp::fault::load_newest;
+use msgp::gp::msgp::{KernelSpec, MsgpConfig};
+use msgp::grid::{Grid, GridAxis};
+use msgp::kernels::{KernelType, ProductKernel};
+use msgp::stream::{StreamConfig, StreamTrainer};
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+const N: usize = 2000;
+const BATCH: usize = 100;
+
+fn se_kernel() -> KernelSpec {
+    KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0))
+}
+
+fn stream_cfg() -> StreamConfig {
+    StreamConfig {
+        msgp: MsgpConfig { n_per_dim: vec![128], n_var_samples: 4, ..Default::default() },
+        refresh_every: 1_000_000, // refreshes happen only at restore + final flush
+        ..Default::default()
+    }
+}
+
+fn grid() -> Grid {
+    Grid::new(vec![GridAxis::span(-12.0, 13.0, 128)])
+}
+
+/// Victim mode: stream batches into an online server, checkpointing on
+/// cadence (`MSGP_CKPT_DIR` etc. are set by the parent), until killed.
+fn serve_until_killed() {
+    let trainer = StreamTrainer::new(se_kernel(), 0.01, grid(), stream_cfg());
+    let server = Server::start_online(trainer, EngineSpec::Native, BatcherConfig::default());
+    let data = gen_stress_1d(N, 0.05, 77);
+    for c in 0..(N / BATCH) {
+        let lo = c * BATCH;
+        let _ = server.ingest(data.x[lo..lo + BATCH].to_vec(), data.y[lo..lo + BATCH].to_vec());
+        // Pace the stream so the parent's kill lands mid-flight.
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    // Stream exhausted before the kill arrived: park (the parent always
+    // kills; exiting here would run the graceful-shutdown checkpoint
+    // and make the drill trivially easy).
+    loop {
+        std::thread::sleep(Duration::from_secs(1));
+    }
+}
+
+fn wait_for_valid_checkpoint(path: &Path) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < Duration::from_secs(30) {
+        if load_newest(path).is_some() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    false
+}
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    if let Some(flag) = args.next() {
+        if flag == "--serve" {
+            serve_until_killed();
+        }
+        eprintln!("unknown argument `{flag}` (this binary re-executes itself with --serve)");
+        std::process::exit(2);
+    }
+
+    let dir: PathBuf =
+        std::env::temp_dir().join(format!("msgp-crash-recovery-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create checkpoint dir");
+    let exe = std::env::current_exe().expect("current_exe");
+    println!("spawning victim: {} --serve (ckpt dir {})", exe.display(), dir.display());
+    let mut child = std::process::Command::new(&exe)
+        .arg("--serve")
+        .env("MSGP_CKPT_DIR", &dir)
+        .env("MSGP_CKPT_EVERY_POINTS", "100")
+        .env("MSGP_CKPT_EVERY_MS", "60000")
+        .spawn()
+        .expect("spawn victim");
+
+    let ckpt_path = dir.join("ski.ckpt");
+    if !wait_for_valid_checkpoint(&ckpt_path) {
+        let _ = child.kill();
+        let _ = child.wait();
+        eprintln!("RECOVERY FAILED: victim never produced a valid checkpoint");
+        std::process::exit(1);
+    }
+    // Let a few more checkpoint writes land, then kill without warning.
+    std::thread::sleep(Duration::from_millis(130));
+    child.kill().expect("SIGKILL victim");
+    let _ = child.wait();
+    println!("victim killed mid-stream");
+
+    // What survived? A torn in-flight write of ski.ckpt is rejected by
+    // its checksum and the rotated previous checkpoint loads instead.
+    let (durable, from) = match load_newest(&ckpt_path) {
+        Some(cf) => cf,
+        None => {
+            eprintln!("RECOVERY FAILED: no valid checkpoint survived the kill");
+            std::process::exit(1);
+        }
+    };
+    let n_durable = durable.skis[0].n();
+    println!(
+        "durable checkpoint: seq={} n={} ({})",
+        durable.seq,
+        n_durable,
+        from.display()
+    );
+    assert!(n_durable >= BATCH && n_durable % BATCH == 0, "writes align to batch boundaries");
+
+    // Restart: the server restores the statistics and replays the
+    // refresh; the stream source resends everything not yet durable.
+    std::env::set_var("MSGP_CKPT_DIR", &dir);
+    std::env::set_var("MSGP_CKPT_EVERY_POINTS", "100");
+    let trainer = StreamTrainer::new(se_kernel(), 0.01, grid(), stream_cfg());
+    let server = Server::start_online(trainer, EngineSpec::Native, BatcherConfig::default());
+    assert_eq!(server.metrics.ckpt_restores_total.get(), 1, "restore must be recorded");
+    let data = gen_stress_1d(N, 0.05, 77);
+    for c in (n_durable / BATCH)..(N / BATCH) {
+        let lo = c * BATCH;
+        let k = server
+            .ingest(data.x[lo..lo + BATCH].to_vec(), data.y[lo..lo + BATCH].to_vec())
+            .expect("replay ingest");
+        assert_eq!(k, BATCH);
+    }
+    server.flush_stream().expect("final flush");
+
+    // Uninterrupted reference with the same batch boundaries and the
+    // same refresh schedule (cold at n_durable, warm at the end).
+    let mut reference = StreamTrainer::new(se_kernel(), 0.01, grid(), stream_cfg());
+    reference.ingest_batch(&data.x[..n_durable], &data.y[..n_durable]);
+    reference.refresh();
+    reference.ingest_batch(&data.x[n_durable..], &data.y[n_durable..]);
+    reference.refresh();
+    let probe: Vec<f64> = (0..200).map(|i| -10.0 + 0.1 * i as f64).collect();
+    let (want_mean, want_var) = reference.serving_model().predict_batch(&probe);
+
+    let mut worst = 0.0f64;
+    for (i, &x) in probe.iter().enumerate() {
+        let p = server.predict(vec![x]).expect("predict");
+        worst = worst.max((p.mean - want_mean[i]).abs()).max((p.var - want_var[i]).abs());
+    }
+    server.shutdown();
+    std::env::remove_var("MSGP_CKPT_DIR");
+    std::env::remove_var("MSGP_CKPT_EVERY_POINTS");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    println!("restored n={n_durable}, replayed {} points, worst |Δ| = {worst:.3e}", N - n_durable);
+    if worst < 1e-10 {
+        println!("RECOVERY OK");
+    } else {
+        eprintln!("RECOVERY FAILED: parity {worst:.3e} exceeds 1e-10");
+        std::process::exit(1);
+    }
+}

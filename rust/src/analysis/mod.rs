@@ -17,6 +17,11 @@
 //!    `lint:allow(alloc, ...)` escape for audited result assembly.
 //! 4. **lock-order** — nested `.lock()` scopes must follow the
 //!    declared [`LOCK_ORDER`] ranking.
+//! 5. **unwrap-audit** — `.unwrap()` / `.expect(` in serving-path code
+//!    (`coordinator/`, `shard/`, `stream/`, `fault/`) must carry a
+//!    `PANIC-OK:` justification; unjustified panics either crash a
+//!    supervised worker (burning restart budget) or, pre-supervision,
+//!    the deployment. See `docs/RELIABILITY.md`.
 //!
 //! The scanner ([`scan`]) is lexical, not a parser: strings and
 //! comments are split off so rule patterns never fire on look-alikes,
@@ -74,6 +79,8 @@ pub const LOCK_ORDER: &[(&str, u32)] = &[
     ("rx", 70),       // http worker receive end
     ("slots", 80),    // scope-API slot store
     ("slot", 80),
+    // Failpoint registry: a leaf — actions run after the guard drops.
+    ("fp_registry", 90),
 ];
 
 /// True when `rel_path` is a declared handoff module for the
@@ -105,7 +112,7 @@ pub struct CrateReport {
     pub ordering_total: OrderingCounts,
 }
 
-/// Run the four per-file rules on one source text.
+/// Run the five per-file rules on one source text.
 pub fn analyze_source(rel_path: &str, src: &str) -> FileReport {
     let file = scan::scan(rel_path, src);
     let mut findings = Vec::new();
@@ -113,6 +120,7 @@ pub fn analyze_source(rel_path: &str, src: &str) -> FileReport {
     let ordering = rules::ordering_audit(&file, is_handoff(&file.rel_path), &mut findings);
     rules::hot_alloc(&file, &mut findings);
     rules::lock_order(&file, &mut findings);
+    rules::unwrap_audit(&file, &mut findings);
     FileReport { rel_path: file.rel_path, findings, unsafe_count, ordering }
 }
 
@@ -316,6 +324,27 @@ mod tests {
             include_str!("fixtures/lock_order_fail.rs"),
         );
         assert!(rules_hit(&f).contains(&"lock-order"), "{f:?}");
+    }
+
+    #[test]
+    fn unwrap_audit_scopes_and_annotations() {
+        // Outside the audited prefixes: free.
+        let ok = findings_for("solver/cg.rs", "fn f(x: Option<u32>) -> u32 { x.unwrap() }");
+        assert!(ok.is_empty(), "{ok:?}");
+        // Inside: denied without justification, for both patterns.
+        let f = findings_for("coordinator/server.rs", "fn f(x: Option<u32>) -> u32 { x.unwrap() }");
+        assert!(rules_hit(&f).contains(&"unwrap-audit"), "{f:?}");
+        let f = findings_for("shard/trainer.rs", "fn f(x: Option<u32>) -> u32 { x.expect(\"set\") }");
+        assert!(rules_hit(&f).contains(&"unwrap-audit"), "{f:?}");
+        // A leading PANIC-OK: comment within the window satisfies it.
+        let src = "fn f(x: Option<u32>) -> u32 {\n    // PANIC-OK: set by construction.\n    x.unwrap()\n}\n";
+        assert!(findings_for("stream/trainer.rs", src).is_empty());
+        // Poison recovery is not a panic: unwrap_or_else never matches.
+        let src = "fn f(m: &std::sync::Mutex<u32>) -> u32 { *m.lock().unwrap_or_else(|e| e.into_inner()) }";
+        assert!(findings_for("fault/failpoint.rs", src).is_empty());
+        // Test modules are exempt.
+        let t = "#[cfg(test)]\nmod tests {\n    fn t(x: Option<u32>) { x.unwrap(); }\n}\n";
+        assert!(findings_for("fault/codec.rs", t).is_empty());
     }
 
     #[test]

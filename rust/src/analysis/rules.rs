@@ -1,4 +1,4 @@
-//! The four rule families enforced by `msgp-lint`.
+//! The five rule families enforced by `msgp-lint`.
 //!
 //! Each rule consumes a scanned [`SourceFile`] and appends
 //! [`Finding`]s. All rules skip `#[cfg(test)]` regions — test code may
@@ -289,6 +289,51 @@ pub fn lock_order(file: &SourceFile, findings: &mut Vec<Finding>) {
             }
             if is_held_binding(&line.code, from) {
                 held.push((recv, rank, line.depth_end));
+            }
+        }
+    }
+}
+
+/// Source-path prefixes where rule 5 (unwrap-audit) applies: the
+/// serving path, where an unjustified panic takes down a worker thread
+/// (or, pre-supervision, the whole deployment).
+pub const UNWRAP_AUDIT_PREFIXES: &[&str] = &["coordinator/", "shard/", "stream/", "fault/"];
+
+/// Panic-on-Err/None patterns rule 5 denies. `.unwrap_or_else(` does
+/// not match `.unwrap()` — converting a poisoned lock with
+/// `unwrap_or_else(|e| e.into_inner())` is the sanctioned recovery.
+pub const UNWRAP_DENY: &[&str] = &[".unwrap()", ".expect("];
+
+/// Rule 5 — unwrap-audit: `.unwrap()` / `.expect(` in non-test code
+/// under the serving-path prefixes must carry a leading `PANIC-OK:`
+/// comment within the annotation window justifying why panicking (and
+/// riding the supervisor's restart/poison policy) beats handling the
+/// error. Everything else should propagate the error or recover.
+pub fn unwrap_audit(file: &SourceFile, findings: &mut Vec<Finding>) {
+    if !UNWRAP_AUDIT_PREFIXES.iter().any(|p| file.rel_path.starts_with(p)) {
+        return;
+    }
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for pat in UNWRAP_DENY {
+            let mut from = 0usize;
+            while let Some(at) = line.code[from..].find(pat) {
+                from += at + pat.len();
+                if !window_has_leading(file, idx, "PANIC-OK:") {
+                    findings.push(Finding {
+                        file: file.rel_path.clone(),
+                        line: idx + 1,
+                        rule: "unwrap-audit",
+                        msg: format!(
+                            "`{pat}` in serving-path code without a PANIC-OK: \
+                             justification within {ANNOTATION_WINDOW} lines; \
+                             propagate the error, recover the poison \
+                             (`unwrap_or_else(|e| e.into_inner())`), or justify"
+                        ),
+                    });
+                }
             }
         }
     }

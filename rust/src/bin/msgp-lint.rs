@@ -2,12 +2,14 @@
 //! CI gate (`cargo run --release --bin msgp-lint`).
 //!
 //! Walks the crate's own source (`rust/src`, or a root passed as the
-//! first argument) and enforces the four rule families from
+//! first argument) and enforces the five rule families from
 //! [`msgp::analysis`]: unsafe-audit (+ registry census),
-//! atomic-ordering audit, hot-path allocation lint, and lock-order
-//! audit. Prints a per-family summary and every finding; exits
-//! non-zero when findings exist, so CI fails closed.
+//! atomic-ordering audit, hot-path allocation lint, lock-order
+//! audit, and the serving-path unwrap audit. Prints a per-family
+//! summary and every finding; exits non-zero when findings exist, so
+//! CI fails closed.
 
+use msgp::analysis::rules::UNWRAP_AUDIT_PREFIXES;
 use msgp::analysis::{analyze_crate, HANDOFF_FILES, LOCK_ORDER};
 use std::path::PathBuf;
 use std::process::ExitCode;
@@ -42,6 +44,7 @@ fn main() -> ExitCode {
     );
     println!("  handoff modules (all orderings annotated): {}", HANDOFF_FILES.join(", "));
     println!("  lock-order table: {} receivers", LOCK_ORDER.len());
+    println!("  unwrap-audit scope: {}", UNWRAP_AUDIT_PREFIXES.join(", "));
 
     if report.findings.is_empty() {
         println!("msgp-lint: clean");

@@ -130,6 +130,7 @@ impl HttpServer {
                 std::thread::Builder::new()
                     .name(format!("msgp-http-{i}"))
                     .spawn(move || worker_loop(rx, srv, wcfg))
+                    // PANIC-OK: startup-time spawn; nothing serves yet.
                     .expect("spawn http worker"),
             );
         }
@@ -156,8 +157,14 @@ impl HttpServer {
                                 Ok(()) => {}
                                 Err(TrySendError::Full(stream)) => {
                                     http.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                                    // Both the legacy aggregate class and
+                                    // the per-cause refinement, so
+                                    // pre-existing overload dashboards
+                                    // keep working.
                                     http.error(HttpErrClass::Overload);
-                                    reject_overloaded(stream, &acc_cfg);
+                                    http.error(HttpErrClass::QueueFull);
+                                    let depth = http.queue_depth.get();
+                                    reject_overloaded(stream, &acc_cfg, depth);
                                 }
                                 Err(TrySendError::Disconnected(_)) => {
                                     http.queue_depth.fetch_sub(1, Ordering::Relaxed);
@@ -173,6 +180,7 @@ impl HttpServer {
                 // Dropping `tx` here closes the queue; workers drain
                 // whatever was accepted and then exit.
             })
+            // PANIC-OK: startup-time spawn; nothing serves yet.
             .expect("spawn http acceptor");
 
         Ok(HttpServer { addr: local, stop, acceptor: Some(acceptor), workers, server })
@@ -222,15 +230,35 @@ impl Drop for HttpServer {
 
 /// Best-effort inline 503 from the acceptor thread when the worker
 /// queue is full (bounded by the write timeout; errors ignored — the
-/// client is being shed either way).
-fn reject_overloaded(stream: TcpStream, cfg: &HttpConfig) {
+/// client is being shed either way). The `Retry-After` hint scales
+/// with the current queue depth so clients back off proportionally to
+/// the backlog they would join.
+fn reject_overloaded(stream: TcpStream, cfg: &HttpConfig, queue_depth: u64) {
     let mut stream = stream;
     let _ = stream.set_write_timeout(Some(cfg.write_timeout));
     let body = error_body("overloaded: worker queue full");
-    let _ = write_response(&mut stream, 503, "application/json", &body, true);
+    let retry_after = retry_after_secs(queue_depth);
+    let extra = [format!("Retry-After: {retry_after}")];
+    let _ = write_response_with(&mut stream, 503, "application/json", &body, true, &extra);
+}
+
+/// Seconds a shed client should wait before retrying: 1s per 64 queued
+/// connections, floor 1, capped at 30 so transient spikes never advise
+/// minute-scale backoff.
+fn retry_after_secs(queue_depth: u64) -> u64 {
+    (queue_depth / 64 + 1).min(30)
 }
 
 fn worker_loop(rx: Arc<Mutex<Receiver<TcpStream>>>, server: Arc<Server>, cfg: HttpConfig) {
+    // Each worker supervises its own per-connection loop: a panic while
+    // serving one connection (handler bug or an armed `http.*`
+    // failpoint) restarts the loop with backoff instead of silently
+    // shrinking the pool. Repeated failures poison this worker — the
+    // gauge flips `/healthz` to 503 so the operator sees it.
+    let mut sup = crate::fault::Supervisor::new(
+        crate::fault::SupervisorPolicy::default(),
+        0x477b ^ std::process::id() as u64,
+    );
     loop {
         let conn = rx.lock().unwrap_or_else(|e| e.into_inner()).recv();
         let Ok(stream) = conn else { break };
@@ -238,8 +266,27 @@ fn worker_loop(rx: Arc<Mutex<Receiver<TcpStream>>>, server: Arc<Server>, cfg: Ht
         http.queue_depth.fetch_sub(1, Ordering::Relaxed);
         http.connections_live.fetch_add(1, Ordering::Relaxed);
         let cid = CONN_IDS.fetch_add(1, Ordering::Relaxed) + 1;
-        serve_connection(&server, &cfg, stream, cid);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            serve_connection(&server, &cfg, stream, cid)
+        }));
         http.connections_live.fetch_sub(1, Ordering::Relaxed);
+        if outcome.is_err() {
+            server.metrics.record_worker_restart(super::metrics::WorkerKind::Http);
+            match sup.on_failure() {
+                crate::fault::Verdict::Restart(backoff) => {
+                    crate::log_warn!(
+                        "http worker panicked serving conn #{cid}; restarting after {:?}",
+                        backoff
+                    );
+                    std::thread::sleep(backoff);
+                }
+                crate::fault::Verdict::Poison => {
+                    server.metrics.worker_poisoned.fetch_add(1, Ordering::Relaxed);
+                    crate::log_warn!("http worker poisoned after repeated panics; exiting");
+                    break;
+                }
+            }
+        }
     }
 }
 
@@ -275,6 +322,7 @@ fn serve_connection(server: &Server, cfg: &HttpConfig, mut stream: TcpStream, ci
     let _ = stream.set_write_timeout(Some(cfg.write_timeout));
     let _ = stream.set_nodelay(true);
     let _sp_conn = crate::span_arg!("http.accept", cid);
+    crate::failpoint!("http.accept");
     let http = &server.metrics.http;
     let mut buf: Vec<u8> = Vec::with_capacity(1024);
     let mut served = 0usize;
@@ -316,6 +364,7 @@ fn serve_connection(server: &Server, cfg: &HttpConfig, mut stream: TcpStream, ci
         let t0 = Instant::now();
         let (status, ctype, body, ridx) = {
             let _sp_req = crate::span_arg!("http.request", req_id);
+            crate::failpoint!("http.dispatch");
             dispatch(server, &req)
         };
         let close = req.close
@@ -475,6 +524,25 @@ fn dispatch(server: &Server, req: &RawRequest) -> (u16, &'static str, String, us
                 (status, "application/json", error_body(&msg), ridx)
             }
         },
+        ("GET", Some(Route::Health)) => {
+            let (healthy, body) = server.health();
+            if healthy {
+                (200, "application/json", body, ridx)
+            } else {
+                // Per-cause 503 accounting: the probe answered, but the
+                // deployment is degraded (stale refresh, poisoned
+                // worker, or still recovering).
+                http.error(HttpErrClass::Degraded);
+                (503, "application/json", body, ridx)
+            }
+        }
+        ("GET", Some(Route::Failpoints)) => match server.handle_failpoints(&req.target) {
+            Ok(body) => (200, "application/json", body, ridx),
+            Err(msg) => {
+                http.error(HttpErrClass::BadRequest);
+                (400, "application/json", error_body(&msg), ridx)
+            }
+        },
         ("GET", Some(r)) => match server.handle_path(&req.target) {
             Some(text) => (200, get_content_type(r, &req.target), text, ridx),
             None if matches!(r, Route::Predict | Route::Ingest) => {
@@ -496,7 +564,7 @@ fn dispatch(server: &Server, req: &RawRequest) -> (u16, &'static str, String, us
 
 fn get_content_type(route: Route, target: &str) -> &'static str {
     match route {
-        Route::Health | Route::Trace => "application/json",
+        Route::Health | Route::Trace | Route::Failpoints => "application/json",
         Route::Metrics if metrics_format(target) == MetricsFormat::Prometheus => {
             "text/plain; version=0.0.4"
         }
@@ -621,12 +689,30 @@ fn write_response(
     body: &str,
     close: bool,
 ) -> io::Result<()> {
-    let head = format!(
-        "HTTP/1.1 {status} {}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+    write_response_with(stream, status, ctype, body, close, &[])
+}
+
+/// [`write_response`] with extra response header lines (no trailing
+/// CRLF; e.g. `"Retry-After: 2"`).
+fn write_response_with(
+    stream: &mut TcpStream,
+    status: u16,
+    ctype: &str,
+    body: &str,
+    close: bool,
+    extra_headers: &[String],
+) -> io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: {}\r\n",
         reason_phrase(status),
         body.len(),
         if close { "close" } else { "keep-alive" },
     );
+    for h in extra_headers {
+        head.push_str(h);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
     stream.write_all(head.as_bytes())?;
     stream.write_all(body.as_bytes())?;
     stream.flush()
@@ -649,6 +735,15 @@ mod tests {
             assert_ne!(reason_phrase(status), "Error", "status {status}");
         }
         assert_eq!(reason_phrase(599), "Error");
+    }
+
+    #[test]
+    fn retry_after_scales_with_queue_depth_and_caps() {
+        assert_eq!(retry_after_secs(0), 1);
+        assert_eq!(retry_after_secs(63), 1);
+        assert_eq!(retry_after_secs(64), 2);
+        assert_eq!(retry_after_secs(640), 11);
+        assert_eq!(retry_after_secs(1_000_000), 30);
     }
 
     #[test]

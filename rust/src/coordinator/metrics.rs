@@ -20,13 +20,39 @@ use crate::obs::metrics::{Counter, Gauge, HistogramSnapshot, LogHistogram, PromW
 
 /// Route label values for the per-route HTTP families, indexed by
 /// [`HttpMetrics::route_index`]. The last slot aggregates unknown paths.
-pub const HTTP_ROUTE_NAMES: [&str; 8] =
-    ["predict", "ingest", "metrics", "models", "shards", "healthz", "trace", "other"];
+pub const HTTP_ROUTE_NAMES: [&str; 9] =
+    ["predict", "ingest", "metrics", "models", "shards", "healthz", "trace", "failpoints", "other"];
 
 /// `class` label values of `http_errors_total`, indexed by
 /// [`HttpErrClass`] discriminants.
-pub const HTTP_ERROR_CLASSES: [&str; 7] =
-    ["bad_request", "too_large", "unknown_route", "disconnect", "timeout", "internal", "overload"];
+pub const HTTP_ERROR_CLASSES: [&str; 9] = [
+    "bad_request",
+    "too_large",
+    "unknown_route",
+    "disconnect",
+    "timeout",
+    "internal",
+    "overload",
+    "queue_full",
+    "degraded",
+];
+
+/// `worker` label values of `worker_restarts_total`, indexed by
+/// [`WorkerKind`] discriminants.
+pub const WORKER_NAMES: [&str; 3] = ["ingest", "shard", "http"];
+
+/// Supervised worker families (the `worker` label of
+/// `worker_restarts_total`). Discriminants index [`WORKER_NAMES`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerKind {
+    /// The unsharded background ingest/refresh thread.
+    Ingest = 0,
+    /// A sharded trainer worker (any shard; per-shard detail lives in
+    /// [`ShardMetrics`]).
+    Shard = 1,
+    /// An HTTP front-door worker.
+    Http = 2,
+}
 
 /// Front-door failure classes (the `class` label of
 /// `http_errors_total`). Discriminants index [`HTTP_ERROR_CLASSES`].
@@ -48,6 +74,12 @@ pub enum HttpErrClass {
     Internal = 5,
     /// Accept queue full; connection refused with a 503.
     Overload = 6,
+    /// Worker dispatch queue full; request shed with a 503 +
+    /// `Retry-After` (the per-cause refinement of [`Self::Overload`]).
+    QueueFull = 7,
+    /// Served while the deployment was in degraded mode (stale
+    /// snapshot under a refresh deadline or poisoned worker).
+    Degraded = 8,
 }
 
 /// Per-route HTTP serving signals: one latency histogram plus
@@ -81,9 +113,9 @@ pub struct HttpMetrics {
     pub slow_total: Counter,
     /// Per-route latency + status counters, indexed like
     /// [`HTTP_ROUTE_NAMES`].
-    pub routes: [HttpRoute; 8],
+    pub routes: [HttpRoute; 9],
     /// Failure counters, indexed like [`HTTP_ERROR_CLASSES`].
-    pub errors: [Counter; 7],
+    pub errors: [Counter; 9],
 }
 
 impl Default for HttpMetrics {
@@ -112,7 +144,8 @@ impl HttpMetrics {
             Some(Route::Shards) => 4,
             Some(Route::Health) => 5,
             Some(Route::Trace) => 6,
-            None => 7,
+            Some(Route::Failpoints) => 7,
+            None => 8,
         }
     }
 
@@ -246,6 +279,34 @@ pub struct Metrics {
     /// (unsharded servers; sharded deployments report per-shard
     /// [`ShardMetrics::reservoir_points`]).
     pub reservoir_points: Gauge,
+    /// Fault tolerance: supervised-worker restarts, indexed like
+    /// [`WORKER_NAMES`] (`worker_restarts_total{worker=...}`).
+    pub worker_restarts: [Counter; 3],
+    /// Fault tolerance: workers currently poisoned (their supervisor
+    /// gave up restarting; `/healthz` reports 503 while nonzero).
+    pub worker_poisoned: Gauge,
+    /// Fault tolerance: `1` while the server keeps serving the
+    /// last-good snapshot because a refresh hit its deadline
+    /// (`MSGP_REFRESH_DEADLINE_MS`) — predictions stay available but
+    /// increasingly stale.
+    pub degraded_mode: Gauge,
+    /// Fault tolerance: `1` while startup checkpoint recovery is still
+    /// rebuilding caches (predictions answer from the prior / the
+    /// checkpointed snapshot).
+    pub recovering: Gauge,
+    /// Fault tolerance: checkpoints written (atomic tmp+fsync+rename).
+    pub ckpt_writes_total: Counter,
+    /// Fault tolerance: checkpoint writes that failed (I/O or injected
+    /// `ckpt.*` failpoints) — the in-memory state keeps serving.
+    pub ckpt_write_errors_total: Counter,
+    /// Fault tolerance: wall-clock of the most recent checkpoint write,
+    /// microseconds.
+    pub ckpt_last_write_us: Gauge,
+    /// Fault tolerance: checkpoints restored at startup.
+    pub ckpt_restores_total: Counter,
+    /// Fault tolerance: sequence number of the most recent checkpoint
+    /// written or restored (monotone per process lifetime).
+    pub ckpt_last_seq: Gauge,
     /// Sharded serving: per-shard counters (empty on unsharded servers).
     pub shards: Vec<ShardMetrics>,
     /// HTTP front-door counters (zero until an
@@ -323,6 +384,19 @@ impl Metrics {
         self.last_refresh_map_back_us.store(map_us, Ordering::Relaxed);
     }
 
+    /// Count one supervised-worker restart.
+    pub fn record_worker_restart(&self, kind: WorkerKind) {
+        self.worker_restarts[kind as usize].inc();
+    }
+
+    /// Count one checkpoint write (latency + sequence in one call so
+    /// the gauges stay consistent with the counter).
+    pub fn record_ckpt_write(&self, seq: u64, d: Duration) {
+        self.ckpt_writes_total.inc();
+        self.ckpt_last_write_us.store(d.as_micros() as u64, Ordering::Relaxed);
+        self.ckpt_last_seq.store(seq, Ordering::Relaxed);
+    }
+
     /// Age of the most recent refresh in microseconds, or `None` if no
     /// refresh has completed yet.
     pub fn last_refresh_age_us(&self) -> Option<u64> {
@@ -396,6 +470,20 @@ impl Metrics {
             self.http.requests_total.get(),
             self.http.errors_total(),
             self.http.slow_total.get(),
+        ));
+        s.push_str(&format!(
+            " worker_restarts_total={} worker_poisoned={} degraded_mode={} recovering={} \
+             ckpt_writes_total={} ckpt_write_errors_total={} ckpt_last_write_us={} \
+             ckpt_restores_total={} ckpt_last_seq={}",
+            self.worker_restarts.iter().map(|c| c.get()).sum::<u64>(),
+            self.worker_poisoned.get(),
+            self.degraded_mode.get(),
+            self.recovering.get(),
+            self.ckpt_writes_total.get(),
+            self.ckpt_write_errors_total.get(),
+            self.ckpt_last_write_us.get(),
+            self.ckpt_restores_total.get(),
+            self.ckpt_last_seq.get(),
         ));
         for (i, sh) in self.shards.iter().enumerate() {
             s.push_str(&format!(
@@ -514,6 +602,65 @@ impl Metrics {
             ),
         ];
         for (name, help, v) in gauges {
+            scalar(&mut w, "gauge", name, help, v);
+        }
+        // Fault-tolerance families (see docs/RELIABILITY.md).
+        let worker_labels: Vec<Vec<(&str, String)>> =
+            WORKER_NAMES.iter().map(|n| vec![("worker", n.to_string())]).collect();
+        let worker_samples: Vec<(&[(&str, String)], u64)> = worker_labels
+            .iter()
+            .zip(self.worker_restarts.iter())
+            .map(|(l, c)| (&l[..], c.get()))
+            .collect();
+        w.counter(
+            "worker_restarts_total",
+            "Supervised worker restarts, by worker family.",
+            &worker_samples,
+        );
+        let fault_counters: [(&str, &str, u64); 3] = [
+            (
+                "ckpt_writes_total",
+                "Checkpoints written (atomic tmp+fsync+rename).",
+                self.ckpt_writes_total.get(),
+            ),
+            (
+                "ckpt_write_errors_total",
+                "Checkpoint writes that failed.",
+                self.ckpt_write_errors_total.get(),
+            ),
+            (
+                "ckpt_restores_total",
+                "Checkpoints restored at startup.",
+                self.ckpt_restores_total.get(),
+            ),
+        ];
+        for (name, help, v) in fault_counters {
+            scalar(&mut w, "counter", name, help, v);
+        }
+        let fault_gauges: [(&str, &str, u64); 5] = [
+            ("worker_poisoned", "Workers whose supervisor gave up.", self.worker_poisoned.get()),
+            (
+                "degraded_mode",
+                "1 while serving the last-good snapshot under a refresh deadline.",
+                self.degraded_mode.get(),
+            ),
+            (
+                "recovering",
+                "1 while startup checkpoint recovery is rebuilding caches.",
+                self.recovering.get(),
+            ),
+            (
+                "ckpt_last_write_us",
+                "Most recent checkpoint write wall-clock, us.",
+                self.ckpt_last_write_us.get(),
+            ),
+            (
+                "ckpt_last_seq",
+                "Sequence number of the most recent checkpoint.",
+                self.ckpt_last_seq.get(),
+            ),
+        ];
+        for (name, help, v) in fault_gauges {
             scalar(&mut w, "gauge", name, help, v);
         }
         w.histogram(
@@ -815,6 +962,15 @@ mod tests {
             "last_refresh_stage_rhs_us",
             "last_refresh_block_solve_us",
             "last_refresh_map_back_us",
+            "worker_restarts_total",
+            "worker_poisoned",
+            "degraded_mode",
+            "recovering",
+            "ckpt_writes_total",
+            "ckpt_write_errors_total",
+            "ckpt_restores_total",
+            "ckpt_last_write_us",
+            "ckpt_last_seq",
         ] {
             assert!(text.contains(&format!("# TYPE {name} ")), "missing {name}:\n{text}");
         }
@@ -835,9 +991,10 @@ mod tests {
             (Some(Route::Shards), "shards"),
             (Some(Route::Health), "healthz"),
             (Some(Route::Trace), "trace"),
+            (Some(Route::Failpoints), "failpoints"),
             (None, "other"),
         ];
-        let mut seen = [false; 8];
+        let mut seen = [false; 9];
         for (r, name) in routes {
             let i = HttpMetrics::route_index(r);
             assert_eq!(HTTP_ROUTE_NAMES[i], name);
@@ -877,6 +1034,8 @@ mod tests {
         );
         assert!(text.contains("http_errors_total{class=\"unknown_route\"} 2"), "{text}");
         assert!(text.contains("http_errors_total{class=\"timeout\"} 0"), "{text}");
+        assert!(text.contains("http_errors_total{class=\"queue_full\"} 0"), "{text}");
+        assert!(text.contains("http_errors_total{class=\"degraded\"} 0"), "{text}");
         assert!(
             text.contains("http_request_latency_us_bucket{route=\"predict\",le=\"+Inf\"} 3"),
             "{text}"
@@ -886,5 +1045,34 @@ mod tests {
         // header itself is always present.
         assert!(!text.contains("http_request_latency_us_count{route=\"trace\"}"), "{text}");
         assert_eq!(text.matches("# TYPE http_request_latency_us histogram").count(), 1);
+    }
+
+    #[test]
+    fn fault_families_render_in_summary_and_prometheus() {
+        let m = Metrics::new();
+        m.record_worker_restart(WorkerKind::Ingest);
+        m.record_worker_restart(WorkerKind::Ingest);
+        m.record_worker_restart(WorkerKind::Http);
+        m.worker_poisoned.store(1, Ordering::Relaxed);
+        m.degraded_mode.store(1, Ordering::Relaxed);
+        m.record_ckpt_write(41, Duration::from_micros(250));
+        m.ckpt_restores_total.inc();
+
+        let s = m.summary();
+        assert!(s.contains("worker_restarts_total=3"), "{s}");
+        assert!(s.contains("worker_poisoned=1"), "{s}");
+        assert!(s.contains("degraded_mode=1"), "{s}");
+        assert!(s.contains("recovering=0"), "{s}");
+        assert!(s.contains("ckpt_writes_total=1"), "{s}");
+        assert!(s.contains("ckpt_last_write_us=250"), "{s}");
+        assert!(s.contains("ckpt_last_seq=41"), "{s}");
+        assert!(s.contains("ckpt_restores_total=1"), "{s}");
+
+        let text = m.render_prometheus();
+        assert!(text.contains("worker_restarts_total{worker=\"ingest\"} 2"), "{text}");
+        assert!(text.contains("worker_restarts_total{worker=\"http\"} 1"), "{text}");
+        assert!(text.contains("worker_restarts_total{worker=\"shard\"} 0"), "{text}");
+        assert!(text.contains("degraded_mode 1"), "{text}");
+        assert!(text.contains("ckpt_last_seq 41"), "{text}");
     }
 }

@@ -72,6 +72,9 @@ pub enum Route {
     /// Chrome trace-event JSON dump of the current tracing window
     /// (see [`crate::obs::trace`]).
     Trace,
+    /// Failpoint inspection and (re)configuration
+    /// (`?set=name:action@prob`, `?clear=1`; see [`crate::fault`]).
+    Failpoints,
 }
 
 /// Rendering requested for the `/metrics` route.
@@ -138,6 +141,7 @@ impl Route {
             "/shards" | "shards" => Some(Route::Shards),
             "/healthz" | "healthz" | "/health" | "health" => Some(Route::Health),
             "/trace" | "trace" => Some(Route::Trace),
+            "/failpoints" | "failpoints" => Some(Route::Failpoints),
             _ => None,
         }
     }
@@ -181,6 +185,7 @@ impl Router {
     ) -> anyhow::Result<(Vec<f64>, Vec<f64>, Backend)> {
         let d = model.dim();
         let k = points.len() / d;
+        // PANIC-OK: the bucket ladder is validated non-empty at build.
         let max_bucket = *self.buckets.last().unwrap();
         if k > max_bucket {
             // Chunk recursively.
@@ -268,6 +273,8 @@ mod tests {
         assert_eq!(Route::parse("/healthz"), Some(Route::Health));
         assert_eq!(Route::parse("/healthz/"), Some(Route::Health));
         assert_eq!(Route::parse("/trace"), Some(Route::Trace));
+        assert_eq!(Route::parse("/failpoints"), Some(Route::Failpoints));
+        assert_eq!(Route::parse("/failpoints?clear=1"), Some(Route::Failpoints));
         assert_eq!(Route::parse("/nope"), None);
     }
 

@@ -4,18 +4,22 @@
 //! observations and hot-swaps refreshed model snapshots into the live
 //! [`ModelSlot`].
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{self, Receiver, SyncSender};
 use std::sync::Arc;
 use std::time::Instant;
 
 use super::batcher::{self, BatcherConfig, IngestBatch, Job, Prediction, Request};
-use super::metrics::Metrics;
-use super::router::{metrics_format, query_flag, EngineSpec, MetricsFormat, Route};
+use super::metrics::{Metrics, WorkerKind};
+use super::router::{metrics_format, query_flag, query_param, EngineSpec, MetricsFormat, Route};
 use super::state::{ModelSlot, ServingModel};
+use crate::fault::{
+    self, Checkpoint, CkptConfig, CkptTrigger, Supervisor, SupervisorPolicy, Verdict,
+};
 use crate::obs::trace::Tracer;
 use crate::shard::ShardedTrainer;
-use crate::stream::{RefreshStats, StreamTrainer};
+use crate::stream::{RefreshStats, StreamConfig, StreamTrainer};
 use crate::util::json::Json;
 
 /// A running prediction (and optionally ingestion) server for one model
@@ -50,14 +54,61 @@ impl Server {
     /// hyper re-opts every `reopt_every`) and atomically swaps the new
     /// snapshot into the live slot. Prediction batches always execute
     /// against a consistent snapshot.
+    ///
+    /// When `MSGP_CKPT_DIR` is set, the newest valid checkpoint in it is
+    /// restored first (the sufficient statistics are additive, so the
+    /// replayed refresh reproduces the pre-crash model bit-for-bit) and
+    /// the ingest thread persists updated checkpoints on the configured
+    /// cadence plus at graceful shutdown. `MSGP_REFRESH_DEADLINE_MS`
+    /// arms the refresh soft deadline when the config leaves it unset.
     pub fn start_online(
         mut trainer: StreamTrainer,
         engine: EngineSpec,
         cfg: BatcherConfig,
     ) -> Server {
+        fault::init_from_env();
+        if trainer.cfg.refresh_deadline_ms.is_none() {
+            trainer.cfg.refresh_deadline_ms =
+                std::env::var("MSGP_REFRESH_DEADLINE_MS").ok().and_then(|v| v.parse::<u64>().ok());
+        }
+        let ckpt = CkptConfig::from_env();
+        let mut restored_seq = None;
+        if let Some(path) = ckpt.unsharded_path() {
+            if let Some(dir) = path.parent() {
+                // Best-effort: a missing checkpoint directory surfaces
+                // later as ckpt_write_errors_total, not a startup panic.
+                let _ = std::fs::create_dir_all(dir);
+            }
+            if let Some((c, from)) = fault::load_newest(&path) {
+                let seq = c.seq;
+                match restore_trainer(c, trainer.cfg.clone()) {
+                    Some(t) => {
+                        crate::log_info!(
+                            "restored checkpoint seq={seq} n={} from {}",
+                            t.ski().n(),
+                            from.display()
+                        );
+                        trainer = t;
+                        restored_seq = Some(seq);
+                    }
+                    None => crate::log_warn!(
+                        "checkpoint {} is incompatible with the configured stream (ignoring)",
+                        from.display()
+                    ),
+                }
+            }
+        }
+        // A restored trainer is dirty (`dirty_points = n`), so this
+        // initial publish replays the refresh from the statistics alone
+        // — recovery completes before the server accepts traffic.
         let slot = Arc::new(ModelSlot::new(trainer.serving_model()));
         let (itx, irx) = mpsc::sync_channel::<IngestBatch>(1024);
-        Self::start_with_slot(slot, engine, cfg, Some(itx), Some((irx, trainer)))
+        let server = Self::start_with_slot(slot, engine, cfg, Some(itx), Some((irx, trainer, ckpt)));
+        if let Some(seq) = restored_seq {
+            server.metrics.ckpt_restores_total.inc();
+            server.metrics.ckpt_last_seq.store(seq, Ordering::Relaxed);
+        }
+        server
     }
 
     fn start_with_slot(
@@ -65,7 +116,7 @@ impl Server {
         engine: EngineSpec,
         cfg: BatcherConfig,
         ingest_tx: Option<SyncSender<IngestBatch>>,
-        ingest_loop: Option<(Receiver<IngestBatch>, StreamTrainer)>,
+        ingest_loop: Option<(Receiver<IngestBatch>, StreamTrainer, CkptConfig)>,
     ) -> Server {
         crate::obs::trace::init_from_env();
         crate::obs::log::init_from_env();
@@ -78,13 +129,16 @@ impl Server {
         let handle = std::thread::Builder::new()
             .name("msgp-batcher".into())
             .spawn(move || batcher::run(rx, engine, slot2, cfg, met2, ingest_tx))
+            // PANIC-OK: thread spawn fails only on resource exhaustion at
+            // startup; there is no server to degrade into yet.
             .expect("spawn batcher");
-        let ingest_handle = ingest_loop.map(|(irx, trainer)| {
+        let ingest_handle = ingest_loop.map(|(irx, trainer, ckpt)| {
             let slot3 = slot.clone();
             let met3 = metrics.clone();
             std::thread::Builder::new()
                 .name("msgp-ingest".into())
-                .spawn(move || run_ingest(irx, trainer, slot3, met3))
+                .spawn(move || run_ingest(irx, trainer, slot3, met3, ckpt))
+                // PANIC-OK: startup-time spawn, same as the batcher above.
                 .expect("spawn ingest")
         });
         Server {
@@ -108,6 +162,7 @@ impl Server {
     pub fn start_sharded(trainer: ShardedTrainer, cfg: BatcherConfig) -> Server {
         crate::obs::trace::init_from_env();
         crate::obs::log::init_from_env();
+        fault::init_from_env();
         let trainer = Arc::new(trainer);
         let metrics = trainer.metrics.clone();
         let serving = trainer.serving();
@@ -117,6 +172,7 @@ impl Server {
         let handle = std::thread::Builder::new()
             .name("msgp-shard-batcher".into())
             .spawn(move || batcher::run_sharded(rx, serving, cfg, met2))
+            // PANIC-OK: startup-time spawn; nothing is serving yet.
             .expect("spawn batcher");
         Server {
             tx: Some(tx),
@@ -168,12 +224,52 @@ impl Server {
     /// up. A static (non-streaming) server is ready by construction
     /// and reports `last_refresh_age_us: null`.
     pub fn healthz(&self) -> String {
+        self.health().1
+    }
+
+    /// Readiness with a verdict: `(healthy, json_body)`. The body
+    /// always carries the probe fields; when unhealthy, `status` flips
+    /// to `"unhealthy"` and `reason` says why — the HTTP front door
+    /// maps that to a 503 so load balancers stop routing here.
+    /// Unhealthy when (a) `MSGP_STALE_MS` is set, the server streams,
+    /// and the last published refresh is older than that budget; (b) a
+    /// supervised worker was poisoned (its restart budget is spent); or
+    /// (c) a checkpoint recovery replay is still running.
+    pub fn health(&self) -> (bool, String) {
         let age = self.metrics.last_refresh_age_us();
-        // Both start paths publish a serving snapshot before accepting
-        // traffic, so readiness here means "the serving threads are
-        // alive" — which holds as long as the server object does.
-        Json::obj(vec![
-            ("status", Json::Str("ok".to_string())),
+        let mut reasons: Vec<String> = Vec::new();
+        if self.streaming {
+            if let Some(limit_ms) =
+                std::env::var("MSGP_STALE_MS").ok().and_then(|v| v.parse::<u64>().ok())
+            {
+                if let Some(us) = age {
+                    if us > limit_ms.saturating_mul(1000) {
+                        reasons.push(format!(
+                            "stale: last refresh {}ms ago exceeds MSGP_STALE_MS={limit_ms}",
+                            us / 1000
+                        ));
+                    }
+                }
+            }
+        }
+        let poisoned = self.metrics.worker_poisoned.get();
+        if poisoned > 0 {
+            reasons.push(format!("{poisoned} supervised worker(s) poisoned"));
+        }
+        if self.metrics.recovering.get() > 0 {
+            reasons.push("checkpoint recovery replay in progress".to_string());
+        }
+        let healthy = reasons.is_empty();
+        let body = Json::obj(vec![
+            (
+                "status",
+                Json::Str(if healthy { "ok" } else { "unhealthy" }.to_string()),
+            ),
+            (
+                "reason",
+                if healthy { Json::Null } else { Json::Str(reasons.join("; ")) },
+            ),
+            ("degraded", Json::Bool(self.metrics.degraded_mode.get() > 0)),
             ("streaming", Json::Bool(self.streaming)),
             ("shards", Json::Num(self.metrics.shards.len() as f64)),
             (
@@ -200,7 +296,43 @@ impl Server {
                 Json::Num(self.metrics.ingested_points_total.get() as f64),
             ),
         ])
-        .to_string()
+        .to_string();
+        (healthy, body)
+    }
+
+    /// `/failpoints`: inspect and (re)configure the failpoint registry.
+    /// `?set=name:action@prob;...` installs specs (the `:` separator
+    /// form, because `=` delimits query pairs), `?clear=1` disarms
+    /// everything; either way the response is the post-change registry
+    /// snapshot. Errors (malformed specs) surface as `Err` so the HTTP
+    /// layer can answer 400.
+    pub fn handle_failpoints(&self, path: &str) -> Result<String, String> {
+        if query_flag(path, "clear") {
+            fault::clear_all();
+        }
+        if let Some(spec) = query_param(path, "set") {
+            if spec.is_empty() {
+                return Err("empty failpoint spec".to_string());
+            }
+            fault::configure(spec)?;
+        }
+        let rows: Vec<Json> = fault::snapshot()
+            .into_iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("name", Json::Str(s.name)),
+                    ("action", Json::Str(s.action)),
+                    ("prob", Json::Num(s.prob)),
+                    ("hits", Json::Num(s.hits as f64)),
+                    ("fires", Json::Num(s.fires as f64)),
+                ])
+            })
+            .collect();
+        Ok(Json::obj(vec![
+            ("armed", Json::Bool(fault::armed())),
+            ("failpoints", Json::Arr(rows)),
+        ])
+        .to_string())
     }
 
     /// Dispatch a GET-style route to its text payload — the in-process
@@ -231,6 +363,7 @@ impl Server {
                     self.shards_summary()
                 }
             }
+            Route::Failpoints => self.handle_failpoints(path).ok(),
             Route::Predict | Route::Ingest | Route::Models => None,
         }
     }
@@ -242,6 +375,8 @@ impl Server {
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         self.tx
             .as_ref()
+            // PANIC-OK: `tx` is Some until shutdown_inner, which takes
+            // `&mut self`, so no shared-reference caller can race it.
             .expect("server running")
             .send(Job::Predict(Request { x, reply: rtx, t0: Instant::now() }))
             .map_err(|_| anyhow::anyhow!("server shut down"))?;
@@ -299,6 +434,8 @@ impl Server {
         let (rtx, rrx) = mpsc::sync_channel(1);
         self.tx
             .as_ref()
+            // PANIC-OK: same invariant as `submit` — `tx` outlives every
+            // shared reference to the server.
             .expect("server running")
             .send(Job::Ingest(IngestBatch { xs, ys, reply: rtx, refresh_now }))
             .map_err(|_| anyhow::anyhow!("server shut down"))?;
@@ -342,102 +479,235 @@ fn record_refresh_metrics(metrics: &Metrics, s: &RefreshStats) {
     );
 }
 
+/// Rebuild a stream trainer around checkpointed sufficient statistics,
+/// or `None` when the checkpoint does not fit the configured stream
+/// (sharded layout, or a probe-count mismatch that would invalidate the
+/// variance accumulators). The restored trainer is dirty
+/// (`dirty_points = n`), so the first `serving_model()` call replays
+/// the refresh and reconstructs every cache from the statistics alone.
+fn restore_trainer(ckpt: Checkpoint, cfg: StreamConfig) -> Option<StreamTrainer> {
+    if ckpt.skis.len() != 1 {
+        return None;
+    }
+    let ski = ckpt.skis.into_iter().next()?;
+    if ski.probes().len() != cfg.msgp.n_var_samples.max(1) {
+        return None;
+    }
+    Some(StreamTrainer::from_stats(ckpt.kernel, ckpt.sigma2, cfg, ski))
+}
+
+/// Cadence bookkeeping the ingest loop keeps across batches (and across
+/// supervised restarts after an injected or organic panic).
+struct IngestState {
+    since_reopt: usize,
+    // Swap cadence is tracked separately from `dirty_points`: a
+    // re-optimization refreshes the caches (zeroing `dirty_points`)
+    // and MUST publish, otherwise the automatic swap would starve
+    // whenever `reopt_every <= refresh_every`.
+    since_swap: usize,
+    // Preconditioner fallbacks observed so far (the trainer counts them
+    // cumulatively; the metric mirrors the deltas).
+    fallbacks_seen: u64,
+    trigger: CkptTrigger,
+    seq: u64,
+}
+
+/// Write one checkpoint of the trainer's current statistics (atomic
+/// tmp+fsync+rename with rotation). Failures are absorbed into
+/// `ckpt_write_errors_total` — a full disk must not take serving down.
+fn write_checkpoint(
+    trainer: &StreamTrainer,
+    metrics: &Metrics,
+    ckpt: &CkptConfig,
+    st: &mut IngestState,
+) {
+    let path = match ckpt.unsharded_path() {
+        Some(p) => p,
+        None => return,
+    };
+    let t0 = Instant::now();
+    let c = Checkpoint {
+        seq: st.seq + 1,
+        kernel: trainer.kernel.clone(),
+        sigma2: trainer.sigma2,
+        skis: vec![trainer.ski().clone()],
+    };
+    match fault::write_atomic(&path, &c) {
+        Ok(()) => {
+            st.seq += 1;
+            st.trigger.note_written();
+            metrics.record_ckpt_write(st.seq, t0.elapsed());
+        }
+        Err(e) => {
+            metrics.ckpt_write_errors_total.inc();
+            crate::log_warn!("checkpoint write failed (serving continues): {e}");
+        }
+    }
+}
+
 /// The ingest/refresh loop (the online server's background thread): apply
-/// batches to the stream trainer, count them, and publish refreshed
-/// snapshots on the configured cadence.
+/// batches to the stream trainer, count them, publish refreshed
+/// snapshots on the configured cadence, and persist checkpoints of the
+/// sufficient statistics. Each batch runs under a panic supervisor:
+/// a panicking batch is dropped (its caller sees a clean channel error,
+/// not a hang), the worker restarts with backoff, and repeated failures
+/// inside the policy window poison the worker — flipping `/healthz`
+/// unhealthy — rather than looping hot.
 fn run_ingest(
     rx: Receiver<IngestBatch>,
     mut trainer: StreamTrainer,
     slot: Arc<ModelSlot>,
     metrics: Arc<Metrics>,
+    ckpt: CkptConfig,
 ) {
+    let mut st = IngestState {
+        since_reopt: 0,
+        since_swap: 0,
+        fallbacks_seen: trainer.precond_fallbacks,
+        trigger: CkptTrigger::default(),
+        // Continue the restored sequence so rotation keeps strictly
+        // newer checkpoints distinguishable after a crash-restart.
+        seq: metrics.ckpt_last_seq.get(),
+    };
+    let mut sup = Supervisor::new(SupervisorPolicy::default(), 0x1276 ^ std::process::id() as u64);
+    while let Ok(batch) = rx.recv() {
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            ingest_one(&mut trainer, &slot, &metrics, &ckpt, &mut st, batch);
+        }));
+        if outcome.is_err() {
+            // The batch's reply sender unwound with the closure, so the
+            // blocked caller sees "server dropped ingest ack" instead of
+            // hanging forever.
+            metrics.record_worker_restart(WorkerKind::Ingest);
+            match sup.on_failure() {
+                Verdict::Restart(backoff) => {
+                    crate::log_warn!(
+                        "ingest worker panicked; restarting after {}ms",
+                        backoff.as_millis()
+                    );
+                    std::thread::sleep(backoff);
+                }
+                Verdict::Poison => {
+                    metrics.worker_poisoned.fetch_add(1, Ordering::Relaxed);
+                    crate::log_error!(
+                        "ingest worker poisoned after repeated panics; /healthz now fails"
+                    );
+                    break;
+                }
+            }
+        }
+    }
+    // Graceful shutdown: persist the final statistics so a restart
+    // resumes from exactly what this process acked.
+    if ckpt.enabled() && trainer.n() > 0 {
+        write_checkpoint(&trainer, &metrics, &ckpt, &mut st);
+    }
+}
+
+/// One supervised iteration of the ingest loop.
+fn ingest_one(
+    trainer: &mut StreamTrainer,
+    slot: &ModelSlot,
+    metrics: &Metrics,
+    ckpt: &CkptConfig,
+    st: &mut IngestState,
+    batch: IngestBatch,
+) {
+    let _sp_batch = crate::span!("ingest.batch");
+    crate::failpoint!("ingest.batch");
     let refresh_every = trainer.cfg.refresh_every.max(1);
     let reopt_every = trainer.cfg.reopt_every;
-    let mut since_reopt = 0usize;
-    // Preconditioner fallbacks observed so far (the trainer counts them
-    // cumulatively; the metric mirrors the deltas).
-    let mut fallbacks_seen = 0u64;
-    // Swap cadence is tracked separately from `dirty_points`: a
-    // re-optimization refreshes the caches (zeroing `dirty_points`)
-    // and MUST publish, otherwise the automatic swap would starve
-    // whenever `reopt_every <= refresh_every`.
-    let mut since_swap = 0usize;
-    while let Ok(batch) = rx.recv() {
-        let _sp_batch = crate::span!("ingest.batch");
-        let k = batch.ys.len();
-        let rejected_before = trainer.rejected_points;
-        trainer.ingest_batch(&batch.xs, &batch.ys);
-        let rejected = trainer.rejected_points - rejected_before;
-        let applied = k - rejected;
-        if k > 0 {
-            metrics.ingested_points_total.fetch_add(applied as u64, Ordering::Relaxed);
-            metrics.ingest_rejected_total.fetch_add(rejected as u64, Ordering::Relaxed);
-            if applied > 0 {
-                metrics.ingest_batches.fetch_add(1, Ordering::Relaxed);
-            }
-            since_reopt += applied;
-            since_swap += applied;
+    let k = batch.ys.len();
+    let rejected_before = trainer.rejected_points;
+    trainer.ingest_batch(&batch.xs, &batch.ys);
+    let rejected = trainer.rejected_points - rejected_before;
+    let applied = k - rejected;
+    if k > 0 {
+        metrics.ingested_points_total.fetch_add(applied as u64, Ordering::Relaxed);
+        metrics.ingest_rejected_total.fetch_add(rejected as u64, Ordering::Relaxed);
+        if applied > 0 {
+            metrics.ingest_batches.fetch_add(1, Ordering::Relaxed);
         }
-        metrics.reservoir_points.store(trainer.reservoir_len() as u64, Ordering::Relaxed);
-        // Ack as soon as the points are absorbed — a cadence-triggered
-        // refresh must not stall the ingest caller (and, transitively,
-        // overflow the ingest queue). `flush_stream` callers asked for a
-        // swap-before-ack guarantee, so they wait.
-        let mut reply = Some(batch.reply);
-        if !batch.refresh_now {
-            if let Some(r) = reply.take() {
-                let _ = r.send(Ok(applied));
-            }
+        st.since_reopt += applied;
+        st.since_swap += applied;
+    }
+    metrics.reservoir_points.store(trainer.reservoir_len() as u64, Ordering::Relaxed);
+    // Ack as soon as the points are absorbed — a cadence-triggered
+    // refresh must not stall the ingest caller (and, transitively,
+    // overflow the ingest queue). `flush_stream` callers asked for a
+    // swap-before-ack guarantee, so they wait.
+    let mut reply = Some(batch.reply);
+    if !batch.refresh_now {
+        if let Some(r) = reply.take() {
+            let _ = r.send(Ok(applied));
         }
-        let mut need_swap = batch.refresh_now;
-        if reopt_every > 0 && since_reopt >= reopt_every {
-            since_reopt = 0;
-            match trainer.reoptimize() {
-                Ok(Some(_)) => {
-                    metrics.reopt_count.fetch_add(1, Ordering::Relaxed);
-                    // reoptimize() ran a full refresh internally.
-                    record_refresh_metrics(&metrics, &trainer.last_refresh);
-                    need_swap = true; // new hypers + refreshed caches: publish
-                }
-                Ok(None) => {}
-                Err(e) => {
-                    crate::log_error!("stream re-optimization failed (keeping hypers): {e}")
-                }
+    }
+    let mut need_swap = batch.refresh_now;
+    if reopt_every > 0 && st.since_reopt >= reopt_every {
+        st.since_reopt = 0;
+        match trainer.reoptimize() {
+            Ok(Some(_)) => {
+                metrics.reopt_count.fetch_add(1, Ordering::Relaxed);
+                // reoptimize() ran a full refresh internally.
+                record_refresh_metrics(metrics, &trainer.last_refresh);
+                need_swap = true; // new hypers + refreshed caches: publish
+            }
+            Ok(None) => {}
+            Err(e) => {
+                crate::log_error!("stream re-optimization failed (keeping hypers): {e}")
             }
         }
-        if since_swap >= refresh_every {
-            need_swap = true;
-        }
-        if need_swap {
-            // The "refresh" span wraps the whole publish cycle, so a
-            // trace decomposes it into the stage children recorded by
-            // `refresh_mdomain` (stage_rhs / block_solve / map_back)
-            // plus the slot swap below.
-            let _sp_refresh = crate::span!("refresh");
-            let refreshes_before = trainer.refresh_count;
-            let sm = trainer.serving_model(); // refreshes if dirty
+    }
+    if st.since_swap >= refresh_every {
+        need_swap = true;
+    }
+    if need_swap {
+        // The "refresh" span wraps the whole publish cycle, so a
+        // trace decomposes it into the stage children recorded by
+        // `refresh_mdomain` (stage_rhs / block_solve / map_back)
+        // plus the slot swap below.
+        let _sp_refresh = crate::span!("refresh");
+        let refreshes_before = trainer.refresh_count;
+        let sm = trainer.serving_model(); // refreshes if dirty
+        let refreshed = trainer.refresh_count > refreshes_before;
+        if refreshed && trainer.last_refresh.deadline_hit {
+            // Degradation tier: the refresh overran its soft deadline
+            // and aborted between CG iterations. Keep serving the
+            // last-good snapshot; the trainer stays dirty (with the
+            // partial warm starts retained), so the next cadence point
+            // retries. `/healthz` reports `degraded: true` meanwhile.
+            metrics.degraded_mode.store(1, Ordering::Relaxed);
+            record_refresh_metrics(metrics, &trainer.last_refresh);
+        } else {
             let t_swap = Instant::now();
             {
                 let _sp_swap = crate::span!("refresh.slot_swap");
                 slot.swap(sm);
             }
             metrics.last_swap_us.store(t_swap.elapsed().as_micros() as u64, Ordering::Relaxed);
-            since_swap = 0;
+            st.since_swap = 0;
+            metrics.degraded_mode.store(0, Ordering::Relaxed);
             // Only count a refresh when one actually ran (a flush on a
             // clean trainer republishes the cached snapshot).
-            if trainer.refresh_count > refreshes_before {
-                record_refresh_metrics(&metrics, &trainer.last_refresh);
+            if refreshed {
+                record_refresh_metrics(metrics, &trainer.last_refresh);
             }
         }
-        if trainer.precond_fallbacks > fallbacks_seen {
-            metrics
-                .precond_fallbacks
-                .fetch_add(trainer.precond_fallbacks - fallbacks_seen, Ordering::Relaxed);
-            fallbacks_seen = trainer.precond_fallbacks;
+    }
+    if trainer.precond_fallbacks > st.fallbacks_seen {
+        metrics
+            .precond_fallbacks
+            .fetch_add(trainer.precond_fallbacks - st.fallbacks_seen, Ordering::Relaxed);
+        st.fallbacks_seen = trainer.precond_fallbacks;
+    }
+    if ckpt.enabled() {
+        st.trigger.note_points(applied);
+        if st.trigger.due(ckpt) {
+            write_checkpoint(trainer, metrics, ckpt, st);
         }
-        if let Some(r) = reply {
-            let _ = r.send(Ok(applied));
-        }
+    }
+    if let Some(r) = reply {
+        let _ = r.send(Ok(applied));
     }
 }
 
@@ -593,6 +863,36 @@ mod tests {
         // The flush published a refresh: the per-stage gauges carry it.
         let s = server.metrics.summary();
         assert!(s.contains("last_refresh_block_solve_us="), "{s}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn health_flips_unhealthy_when_a_worker_is_poisoned() {
+        let server = Server::start(serving_model(), EngineSpec::Native, BatcherConfig::default());
+        let (healthy, body) = server.health();
+        assert!(healthy, "{body}");
+        server.metrics.worker_poisoned.fetch_add(1, Ordering::Relaxed);
+        let (healthy, body) = server.health();
+        assert!(!healthy);
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("status").and_then(|v| v.as_str()), Some("unhealthy"));
+        let reason = j.get("reason").and_then(|v| v.as_str()).unwrap_or_default().to_string();
+        assert!(reason.contains("poisoned"), "{reason}");
+        server.metrics.worker_poisoned.store(0, Ordering::Relaxed);
+        server.shutdown();
+    }
+
+    #[test]
+    fn failpoints_route_reports_registry_and_rejects_bad_specs() {
+        let server = Server::start(serving_model(), EngineSpec::Native, BatcherConfig::default());
+        // Structural check only — other tests in this binary may own the
+        // global registry, so don't assert on its contents.
+        let body = server.handle_path("/failpoints").expect("failpoints routed");
+        let j = Json::parse(&body).unwrap();
+        assert!(j.get("armed").is_some(), "{body}");
+        assert!(matches!(j.get("failpoints"), Some(Json::Arr(_))), "{body}");
+        // A malformed spec is a clean error (which HTTP maps to 400).
+        assert!(server.handle_failpoints("/failpoints?set=bogus").is_err());
         server.shutdown();
     }
 }

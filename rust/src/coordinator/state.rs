@@ -39,6 +39,7 @@ impl ServingModel {
         Self::from_parts(
             model.grid.clone(),
             model.u_mean.clone(),
+            // PANIC-OK: `precompute_variance` above guarantees `nu_u`.
             model.nu_u.clone().unwrap(),
             model.kernel.sf2(),
             model.sigma2,
@@ -130,12 +131,16 @@ impl ModelSlot {
 
     /// Snapshot of the current model (cheap: one `Arc` clone).
     pub fn get(&self) -> Arc<ServingModel> {
-        self.inner.read().unwrap().clone()
+        // Poison recovery: the guarded value is a bare `Arc` replaced
+        // atomically in `swap` — it is well-formed even if some holder
+        // panicked, so serving continues through supervised restarts.
+        self.inner.read().unwrap_or_else(|e| e.into_inner()).clone()
     }
 
     /// Atomically publish a new model; returns the previous snapshot.
     pub fn swap(&self, model: ServingModel) -> Arc<ServingModel> {
-        let mut w = self.inner.write().unwrap();
+        // Poison recovery: see `get`.
+        let mut w = self.inner.write().unwrap_or_else(|e| e.into_inner());
         std::mem::replace(&mut *w, Arc::new(model))
     }
 }
@@ -193,22 +198,30 @@ impl ModelStore {
     /// Install (or replace) a model under a name. Readers holding the old
     /// `Arc` finish their batches on the old version — swap is atomic.
     pub fn install(&self, name: &str, model: ServingModel) {
-        self.inner.write().unwrap().insert(name.to_string(), Arc::new(model));
+        // Poison recovery: each map entry is replaced whole, so the map
+        // is well-formed across a panicking holder.
+        self.inner
+            .write()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(name.to_string(), Arc::new(model));
     }
 
     /// Fetch a model by name.
     pub fn get(&self, name: &str) -> Option<Arc<ServingModel>> {
-        self.inner.read().unwrap().get(name).cloned()
+        // Poison recovery: see `install`.
+        self.inner.read().unwrap_or_else(|e| e.into_inner()).get(name).cloned()
     }
 
     /// Remove a model.
     pub fn remove(&self, name: &str) -> bool {
-        self.inner.write().unwrap().remove(name).is_some()
+        // Poison recovery: see `install`.
+        self.inner.write().unwrap_or_else(|e| e.into_inner()).remove(name).is_some()
     }
 
     /// Installed model names.
     pub fn names(&self) -> Vec<String> {
-        self.inner.read().unwrap().keys().cloned().collect()
+        // Poison recovery: see `install`.
+        self.inner.read().unwrap_or_else(|e| e.into_inner()).keys().cloned().collect()
     }
 }
 

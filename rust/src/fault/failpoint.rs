@@ -1,0 +1,365 @@
+//! Dependency-free failpoint injection.
+//!
+//! A `failpoint!("name")` site compiles to **one relaxed atomic load**
+//! when the framework is disarmed — the same zero-cost-when-off
+//! discipline as [`crate::span!`] — so the hazardous-site registry can
+//! stay compiled into release builds and the chaos suite (and CI) can
+//! arm it at runtime. Sites are armed either from the environment
+//! (`MSGP_FAILPOINTS`, read once at server start) or live over HTTP
+//! (`GET /failpoints?set=...`), with four actions:
+//!
+//! | action      | effect at the site                                  |
+//! |-------------|-----------------------------------------------------|
+//! | `panic`     | `panic!` (exercises the supervisors)                |
+//! | `error`     | takes the site's error arm (`failpoint!(name, ..)`) |
+//! | `sleep(ms)` | blocks the calling thread `ms` milliseconds         |
+//! | `off`       | removes the failpoint                               |
+//!
+//! Grammar (both `=` and `:` separate name from action, so the spec
+//! survives URL query strings unencoded):
+//!
+//! ```text
+//! spec     := entry (';' entry)*
+//! entry    := name ('=' | ':') action ('@' probability)?
+//! action   := 'panic' | 'error' | 'sleep(' millis ')' | 'off'
+//! ```
+//!
+//! e.g. `MSGP_FAILPOINTS='shard.refresh=panic@0.1;ckpt.rename=error'`.
+//! Probabilities are sampled from a dedicated lock-free SplitMix64
+//! stream (never the model RNGs, so arming a failpoint cannot perturb
+//! statistical reproducibility). Registered site names are listed in
+//! `docs/RELIABILITY.md`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+/// Global arm flag: `true` iff at least one failpoint is configured.
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+/// Is any failpoint configured? This is the only cost a `failpoint!`
+/// site pays when the framework is idle.
+#[inline(always)]
+pub fn armed() -> bool {
+    // ORDERING: Relaxed — a standalone on/off flag with no associated
+    // payload to publish; the registry mutex inside `hit` provides the
+    // synchronization for the configuration itself.
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// What a configured failpoint does when its probability gate passes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FpAction {
+    /// Panic at the site (supervision / restart drills).
+    Panic,
+    /// Make the site's `failpoint!(name, on_error)` arm run.
+    Error,
+    /// Block the calling thread (latency / deadline drills).
+    Sleep(u64),
+}
+
+impl FpAction {
+    fn name(self) -> String {
+        match self {
+            FpAction::Panic => "panic".to_string(),
+            FpAction::Error => "error".to_string(),
+            FpAction::Sleep(ms) => format!("sleep({ms})"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+struct FpEntry {
+    action: FpAction,
+    /// Firing probability in `[0, 1]`; 1.0 = every hit.
+    prob: f64,
+    /// Times the site was reached while configured.
+    hits: u64,
+    /// Times the action actually fired (passed the probability gate).
+    fires: u64,
+}
+
+/// One row of the `/failpoints` status listing.
+#[derive(Clone, Debug)]
+pub struct FpStatus {
+    pub name: String,
+    pub action: String,
+    pub prob: f64,
+    pub hits: u64,
+    pub fires: u64,
+}
+
+/// The configured-failpoint table. Leaf lock (see
+/// [`crate::analysis::LOCK_ORDER`]): never held across a site's action
+/// or any other lock acquisition.
+fn fp_registry() -> &'static Mutex<HashMap<String, FpEntry>> {
+    static REG: OnceLock<Mutex<HashMap<String, FpEntry>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Lock-free uniform sample for probability gates: a SplitMix64 stream
+/// advanced by atomic fetch-add, independent of every model RNG.
+fn sample_uniform() -> f64 {
+    static FP_SEED: AtomicU64 = AtomicU64::new(0x5eed_fa11_9097_u64);
+    // ORDERING: Relaxed — the counter only needs uniqueness per call,
+    // not ordering against any other memory.
+    let mut z = FP_SEED.fetch_add(0x9E3779B97F4A7C15, Ordering::Relaxed);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^= z >> 31;
+    (z >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Runtime entry of an armed `failpoint!` site. Returns `true` when the
+/// configured action is [`FpAction::Error`] and the probability gate
+/// passed — the macro's second form runs its error arm on `true`.
+/// `Panic`/`Sleep` are performed here (after the registry lock is
+/// released, so a sleeping or unwinding site never holds it).
+pub fn hit(name: &str) -> bool {
+    let fired = {
+        let mut reg = fp_registry().lock().unwrap_or_else(|e| e.into_inner());
+        match reg.get_mut(name) {
+            Some(e) => {
+                e.hits += 1;
+                if e.prob < 1.0 && sample_uniform() >= e.prob {
+                    None
+                } else {
+                    e.fires += 1;
+                    Some(e.action)
+                }
+            }
+            None => None,
+        }
+    };
+    match fired {
+        Some(FpAction::Panic) => panic!("failpoint `{name}` fired: injected panic"),
+        Some(FpAction::Sleep(ms)) => {
+            std::thread::sleep(Duration::from_millis(ms));
+            false
+        }
+        Some(FpAction::Error) => true,
+        None => false,
+    }
+}
+
+/// Parse and install a failpoint spec (see the [module docs](self) for
+/// the grammar), merging into the current table; `name=off` removes an
+/// entry. Returns the number of entries now configured. On a malformed
+/// entry nothing before it is rolled back (each entry applies as it
+/// parses) and the error describes the offending fragment.
+pub fn configure(spec: &str) -> Result<usize, String> {
+    let mut reg = fp_registry().lock().unwrap_or_else(|e| e.into_inner());
+    for part in spec.split(';') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (name, rhs) = part
+            .split_once('=')
+            .or_else(|| part.split_once(':'))
+            .ok_or_else(|| format!("failpoint entry `{part}` missing `=` or `:`"))?;
+        let (name, rhs) = (name.trim(), rhs.trim());
+        if name.is_empty() {
+            return Err(format!("failpoint entry `{part}` has an empty name"));
+        }
+        let (action_s, prob) = match rhs.split_once('@') {
+            Some((a, p)) => {
+                let prob: f64 = p
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("bad probability `{p}` in `{part}`"))?;
+                if !(0.0..=1.0).contains(&prob) {
+                    return Err(format!("probability {prob} outside [0, 1] in `{part}`"));
+                }
+                (a.trim(), prob)
+            }
+            None => (rhs, 1.0),
+        };
+        if action_s == "off" {
+            reg.remove(name);
+            continue;
+        }
+        let action = if action_s == "panic" {
+            FpAction::Panic
+        } else if action_s == "error" {
+            FpAction::Error
+        } else if let Some(ms) = action_s
+            .strip_prefix("sleep(")
+            .and_then(|r| r.strip_suffix(')'))
+        {
+            let ms: u64 =
+                ms.trim().parse().map_err(|_| format!("bad sleep millis in `{part}`"))?;
+            FpAction::Sleep(ms)
+        } else {
+            return Err(format!(
+                "unknown failpoint action `{action_s}` (want panic | error | sleep(ms) | off)"
+            ));
+        };
+        reg.insert(
+            name.to_string(),
+            FpEntry { action, prob, hits: 0, fires: 0 },
+        );
+    }
+    let count = reg.len();
+    // ORDERING: Relaxed — see `armed`; the registry mutex (still held
+    // here) orders the table contents.
+    ARMED.store(count > 0, Ordering::Relaxed);
+    Ok(count)
+}
+
+/// Remove every configured failpoint and disarm the framework.
+pub fn clear_all() {
+    let mut reg = fp_registry().lock().unwrap_or_else(|e| e.into_inner());
+    reg.clear();
+    // ORDERING: Relaxed — see `armed`.
+    ARMED.store(false, Ordering::Relaxed);
+}
+
+/// Current table with hit/fire counters, sorted by name (for
+/// `/failpoints` and test assertions).
+pub fn snapshot() -> Vec<FpStatus> {
+    let reg = fp_registry().lock().unwrap_or_else(|e| e.into_inner());
+    let mut out: Vec<FpStatus> = reg
+        .iter()
+        .map(|(name, e)| FpStatus {
+            name: name.clone(),
+            action: e.action.name(),
+            prob: e.prob,
+            hits: e.hits,
+            fires: e.fires,
+        })
+        .collect();
+    out.sort_by(|a, b| a.name.cmp(&b.name));
+    out
+}
+
+/// Arm failpoints from `MSGP_FAILPOINTS` (no-op when unset or empty;
+/// a malformed spec logs and leaves the framework disarmed rather than
+/// half-armed). Called by the server start paths.
+pub fn init_from_env() {
+    if let Ok(spec) = std::env::var("MSGP_FAILPOINTS") {
+        if spec.trim().is_empty() {
+            return;
+        }
+        if let Err(e) = configure(&spec) {
+            clear_all();
+            crate::log_warn!("ignoring MSGP_FAILPOINTS: {e}");
+        }
+    }
+}
+
+/// Declare a failpoint site.
+///
+/// * `failpoint!("name")` — statement form: performs `panic` / `sleep`
+///   actions when armed and configured; `error` is a no-op here.
+/// * `failpoint!("name", expr)` — error form: additionally runs `expr`
+///   (typically an early `return Err(..)` or a state poke) when the
+///   configured action is `error` and the probability gate passes.
+///
+/// Disarmed cost: one relaxed atomic load and a never-taken branch.
+#[macro_export]
+macro_rules! failpoint {
+    ($name:literal) => {{
+        if $crate::fault::armed() {
+            let _ = $crate::fault::hit($name);
+        }
+    }};
+    ($name:literal, $on_error:expr) => {{
+        if $crate::fault::armed() && $crate::fault::hit($name) {
+            $on_error
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The registry is process-global; serialize tests that mutate it.
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disarmed_sites_do_nothing() {
+        let _g = guard();
+        clear_all();
+        assert!(!armed());
+        let mut touched = false;
+        crate::failpoint!("test.nowhere", touched = true);
+        assert!(!touched);
+    }
+
+    #[test]
+    fn spec_parses_and_error_action_fires() {
+        let _g = guard();
+        clear_all();
+        let n = configure("test.err=error; test.zero:error@0.0").unwrap();
+        assert_eq!(n, 2);
+        assert!(armed());
+        let mut fired = 0;
+        for _ in 0..5 {
+            crate::failpoint!("test.err", fired += 1);
+        }
+        assert_eq!(fired, 5);
+        // Probability 0 never fires but still counts hits.
+        let mut zero_fired = false;
+        for _ in 0..50 {
+            crate::failpoint!("test.zero", zero_fired = true);
+        }
+        assert!(!zero_fired);
+        let snap = snapshot();
+        let z = snap.iter().find(|s| s.name == "test.zero").unwrap();
+        assert_eq!(z.hits, 50);
+        assert_eq!(z.fires, 0);
+        let e = snap.iter().find(|s| s.name == "test.err").unwrap();
+        assert_eq!((e.hits, e.fires), (5, 5));
+        // `off` removes; an empty table disarms.
+        configure("test.err=off; test.zero=off").unwrap();
+        assert!(!armed());
+        clear_all();
+    }
+
+    #[test]
+    fn panic_action_panics_and_sleep_sleeps() {
+        let _g = guard();
+        clear_all();
+        configure("test.panic=panic").unwrap();
+        let caught = std::panic::catch_unwind(|| hit("test.panic"));
+        assert!(caught.is_err());
+        configure("test.panic=off; test.sleep=sleep(30)").unwrap();
+        let t0 = std::time::Instant::now();
+        assert!(!hit("test.sleep"));
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+        clear_all();
+    }
+
+    #[test]
+    fn malformed_specs_are_rejected() {
+        let _g = guard();
+        clear_all();
+        assert!(configure("noseparator").is_err());
+        assert!(configure("a=explode").is_err());
+        assert!(configure("a=error@1.5").is_err());
+        assert!(configure("a=sleep(abc)").is_err());
+        assert!(configure("=error").is_err());
+        clear_all();
+    }
+
+    #[test]
+    fn probability_gate_is_roughly_calibrated() {
+        let _g = guard();
+        clear_all();
+        configure("test.half=error@0.5").unwrap();
+        let mut fired = 0u32;
+        for _ in 0..2000 {
+            if hit("test.half") {
+                fired += 1;
+            }
+        }
+        assert!((600..1400).contains(&fired), "fired {fired} of 2000 at p=0.5");
+        clear_all();
+    }
+}

@@ -1,0 +1,33 @@
+//! Fault tolerance: failpoint injection, worker supervision, and
+//! crash-safe checkpoint/restore of the SKI sufficient statistics.
+//!
+//! The additive statistics the streaming subsystem maintains (`W^T y`,
+//! the banded Gram, probe accumulators — see [`crate::stream`]) are
+//! designed to merge and replay, which makes durability cheap: a
+//! checkpoint is just the accumulators plus the hypers, grid, and RNG
+//! state, and recovery is "load and keep adding". This module supplies
+//! the three layers the serving stack's reliability pass is built on:
+//!
+//! * [`failpoint`] — a dependency-free `failpoint!("name")` macro
+//!   (one relaxed atomic load when disarmed) with env/HTTP-configured
+//!   panic / error / sleep actions and probabilities, registered at the
+//!   hazardous sites across refresh, sharding, checkpointing, HTTP, and
+//!   CG. The chaos suite (`rust/tests/robustness.rs`) drives it.
+//! * [`supervisor`] — restart policy for the serving workers: capped
+//!   exponential backoff with per-worker jitter, and a
+//!   poison-after-N-failures-in-a-window verdict that flips `/healthz`
+//!   to 503 instead of restart-looping forever.
+//! * [`codec`] — the versioned, length-prefixed, checksummed binary
+//!   encoding of checkpoints (the first cut of the ROADMAP direction-2
+//!   wire format), atomic tmp+fsync+rename writes with rotation, and
+//!   newest-valid recovery.
+//!
+//! Operational reference: `docs/RELIABILITY.md`.
+
+pub mod codec;
+pub mod failpoint;
+pub mod supervisor;
+
+pub use codec::{load, load_newest, write_atomic, Checkpoint, CkptConfig, CkptTrigger, CodecError};
+pub use failpoint::{armed, clear_all, configure, hit, init_from_env, snapshot, FpStatus};
+pub use supervisor::{Supervisor, SupervisorPolicy, Verdict};

@@ -1,0 +1,190 @@
+//! Worker supervision policy: capped exponential backoff with jitter
+//! and poison-after-N-failures-in-a-window.
+//!
+//! The [`Supervisor`] is deliberately pure policy — it decides *what* to
+//! do after a failure ([`Verdict`]), while the owning loop performs the
+//! `catch_unwind`, the sleep, and the metric increments. The serving
+//! stack wraps three worker kinds with it (see `docs/RELIABILITY.md`):
+//! the unsharded ingest/refresh thread, every shard worker, and the
+//! HTTP connection workers. All of them supervise **per iteration with
+//! retained state**: a panic is caught at an operation boundary (one
+//! ingest batch, one message, one connection), the in-flight operation
+//! is abandoned, and the worker's accumulated state survives — the
+//! failpoints and panics the chaos suite injects all fire *between*
+//! statistic updates, and a worker whose state could be torn mid-update
+//! must poison itself rather than restart.
+
+use std::time::{Duration, Instant};
+
+/// Restart policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct SupervisorPolicy {
+    /// Poison the worker after this many failures inside [`Self::window`].
+    pub max_failures: u32,
+    /// Sliding window for the failure count.
+    pub window: Duration,
+    /// First restart delay; doubles per consecutive recent failure.
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_cap: Duration,
+}
+
+impl Default for SupervisorPolicy {
+    fn default() -> Self {
+        SupervisorPolicy {
+            max_failures: 5,
+            window: Duration::from_secs(30),
+            backoff_base: Duration::from_millis(10),
+            backoff_cap: Duration::from_secs(2),
+        }
+    }
+}
+
+/// What the owning loop should do after a caught failure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    /// Sleep the given backoff, then resume the worker loop.
+    Restart(Duration),
+    /// Stop restarting: flip the worker's poisoned gauge (which takes
+    /// `/healthz` to 503) and exit the loop.
+    Poison,
+}
+
+/// Per-worker failure tracker (owned by the worker's thread; no locks).
+#[derive(Debug)]
+pub struct Supervisor {
+    policy: SupervisorPolicy,
+    /// Recent failure instants within the policy window.
+    recent: Vec<Instant>,
+    /// Total failures over the worker's lifetime.
+    pub failures_total: u64,
+    /// Jitter stream state (SplitMix64; seeded per worker so two workers
+    /// panicking together do not thundering-herd their restarts).
+    jitter: u64,
+}
+
+impl Supervisor {
+    /// New tracker; `seed` decorrelates jitter across workers (any
+    /// stable per-worker value — an id, a name hash).
+    pub fn new(policy: SupervisorPolicy, seed: u64) -> Self {
+        Supervisor { policy, recent: Vec::new(), failures_total: 0, jitter: seed }
+    }
+
+    /// Record a failure at `now` and decide. Exposed with an explicit
+    /// clock for deterministic tests; production loops call
+    /// [`Self::on_failure`].
+    pub fn on_failure_at(&mut self, now: Instant) -> Verdict {
+        self.failures_total += 1;
+        let window = self.policy.window;
+        self.recent.retain(|&t| now.duration_since(t) < window);
+        self.recent.push(now);
+        if self.recent.len() as u32 > self.policy.max_failures {
+            return Verdict::Poison;
+        }
+        // Capped exponential backoff on the recent-failure streak.
+        let exp = (self.recent.len() as u32).saturating_sub(1).min(20);
+        let base = self.policy.backoff_base.as_millis() as u64;
+        let cap = self.policy.backoff_cap.as_millis() as u64;
+        let raw = base.saturating_mul(1u64 << exp).min(cap);
+        // Jitter in [0.5, 1.5) — desynchronizes co-panicking workers.
+        let jitter_ms = (raw as f64 * (0.5 + self.next_uniform())) as u64;
+        Verdict::Restart(Duration::from_millis(jitter_ms.min(cap)))
+    }
+
+    /// Record a failure now and decide.
+    pub fn on_failure(&mut self) -> Verdict {
+        self.on_failure_at(Instant::now())
+    }
+
+    /// Failures currently inside the sliding window (diagnostics).
+    pub fn recent_failures(&self) -> usize {
+        self.recent.len()
+    }
+
+    fn next_uniform(&mut self) -> f64 {
+        self.jitter = self.jitter.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.jitter;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^= z >> 31;
+        (z >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> SupervisorPolicy {
+        SupervisorPolicy {
+            max_failures: 3,
+            window: Duration::from_secs(10),
+            backoff_base: Duration::from_millis(10),
+            backoff_cap: Duration::from_millis(500),
+        }
+    }
+
+    #[test]
+    fn backoff_grows_then_poisons_within_window() {
+        let mut s = Supervisor::new(policy(), 42);
+        let t0 = Instant::now();
+        let mut delays = Vec::new();
+        for k in 0..3 {
+            match s.on_failure_at(t0 + Duration::from_millis(k)) {
+                Verdict::Restart(d) => delays.push(d),
+                Verdict::Poison => panic!("poisoned too early at failure {k}"),
+            }
+        }
+        // Jitter is [0.5, 1.5)x, so consecutive raw doublings still
+        // order: 10ms*[0.5,1.5) < 40ms*0.5 is not guaranteed pairwise,
+        // but first (5..15ms) vs third (20..60ms) must order.
+        assert!(delays[0] < delays[2], "{delays:?}");
+        assert!(delays.iter().all(|d| *d <= Duration::from_millis(500)));
+        assert_eq!(
+            s.on_failure_at(t0 + Duration::from_millis(5)),
+            Verdict::Poison,
+            "4th failure in the window must poison"
+        );
+        assert_eq!(s.failures_total, 4);
+    }
+
+    #[test]
+    fn old_failures_age_out_of_the_window() {
+        let mut s = Supervisor::new(policy(), 7);
+        let t0 = Instant::now();
+        for k in 0..3 {
+            assert!(matches!(
+                s.on_failure_at(t0 + Duration::from_millis(k)),
+                Verdict::Restart(_)
+            ));
+        }
+        // Outside the 10s window the streak resets: no poison, and the
+        // backoff restarts from the base tier.
+        let later = t0 + Duration::from_secs(11);
+        match s.on_failure_at(later) {
+            Verdict::Restart(d) => assert!(d < Duration::from_millis(20), "{d:?}"),
+            Verdict::Poison => panic!("aged-out failures must not poison"),
+        }
+        assert_eq!(s.recent_failures(), 1);
+    }
+
+    #[test]
+    fn backoff_respects_the_cap() {
+        let mut s = Supervisor::new(
+            SupervisorPolicy {
+                max_failures: 50,
+                window: Duration::from_secs(600),
+                backoff_base: Duration::from_millis(100),
+                backoff_cap: Duration::from_millis(300),
+            },
+            9,
+        );
+        let t0 = Instant::now();
+        for k in 0..20 {
+            match s.on_failure_at(t0 + Duration::from_millis(k)) {
+                Verdict::Restart(d) => assert!(d <= Duration::from_millis(300), "{d:?}"),
+                Verdict::Poison => panic!("under max_failures"),
+            }
+        }
+    }
+}

@@ -83,6 +83,7 @@ impl Default for MsgpConfig {
                 max_iter: 400,
                 warm_start: false,
                 precondition: Preconditioner::Spectral,
+                deadline: None,
             },
             n_var_samples: 20,
             seed: 0,

@@ -95,6 +95,20 @@
 //!   mixes against it, recording p50/p99/p999 + sustained QPS into
 //!   `BENCH_fig9_serving.json`. See `examples/serving.rs`.
 //!
+//! * **Fault tolerance** ([`fault`]): a dependency-free failpoint
+//!   framework (`failpoint!` sites costing one relaxed atomic load when
+//!   disarmed, armed via `MSGP_FAILPOINTS` or `GET /failpoints`),
+//!   supervised serving workers (catch-unwind restart loops with capped
+//!   exponential backoff + jitter, poisoning after repeated failures,
+//!   `worker_restarts_total{worker}` metrics), refresh deadlines
+//!   (`MSGP_REFRESH_DEADLINE_MS` aborts block-CG between iterations and
+//!   keeps serving the last-good snapshot under a `degraded_mode`
+//!   gauge), and crash-safe checkpoint/restore: a versioned,
+//!   checksummed binary codec for the additive SKI statistics (+ hypers
+//!   + grid + RNG state) written atomically on ingest-count/interval
+//!   triggers, recovered newest-valid at startup — a SIGKILL'd process
+//!   restarts bit-compatible with the uninterrupted run. See
+//!   `docs/RELIABILITY.md`.
 //! * **In-tree correctness analyzer** ([`analysis`] + the `msgp-lint`
 //!   binary): a dependency-free static-analysis gate over the crate's
 //!   own source enforcing the invariants `rustc` cannot — audited
@@ -131,6 +145,7 @@ pub mod coordinator;
 pub mod stream;
 pub mod shard;
 pub mod runtime;
+pub mod fault;
 pub mod obs;
 pub mod bench;
 pub mod data;

@@ -72,6 +72,7 @@ impl ShardPlan {
             .enumerate()
             .max_by_key(|(_, &n)| n)
             .map(|(a, _)| a)
+            // PANIC-OK: a Grid always has at least one axis.
             .unwrap();
         let cells = global.axes[axis].n - 1;
         assert!(
@@ -88,6 +89,7 @@ impl ShardPlan {
             acc += base + usize::from(s < rem);
             cuts.push(acc);
         }
+        // PANIC-OK: `cuts` was just pushed to (debug-only check).
         debug_assert_eq!(*cuts.last().unwrap(), cells);
         ShardPlan { global, axis, halo, blend, cuts, base, rem }
     }

@@ -30,14 +30,18 @@
 //! when shards refresh alone — the two compose without
 //! oversubscription, and results are identical either way.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{self, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::coordinator::metrics::Metrics;
+use crate::coordinator::metrics::{Metrics, WorkerKind};
 use crate::coordinator::state::ServingModel;
 use crate::data::Dataset;
+use crate::fault::{
+    self, Checkpoint, CkptConfig, CkptTrigger, Supervisor, SupervisorPolicy, Verdict,
+};
 use crate::gp::msgp::{GridKernel, KernelSpec, MsgpConfig, MsgpModel};
 use crate::grid::Grid;
 use crate::shard::merge;
@@ -126,11 +130,17 @@ struct ShardWorker {
     /// Weighted ingests since the last refresh (owned 1.0, halo 0.5).
     dirty: f64,
     refresh_count: u64,
+    /// Checkpoint policy (disabled unless `MSGP_CKPT_DIR` is set).
+    ckpt: CkptConfig,
+    trigger: CkptTrigger,
+    /// Monotone checkpoint sequence for this shard's file.
+    seq: u64,
 }
 
 impl ShardWorker {
     fn ingest(&mut self, xs: &[f64], ys: &[f64], is_halo: bool) -> usize {
         let _sp = crate::span!("shard.ingest");
+        crate::failpoint!("shard.ingest");
         let d = self.grid.dim();
         let target = if is_halo { &mut self.halo } else { &mut self.own };
         for (i, &y) in ys.iter().enumerate() {
@@ -139,7 +149,9 @@ impl ShardWorker {
             debug_assert!(exp.is_none(), "routed point must not expand a shard grid");
         }
         if !is_halo && !ys.is_empty() {
-            let mut res = self.reservoir.lock().unwrap();
+            // Poison recovery: the reservoir is mutated one offer at a
+            // time and stays well-formed if some holder panicked.
+            let mut res = self.reservoir.lock().unwrap_or_else(|e| e.into_inner());
             for (i, &y) in ys.iter().enumerate() {
                 res.offer(&xs[i * d..(i + 1) * d], y, self.cfg.reservoir, &mut self.res_rng);
             }
@@ -164,6 +176,7 @@ impl ShardWorker {
     /// each summed across the two accumulators.
     fn refresh_and_publish(&mut self) {
         let _sp = crate::span!("shard.refresh");
+        crate::failpoint!("shard.refresh");
         let t0 = Instant::now();
         let m = self.grid.m();
         let has_halo = self.halo.n() > 0;
@@ -222,6 +235,7 @@ impl ShardWorker {
             &mut self.t_probes,
             &mut self.rws,
         );
+        crate::failpoint!("shard.swap");
         self.serving.publish(
             self.id,
             ServingModel::from_parts(
@@ -258,54 +272,175 @@ impl ShardWorker {
         self.metrics.record_refresh_threads(crate::parallel::threads() as u64);
     }
 
-    fn run(mut self, rx: Receiver<ShardMsg>) {
+    /// Persist this shard's accumulators (`skis[0] = own`,
+    /// `skis[1] = halo`) atomically. Failures increment
+    /// `ckpt_write_errors_total` — a full disk never takes a shard down.
+    fn write_checkpoint(&mut self) {
+        let path = match self.ckpt.shard_path(self.id) {
+            Some(p) => p,
+            None => return,
+        };
+        let t0 = Instant::now();
+        let c = Checkpoint {
+            seq: self.seq + 1,
+            kernel: self.kernel.clone(),
+            sigma2: self.sigma2,
+            skis: vec![self.own.clone(), self.halo.clone()],
+        };
+        match fault::write_atomic(&path, &c) {
+            Ok(()) => {
+                self.seq += 1;
+                self.trigger.note_written();
+                self.metrics.record_ckpt_write(self.seq, t0.elapsed());
+            }
+            Err(e) => {
+                self.metrics.ckpt_write_errors_total.inc();
+                crate::log_warn!("shard {} checkpoint write failed: {e}", self.id);
+            }
+        }
+    }
+
+    /// Adopt checkpointed accumulators if they fit this worker's layout
+    /// (exact grid match, same probe count for both accumulators) and
+    /// replay the refresh so the restored model serves immediately. The
+    /// `recovering` gauge is raised for the replay — `/healthz` answers
+    /// 503 until every shard finishes.
+    fn try_restore(&mut self) {
+        let path = match self.ckpt.shard_path(self.id) {
+            Some(p) => p,
+            None => return,
+        };
+        let (c, from) = match fault::load_newest(&path) {
+            Some(v) => v,
+            None => return,
+        };
+        let ns = self.cfg.msgp.n_var_samples.max(1);
+        let fits = c.skis.len() == 2
+            && c.skis.iter().all(|s| *s.grid() == self.grid && s.probes().len() == ns);
+        if !fits {
+            crate::log_warn!(
+                "shard {} checkpoint {} does not fit the configured layout (ignoring)",
+                self.id,
+                from.display()
+            );
+            return;
+        }
+        self.metrics.recovering.fetch_add(1, Ordering::Relaxed);
+        let mut skis = c.skis;
+        if let (Some(halo), Some(own)) = (skis.pop(), skis.pop()) {
+            self.halo = halo;
+            self.own = own;
+        }
+        self.seq = c.seq;
+        crate::log_info!(
+            "shard {} restored checkpoint seq={} n={} from {}",
+            self.id,
+            c.seq,
+            self.own.n(),
+            from.display()
+        );
+        self.refresh_and_publish();
+        self.metrics.recovering.fetch_sub(1, Ordering::Relaxed);
+        self.metrics.ckpt_restores_total.inc();
+    }
+
+    /// One control message. Runs under the supervisor's `catch_unwind`
+    /// in [`Self::run`]: a panic here unwinds any pending reply sender,
+    /// so blocked facade callers observe a channel error, not a hang.
+    fn handle(&mut self, msg: ShardMsg) {
         let refresh_every = self.cfg.refresh_every.max(1) as f64;
-        while let Ok(msg) = rx.recv() {
-            self.metrics.shards[self.id].queue_depth.fetch_sub(1, Ordering::Relaxed);
-            match msg {
-                ShardMsg::Ingest { xs, ys, halo, reply } => {
-                    let k = self.ingest(&xs, &ys, halo);
-                    // Ack before any cadence-triggered refresh so a slow
-                    // solve never stalls the ingest caller.
-                    if let Some(r) = reply {
-                        let _ = r.send(k);
-                    }
-                    if self.dirty >= refresh_every {
-                        self.refresh_and_publish();
-                    }
+        match msg {
+            ShardMsg::Ingest { xs, ys, halo, reply } => {
+                let k = self.ingest(&xs, &ys, halo);
+                // Ack before any cadence-triggered refresh so a slow
+                // solve never stalls the ingest caller.
+                if let Some(r) = reply {
+                    let _ = r.send(k);
                 }
-                ShardMsg::Flush { reply } => {
-                    if self.dirty > 0.0 || self.refresh_count == 0 {
-                        self.refresh_and_publish();
-                    }
-                    let _ = reply.send(());
+                if !halo && self.ckpt.enabled() {
+                    self.trigger.note_points(k);
                 }
-                ShardMsg::Decay { gamma, reply } => {
-                    {
-                        // Same lock a whole-domain re-opt snapshot takes:
-                        // the accumulators can never be observed
-                        // half-decayed.
-                        let reservoir = self.reservoir.clone();
-                        let _guard = reservoir.lock().unwrap();
-                        self.own.decay(gamma);
-                        self.halo.decay(gamma);
-                    }
-                    if self.own.n() > 0 || self.halo.n() > 0 {
-                        self.dirty = self.dirty.max(1.0);
-                    }
-                    let _ = reply.send(());
-                }
-                ShardMsg::OwnedStats { reply } => {
-                    let _ = reply.send(self.own.clone());
-                }
-                ShardMsg::SetHypers { kernel, sigma2, reply } => {
-                    self.kernel = kernel;
-                    self.sigma2 = sigma2;
-                    self.gk = GridKernel::new(&self.kernel, &self.grid, &self.cfg.msgp);
+                if self.dirty >= refresh_every {
                     self.refresh_and_publish();
-                    let _ = reply.send(());
+                }
+                if self.ckpt.enabled() && self.trigger.due(&self.ckpt) {
+                    self.write_checkpoint();
                 }
             }
+            ShardMsg::Flush { reply } => {
+                if self.dirty > 0.0 || self.refresh_count == 0 {
+                    self.refresh_and_publish();
+                }
+                let _ = reply.send(());
+            }
+            ShardMsg::Decay { gamma, reply } => {
+                {
+                    // Same lock a whole-domain re-opt snapshot takes:
+                    // the accumulators can never be observed
+                    // half-decayed. Poison recovery: decay is applied
+                    // whole under this guard.
+                    let reservoir = self.reservoir.clone();
+                    let _guard = reservoir.lock().unwrap_or_else(|e| e.into_inner());
+                    self.own.decay(gamma);
+                    self.halo.decay(gamma);
+                }
+                if self.own.n() > 0 || self.halo.n() > 0 {
+                    self.dirty = self.dirty.max(1.0);
+                }
+                let _ = reply.send(());
+            }
+            ShardMsg::OwnedStats { reply } => {
+                let _ = reply.send(self.own.clone());
+            }
+            ShardMsg::SetHypers { kernel, sigma2, reply } => {
+                self.kernel = kernel;
+                self.sigma2 = sigma2;
+                self.gk = GridKernel::new(&self.kernel, &self.grid, &self.cfg.msgp);
+                self.refresh_and_publish();
+                let _ = reply.send(());
+            }
+        }
+    }
+
+    /// The worker loop, supervised: each message is handled under
+    /// `catch_unwind`, so an injected (or organic) panic drops that one
+    /// message, restarts the worker with capped exponential backoff,
+    /// and — after too many failures inside the policy window — poisons
+    /// it (the loop exits, `/healthz` flips unhealthy, and facade sends
+    /// to this shard start failing loudly).
+    fn run(mut self, rx: Receiver<ShardMsg>) {
+        self.try_restore();
+        let mut sup =
+            Supervisor::new(SupervisorPolicy::default(), 0x5a4d ^ ((self.id as u64) << 8));
+        while let Ok(msg) = rx.recv() {
+            self.metrics.shards[self.id].queue_depth.fetch_sub(1, Ordering::Relaxed);
+            let outcome = catch_unwind(AssertUnwindSafe(|| self.handle(msg)));
+            if outcome.is_err() {
+                self.metrics.record_worker_restart(WorkerKind::Shard);
+                match sup.on_failure() {
+                    Verdict::Restart(backoff) => {
+                        crate::log_warn!(
+                            "shard {} worker panicked; restarting after {}ms",
+                            self.id,
+                            backoff.as_millis()
+                        );
+                        std::thread::sleep(backoff);
+                    }
+                    Verdict::Poison => {
+                        self.metrics.worker_poisoned.fetch_add(1, Ordering::Relaxed);
+                        crate::log_error!(
+                            "shard {} worker poisoned after repeated panics; /healthz now fails",
+                            self.id
+                        );
+                        break;
+                    }
+                }
+            }
+        }
+        // Graceful shutdown: persist the final statistics so a restart
+        // resumes from exactly what this shard acked.
+        if self.ckpt.enabled() && (self.own.n() > 0 || self.halo.n() > 0) {
+            self.write_checkpoint();
         }
     }
 }
@@ -340,6 +475,13 @@ impl ShardedTrainer {
     /// shard. Until data arrives every shard serves the prior.
     pub fn start(kernel: KernelSpec, sigma2: f64, global: Grid, cfg: ShardConfig) -> Self {
         assert_eq!(kernel.dim(), global.dim(), "kernel dim vs grid dim");
+        fault::init_from_env();
+        let ckpt = CkptConfig::from_env();
+        if let Some(dir) = &ckpt.dir {
+            // Best-effort: a missing checkpoint directory surfaces later
+            // as ckpt_write_errors_total, not a startup panic.
+            let _ = std::fs::create_dir_all(dir);
+        }
         let plan = Arc::new(ShardPlan::new(global, cfg.shards, cfg.halo, cfg.blend));
         let s = plan.shards();
         let metrics = Arc::new(Metrics::with_shards(s));
@@ -363,6 +505,7 @@ impl ShardedTrainer {
             let serving = serving.clone();
             let metrics = metrics.clone();
             let res = reservoir.clone();
+            let ckpt = ckpt.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("msgp-shard-{id}"))
                 .spawn(move || {
@@ -396,9 +539,13 @@ impl ShardedTrainer {
                         metrics,
                         dirty: 0.0,
                         refresh_count: 0,
+                        ckpt,
+                        trigger: CkptTrigger::default(),
+                        seq: 0,
                     };
                     worker.run(rx);
                 })
+                // PANIC-OK: startup-time spawn; nothing is serving yet.
                 .expect("spawn shard worker");
             txs.push(tx);
             handles.push(handle);
@@ -436,6 +583,10 @@ impl ShardedTrainer {
         self.metrics.shards[shard].queue_depth.fetch_add(1, Ordering::Relaxed);
         self.txs[shard]
             .send(msg)
+            // PANIC-OK: the receiver drops only when the worker was
+            // poisoned (its supervisor exhausted the restart budget) —
+            // the facade is unusable and /healthz already reports it;
+            // failing loudly beats silently dropping data.
             .unwrap_or_else(|_| panic!("shard {shard} worker died"));
     }
 
@@ -453,7 +604,8 @@ impl ShardedTrainer {
     pub fn ingest_batch(&self, xs: &[f64], ys: &[f64]) -> usize {
         let d = self.plan.global().dim();
         assert_eq!(xs.len(), ys.len() * d, "xs is k x D row-major, ys length k");
-        let _ops = self.ops.lock().unwrap();
+        // Poison recovery: the guard protects ordering only (unit value).
+        let _ops = self.ops.lock().unwrap_or_else(|e| e.into_inner());
         let s = self.plan.shards();
         let mut owned: Vec<(Vec<f64>, Vec<f64>)> = vec![(Vec::new(), Vec::new()); s];
         let mut halos: Vec<(Vec<f64>, Vec<f64>)> = vec![(Vec::new(), Vec::new()); s];
@@ -492,7 +644,16 @@ impl ShardedTrainer {
         drop(ack_tx);
         let mut applied = 0usize;
         for _ in 0..expected {
-            applied += ack_rx.recv().expect("shard worker dropped ingest ack");
+            // A dropped ack means that shard's ingest panicked mid-batch
+            // (the supervisor restarts the worker); count the sub-batch
+            // as not applied rather than hanging or panicking the
+            // caller.
+            match ack_rx.recv() {
+                Ok(k) => applied += k,
+                Err(_) => {
+                    crate::log_warn!("a shard dropped its ingest ack (worker panicked mid-batch)")
+                }
+            }
         }
         if applied > 0 {
             self.metrics.ingested_points_total.fetch_add(applied as u64, Ordering::Relaxed);
@@ -522,7 +683,8 @@ impl ShardedTrainer {
     /// after the epoch, never a mix.
     pub fn decay(&self, gamma: f64) {
         assert!(gamma > 0.0 && gamma <= 1.0);
-        let _ops = self.ops.lock().unwrap();
+        // Poison recovery: ordering-only guard (see `ingest_batch`).
+        let _ops = self.ops.lock().unwrap_or_else(|e| e.into_inner());
         let (tx, rx) = mpsc::sync_channel::<()>(self.txs.len());
         for shard in 0..self.txs.len() {
             self.send(shard, ShardMsg::Decay { gamma, reply: tx.clone() });
@@ -539,7 +701,8 @@ impl ShardedTrainer {
     /// Broadcast-then-collect, so per-shard queue drains overlap
     /// instead of summing.
     pub fn owned_stats(&self) -> Vec<IncrementalSki> {
-        let _ops = self.ops.lock().unwrap();
+        // Poison recovery: ordering-only guard (see `ingest_batch`).
+        let _ops = self.ops.lock().unwrap_or_else(|e| e.into_inner());
         let rxs: Vec<_> = (0..self.txs.len())
             .map(|shard| {
                 let (tx, rx) = mpsc::sync_channel::<IncrementalSki>(1);
@@ -548,7 +711,14 @@ impl ShardedTrainer {
             })
             .collect();
         rxs.into_iter()
-            .map(|rx| rx.recv().expect("shard worker dropped stats reply"))
+            .map(|rx| {
+                rx.recv()
+                    // PANIC-OK: a partial stats set would silently
+                    // corrupt the additive merge — a dropped reply
+                    // (clone panicked; effectively OOM) must fail the
+                    // merge loudly, not produce wrong statistics.
+                    .expect("shard worker dropped stats reply")
+            })
             .collect()
     }
 
@@ -566,7 +736,8 @@ impl ShardedTrainer {
     /// current hyperparameters — the "combined global snapshot" used for
     /// whole-domain evaluation and re-optimization.
     pub fn merged_trainer(&self) -> StreamTrainer {
-        let (kernel, sigma2) = self.hypers.lock().unwrap().clone();
+        // Poison recovery: the hypers tuple is replaced whole.
+        let (kernel, sigma2) = self.hypers.lock().unwrap_or_else(|e| e.into_inner()).clone();
         let cfg = StreamConfig {
             msgp: self.cfg.msgp.clone(),
             reservoir: self.cfg.reservoir,
@@ -595,14 +766,18 @@ impl ShardedTrainer {
         // regions. Subsample shard s proportionally to its seen stream
         // length, approximating one uniform reservoir over the union.
         let (parts, kernel, sigma2) = {
-            let _ops = self.ops.lock().unwrap();
+            // Poison recovery: ordering-only guard (see `ingest_batch`).
+            let _ops = self.ops.lock().unwrap_or_else(|e| e.into_inner());
             let mut parts: Vec<(Vec<f64>, Vec<f64>, usize)> =
                 Vec::with_capacity(self.reservoirs.len());
             for reservoir in &self.reservoirs {
-                let g = reservoir.lock().unwrap();
+                // Poison recovery: reservoirs stay well-formed across a
+                // panicking holder (offers are applied one at a time).
+                let g = reservoir.lock().unwrap_or_else(|e| e.into_inner());
                 parts.push((g.x.clone(), g.y.clone(), g.seen));
             }
-            let (kernel, sigma2) = self.hypers.lock().unwrap().clone();
+            // Poison recovery: the hypers tuple is replaced whole.
+            let (kernel, sigma2) = self.hypers.lock().unwrap_or_else(|e| e.into_inner()).clone();
             (parts, kernel, sigma2)
         };
         let seen_total: usize = parts.iter().map(|p| p.2).sum();
@@ -644,8 +819,10 @@ impl ShardedTrainer {
         let lml = model.lml();
         // Broadcast phase, under the ops lock again: hypers adoption is
         // atomic across shards with respect to ingest/decay/merge.
-        let _ops = self.ops.lock().unwrap();
-        *self.hypers.lock().unwrap() = (model.kernel.clone(), model.sigma2);
+        // Poison recovery: ordering-only guard / whole-tuple store.
+        let _ops = self.ops.lock().unwrap_or_else(|e| e.into_inner());
+        *self.hypers.lock().unwrap_or_else(|e| e.into_inner()) =
+            (model.kernel.clone(), model.sigma2);
         self.metrics.reopt_count.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::sync_channel::<()>(self.txs.len());
         for shard in 0..self.txs.len() {

@@ -86,6 +86,16 @@ pub struct CgOptions {
     /// `Spectral`. The choice is consumed by the refresh paths, not by
     /// [`cg_solve`] itself (whose `precond` argument stays explicit).
     pub precondition: Preconditioner,
+    /// Soft wall-clock deadline for [`cg_solve_block`]: checked once per
+    /// block iteration (never mid-iteration, so per-column arithmetic is
+    /// untouched). When it passes, the solve stops and reports
+    /// [`BlockCgResult::deadline_hit`]; the caller decides whether the
+    /// partial solution is servable. The streaming refresh wires this
+    /// from `MSGP_REFRESH_DEADLINE_MS` to keep a degraded-but-live
+    /// serving snapshot instead of blocking on a pathological solve.
+    /// `None` (the default) means no deadline. Scalar [`cg_solve`]
+    /// ignores it.
+    pub deadline: Option<std::time::Instant>,
 }
 
 impl Default for CgOptions {
@@ -95,6 +105,7 @@ impl Default for CgOptions {
             max_iter: 1000,
             warm_start: false,
             precondition: Preconditioner::None,
+            deadline: None,
         }
     }
 }
@@ -115,6 +126,14 @@ impl CgOptions {
     /// Same options with spectral (BCCB) preconditioning selected.
     pub fn spectral(mut self) -> Self {
         self.precondition = Preconditioner::Spectral;
+        self
+    }
+
+    /// Same options with a soft block-solve deadline `ms` milliseconds
+    /// from now (`None` clears any deadline).
+    pub fn with_deadline_ms(mut self, ms: Option<u64>) -> Self {
+        self.deadline =
+            ms.map(|v| std::time::Instant::now() + std::time::Duration::from_millis(v));
         self
     }
 }
@@ -239,6 +258,10 @@ pub struct BlockCgResult {
     /// uneven warm starts `apply_cols` is strictly smaller. The G-apply
     /// accounting tests pin against this.
     pub apply_cols: usize,
+    /// The solve stopped because [`CgOptions::deadline`] passed (some
+    /// columns froze mid-flight with their current iterates). Always
+    /// `false` when no deadline is set.
+    pub deadline_hit: bool,
 }
 
 /// Reusable block-CG buffers (`cols` systems of size `n` each) — keeps
@@ -377,7 +400,17 @@ pub fn cg_solve_block(
         }
     }
     let mut iters = 0usize;
+    let mut deadline_hit = false;
     while !ws.live.is_empty() && iters < opts.max_iter {
+        // Soft deadline: abort *between* block iterations only, so no
+        // column ever sees a torn scalar recurrence. Checked before the
+        // operator apply — the expensive part of the iteration.
+        if let Some(dl) = opts.deadline {
+            if std::time::Instant::now() >= dl {
+                deadline_hit = true;
+                break;
+            }
+        }
         // Compact the live search directions and apply the operator to
         // the active sub-block only.
         let nl = ws.live.len();
@@ -390,7 +423,9 @@ pub fn cg_solve_block(
             let c = ws.live[j];
             let (clo, chi) = (j * n, (j + 1) * n);
             let (lo, hi) = (c * n, (c + 1) * n);
-            let pap = dot(&ws.pc[clo..chi], &ws.apc[clo..chi]);
+            let mut pap = dot(&ws.pc[clo..chi], &ws.apc[clo..chi]);
+            // Chaos hook: force this column onto the non-SPD bail path.
+            crate::failpoint!("cg.nonspd", { pap = f64::NAN });
             if pap <= 0.0 || !pap.is_finite() {
                 // This column's operator is not SPD to working precision;
                 // freeze it with what it has (mirrors cg_solve's bail).
@@ -446,6 +481,7 @@ pub fn cg_solve_block(
         rel_residuals: ws.rel.clone(),
         converged,
         apply_cols,
+        deadline_hit,
     }
 }
 
@@ -864,6 +900,45 @@ mod tests {
         assert_eq!(res.col_iters[0], 0);
         assert!(x[..n].iter().all(|&v| v == 0.0));
         assert!(x[n..].iter().any(|&v| v != 0.0));
+    }
+
+    /// An already-expired deadline stops the block solve before the
+    /// first iteration (the abort happens *between* iterations), and is
+    /// reported; without a deadline the flag stays false.
+    #[test]
+    fn block_solve_deadline_aborts_and_reports() {
+        let n = 24;
+        let a = spd(n);
+        let b: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin() + 1.0).collect();
+        let apply = |v: &[f64], out: &mut [f64]| {
+            for c in 0..v.len() / n {
+                out[c * n..(c + 1) * n].copy_from_slice(&a.matvec(&v[c * n..(c + 1) * n]));
+            }
+        };
+        let id = |v: &[f64], out: &mut [f64]| out.copy_from_slice(v);
+        let mut bws = BlockCgWorkspace::new(n, 1);
+        let mut x = vec![0.0; n];
+        let opts = CgOptions {
+            tol: 1e-12,
+            max_iter: 2000,
+            deadline: Some(std::time::Instant::now()),
+            ..Default::default()
+        };
+        let res = cg_solve_block(apply, id, &b, &mut x, n, opts, &mut bws);
+        assert!(res.deadline_hit);
+        assert_eq!(res.block_iters, 0, "expired deadline stops before iterating");
+        assert!(!res.converged);
+        let mut x2 = vec![0.0; n];
+        let res2 = cg_solve_block(
+            apply,
+            id,
+            &b,
+            &mut x2,
+            n,
+            CgOptions { tol: 1e-12, max_iter: 2000, ..Default::default() },
+            &mut bws,
+        );
+        assert!(res2.converged && !res2.deadline_hit);
     }
 
     #[test]

@@ -127,6 +127,66 @@ impl IncrementalSki {
         }
     }
 
+    /// Reconstruct an accumulator from checkpointed parts (the inverse
+    /// of the [`crate::fault::codec`] encoding). Every length invariant
+    /// is validated so a corrupted checkpoint surfaces as a clean error,
+    /// never as a silently inconsistent accumulator. The `rng` must be
+    /// the captured ingest generator ([`Self::rng_state`]) for restored
+    /// probe draws to replay the uninterrupted sequence exactly.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_parts(
+        grid: Grid,
+        wty: Vec<f64>,
+        bands: Vec<Vec<f64>>,
+        counts: Vec<f64>,
+        probes: Vec<Vec<f64>>,
+        margin_cells: usize,
+        n: usize,
+        weight: f64,
+        sum_y: f64,
+        sum_y2: f64,
+        rng: Rng,
+    ) -> Result<Self, String> {
+        let m = grid.m();
+        let d = grid.dim();
+        let nbands = BAND_W.pow(d as u32);
+        if wty.len() != m {
+            return Err(format!("wty length {} != m {}", wty.len(), m));
+        }
+        if counts.len() != m {
+            return Err(format!("counts length {} != m {}", counts.len(), m));
+        }
+        if bands.len() != nbands {
+            return Err(format!("band count {} != 7^{} = {}", bands.len(), d, nbands));
+        }
+        if let Some(b) = bands.iter().find(|b| b.len() != m) {
+            return Err(format!("band length {} != m {}", b.len(), m));
+        }
+        if let Some(q) = probes.iter().find(|q| q.len() != m) {
+            return Err(format!("probe length {} != m {}", q.len(), m));
+        }
+        if margin_cells == 0 {
+            return Err("margin_cells must be >= 1".to_string());
+        }
+        if !(weight.is_finite() && sum_y.is_finite() && sum_y2.is_finite()) {
+            return Err("non-finite scalar statistics".to_string());
+        }
+        Ok(IncrementalSki {
+            grid,
+            wty,
+            bands,
+            counts,
+            probes,
+            margin_cells,
+            n,
+            weight,
+            sum_y,
+            sum_y2,
+            rng,
+            scratch: IngestScratch::default(),
+        })
+    }
+
     /// Current grid.
     pub fn grid(&self) -> &Grid {
         &self.grid
@@ -176,6 +236,31 @@ impl IncrementalSki {
     /// Effective (decay-weighted) sample mass.
     pub fn weight(&self) -> f64 {
         self.weight
+    }
+
+    /// Decay-weighted running sum of the targets (checkpointed raw; use
+    /// [`Self::y_mean`] for the mass-guarded ratio).
+    pub fn sum_y(&self) -> f64 {
+        self.sum_y
+    }
+
+    /// Decay-weighted running sum of squared targets (checkpointed raw;
+    /// use [`Self::y_var`] for the mass-guarded ratio).
+    pub fn sum_y2(&self) -> f64 {
+        self.sum_y2
+    }
+
+    /// Expansion margin (cells) enforced around ingested points.
+    pub fn margin_cells(&self) -> usize {
+        self.margin_cells
+    }
+
+    /// The ingest RNG's full state (probe-noise generator). Checkpointed
+    /// so a restored accumulator draws the identical `eps` sequence the
+    /// uninterrupted run would have — the crash-recovery parity tests
+    /// depend on this.
+    pub fn rng_state(&self) -> ([u64; 4], Option<f64>) {
+        self.rng.state()
     }
 
     /// Running (decay-weighted) mean of the targets. Returns `0.0` once

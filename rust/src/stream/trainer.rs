@@ -88,6 +88,16 @@ pub struct StreamConfig {
     /// points whose coverage would exceed the cap are rejected and
     /// counted in [`StreamTrainer::rejected_points`] instead.
     pub max_grid_cells: usize,
+    /// Soft wall-clock deadline for one refresh, in milliseconds. When
+    /// the block-CG solve overruns it, the solve aborts *between*
+    /// iterations ([`CgOptions::deadline`]), the refresh reports
+    /// [`RefreshStats::deadline_hit`], and the trainer keeps its dirty
+    /// marker so the next cycle retries — the serving layer keeps the
+    /// last-good snapshot and flips its `degraded_mode` gauge instead
+    /// of swapping in a half-converged cache. `None` (the default)
+    /// never aborts; the coordinator seeds it from
+    /// `MSGP_REFRESH_DEADLINE_MS`.
+    pub refresh_deadline_ms: Option<u64>,
 }
 
 impl Default for StreamConfig {
@@ -100,6 +110,7 @@ impl Default for StreamConfig {
             reopt_lr: 0.05,
             reservoir: 2048,
             max_grid_cells: 262_144,
+            refresh_deadline_ms: None,
         }
     }
 }
@@ -152,6 +163,12 @@ pub struct RefreshStats {
     /// Whether a requested preconditioner could not be built and the
     /// refresh degraded to unpreconditioned CG.
     pub precond_fallback: bool,
+    /// Whether the block solve aborted on the soft refresh deadline
+    /// ([`StreamConfig::refresh_deadline_ms`]) before every column
+    /// converged. The caches still hold the partial (warm-startable)
+    /// solutions, but the serving layer should keep its last-good
+    /// snapshot rather than swap them in.
+    pub deadline_hit: bool,
 }
 
 /// Reservoir sample of the stream, used for hyperparameter
@@ -243,6 +260,10 @@ pub(crate) struct RefreshOutcome {
     /// gauges and traces agree. The sequential reference path reports
     /// its whole solve loop as `block_solve`.
     pub stage_wall: [Duration; 3],
+    /// `true` when the block solve aborted on [`CgOptions::deadline`]
+    /// (always `false` on the sequential reference path, which carries
+    /// no deadline support).
+    pub deadline_hit: bool,
 }
 
 /// Reusable buffers for one m-domain refresh: the lockstep block-CG
@@ -505,6 +526,7 @@ pub(crate) fn refresh_mdomain(
     // --- stage the RHS block: one batched S over [b | g_1 .. g_ns] ---
     let t_stage = Instant::now();
     let sp_rhs = crate::span!("refresh.stage_rhs");
+    crate::failpoint!("refresh.stage_rhs");
     s2[..m].copy_from_slice(inp.wty);
     for (k, g) in inp.g_probes.iter().enumerate() {
         s2[(k + 1) * m..(k + 2) * m].copy_from_slice(g);
@@ -531,6 +553,7 @@ pub(crate) fn refresh_mdomain(
     // --- warm starts in, ONE block solve (mean + probes), warm starts out ---
     let t_solve = Instant::now();
     let sp_solve = crate::span!("refresh.block_solve");
+    crate::failpoint!("refresh.block_solve");
     xblk[..m].copy_from_slice(t_mean);
     for (k, t) in t_probes.iter().enumerate() {
         xblk[(k + 1) * m..(k + 2) * m].copy_from_slice(t);
@@ -568,6 +591,7 @@ pub(crate) fn refresh_mdomain(
     // --- one batched S maps every solution to the u-domain ---
     let t_map = Instant::now();
     let sp_map = crate::span!("refresh.map_back");
+    crate::failpoint!("refresh.map_back");
     inp.gk.sqrt_matvec_batch(&xblk[..cols * m], &mut s1[..cols * m], fft);
     // lint:allow(alloc, "result assembly: the returned snapshot owns
     // its buffers; once per refresh, not per CG iteration")
@@ -597,6 +621,7 @@ pub(crate) fn refresh_mdomain(
         apply_cols: res.apply_cols,
         precond_fallback,
         stage_wall: [stage_rhs, block_solve, map_back],
+        deadline_hit: res.deadline_hit,
     }
 }
 
@@ -688,6 +713,7 @@ pub(crate) fn refresh_mdomain_sequential(
         apply_cols,
         precond_fallback,
         stage_wall: [Duration::ZERO, t_total.elapsed(), Duration::ZERO],
+        deadline_hit: false,
     }
 }
 
@@ -821,14 +847,18 @@ impl StreamTrainer {
     /// Consistent snapshot of the reservoir sample, taken under the same
     /// lock [`Self::decay`] holds while down-weighting the accumulators.
     pub fn reservoir_snapshot(&self) -> (Vec<f64>, Vec<f64>) {
-        let res = self.reservoir.lock().unwrap();
+        // Poison recovery: the reservoir holds plain sample data that
+        // stays well-formed even if a supervised worker panicked while
+        // holding the lock (worst case one half-updated sample row).
+        let res = self.reservoir.lock().unwrap_or_else(|e| e.into_inner());
         (res.x.clone(), res.y.clone())
     }
 
     /// Points currently held in the reservoir (for the
     /// `reservoir_points` gauge and `/healthz`).
     pub fn reservoir_len(&self) -> usize {
-        self.reservoir.lock().unwrap().y.len()
+        // Poison recovery: see `reservoir_snapshot`.
+        self.reservoir.lock().unwrap_or_else(|e| e.into_inner()).y.len()
     }
 
     /// Absorb a batch of observations (row-major `k x D` inputs).
@@ -856,7 +886,8 @@ impl StreamTrainer {
         // scatter-adds or a grid-expansion remap above.
         if !admitted.is_empty() {
             let reservoir = self.reservoir.clone();
-            let mut res = reservoir.lock().unwrap();
+            // Poison recovery: see `reservoir_snapshot`.
+            let mut res = reservoir.lock().unwrap_or_else(|e| e.into_inner());
             for &i in &admitted {
                 res.offer(&xs[i * d..(i + 1) * d], ys[i], self.cfg.reservoir, &mut self.res_rng);
             }
@@ -876,7 +907,8 @@ impl StreamTrainer {
     /// refreshes.
     pub fn decay(&mut self, gamma: f64) {
         let reservoir = self.reservoir.clone();
-        let _guard = reservoir.lock().unwrap();
+        // Poison recovery: see `reservoir_snapshot`.
+        let _guard = reservoir.lock().unwrap_or_else(|e| e.into_inner());
         self.ski.decay(gamma);
         if self.ski.n() > 0 {
             self.dirty_points = self.dirty_points.max(1);
@@ -958,7 +990,7 @@ impl StreamTrainer {
         let t0 = Instant::now();
         let panels_before = crate::linalg::fft::parallel_panels_total();
         let m = self.m();
-        let opts = self.cfg.msgp.cg.warm();
+        let opts = self.cfg.msgp.cg.warm().with_deadline_ms(self.cfg.refresh_deadline_ms);
         // Borrow the read-only operator pieces as disjoint fields so the
         // warm-start buffers and workspace stay mutably borrowable.
         let ski = &self.ski;
@@ -993,7 +1025,10 @@ impl StreamTrainer {
         self.u_mean = out.u_mean;
         self.nu_u = out.nu_u;
         self.refresh_count += 1;
-        self.dirty_points = 0;
+        // A deadline-aborted refresh keeps its dirty marker so the next
+        // ingest cycle retries; the partial solutions stay in the warm
+        // starts, so the retry resumes where the abort stopped.
+        self.dirty_points = if out.deadline_hit { self.dirty_points.max(1) } else { 0 };
         if out.precond_fallback {
             self.precond_fallbacks += 1;
         }
@@ -1010,6 +1045,7 @@ impl StreamTrainer {
             block_solve: out.stage_wall[1],
             map_back: out.stage_wall[2],
             precond_fallback: out.precond_fallback,
+            deadline_hit: out.deadline_hit,
         };
         self.last_refresh = stats.clone();
         stats
@@ -1112,6 +1148,7 @@ mod tests {
             max_iter: 4000,
             warm_start: false,
             precondition: precond,
+            deadline: None,
         };
         let inputs = RefreshInputs {
             gk,
@@ -1344,6 +1381,34 @@ mod tests {
                 assert!((a - b).abs() < 1e-12, "{a} vs {b}");
             }
         }
+    }
+
+    /// Satellite (degradation tier): an already-expired refresh deadline
+    /// aborts the block solve between iterations, reports
+    /// `deadline_hit`, and keeps the trainer dirty so the next cycle
+    /// retries — while a deadline-free rerun of the same trainer
+    /// completes normally and clears both flags.
+    #[test]
+    fn refresh_deadline_aborts_and_keeps_the_trainer_dirty() {
+        let grid = Grid::new(vec![GridAxis::span(-5.0, 5.0, 48)]);
+        let mut cfg = StreamConfig::default();
+        cfg.refresh_deadline_ms = Some(0);
+        let mut t = StreamTrainer::new(se_kernel(), 0.1, grid, cfg);
+        let mut rng = Rng::new(5);
+        for _ in 0..200 {
+            let x = rng.uniform_in(-4.5, 4.5);
+            t.ingest_batch(&[x], &[0.2 * (x * 1.3).sin()]);
+        }
+        assert!(t.dirty_points > 0);
+        let stats = t.refresh();
+        assert!(stats.deadline_hit, "expired deadline must abort the solve");
+        assert_eq!(stats.block_iters, 0);
+        assert!(t.dirty_points > 0, "aborted refresh must stay dirty for retry");
+        t.cfg.refresh_deadline_ms = None;
+        let stats = t.refresh();
+        assert!(!stats.deadline_hit);
+        assert!(stats.block_iters > 0);
+        assert_eq!(t.dirty_points, 0);
     }
 
     /// The spectral BCCB preconditioner changes the iteration path, not

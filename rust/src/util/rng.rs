@@ -87,6 +87,20 @@ impl Rng {
             v.swap(i, j);
         }
     }
+
+    /// Full generator state: the xoshiro256** words plus the cached
+    /// Box–Muller spare. Captured by the checkpoint codec so a restored
+    /// stream draws the *identical* sequence the uninterrupted run would
+    /// have drawn — the exact-replay property the crash-recovery parity
+    /// tests pin to 1e-10 rests on this.
+    pub fn state(&self) -> ([u64; 4], Option<f64>) {
+        (self.s, self.spare)
+    }
+
+    /// Rebuild a generator from a captured [`Self::state`].
+    pub fn from_state(s: [u64; 4], spare: Option<f64>) -> Self {
+        Rng { s, spare }
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,392 @@
+//! Chaos and crash-recovery suite: failpoint-injected panics under the
+//! supervised workers, degradation tiers under refresh deadlines, and
+//! checkpoint/restore parity of the SKI sufficient statistics.
+//!
+//! The failpoint registry and the `MSGP_*` environment knobs are
+//! process-global, so every test that touches either serializes on one
+//! static mutex — the suite stays correct under the default parallel
+//! test runner.
+
+#![cfg(not(miri))] // thread/FS-heavy; far beyond Miri's budget
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::{Mutex, MutexGuard};
+
+use msgp::coordinator::{BatcherConfig, EngineSpec, Server};
+use msgp::data::gen_stress_1d;
+use msgp::fault;
+use msgp::gp::msgp::{KernelSpec, MsgpConfig};
+use msgp::grid::{Grid, GridAxis};
+use msgp::kernels::{KernelType, ProductKernel};
+use msgp::shard::{ShardConfig, ShardedTrainer};
+use msgp::stream::{StreamConfig, StreamTrainer};
+use msgp::util::json::Json;
+
+fn guard() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn se_kernel() -> KernelSpec {
+    KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0))
+}
+
+fn stream_cfg(m: usize, refresh_every: usize) -> StreamConfig {
+    StreamConfig {
+        msgp: MsgpConfig { n_per_dim: vec![m], n_var_samples: 4, ..Default::default() },
+        refresh_every,
+        ..Default::default()
+    }
+}
+
+fn online_server(refresh_every: usize) -> Server {
+    let grid = Grid::new(vec![GridAxis::span(-12.0, 13.0, 128)]);
+    let trainer = StreamTrainer::new(se_kernel(), 0.01, grid, stream_cfg(128, refresh_every));
+    Server::start_online(trainer, EngineSpec::Native, BatcherConfig::default())
+}
+
+/// A per-test scratch directory under the system temp dir, removed on
+/// drop so a failed assertion never leaks checkpoints into later runs.
+struct ScratchDir(PathBuf);
+
+impl ScratchDir {
+    fn new(tag: &str) -> Self {
+        let dir = std::env::temp_dir().join(format!("msgp-robustness-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).expect("create scratch dir");
+        ScratchDir(dir)
+    }
+}
+
+impl Drop for ScratchDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// Clears checkpoint/deadline env knobs on construction *and* drop, so
+/// a panicking test cannot leave them set for the next one.
+struct EnvReset;
+
+impl EnvReset {
+    fn new() -> Self {
+        Self::clear();
+        EnvReset
+    }
+    fn clear() {
+        std::env::remove_var("MSGP_CKPT_DIR");
+        std::env::remove_var("MSGP_CKPT_EVERY_POINTS");
+        std::env::remove_var("MSGP_CKPT_EVERY_MS");
+        std::env::remove_var("MSGP_REFRESH_DEADLINE_MS");
+        std::env::remove_var("MSGP_FAILPOINTS");
+        fault::clear_all();
+    }
+}
+
+impl Drop for EnvReset {
+    fn drop(&mut self) {
+        Self::clear();
+    }
+}
+
+/// Injected refresh panics are supervised: the batch is dropped, the
+/// ingest worker restarts with backoff, serving never stops, and once
+/// the failpoint clears the stream trains through to a good model.
+#[test]
+fn refresh_panics_are_supervised_and_serving_recovers() {
+    let _g = guard();
+    let _env = EnvReset::new();
+    let server = online_server(100);
+    let data = gen_stress_1d(800, 0.05, 7);
+    // Every cadence refresh panics inside the block solve.
+    fault::configure("refresh.block_solve=panic").unwrap();
+    // Three 100-point batches -> three refresh attempts -> three panics
+    // (staying under the poison budget of 5-in-30s). Ingest acks before
+    // the refresh, so the ingest calls themselves still succeed.
+    for c in 0..3 {
+        let lo = c * 100;
+        let _ = server.ingest(data.x[lo..lo + 100].to_vec(), data.y[lo..lo + 100].to_vec());
+        // Predictions keep flowing off the last-good (prior) snapshot
+        // while the refresh path is on fire.
+        let p = server.predict(vec![0.0]).expect("serving must survive refresh panics");
+        assert!(p.mean.is_finite() && p.var.is_finite());
+    }
+    // Give the supervised worker time to finish its backoff sleeps.
+    std::thread::sleep(std::time::Duration::from_millis(200));
+    let restarts = server.metrics.worker_restarts[0].get();
+    assert!(restarts >= 1, "ingest worker restarts not recorded: {restarts}");
+    let (healthy, body) = server.health();
+    assert!(healthy, "restarts alone must not fail health: {body}");
+    // Heal the failpoint; the retained statistics (ingests were acked
+    // before each panic) now train through.
+    fault::clear_all();
+    for c in 3..8 {
+        let lo = c * 100;
+        let k = server
+            .ingest(data.x[lo..lo + 100].to_vec(), data.y[lo..lo + 100].to_vec())
+            .expect("post-chaos ingest");
+        assert_eq!(k, 100);
+    }
+    server.flush_stream().expect("post-chaos flush");
+    let p = server.predict(vec![1.5]).unwrap();
+    let want = msgp::data::stress_fn(1.5);
+    assert!((p.mean - want).abs() < 0.15, "{} vs {want}", p.mean);
+    server.shutdown();
+}
+
+/// Exhausting the restart budget poisons the worker: ingest fails
+/// cleanly (no hang), `/healthz` flips unhealthy with a reason, and
+/// prediction keeps serving the last-good snapshot.
+#[test]
+fn repeated_panics_poison_the_worker_and_flip_health() {
+    let _g = guard();
+    let _env = EnvReset::new();
+    let server = online_server(1_000_000);
+    fault::configure("ingest.batch=panic").unwrap();
+    // The failpoint fires before the early ack, so every caller gets a
+    // clean channel error; the 5th failure inside the window poisons.
+    let mut errors = 0;
+    for _ in 0..6 {
+        if server.ingest(vec![0.5], vec![1.0]).is_err() {
+            errors += 1;
+        }
+    }
+    assert!(errors >= 5, "panicking batches must error back to callers: {errors}/6");
+    // The caller's error races the supervisor's bookkeeping by a few
+    // instructions; let the worker settle before reading the counters.
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    assert!(server.metrics.worker_restarts[0].get() >= 5);
+    assert_eq!(server.metrics.worker_poisoned.get(), 1);
+    let (healthy, body) = server.health();
+    assert!(!healthy, "{body}");
+    assert!(body.contains("poisoned"), "{body}");
+    // The batcher and its prediction path are a separate worker: still up.
+    let p = server.predict(vec![0.0]).expect("prediction survives a poisoned ingest worker");
+    assert!(p.mean.is_finite());
+    fault::clear_all();
+    server.shutdown();
+}
+
+/// A refresh that overruns its soft deadline must not publish the
+/// half-converged cache: the slot keeps the last-good snapshot and the
+/// `degraded_mode` gauge (and `/healthz` `degraded` field) flips on.
+#[test]
+fn deadline_overrun_enters_degraded_mode_and_keeps_last_good_snapshot() {
+    let _g = guard();
+    let _env = EnvReset::new();
+    let grid = Grid::new(vec![GridAxis::span(-12.0, 13.0, 64)]);
+    let mut cfg = stream_cfg(64, 100);
+    cfg.refresh_deadline_ms = Some(0); // every refresh overruns
+    let trainer = StreamTrainer::new(se_kernel(), 0.01, grid, cfg);
+    let server = Server::start_online(trainer, EngineSpec::Native, BatcherConfig::default());
+    let prior = server.predict(vec![0.0]).unwrap();
+    let data = gen_stress_1d(200, 0.05, 13);
+    server.ingest(data.x.clone(), data.y.clone()).unwrap();
+    server.flush_stream().unwrap();
+    assert_eq!(server.metrics.degraded_mode.get(), 1, "deadline overrun must flip the gauge");
+    // Degraded, not unhealthy: the last-good snapshot still serves.
+    let (healthy, body) = server.health();
+    assert!(healthy, "{body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("degraded"), Some(&Json::Bool(true)), "{body}");
+    let p = server.predict(vec![0.0]).unwrap();
+    assert!(
+        (p.mean - prior.mean).abs() < 1e-12,
+        "degraded server must keep serving the pre-overrun snapshot"
+    );
+    server.shutdown();
+}
+
+/// Crash-safe restore, unsharded: a server killed after absorbing part
+/// of the stream restarts from its checkpoint and — after the rest of
+/// the stream — serves predictions identical (1e-10) to one trainer
+/// that saw the whole stream uninterrupted.
+#[test]
+fn checkpoint_restart_matches_uninterrupted_run_to_1e10() {
+    let _g = guard();
+    let _env = EnvReset::new();
+    let scratch = ScratchDir::new("unsharded");
+    std::env::set_var("MSGP_CKPT_DIR", &scratch.0);
+    std::env::set_var("MSGP_CKPT_EVERY_POINTS", "100");
+    let data = gen_stress_1d(1200, 0.05, 23);
+    let grid = Grid::new(vec![GridAxis::span(-12.0, 13.0, 128)]);
+    let probe: Vec<f64> = (0..100).map(|i| -9.0 + 0.18 * i as f64).collect();
+    // Uninterrupted reference: same batch boundaries, same refresh
+    // schedule (cold refresh after 600, warm refresh at the end).
+    let mut reference = StreamTrainer::new(se_kernel(), 0.01, grid.clone(), stream_cfg(128, 1_000_000));
+    reference.ingest_batch(&data.x[..600], &data.y[..600]);
+    reference.refresh();
+    reference.ingest_batch(&data.x[600..], &data.y[600..]);
+    reference.refresh();
+    let (ref_mean, ref_var) = reference.serving_model().predict_batch(&probe);
+    // Run A: absorb the first half, then die (graceful here; the codec
+    // tests + crash_recovery example cover the SIGKILL torn-write case).
+    let trainer_a = StreamTrainer::new(se_kernel(), 0.01, grid.clone(), stream_cfg(128, 1_000_000));
+    let server_a = Server::start_online(trainer_a, EngineSpec::Native, BatcherConfig::default());
+    for c in 0..6 {
+        let lo = c * 100;
+        let k = server_a.ingest(data.x[lo..lo + 100].to_vec(), data.y[lo..lo + 100].to_vec()).unwrap();
+        assert_eq!(k, 100);
+    }
+    server_a.shutdown(); // graceful shutdown persists the final statistics
+    assert!(scratch.0.join("ski.ckpt").exists(), "shutdown checkpoint missing");
+    // Run B: a fresh (empty) trainer restores the 600 absorbed points
+    // from the checkpoint, replays the refresh, then finishes the stream.
+    let trainer_b = StreamTrainer::new(se_kernel(), 0.01, grid, stream_cfg(128, 1_000_000));
+    let server_b = Server::start_online(trainer_b, EngineSpec::Native, BatcherConfig::default());
+    assert_eq!(server_b.metrics.ckpt_restores_total.get(), 1, "restore not recorded");
+    assert!(server_b.metrics.ckpt_last_seq.get() >= 1);
+    for c in 6..12 {
+        let lo = c * 100;
+        let k = server_b.ingest(data.x[lo..lo + 100].to_vec(), data.y[lo..lo + 100].to_vec()).unwrap();
+        assert_eq!(k, 100);
+    }
+    server_b.flush_stream().unwrap();
+    for (i, &x) in probe.iter().enumerate() {
+        let p = server_b.predict(vec![x]).unwrap();
+        assert!(
+            (p.mean - ref_mean[i]).abs() < 1e-10,
+            "mean parity at x={x}: {} vs {}",
+            p.mean,
+            ref_mean[i]
+        );
+        assert!(
+            (p.var - ref_var[i]).abs() < 1e-10,
+            "var parity at x={x}: {} vs {}",
+            p.var,
+            ref_var[i]
+        );
+    }
+    server_b.shutdown();
+}
+
+/// A corrupt checkpoint (both the file and its rotation) is detected by
+/// the checksum and ignored: the server starts clean instead of
+/// crashing or restoring garbage.
+#[test]
+fn corrupt_checkpoints_are_ignored_and_the_server_starts_clean() {
+    let _g = guard();
+    let _env = EnvReset::new();
+    let scratch = ScratchDir::new("corrupt");
+    std::env::set_var("MSGP_CKPT_DIR", &scratch.0);
+    std::fs::write(scratch.0.join("ski.ckpt"), b"MSGPCKPT garbage that fails the checksum").unwrap();
+    std::fs::write(scratch.0.join("ski.ckpt.1"), b"not even magic").unwrap();
+    let server = online_server(1_000_000);
+    assert_eq!(server.metrics.ckpt_restores_total.get(), 0);
+    let p = server.predict(vec![0.0]).unwrap();
+    assert!(p.mean.abs() < 1e-9, "must serve the clean prior, got {}", p.mean);
+    server.shutdown();
+}
+
+/// Sharded crash-restore: every worker persists `[own, halo]` at
+/// graceful shutdown and replays them on restart — the restored fleet's
+/// statistics and served predictions match the original to 1e-10.
+#[test]
+fn sharded_restart_restores_per_shard_statistics() {
+    let _g = guard();
+    let _env = EnvReset::new();
+    let scratch = ScratchDir::new("sharded");
+    std::env::set_var("MSGP_CKPT_DIR", &scratch.0);
+    let data = gen_stress_1d(1000, 0.05, 31);
+    let grid = Grid::new(vec![GridAxis::span(-12.0, 13.0, 128)]);
+    let cfg = ShardConfig {
+        shards: 2,
+        refresh_every: usize::MAX, // only the explicit flush refreshes
+        msgp: MsgpConfig { n_per_dim: vec![128], n_var_samples: 4, ..Default::default() },
+        ..Default::default()
+    };
+    let probe: Vec<f64> = (0..100).map(|i| -9.0 + 0.18 * i as f64).collect();
+    let fleet_a = ShardedTrainer::start(se_kernel(), 0.01, grid.clone(), cfg.clone());
+    let applied = fleet_a.ingest_batch(&data.x, &data.y);
+    assert!(applied > 900, "interior points must be admitted: {applied}");
+    fleet_a.flush();
+    let (mean_a, var_a) = fleet_a.predict_batch(&probe);
+    let stats_a = fleet_a.owned_stats();
+    drop(fleet_a); // graceful shutdown writes ski-shard{0,1}.ckpt
+    assert!(scratch.0.join("ski-shard0.ckpt").exists());
+    assert!(scratch.0.join("ski-shard1.ckpt").exists());
+    let fleet_b = ShardedTrainer::start(se_kernel(), 0.01, grid, cfg);
+    // `owned_stats` round-trips every worker FIFO, so by the time it
+    // returns each worker has finished its restore replay + publish.
+    let stats_b = fleet_b.owned_stats();
+    assert_eq!(fleet_b.metrics.ckpt_restores_total.get(), 2, "both shards must restore");
+    assert_eq!(fleet_b.metrics.recovering.get(), 0, "recovery gauge must settle back to 0");
+    for (s, (a, b)) in stats_a.iter().zip(&stats_b).enumerate() {
+        assert_eq!(a.n(), b.n(), "shard {s} point count");
+        for (x, y) in a.wty().iter().zip(b.wty()) {
+            assert!((x - y).abs() < 1e-12, "shard {s} wty: {x} vs {y}");
+        }
+    }
+    let (mean_b, var_b) = fleet_b.predict_batch(&probe);
+    for i in 0..probe.len() {
+        assert!(
+            (mean_a[i] - mean_b[i]).abs() < 1e-10,
+            "mean parity at {}: {} vs {}",
+            probe[i],
+            mean_a[i],
+            mean_b[i]
+        );
+        assert!(
+            (var_a[i] - var_b[i]).abs() < 1e-10,
+            "var parity at {}: {} vs {}",
+            probe[i],
+            var_a[i],
+            var_b[i]
+        );
+    }
+}
+
+/// Shard ingest panics are supervised per worker: the batch's acks are
+/// dropped (counted as not applied, no hang), the workers restart, and
+/// the fleet keeps absorbing afterwards.
+#[test]
+fn shard_ingest_panics_restart_workers_without_hanging_callers() {
+    let _g = guard();
+    let _env = EnvReset::new();
+    let grid = Grid::new(vec![GridAxis::span(-12.0, 13.0, 64)]);
+    let cfg = ShardConfig {
+        shards: 2,
+        refresh_every: usize::MAX,
+        msgp: MsgpConfig { n_per_dim: vec![64], n_var_samples: 2, ..Default::default() },
+        ..Default::default()
+    };
+    let fleet = ShardedTrainer::start(se_kernel(), 0.01, grid, cfg);
+    let data = gen_stress_1d(200, 0.05, 41);
+    fault::configure("shard.ingest=panic").unwrap();
+    let applied = fleet.ingest_batch(&data.x[..100], &data.y[..100]);
+    assert_eq!(applied, 0, "panicked sub-batches must not be counted as applied");
+    assert!(fleet.metrics.worker_restarts[1].get() >= 1, "shard restarts not recorded");
+    fault::clear_all();
+    // Give the supervised workers time to clear their backoff sleeps.
+    std::thread::sleep(std::time::Duration::from_millis(200));
+    let applied = fleet.ingest_batch(&data.x[100..], &data.y[100..]);
+    assert_eq!(applied, 100, "healed fleet must absorb again");
+    fleet.flush();
+    let (mean, _) = fleet.predict_batch(&[0.0]);
+    assert!(mean[0].is_finite());
+}
+
+/// The `/failpoints` HTTP route drives the registry end to end:
+/// install, observe hit/fire counters, clear.
+#[test]
+fn failpoints_route_installs_fires_and_clears() {
+    let _g = guard();
+    let _env = EnvReset::new();
+    let server = online_server(1_000_000);
+    let body = server
+        .handle_failpoints("/failpoints?set=ingest.batch:sleep(1)@1.0")
+        .expect("valid spec");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("armed"), Some(&Json::Bool(true)), "{body}");
+    assert!(body.contains("ingest.batch"), "{body}");
+    server.ingest(vec![0.5], vec![1.0]).unwrap();
+    let status = fault::snapshot();
+    let fp = status.iter().find(|s| s.name == "ingest.batch").expect("configured");
+    assert!(fp.hits >= 1 && fp.fires >= 1, "hits {} fires {}", fp.hits, fp.fires);
+    let body = server.handle_failpoints("/failpoints?clear=1").unwrap();
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("armed"), Some(&Json::Bool(false)), "{body}");
+    assert!(!fault::armed());
+    server.shutdown();
+}
