@@ -1,0 +1,209 @@
+//! `cargo bench --bench fig11_cluster` — the replication cost curve.
+//! Three measurements: (a) `delta_cut` — cutting an additive statistic
+//! delta (`diff_ski`) and encoding it as a wire frame, the CPU cost a
+//! node pays per ship; (b) `ship_apply` — end-to-end replication
+//! latency for one ingest batch across a live 2-node loopback cluster
+//! (ingest → cut → TCP → idempotent apply, measured until the peer's
+//! replica reflects the batch); (c) `rejoin_catchup` — wall-clock for
+//! a killed-and-restarted node to rebind, restore its checkpoint, and
+//! leave `recovering` via `SyncRequest` catch-up. Medians land in
+//! `BENCH_fig11_cluster.json`; `extra` carries the delta frame size so
+//! bytes-per-ship is tracked alongside the wall-clocks.
+
+use msgp::bench::{Record, Recorder};
+use msgp::cluster::{diff_ski, ClusterConfig, ClusterNode};
+use msgp::fault::{CkptConfig, Frame};
+use msgp::gp::msgp::{KernelSpec, MsgpConfig};
+use msgp::grid::{Grid, GridAxis};
+use msgp::kernels::{KernelType, ProductKernel};
+use msgp::shard::ShardPlan;
+use msgp::stream::{IncrementalSki, StreamConfig};
+use msgp::util::timing::{bench_fn, bench_header};
+use msgp::util::Rng;
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn se_kernel() -> KernelSpec {
+    KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0))
+}
+
+fn stream_cfg() -> StreamConfig {
+    StreamConfig {
+        msgp: MsgpConfig { n_per_dim: vec![128], n_var_samples: 4, ..Default::default() },
+        refresh_every: 1_000_000,
+        ..Default::default()
+    }
+}
+
+fn plan() -> ShardPlan {
+    ShardPlan::new(Grid::new(vec![GridAxis::span(-12.0, 13.0, 128)]), 6, 4, 2)
+}
+
+fn node_cfg(id: usize, peers: Vec<String>, ckpt: Option<&std::path::Path>) -> ClusterConfig {
+    let mut cfg = ClusterConfig::new(id, peers);
+    cfg.timeout = Duration::from_millis(500);
+    cfg.ship_every = 64;
+    cfg.ship_ms = 10;
+    cfg.hb_ms = 50;
+    cfg.ckpt =
+        CkptConfig { dir: ckpt.map(|p| p.to_path_buf()), every_points: 512, every_ms: 1_000 };
+    cfg
+}
+
+fn start_pair(ckpt: Option<&std::path::Path>) -> (Vec<Arc<ClusterNode>>, Vec<String>) {
+    let listeners: Vec<TcpListener> =
+        (0..2).map(|_| TcpListener::bind("127.0.0.1:0").expect("bind ephemeral")).collect();
+    let peers: Vec<String> =
+        listeners.iter().map(|l| l.local_addr().expect("local addr").to_string()).collect();
+    let nodes = listeners
+        .into_iter()
+        .enumerate()
+        .map(|(id, l)| {
+            ClusterNode::start(
+                se_kernel(),
+                0.01,
+                stream_cfg(),
+                plan(),
+                node_cfg(id, peers.clone(), ckpt),
+                Some(l),
+            )
+            .expect("start cluster node")
+        })
+        .collect();
+    (nodes, peers)
+}
+
+fn gen_batch(rng: &mut Rng, k: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut xs = Vec::with_capacity(k);
+    let mut ys = Vec::with_capacity(k);
+    for _ in 0..k {
+        let x = rng.uniform_in(-10.0, 10.0);
+        xs.push(x);
+        ys.push(msgp::data::stress_fn(x) + 0.05 * rng.normal());
+    }
+    (xs, ys)
+}
+
+/// Replicated points visible on `node` (it ingests nothing itself).
+fn replica_points(node: &ClusterNode) -> usize {
+    node.cluster_summary()
+        .get("replicas")
+        .and_then(|v| v.as_arr())
+        .map(|rows| {
+            rows.iter().filter_map(|r| r.get("n").and_then(|n| n.as_f64())).sum::<f64>() as usize
+        })
+        .unwrap_or(0)
+}
+
+fn spin_until(mut cond: impl FnMut() -> bool, what: &str) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_micros(200));
+    }
+}
+
+fn main() {
+    let full = std::env::var("BENCH_FULL").is_ok();
+    let min_time = Duration::from_millis(if full { 1000 } else { 250 });
+    println!("# fig11_cluster: delta cut/encode, 2-node ship+apply, rejoin catch-up");
+    bench_header();
+    let mut rec = Recorder::open("fig11_cluster");
+
+    // (a) Cutting + encoding a delta frame, per grid size.
+    let sizes: &[usize] = if full { &[256, 1024, 4096, 16384] } else { &[256, 1024, 4096] };
+    for &m in sizes {
+        let grid = Grid::new(vec![GridAxis::span(-11.0, 11.0, m)]);
+        let mut prev = IncrementalSki::new(grid, 4, 1, 11);
+        let mut rng = Rng::new(29);
+        let (xs, ys) = gen_batch(&mut rng, 2_000);
+        for (x, y) in xs.iter().zip(&ys) {
+            prev.ingest(&[*x], *y);
+        }
+        let mut cur = prev.clone();
+        let (xs, ys) = gen_batch(&mut rng, 256);
+        for (x, y) in xs.iter().zip(&ys) {
+            cur.ingest(&[*x], *y);
+        }
+        let mut frame_bytes = 0usize;
+        let cut = bench_fn(&format!("delta_cut m={m}"), min_time, 500, || {
+            let delta = diff_ski(&cur, &prev).expect("same grid is diffable");
+            let frame =
+                Frame::Delta { origin: 0, shard: 0, epoch: 1, ski: Box::new(delta) }.encode();
+            frame_bytes = frame.len();
+        });
+        println!("{}", cut.line());
+        rec.record(Record::from_stats(&cut).with_extra("frame_bytes", frame_bytes as f64));
+    }
+
+    // (b) End-to-end ship+apply across a live 2-node loopback cluster.
+    {
+        let (nodes, _) = start_pair(None);
+        spin_until(|| !nodes[0].recovering() && !nodes[1].recovering(), "initial sync");
+        let mut rng = Rng::new(31);
+        let mut expected = 0usize;
+        let batch = 64usize;
+        let ship = bench_fn(&format!("ship_apply batch={batch}"), min_time, 200, || {
+            let (xs, ys) = gen_batch(&mut rng, batch);
+            expected += nodes[0].ingest(&xs, &ys);
+            nodes[0].flush();
+            spin_until(|| replica_points(&nodes[1]) >= expected, "replica to catch up");
+        });
+        println!("{}", ship.line());
+        rec.record(Record::from_stats(&ship).with_extra("batch", batch as f64));
+        for n in &nodes {
+            n.shutdown();
+        }
+    }
+
+    // (c) Kill + rebind + checkpoint restore + SyncRequest catch-up.
+    {
+        let dir = std::env::temp_dir().join(format!("msgp-fig11-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).expect("create bench scratch dir");
+        let (nodes, peers) = start_pair(Some(&dir));
+        spin_until(|| !nodes[0].recovering() && !nodes[1].recovering(), "initial sync");
+        let n_points = if full { 20_000 } else { 4_000 };
+        let mut rng = Rng::new(37);
+        let (xs, ys) = gen_batch(&mut rng, n_points);
+        let applied = nodes[0].ingest(&xs, &ys) + nodes[1].ingest(&xs, &ys);
+        assert_eq!(applied, n_points);
+        for n in &nodes {
+            n.flush();
+        }
+        spin_until(
+            || replica_points(&nodes[0]) + replica_points(&nodes[1]) + applied >= 2 * n_points,
+            "steady-state replication",
+        );
+        let mut node1 = Some(nodes[1].clone());
+        let rejoin = bench_fn(&format!("rejoin_catchup n={n_points}"), min_time, 10, || {
+            let old = node1.take().expect("node 1 handle");
+            old.shutdown();
+            let fresh = ClusterNode::start(
+                se_kernel(),
+                0.01,
+                stream_cfg(),
+                plan(),
+                node_cfg(1, peers.clone(), Some(&dir)),
+                None, // re-binds its old address
+            )
+            .expect("restart node 1");
+            spin_until(|| !fresh.recovering(), "rejoin catch-up");
+            node1 = Some(fresh);
+        });
+        println!("{}", rejoin.line());
+        rec.record(Record::from_stats(&rejoin).with_extra("n_points", n_points as f64));
+        nodes[0].shutdown();
+        if let Some(n) = node1 {
+            n.shutdown();
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    if let Err(e) = rec.save() {
+        eprintln!("failed to save {:?}: {e}", rec.path());
+    } else {
+        println!("# recorded -> {:?}", rec.path());
+    }
+}

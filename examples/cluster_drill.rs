@@ -1,0 +1,336 @@
+//! Cluster drill with real processes and a real `SIGKILL`:
+//!
+//! ```sh
+//! cargo run --release --example cluster_drill
+//! ```
+//!
+//! The parent re-executes itself three times (`--node`, identity via
+//! the same `MSGP_PEERS`/`MSGP_NODE_ID` env a production deployment
+//! would use), each child running a [`msgp::cluster::ClusterNode`]
+//! behind its own HTTP front door. The parent streams observations to
+//! all three doors (each node keeps its stripe), `SIGKILL`s node 2
+//! mid-stream, keeps streaming to the survivors, restarts node 2 on
+//! the same address (checkpoint restore + `SyncRequest` catch-up),
+//! re-sends the segment its stripe missed, finishes the stream, and
+//! verifies every door's `/predict` against a single-process merge of
+//! the identical stream to 1e-8. Prints `CLUSTER PARITY OK` on
+//! success — the CI chaos job greps for it.
+
+use msgp::bench::loadgen::HttpClient;
+use msgp::cluster::{ClusterConfig, ClusterNode};
+use msgp::coordinator::{HttpConfig, HttpServer, Server};
+use msgp::data::gen_stress_1d;
+use msgp::gp::msgp::{KernelSpec, MsgpConfig};
+use msgp::grid::{Grid, GridAxis};
+use msgp::kernels::{KernelType, ProductKernel};
+use msgp::shard::{merge_owned, ShardPlan};
+use msgp::stream::{IncrementalSki, StreamConfig, StreamTrainer};
+use msgp::util::json::Json;
+use std::net::{SocketAddr, TcpListener};
+use std::path::PathBuf;
+use std::process::{Child, Command};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const N: usize = 900;
+const BATCH: usize = 100;
+const NODES: usize = 3;
+
+fn se_kernel() -> KernelSpec {
+    KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0))
+}
+
+fn stream_cfg() -> StreamConfig {
+    StreamConfig {
+        msgp: MsgpConfig { n_per_dim: vec![128], n_var_samples: 4, ..Default::default() },
+        refresh_every: 1_000_000, // models publish on flush, not cadence
+        ..Default::default()
+    }
+}
+
+fn plan() -> ShardPlan {
+    ShardPlan::new(Grid::new(vec![GridAxis::span(-12.0, 13.0, 128)]), 6, 4, 2)
+}
+
+/// Child mode: the cluster node + front door a deployment would run —
+/// membership and knobs from the environment, parked until killed.
+fn serve_node() {
+    let cfg = match ClusterConfig::from_env() {
+        Some(Ok(cfg)) => cfg,
+        other => {
+            eprintln!("cluster_drill --node needs valid MSGP_PEERS env, got {other:?}");
+            std::process::exit(2);
+        }
+    };
+    let http_addr = std::env::var("MSGP_DRILL_HTTP").unwrap_or_else(|_| "127.0.0.1:0".into());
+    let node = match ClusterNode::start(se_kernel(), 0.01, stream_cfg(), plan(), cfg, None) {
+        Ok(node) => node,
+        Err(e) => {
+            eprintln!("cluster node failed to start: {e}");
+            std::process::exit(1);
+        }
+    };
+    let server = Arc::new(Server::start_cluster(node));
+    match HttpServer::bind(server, &http_addr, HttpConfig::default()) {
+        Ok(http) => {
+            println!("node serving on http://{}", http.local_addr());
+            loop {
+                std::thread::sleep(Duration::from_secs(3600));
+            }
+        }
+        Err(e) => {
+            eprintln!("front door failed to bind {http_addr}: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Reserve a distinct loopback port by binding and dropping. The tiny
+/// reuse race is acceptable for a drill that owns the whole box.
+fn free_addr() -> String {
+    let l = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral");
+    l.local_addr().expect("local addr").to_string()
+}
+
+fn spawn_node(exe: &PathBuf, id: usize, peers: &str, http: &str, ckpt: &PathBuf) -> Child {
+    Command::new(exe)
+        .arg("--node")
+        .env("MSGP_PEERS", peers)
+        .env("MSGP_NODE_ID", id.to_string())
+        .env("MSGP_PEER_SHIP_EVERY", "48")
+        .env("MSGP_PEER_SHIP_MS", "25")
+        .env("MSGP_PEER_HB_MS", "50")
+        .env("MSGP_PEER_TIMEOUT_MS", "500")
+        .env("MSGP_DRILL_HTTP", http)
+        .env("MSGP_CKPT_DIR", ckpt)
+        .env("MSGP_CKPT_EVERY_POINTS", "64")
+        .env("MSGP_CKPT_EVERY_MS", "500")
+        .spawn()
+        .expect("spawn cluster node")
+}
+
+fn get_json(client: &mut HttpClient, path: &str) -> Option<Json> {
+    match client.request("GET", path, None) {
+        Ok((200, body)) => Json::parse(&body).ok(),
+        _ => None,
+    }
+}
+
+/// The door is up once `/healthz` answers at all — it reports 503 with
+/// a JSON body while the node is still catching up, which is reachable,
+/// just not yet healthy.
+fn door_up(client: &mut HttpClient) -> bool {
+    client.request("GET", "/healthz", None).is_ok()
+}
+
+/// Points visible on this node: owned accumulators plus replicas.
+fn total_points(client: &mut HttpClient) -> usize {
+    let Some(doc) = get_json(client, "/cluster") else { return 0 };
+    let count = |key: &str| -> f64 {
+        doc.get(key)
+            .and_then(|v| v.as_arr())
+            .map(|rows| rows.iter().filter_map(|r| r.get("n").and_then(|n| n.as_f64())).sum())
+            .unwrap_or(0.0)
+    };
+    (count("owned") + count("replicas")) as usize
+}
+
+fn recovering(client: &mut HttpClient) -> Option<bool> {
+    let doc = get_json(client, "/cluster")?;
+    match doc.get("recovering") {
+        Some(Json::Bool(b)) => Some(*b),
+        _ => None,
+    }
+}
+
+fn wait_until(mut cond: impl FnMut() -> bool, what: &str, secs: u64) {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    while Instant::now() < deadline {
+        if cond() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    eprintln!("DRILL FAILED: timed out waiting for {what}");
+    std::process::exit(1);
+}
+
+fn ingest(client: &mut HttpClient, xs: &[f64], ys: &[f64]) -> usize {
+    let body = Json::obj(vec![
+        ("xs", Json::Arr(xs.iter().map(|&v| Json::Num(v)).collect())),
+        ("ys", Json::Arr(ys.iter().map(|&v| Json::Num(v)).collect())),
+    ])
+    .to_string();
+    match client.request("POST", "/ingest", Some(&body)) {
+        Ok((200, resp)) => Json::parse(&resp)
+            .ok()
+            .and_then(|d| d.get("applied").and_then(|v| v.as_f64()))
+            .unwrap_or(0.0) as usize,
+        other => {
+            eprintln!("DRILL FAILED: ingest rejected: {other:?}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn flush(client: &mut HttpClient) {
+    let (status, _) = client
+        .request("POST", "/ingest", Some("{\"flush\": true}"))
+        .expect("flush request");
+    assert_eq!(status, 200, "flush must succeed");
+}
+
+/// The single-process truth: per-shard accumulators with the cluster's
+/// seeds, each point ingested once into its owner shard, merged.
+fn reference_predict(xs: &[f64], ys: &[f64], probe: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let plan = plan();
+    let scfg = stream_cfg();
+    let ns = scfg.msgp.n_var_samples.max(1);
+    let seed = scfg.msgp.seed;
+    let mut parts: Vec<IncrementalSki> = (0..plan.shards())
+        .map(|s| IncrementalSki::new(plan.local_grid(s), ns, 1, seed ^ (2 * s as u64)))
+        .collect();
+    for (i, &y) in ys.iter().enumerate() {
+        let x = &xs[i..i + 1];
+        parts[plan.owner_of(x)].ingest(x, y);
+    }
+    let merged = merge_owned(plan.global().clone(), seed, &parts);
+    let mut trainer = StreamTrainer::from_stats(se_kernel(), 0.01, scfg, merged);
+    trainer.serving_model().predict_batch(probe)
+}
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    if let Some(flag) = args.next() {
+        if flag == "--node" {
+            serve_node();
+        }
+        eprintln!("unknown argument `{flag}` (this binary re-executes itself with --node)");
+        std::process::exit(2);
+    }
+
+    let dir: PathBuf =
+        std::env::temp_dir().join(format!("msgp-cluster-drill-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create checkpoint dir");
+    let exe = std::env::current_exe().expect("current_exe");
+    let peer_addrs: Vec<String> = (0..NODES).map(|_| free_addr()).collect();
+    let http_addrs: Vec<String> = (0..NODES).map(|_| free_addr()).collect();
+    let peers = peer_addrs.join(",");
+    println!("membership: {peers}");
+
+    let mut children: Vec<Child> =
+        (0..NODES).map(|i| spawn_node(&exe, i, &peers, &http_addrs[i], &dir)).collect();
+    let mut doors: Vec<HttpClient> = http_addrs
+        .iter()
+        .map(|a| HttpClient::new(a.parse::<SocketAddr>().expect("drill http addr")))
+        .collect();
+    for (i, door) in doors.iter_mut().enumerate() {
+        wait_until(|| door_up(door), &format!("node {i} front door"), 30);
+        // Clients gate ingest on the recovery flag (docs/CLUSTER.md):
+        // a node still syncing may adopt peer snapshots of its shards.
+        wait_until(|| recovering(door) == Some(false), &format!("node {i} initial sync"), 30);
+    }
+
+    let data = gen_stress_1d(N, 0.05, 77);
+    let fan = |doors: &mut [HttpClient], lo: usize, hi: usize| -> usize {
+        doors.iter_mut().map(|d| ingest(d, &data.x[lo..hi], &data.y[lo..hi])).sum()
+    };
+
+    // Segment A: everyone up.
+    let mut accepted = 0;
+    for c in 0..3 {
+        accepted += fan(&mut doors, c * BATCH, (c + 1) * BATCH);
+    }
+    for d in doors.iter_mut() {
+        flush(d);
+    }
+    for (i, d) in doors.iter_mut().enumerate() {
+        wait_until(|| total_points(d) == 300, &format!("segment A on node {i}"), 20);
+    }
+
+    // Kill node 2 without warning, mid-replication-stream.
+    children[2].kill().expect("SIGKILL node 2");
+    let _ = children[2].wait();
+    println!("node 2 killed mid-stream");
+
+    // Segment B: survivors only — their stripes land, node 2's is lost.
+    let mut seg_b = 0;
+    for c in 3..6 {
+        seg_b += fan(&mut doors[..2], c * BATCH, (c + 1) * BATCH);
+    }
+    assert!(seg_b < 300, "the dead node's stripe must be missing, got {seg_b}");
+    // Survivors answer instantly throughout — no hangs, no errors.
+    let (status, _) = doors[0]
+        .request("POST", "/predict", Some("{\"points\": [0.5]}"))
+        .expect("predict while a peer is down");
+    assert_eq!(status, 200, "serving must continue with a peer down");
+
+    // Restart node 2 on its old address: checkpoint restore + catch-up.
+    children[2] = spawn_node(&exe, 2, &peers, &http_addrs[2], &dir);
+    wait_until(|| door_up(&mut doors[2]), "node 2 restart", 30);
+    wait_until(|| recovering(&mut doors[2]) == Some(false), "node 2 catch-up", 30);
+    println!("node 2 rejoined and caught up");
+
+    // Re-send the segment its stripe missed (it keeps exactly its own
+    // points, so nothing is double-counted), then finish the stream.
+    let missed = ingest(&mut doors[2], &data.x[300..600], &data.y[300..600]);
+    assert_eq!(seg_b + missed, 300, "resend must recover exactly the lost stripe");
+    accepted += seg_b + missed;
+    for c in 6..9 {
+        accepted += fan(&mut doors, c * BATCH, (c + 1) * BATCH);
+    }
+    assert_eq!(accepted, N, "every point must land on exactly one node");
+    for d in doors.iter_mut() {
+        flush(d);
+    }
+    for (i, d) in doors.iter_mut().enumerate() {
+        wait_until(|| total_points(d) == N, &format!("full replication on node {i}"), 30);
+    }
+    for d in doors.iter_mut() {
+        flush(d); // publish the final replica view synchronously
+    }
+
+    // Every door must match the single-process merge of the identical
+    // stream — including the door that was killed and restarted.
+    let probe: Vec<f64> = (0..60).map(|i| -9.0 + 0.3 * i as f64).collect();
+    let (want_mean, want_var) = reference_predict(&data.x, &data.y, &probe);
+    let body = Json::obj(vec![(
+        "points",
+        Json::Arr(probe.iter().map(|&v| Json::Num(v)).collect()),
+    )])
+    .to_string();
+    let mut worst = 0.0f64;
+    for (i, d) in doors.iter_mut().enumerate() {
+        let (status, resp) = d.request("POST", "/predict", Some(&body)).expect("parity predict");
+        assert_eq!(status, 200, "node {i} parity predict");
+        let doc = Json::parse(&resp).expect("predict response parses");
+        let grab = |key: &str| -> Vec<f64> {
+            doc.get(key)
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
+                .unwrap_or_default()
+        };
+        let (mean, var) = (grab("mean"), grab("var"));
+        assert_eq!(mean.len(), probe.len(), "node {i} mean length");
+        for k in 0..probe.len() {
+            worst = worst
+                .max((mean[k] - want_mean[k]).abs())
+                .max((var[k] - want_var[k]).abs());
+        }
+    }
+
+    for mut c in children {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+
+    println!("3-node drill: killed + restarted node 2, worst |Δ| = {worst:.3e}");
+    if worst < 1e-8 {
+        println!("CLUSTER PARITY OK");
+    } else {
+        eprintln!("DRILL FAILED: parity {worst:.3e} exceeds 1e-8");
+        std::process::exit(1);
+    }
+}

@@ -67,6 +67,11 @@ pub const LOCK_ORDER: &[(&str, u32)] = &[
     // Shard facade: serializes public ShardedTrainer entry points and
     // is taken before any per-shard state.
     ("ops", 10),
+    // Cluster node state: owned-shard statistics, then the replica
+    // table. Snapshot/merge paths take them in scoped blocks, never
+    // nested — the ranks document the only legal nesting direction.
+    ("owned", 12),
+    ("replicas", 16),
     // Reservoir snapshots (stream trainer + per-shard workers).
     ("reservoir", 20),
     ("reservoirs", 20),

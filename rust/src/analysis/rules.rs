@@ -297,7 +297,8 @@ pub fn lock_order(file: &SourceFile, findings: &mut Vec<Finding>) {
 /// Source-path prefixes where rule 5 (unwrap-audit) applies: the
 /// serving path, where an unjustified panic takes down a worker thread
 /// (or, pre-supervision, the whole deployment).
-pub const UNWRAP_AUDIT_PREFIXES: &[&str] = &["coordinator/", "shard/", "stream/", "fault/"];
+pub const UNWRAP_AUDIT_PREFIXES: &[&str] =
+    &["cluster/", "coordinator/", "shard/", "stream/", "fault/"];
 
 /// Panic-on-Err/None patterns rule 5 denies. `.unwrap_or_else(` does
 /// not match `.unwrap()` — converting a poisoned lock with

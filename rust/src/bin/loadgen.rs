@@ -10,7 +10,13 @@
 //! * `loadgen --serve [--port P] [--shards S]` — boot a sharded demo
 //!   server and keep it up for manual poking (`curl`/external loadgen).
 //! * `loadgen --addr HOST:PORT [...]` — drive an already-running front
-//!   door and print the latency/throughput report.
+//!   door and print the latency/throughput report. With
+//!   `--peer-kill-at SEC --peer-kill-pid PID` it doubles as a cluster
+//!   chaos driver: `SIGKILL` the given peer process that many seconds
+//!   into the run while the load keeps flowing — against a
+//!   `msgp::cluster` door the report must stay error-free (surviving
+//!   nodes answer from replicas with a staleness bound; see
+//!   `docs/CLUSTER.md`).
 
 use std::net::SocketAddr;
 use std::path::Path;
@@ -28,7 +34,8 @@ fn usage() -> ! {
     eprintln!(
         "usage:\n  loadgen --smoke\n  loadgen --serve [--port P] [--shards S]\n  \
          loadgen --addr HOST:PORT [--clients N] [--requests N] [--qps Q] [--read-frac F]\n          \
-         [--batch B] [--dim D] [--seed S]"
+         [--batch B] [--dim D] [--seed S]\n          \
+         [--peer-kill-at SEC --peer-kill-pid PID]   # SIGKILL a cluster peer mid-run"
     );
     std::process::exit(2);
 }
@@ -93,6 +100,8 @@ fn run_serve(args: &[String]) -> anyhow::Result<()> {
 fn run_external(args: &[String]) -> anyhow::Result<()> {
     let mut cfg = LoadConfig::default();
     let mut addr: Option<SocketAddr> = None;
+    let mut kill_at: Option<f64> = None;
+    let mut kill_pid: Option<u32> = None;
     let mut iter = args.iter();
     while let Some(a) = iter.next() {
         let mut take = || iter.next().cloned().unwrap_or_default();
@@ -107,11 +116,34 @@ fn run_external(args: &[String]) -> anyhow::Result<()> {
             "--batch" => cfg.predict_batch = take().parse().unwrap_or(cfg.predict_batch),
             "--dim" => cfg.dim = take().parse().unwrap_or(cfg.dim),
             "--seed" => cfg.seed = take().parse().unwrap_or(cfg.seed),
+            "--peer-kill-at" => kill_at = take().parse().ok(),
+            "--peer-kill-pid" => kill_pid = take().parse().ok(),
             _ => usage(),
         }
     }
     let Some(addr) = addr else { usage() };
     cfg.addr = addr;
+    match (kill_at, kill_pid) {
+        // Chaos knob: hard-kill a cluster peer mid-run. The load keeps
+        // flowing at the driven door the whole time, so the report's
+        // error count is the verdict on fault-tolerant serving.
+        (Some(at), Some(pid)) => {
+            std::thread::spawn(move || {
+                std::thread::sleep(std::time::Duration::from_secs_f64(at.max(0.0)));
+                println!("# chaos: SIGKILL peer pid {pid} at t={at:.1}s");
+                match std::process::Command::new("kill").args(["-9", &pid.to_string()]).status() {
+                    Ok(st) if st.success() => {}
+                    Ok(st) => eprintln!("# chaos: kill exited with {st}"),
+                    Err(e) => eprintln!("# chaos: kill failed: {e}"),
+                }
+            });
+        }
+        (None, None) => {}
+        _ => {
+            eprintln!("--peer-kill-at and --peer-kill-pid must be given together");
+            usage();
+        }
+    }
     let mode = if cfg.target_qps > 0.0 {
         format!("open loop @ {:.0} req/s", cfg.target_qps)
     } else {

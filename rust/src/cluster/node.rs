@@ -1,0 +1,929 @@
+//! One cluster node: shard ownership, local ingest with delta cuts,
+//! frame receive/apply with epoch idempotency, catch-up after restart,
+//! and always-local serving from the merged replica view.
+//!
+//! Threads per node (all supervised, all bounded-wait):
+//!
+//! * **listener** — non-blocking accept loop; one receive thread per
+//!   inbound peer connection.
+//! * **sender ×(nodes-1)** — see [`super::peer`]; owns the outbound
+//!   connection and its bounded queue.
+//! * **monitor** — 20 ms tick: peer liveness gauges, deadline-driven
+//!   delta cuts when ingest idles, the recovery watchdog, and the
+//!   merge-and-publish of a fresh [`ServingModel`] whenever statistics
+//!   changed (panic-isolated behind the restart supervisor).
+
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::{diff_ski, peer, ClusterConfig};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::state::{ModelSlot, ServingModel};
+use crate::fault::codec::{load_newest, read_frame, write_atomic, Checkpoint, CkptTrigger, Frame};
+use crate::fault::{Supervisor, SupervisorPolicy, Verdict};
+use crate::gp::msgp::KernelSpec;
+use crate::obs::now_us;
+use crate::shard::{merge_owned, ShardPlan};
+use crate::stream::{IncrementalSki, StreamConfig, StreamTrainer};
+use crate::util::json::Json;
+
+/// Outbound frame queue for one peer: a bounded channel plus the
+/// overflow/loss flag that forces the sender into a full resync.
+pub(crate) struct OutQueue {
+    pub(crate) tx: SyncSender<Arc<Vec<u8>>>,
+    /// Set by enqueue overflow (frames were dropped) — the sender must
+    /// reconnect and replay full state before trusting deltas again.
+    pub(crate) needs_resync: Arc<AtomicBool>,
+    /// Frames currently queued (mirrored into the `peer_queue_depth`
+    /// gauge by the monitor).
+    pub(crate) depth: Arc<AtomicU64>,
+}
+
+/// One shard this node owns: the live accumulator plus the snapshot at
+/// the last cut (`prev`), whose difference is the next shipped delta.
+pub(crate) struct OwnedShard {
+    pub(crate) shard: usize,
+    pub(crate) ski: IncrementalSki,
+    pub(crate) prev: IncrementalSki,
+    /// Epoch of the newest state adopted for this shard during
+    /// catch-up (checkpoint seq at restore time).
+    pub(crate) synced_epoch: u64,
+}
+
+/// Everything guarded by the `owned` lock (rank 12 — see
+/// `analysis::LOCK_ORDER`).
+pub(crate) struct OwnedState {
+    /// Owned shards in ascending shard-id order.
+    pub(crate) skis: Vec<OwnedShard>,
+    pub(crate) points_since_cut: usize,
+    pub(crate) last_cut: Instant,
+    pub(crate) ckpt_trigger: CkptTrigger,
+}
+
+/// Replica of a foreign shard, advanced idempotently by epoch.
+pub(crate) struct Replica {
+    pub(crate) ski: IncrementalSki,
+    /// Watermark: the owner's cut epoch this replica has applied
+    /// through. Frames at or below it are ignored.
+    pub(crate) epoch: u64,
+    pub(crate) updated_at_us: u64,
+}
+
+/// Everything guarded by the `replicas` lock (rank 16).
+#[derive(Default)]
+pub(crate) struct ReplicaTable {
+    /// Foreign shard id -> replica.
+    pub(crate) map: HashMap<usize, Replica>,
+}
+
+/// State shared by every thread of one cluster node.
+pub(crate) struct Shared {
+    pub(crate) cfg: ClusterConfig,
+    pub(crate) kernel: KernelSpec,
+    pub(crate) sigma2: f64,
+    pub(crate) stream: StreamConfig,
+    pub(crate) plan: ShardPlan,
+    pub(crate) metrics: Arc<Metrics>,
+    pub(crate) slot: Arc<ModelSlot>,
+    /// Lock rank 12.
+    pub(crate) owned: Mutex<OwnedState>,
+    /// Lock rank 16.
+    pub(crate) replicas: Mutex<ReplicaTable>,
+    /// Outbound queue per node id (`None` at our own index).
+    pub(crate) outs: Vec<Option<OutQueue>>,
+    /// Last traffic from each node (µs since trace epoch; 0 = never).
+    pub(crate) last_seen_us: Vec<AtomicU64>,
+    /// Node-wide cut epoch, stamped into every shipped frame.
+    pub(crate) epoch: AtomicU64,
+    /// Statistics changed since the last publish.
+    pub(crate) dirty: AtomicBool,
+    pub(crate) quit: AtomicBool,
+    pub(crate) started: Instant,
+}
+
+impl Shared {
+    pub(crate) fn nodes(&self) -> usize {
+        self.cfg.nodes()
+    }
+
+    fn note_seen(&self, node: usize) {
+        if node < self.last_seen_us.len() {
+            self.last_seen_us[node].store(now_us().max(1), Ordering::Relaxed);
+        }
+    }
+
+    /// Has `node` produced traffic within the liveness window
+    /// (4 heartbeat intervals)?
+    pub(crate) fn peer_is_up(&self, node: usize) -> bool {
+        if node == self.cfg.node_id {
+            return true;
+        }
+        let seen = self.last_seen_us[node].load(Ordering::Relaxed);
+        seen != 0 && now_us().saturating_sub(seen) < 4 * self.cfg.hb_ms * 1000
+    }
+
+    /// Queue `bytes` toward `node`. Overflow drops the frame and flags
+    /// the sender for a reconnect-with-resync — bounded memory beats a
+    /// perfect stream, and the resync repairs the loss.
+    pub(crate) fn enqueue_to(&self, node: usize, bytes: Arc<Vec<u8>>) {
+        if let Some(out) = &self.outs[node] {
+            match out.tx.try_send(bytes) {
+                Ok(()) => {
+                    out.depth.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(TrySendError::Full(_)) => {
+                    out.needs_resync.store(true, Ordering::Relaxed);
+                    self.metrics.peers[node].send_errors.inc();
+                }
+                Err(TrySendError::Disconnected(_)) => {}
+            }
+        }
+    }
+
+    fn broadcast(&self, bytes: Arc<Vec<u8>>) {
+        for p in 0..self.nodes() {
+            if p != self.cfg.node_id {
+                self.enqueue_to(p, bytes.clone());
+            }
+        }
+    }
+
+    /// Full-state frames for every owned shard at the current epoch —
+    /// what a (re)connecting sender replays before any delta.
+    pub(crate) fn snapshot_owned_fulls(&self) -> Vec<Arc<Vec<u8>>> {
+        let epoch = self.epoch.load(Ordering::Relaxed);
+        let origin = self.cfg.node_id as u32;
+        let owned = self.owned.lock().unwrap_or_else(|e| e.into_inner());
+        owned
+            .skis
+            .iter()
+            .map(|os| {
+                Arc::new(
+                    Frame::Full {
+                        origin,
+                        shard: os.shard as u32,
+                        epoch,
+                        ski: Box::new(os.ski.clone()),
+                    }
+                    .encode(),
+                )
+            })
+            .collect()
+    }
+
+    /// Answer a `SyncRequest`: our owned shards at the current epoch,
+    /// every replica we hold at its watermark (stamped with the true
+    /// owner as origin, so a rejoining node recovers shards whose owner
+    /// is still down), and a terminating `SyncDone`.
+    fn answer_sync_request(&self, requester: usize) {
+        let mut frames = self.snapshot_owned_fulls();
+        {
+            let reps = self.replicas.lock().unwrap_or_else(|e| e.into_inner());
+            for (&s, rep) in reps.map.iter() {
+                frames.push(Arc::new(
+                    Frame::Full {
+                        origin: self.plan.node_of(s, self.nodes()) as u32,
+                        shard: s as u32,
+                        epoch: rep.epoch,
+                        ski: Box::new(rep.ski.clone()),
+                    }
+                    .encode(),
+                ));
+            }
+        }
+        let n = frames.len() as u32;
+        frames.push(Arc::new(
+            Frame::SyncDone { node: self.cfg.node_id as u32, shards: n }.encode(),
+        ));
+        for f in frames {
+            self.enqueue_to(requester, f);
+        }
+    }
+
+    /// Apply one received frame. `from` is the connection's peer id
+    /// (learned from `Hello`). An `Err` closes the connection, which
+    /// forces the sending side into reconnect + full resync — the
+    /// repair path for any lost or unorderable frame.
+    pub(crate) fn on_frame(&self, frame: Frame, from: &mut Option<u32>) -> Result<(), String> {
+        self.metrics.peer_frames_recv_total.inc();
+        if let Some(f) = *from {
+            self.note_seen(f as usize);
+        }
+        match frame {
+            Frame::Hello { node } => {
+                if node as usize >= self.nodes() {
+                    return Err(format!("hello from unknown node {node}"));
+                }
+                *from = Some(node);
+                self.note_seen(node as usize);
+                Ok(())
+            }
+            Frame::Heartbeat { node } => {
+                self.note_seen(node as usize);
+                self.metrics.peer_heartbeats_total.inc();
+                Ok(())
+            }
+            Frame::Delta { origin, shard, epoch, ski } => {
+                self.apply_delta(origin as usize, shard as usize, epoch, *ski)
+            }
+            Frame::Full { origin, shard, epoch, ski } => {
+                self.apply_full(origin as usize, shard as usize, epoch, *ski)
+            }
+            Frame::SyncRequest { node } => {
+                if node as usize >= self.nodes() {
+                    return Err(format!("sync request from unknown node {node}"));
+                }
+                self.answer_sync_request(node as usize);
+                Ok(())
+            }
+            Frame::SyncDone { node, shards } => {
+                if self.metrics.recovering.get() == 1 {
+                    self.metrics.recovering.store(0, Ordering::Relaxed);
+                    crate::log_info!(
+                        "cluster node {}: catch-up complete ({shards} shards from node {node})",
+                        self.cfg.node_id
+                    );
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn apply_delta(
+        &self,
+        origin: usize,
+        shard: usize,
+        epoch: u64,
+        delta: IncrementalSki,
+    ) -> Result<(), String> {
+        if shard >= self.plan.shards() || self.plan.node_of(shard, self.nodes()) != origin {
+            return Err(format!("delta for shard {shard} misrouted from node {origin}"));
+        }
+        if origin == self.cfg.node_id {
+            // Echo of our own shard — nothing to apply.
+            self.metrics.peer_deltas_ignored_total.inc();
+            return Ok(());
+        }
+        let mut reps = self.replicas.lock().unwrap_or_else(|e| e.into_inner());
+        match reps.map.get_mut(&shard) {
+            None => Err(format!("delta for shard {shard} without a replica base")),
+            Some(rep) if epoch <= rep.epoch => {
+                // Replay (retry, reorder, or post-resync leftovers):
+                // the watermark makes it a no-op.
+                self.metrics.peer_deltas_ignored_total.inc();
+                Ok(())
+            }
+            Some(rep) if delta.grid() != rep.ski.grid() => {
+                Err(format!("delta for shard {shard} on an advanced grid — need full state"))
+            }
+            Some(rep) => {
+                rep.ski.accumulate_shifted(&delta);
+                rep.epoch = epoch;
+                rep.updated_at_us = now_us();
+                self.metrics.peer_deltas_applied_total.inc();
+                self.dirty.store(true, Ordering::Relaxed);
+                Ok(())
+            }
+        }
+    }
+
+    fn apply_full(
+        &self,
+        origin: usize,
+        shard: usize,
+        epoch: u64,
+        ski: IncrementalSki,
+    ) -> Result<(), String> {
+        if shard >= self.plan.shards() || self.plan.node_of(shard, self.nodes()) != origin {
+            return Err(format!("full state for shard {shard} misrouted from node {origin}"));
+        }
+        if origin == self.cfg.node_id {
+            // A peer's replica of one of OUR shards: adopt it only
+            // while catching up after a restart, and only if it is
+            // newer than everything we have adopted for that shard.
+            if self.metrics.recovering.get() != 1 {
+                self.metrics.peer_deltas_ignored_total.inc();
+                return Ok(());
+            }
+            let mut owned = self.owned.lock().unwrap_or_else(|e| e.into_inner());
+            if let Some(os) = owned.skis.iter_mut().find(|o| o.shard == shard) {
+                if epoch > os.synced_epoch {
+                    os.prev = ski.clone();
+                    os.ski = ski;
+                    os.synced_epoch = epoch;
+                    self.epoch.fetch_max(epoch, Ordering::Relaxed);
+                    self.dirty.store(true, Ordering::Relaxed);
+                } else {
+                    self.metrics.peer_deltas_ignored_total.inc();
+                }
+            }
+            return Ok(());
+        }
+        let mut reps = self.replicas.lock().unwrap_or_else(|e| e.into_inner());
+        match reps.map.get_mut(&shard) {
+            Some(rep) if epoch < rep.epoch => {
+                self.metrics.peer_deltas_ignored_total.inc();
+            }
+            Some(rep) => {
+                rep.ski = ski;
+                rep.epoch = epoch;
+                rep.updated_at_us = now_us();
+                self.dirty.store(true, Ordering::Relaxed);
+            }
+            None => {
+                reps.map.insert(shard, Replica { ski, epoch, updated_at_us: now_us() });
+                self.dirty.store(true, Ordering::Relaxed);
+            }
+        }
+        Ok(())
+    }
+
+    /// Cut the pending increments: bump the node epoch, ship a delta
+    /// (or a full snapshot after grid growth) per changed owned shard,
+    /// roll `prev` forward, and checkpoint when due.
+    pub(crate) fn cut_and_ship(&self, owned: &mut OwnedState) {
+        let changed: Vec<usize> = owned
+            .skis
+            .iter()
+            .enumerate()
+            .filter(|(_, os)| os.ski.n() != os.prev.n() || os.ski.grid() != os.prev.grid())
+            .map(|(i, _)| i)
+            .collect();
+        owned.points_since_cut = 0;
+        owned.last_cut = Instant::now();
+        if !changed.is_empty() {
+            let epoch = self.epoch.fetch_add(1, Ordering::Relaxed) + 1;
+            let origin = self.cfg.node_id as u32;
+            for i in changed {
+                let os = &mut owned.skis[i];
+                let frame = match diff_ski(&os.ski, &os.prev) {
+                    Some(delta) => Frame::Delta {
+                        origin,
+                        shard: os.shard as u32,
+                        epoch,
+                        ski: Box::new(delta),
+                    },
+                    // Grid expanded since the last cut: deltas cannot
+                    // express that, so ship the whole accumulator.
+                    None => Frame::Full {
+                        origin,
+                        shard: os.shard as u32,
+                        epoch,
+                        ski: Box::new(os.ski.clone()),
+                    },
+                };
+                self.broadcast(Arc::new(frame.encode()));
+                os.prev = os.ski.clone();
+            }
+            self.dirty.store(true, Ordering::Relaxed);
+        }
+        if owned.ckpt_trigger.due(&self.cfg.ckpt) {
+            self.write_checkpoint(owned);
+        }
+    }
+
+    fn write_checkpoint(&self, owned: &mut OwnedState) {
+        let Some(path) = self.cfg.ckpt.node_path(self.cfg.node_id) else {
+            return;
+        };
+        let seq = self.epoch.load(Ordering::Relaxed);
+        let t0 = Instant::now();
+        let ckpt = Checkpoint {
+            seq,
+            kernel: self.kernel.clone(),
+            sigma2: self.sigma2,
+            skis: owned.skis.iter().map(|os| os.ski.clone()).collect(),
+        };
+        match write_atomic(&path, &ckpt) {
+            Ok(()) => {
+                owned.ckpt_trigger.note_written();
+                self.metrics.record_ckpt_write(seq, t0.elapsed());
+            }
+            Err(e) => {
+                self.metrics.ckpt_write_errors_total.inc();
+                crate::log_warn!("cluster node {}: checkpoint failed: {e}", self.cfg.node_id);
+            }
+        }
+    }
+
+    /// Merge owned + replica statistics into a fresh model and publish
+    /// it into the serving slot. Called from the monitor thread and
+    /// from synchronous `flush`.
+    pub(crate) fn publish_now(&self) {
+        let t0 = Instant::now();
+        let mut parts: Vec<(usize, IncrementalSki)> = {
+            let owned = self.owned.lock().unwrap_or_else(|e| e.into_inner());
+            owned.skis.iter().map(|os| (os.shard, os.ski.clone())).collect()
+        };
+        {
+            let reps = self.replicas.lock().unwrap_or_else(|e| e.into_inner());
+            for (&s, rep) in reps.map.iter() {
+                parts.push((s, rep.ski.clone()));
+            }
+        }
+        if parts.is_empty() {
+            return;
+        }
+        // Deterministic fold order (ascending shard id) so every node
+        // publishes bitwise-identical merges of the same statistics.
+        parts.sort_by_key(|(s, _)| *s);
+        let skis: Vec<IncrementalSki> = parts.into_iter().map(|(_, k)| k).collect();
+        let merged = merge_owned(self.plan.global().clone(), self.stream.msgp.seed, &skis);
+        let mut trainer =
+            StreamTrainer::from_stats(self.kernel.clone(), self.sigma2, self.stream.clone(), merged);
+        let model = trainer.serving_model();
+        self.slot.swap(model);
+        self.metrics.record_refresh(t0.elapsed());
+    }
+}
+
+/// Handle to a running cluster node (see the [`super`] module docs).
+pub struct ClusterNode {
+    shared: Arc<Shared>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl ClusterNode {
+    /// Start a node: restore its own checkpoint if one is readable,
+    /// bind the peer listener (or adopt a pre-bound one — tests pick
+    /// ephemeral ports this way), publish an initial model, mark the
+    /// node `recovering` until a peer answers its `SyncRequest`, and
+    /// spawn the listener/sender/monitor threads.
+    pub fn start(
+        kernel: KernelSpec,
+        sigma2: f64,
+        stream: StreamConfig,
+        plan: ShardPlan,
+        cfg: ClusterConfig,
+        listener: Option<TcpListener>,
+    ) -> std::io::Result<Arc<ClusterNode>> {
+        let nodes = cfg.nodes();
+        let node_id = cfg.node_id;
+        let listener = match listener {
+            Some(l) => l,
+            None => TcpListener::bind(cfg.peers[node_id].as_str())?,
+        };
+        let metrics = Arc::new(Metrics::with_cluster(plan.shards(), nodes));
+        let ns = stream.msgp.n_var_samples.max(1);
+        let seed = stream.msgp.seed;
+
+        // Owned accumulators, seeded exactly like the in-process shard
+        // workers so the merged statistics are bitwise comparable.
+        let mut skis = Vec::new();
+        for s in cfg.owned_shards(&plan) {
+            let ski = IncrementalSki::new(plan.local_grid(s), ns, 1, seed ^ (2 * s as u64));
+            skis.push(OwnedShard { shard: s, prev: ski.clone(), ski, synced_epoch: 0 });
+        }
+
+        // Restore our own shards from the newest valid node checkpoint
+        // (the rotated `.1` fallback lives inside `load_newest`).
+        let mut epoch0 = 0u64;
+        if let Some(path) = cfg.ckpt.node_path(node_id) {
+            if let Some((ck, from)) = load_newest(&path) {
+                let shape_ok =
+                    ck.skis.len() == skis.len() && ck.skis.iter().all(|k| k.probes().len() == ns);
+                if shape_ok {
+                    for (os, k) in skis.iter_mut().zip(ck.skis.into_iter()) {
+                        os.ski = k.clone();
+                        os.prev = k;
+                        os.synced_epoch = ck.seq;
+                    }
+                    epoch0 = ck.seq;
+                    metrics.ckpt_restores_total.inc();
+                    metrics.ckpt_last_seq.store(ck.seq, Ordering::Relaxed);
+                    crate::log_info!(
+                        "cluster node {node_id}: restored {} shards at epoch {} from {}",
+                        skis.len(),
+                        ck.seq,
+                        from.display()
+                    );
+                } else {
+                    crate::log_warn!(
+                        "cluster node {node_id}: checkpoint shape mismatch at {} — cold start",
+                        from.display()
+                    );
+                }
+            }
+        }
+
+        // Initial model from whatever we restored (possibly empty).
+        let slot = {
+            let parts: Vec<IncrementalSki> = skis.iter().map(|os| os.ski.clone()).collect();
+            let mut trainer = if parts.is_empty() {
+                StreamTrainer::new(kernel.clone(), sigma2, plan.global().clone(), stream.clone())
+            } else {
+                let merged = merge_owned(plan.global().clone(), seed, &parts);
+                StreamTrainer::from_stats(kernel.clone(), sigma2, stream.clone(), merged)
+            };
+            Arc::new(ModelSlot::new(trainer.serving_model()))
+        };
+
+        let mut outs = Vec::with_capacity(nodes);
+        let mut rxs: Vec<(usize, Receiver<Arc<Vec<u8>>>)> = Vec::new();
+        for p in 0..nodes {
+            if p == node_id {
+                outs.push(None);
+                continue;
+            }
+            let (tx, rx) = sync_channel(cfg.queue_cap);
+            outs.push(Some(OutQueue {
+                tx,
+                needs_resync: Arc::new(AtomicBool::new(false)),
+                depth: Arc::new(AtomicU64::new(0)),
+            }));
+            rxs.push((p, rx));
+        }
+
+        if nodes > 1 {
+            metrics.recovering.store(1, Ordering::Relaxed);
+        }
+        metrics.peers[node_id].up.store(1, Ordering::Relaxed);
+
+        let shared = Arc::new(Shared {
+            kernel,
+            sigma2,
+            stream,
+            plan,
+            metrics,
+            slot,
+            owned: Mutex::new(OwnedState {
+                skis,
+                points_since_cut: 0,
+                last_cut: Instant::now(),
+                ckpt_trigger: CkptTrigger::default(),
+            }),
+            replicas: Mutex::new(ReplicaTable::default()),
+            outs,
+            last_seen_us: (0..nodes).map(|_| AtomicU64::new(0)).collect(),
+            epoch: AtomicU64::new(epoch0),
+            dirty: AtomicBool::new(false),
+            quit: AtomicBool::new(false),
+            started: Instant::now(),
+            cfg,
+        });
+
+        // The monitor thread asks peers for full state (`SyncRequest`)
+        // until the first `SyncDone` clears `recovering` — requests are
+        // re-broadcast periodically because a reconnecting sender
+        // drains its queue before the snapshot, so any single enqueued
+        // request (or answer) can be legitimately discarded.
+
+        let mut handles = Vec::new();
+        {
+            let sh = shared.clone();
+            handles.push(std::thread::spawn(move || run_listener(sh, listener)));
+        }
+        for (p, rx) in rxs {
+            let sh = shared.clone();
+            handles.push(std::thread::spawn(move || peer::run_sender(sh, p, rx)));
+        }
+        {
+            let sh = shared.clone();
+            handles.push(std::thread::spawn(move || run_monitor(sh)));
+        }
+        Ok(Arc::new(ClusterNode { shared, handles: Mutex::new(handles) }))
+    }
+
+    /// Ingest a flat batch, keeping only points whose owner shard this
+    /// node owns (callers fan the stream to every node; each keeps its
+    /// stripe). Returns the locally accepted count.
+    pub fn ingest(&self, xs: &[f64], ys: &[f64]) -> usize {
+        let sh = &self.shared;
+        let dim = sh.plan.global().dim();
+        let nodes = sh.nodes();
+        let mut accepted = 0usize;
+        let mut owned = sh.owned.lock().unwrap_or_else(|e| e.into_inner());
+        for (i, &y) in ys.iter().enumerate() {
+            let x = &xs[i * dim..(i + 1) * dim];
+            let s = sh.plan.owner_of(x);
+            if sh.plan.node_of(s, nodes) != sh.cfg.node_id {
+                continue;
+            }
+            if let Some(os) = owned.skis.iter_mut().find(|o| o.shard == s) {
+                os.ski.ingest(x, y);
+                accepted += 1;
+            }
+        }
+        if accepted > 0 {
+            owned.points_since_cut += accepted;
+            owned.ckpt_trigger.note_points(accepted);
+            sh.metrics.ingested_points_total.fetch_add(accepted as u64, Ordering::Relaxed);
+            if owned.points_since_cut >= sh.cfg.ship_every
+                || owned.last_cut.elapsed().as_millis() as u64 >= sh.cfg.ship_ms
+            {
+                sh.cut_and_ship(&mut owned);
+            }
+            sh.dirty.store(true, Ordering::Relaxed);
+        }
+        accepted
+    }
+
+    /// Synchronously cut + ship pending increments and publish a fresh
+    /// merged model (the `/flush` route).
+    pub fn flush(&self) {
+        let sh = &self.shared;
+        {
+            let mut owned = sh.owned.lock().unwrap_or_else(|e| e.into_inner());
+            sh.cut_and_ship(&mut owned);
+        }
+        sh.dirty.store(false, Ordering::Relaxed);
+        sh.publish_now();
+    }
+
+    /// Predict one point from the local merged model (never blocks on
+    /// the network). The second value is the bounded-staleness report:
+    /// `Some(age_ms)` when the point's owner node is down and we served
+    /// from a replica, `None` when the owner is this node or alive.
+    pub fn predict_one(&self, x: &[f64]) -> (f64, f64, Option<u64>) {
+        let sh = &self.shared;
+        let model = sh.slot.get();
+        let (mean, var) = model.predict_batch(x);
+        let (m, v) = (mean[0], var[0]);
+        let s = sh.plan.owner_of(x);
+        let owner = sh.plan.node_of(s, sh.nodes());
+        if owner == sh.cfg.node_id || sh.peer_is_up(owner) {
+            return (m, v, None);
+        }
+        let age_ms = {
+            let reps = sh.replicas.lock().unwrap_or_else(|e| e.into_inner());
+            match reps.map.get(&s) {
+                Some(rep) => now_us().saturating_sub(rep.updated_at_us) / 1000,
+                // Never replicated: staleness is our whole lifetime.
+                None => sh.started.elapsed().as_millis() as u64,
+            }
+        };
+        (m, v, Some(age_ms))
+    }
+
+    /// `/cluster` body: identity, epoch, recovery state, owned shard
+    /// point counts, and the replica table with ages.
+    pub fn cluster_summary(&self) -> Json {
+        let sh = &self.shared;
+        let owned: Vec<Json> = {
+            let o = sh.owned.lock().unwrap_or_else(|e| e.into_inner());
+            o.skis
+                .iter()
+                .map(|os| {
+                    Json::obj(vec![
+                        ("shard", Json::Num(os.shard as f64)),
+                        ("n", Json::Num(os.ski.n() as f64)),
+                        ("m", Json::Num(os.ski.grid().m() as f64)),
+                    ])
+                })
+                .collect()
+        };
+        let replicas: Vec<Json> = {
+            let r = sh.replicas.lock().unwrap_or_else(|e| e.into_inner());
+            let mut rows: Vec<(usize, Json)> = r
+                .map
+                .iter()
+                .map(|(&s, rep)| {
+                    (
+                        s,
+                        Json::obj(vec![
+                            ("shard", Json::Num(s as f64)),
+                            ("epoch", Json::Num(rep.epoch as f64)),
+                            ("n", Json::Num(rep.ski.n() as f64)),
+                            (
+                                "age_ms",
+                                Json::Num(
+                                    (now_us().saturating_sub(rep.updated_at_us) / 1000) as f64,
+                                ),
+                            ),
+                        ]),
+                    )
+                })
+                .collect();
+            rows.sort_by_key(|(s, _)| *s);
+            rows.into_iter().map(|(_, j)| j).collect()
+        };
+        Json::obj(vec![
+            ("node", Json::Num(sh.cfg.node_id as f64)),
+            ("nodes", Json::Num(sh.nodes() as f64)),
+            ("epoch", Json::Num(sh.epoch.load(Ordering::Relaxed) as f64)),
+            ("recovering", Json::Bool(sh.metrics.recovering.get() == 1)),
+            ("owned", Json::Arr(owned)),
+            ("replicas", Json::Arr(replicas)),
+        ])
+    }
+
+    /// `/peers` body: per-node liveness and replication transport
+    /// counters.
+    pub fn peers_summary(&self) -> Json {
+        let sh = &self.shared;
+        let rows: Vec<Json> = (0..sh.nodes())
+            .map(|p| {
+                let pm = &sh.metrics.peers[p];
+                let seen = sh.last_seen_us[p].load(Ordering::Relaxed);
+                let age = if p == sh.cfg.node_id {
+                    0
+                } else if seen == 0 {
+                    u64::MAX / 1000
+                } else {
+                    now_us().saturating_sub(seen) / 1000
+                };
+                Json::obj(vec![
+                    ("node", Json::Num(p as f64)),
+                    ("addr", Json::Str(sh.cfg.peers[p].clone())),
+                    ("is_self", Json::Bool(p == sh.cfg.node_id)),
+                    ("up", Json::Bool(sh.peer_is_up(p))),
+                    ("last_seen_age_ms", Json::Num(age as f64)),
+                    ("queue_depth", Json::Num(pm.queue_depth.get() as f64)),
+                    ("sent", Json::Num(pm.sent.get() as f64)),
+                    ("send_errors", Json::Num(pm.send_errors.get() as f64)),
+                    ("reconnects", Json::Num(pm.reconnects.get() as f64)),
+                    ("full_syncs", Json::Num(pm.full_syncs.get() as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("node", Json::Num(sh.cfg.node_id as f64)),
+            ("peers", Json::Arr(rows)),
+        ])
+    }
+
+    /// Shared metrics registry (the node's `/metricsz` source).
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.shared.metrics.clone()
+    }
+
+    /// The live serving slot.
+    pub fn slot(&self) -> Arc<ModelSlot> {
+        self.shared.slot.clone()
+    }
+
+    /// Input dimensionality.
+    pub fn dim(&self) -> usize {
+        self.shared.plan.global().dim()
+    }
+
+    /// This node's id.
+    pub fn node_id(&self) -> usize {
+        self.shared.cfg.node_id
+    }
+
+    /// Current cut epoch.
+    pub fn epoch(&self) -> u64 {
+        self.shared.epoch.load(Ordering::Relaxed)
+    }
+
+    /// Still catching up after a (re)start?
+    pub fn recovering(&self) -> bool {
+        self.shared.metrics.recovering.get() == 1
+    }
+
+    /// Number of peers currently failing the liveness check.
+    pub fn peers_down(&self) -> usize {
+        let sh = &self.shared;
+        (0..sh.nodes()).filter(|&p| p != sh.cfg.node_id && !sh.peer_is_up(p)).count()
+    }
+
+    /// Stop every thread and wait for them. Idempotent.
+    pub fn shutdown(&self) {
+        self.shared.quit.store(true, Ordering::Relaxed);
+        let handles = std::mem::take(
+            &mut *self.handles.lock().unwrap_or_else(|e| e.into_inner()),
+        );
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ClusterNode {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Non-blocking accept loop; one detached receive thread per inbound
+/// connection (they exit on read timeout/error once `quit` is set).
+fn run_listener(shared: Arc<Shared>, listener: TcpListener) {
+    if let Err(e) = listener.set_nonblocking(true) {
+        crate::log_warn!("cluster node {}: listener setup failed: {e}", shared.cfg.node_id);
+        return;
+    }
+    while !shared.quit.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let sh = shared.clone();
+                std::thread::spawn(move || run_receiver(sh, stream));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+/// One inbound connection: decode frames until error/EOF and apply
+/// them. Any decode or application error closes the connection — the
+/// sending side reconnects with a full resync, which repairs whatever
+/// the error lost.
+fn run_receiver(shared: Arc<Shared>, mut stream: TcpStream) {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(shared.cfg.timeout));
+    let mut from: Option<u32> = None;
+    loop {
+        if shared.quit.load(Ordering::Relaxed) {
+            return;
+        }
+        crate::failpoint!("peer.recv", {
+            // Injected receive fault: drop the connection, exactly like
+            // a torn read. The peer's resync repairs the stream.
+            return;
+        });
+        let frame = match read_frame(&mut stream) {
+            Ok(Some(f)) => f,
+            Ok(None) => return,
+            Err(_) => return,
+        };
+        if let Err(e) = shared.on_frame(frame, &mut from) {
+            crate::log_warn!(
+                "cluster node {}: closing peer connection: {e}",
+                shared.cfg.node_id
+            );
+            return;
+        }
+    }
+}
+
+/// 20 ms housekeeping tick: liveness gauges, deadline cuts, the
+/// recovery watchdog, and panic-isolated publish of dirty statistics.
+fn run_monitor(shared: Arc<Shared>) {
+    let node_id = shared.cfg.node_id;
+    let mut sup = Supervisor::new(SupervisorPolicy::default(), 0xC105 ^ node_id as u64);
+    // If no peer answers our SyncRequest within 40 heartbeats, stop
+    // reporting `recovering` — we are alone (or first up) and our
+    // restored state is the best state there is.
+    let recover_deadline = Instant::now() + Duration::from_millis(shared.cfg.hb_ms * 40);
+    // While recovering, re-broadcast the catch-up request every few
+    // heartbeats: a reconnecting sender drains its queue before the
+    // snapshot, so one enqueued request (or a peer's enqueued answer)
+    // can be dropped — the retry is idempotent and repairs that.
+    let sync_req = Arc::new(Frame::SyncRequest { node: node_id as u32 }.encode());
+    let sync_req_every = Duration::from_millis(shared.cfg.hb_ms * 4);
+    let mut last_sync_req: Option<Instant> = None;
+    while !shared.quit.load(Ordering::Relaxed) {
+        std::thread::sleep(Duration::from_millis(20));
+        if shared.metrics.recovering.get() == 1
+            && !last_sync_req.is_some_and(|t| t.elapsed() < sync_req_every)
+        {
+            shared.broadcast(sync_req.clone());
+            last_sync_req = Some(Instant::now());
+        }
+        for p in 0..shared.nodes() {
+            if p == node_id {
+                continue;
+            }
+            shared.metrics.peers[p].up.store(u64::from(shared.peer_is_up(p)), Ordering::Relaxed);
+            if let Some(out) = &shared.outs[p] {
+                shared.metrics.peers[p]
+                    .queue_depth
+                    .store(out.depth.load(Ordering::Relaxed), Ordering::Relaxed);
+            }
+        }
+        if shared.metrics.recovering.get() == 1
+            && Instant::now() >= recover_deadline
+            && !(0..shared.nodes()).any(|p| p != node_id && shared.peer_is_up(p))
+        {
+            shared.metrics.recovering.store(0, Ordering::Relaxed);
+            crate::log_warn!("cluster node {node_id}: no live peers — serving restored state as-is");
+        }
+        {
+            let mut owned = shared.owned.lock().unwrap_or_else(|e| e.into_inner());
+            if owned.points_since_cut > 0
+                && owned.last_cut.elapsed().as_millis() as u64 >= shared.cfg.ship_ms
+            {
+                shared.cut_and_ship(&mut owned);
+            }
+        }
+        if shared.dirty.swap(false, Ordering::Relaxed) {
+            let sh = shared.clone();
+            if catch_unwind(AssertUnwindSafe(|| sh.publish_now())).is_err() {
+                shared.dirty.store(true, Ordering::Relaxed);
+                match sup.on_failure() {
+                    Verdict::Restart(d) => {
+                        crate::log_warn!("cluster node {node_id}: publish panicked; retry in {d:?}");
+                        std::thread::sleep(d);
+                    }
+                    Verdict::Poison => {
+                        // Serving continues on the last good model; a
+                        // transport peer may recover and change the
+                        // inputs, so reset rather than stop forever.
+                        crate::log_warn!("cluster node {node_id}: publish poisoned; backing off");
+                        std::thread::sleep(SupervisorPolicy::default().backoff_cap);
+                        sup = Supervisor::new(SupervisorPolicy::default(), 0xC105 ^ node_id as u64);
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! Outbound replication to one peer: a supervised connect/resync/drain
+//! loop over a plain `TcpStream`.
+//!
+//! Invariant the receiver relies on: **every (re)connection starts
+//! with `Hello` followed by a full-state snapshot of our owned
+//! shards**, before any queued delta. That makes connection teardown
+//! the universal repair action — lost frames, overflowed queues,
+//! injected `peer.send`/`peer.connect`/`peer.recv` faults, and torn
+//! reads all collapse to "reconnect, resync, continue".
+//!
+//! Backoff is the [`crate::fault::supervisor`] policy: capped
+//! exponential with jitter. A `Poison` verdict (sustained failure)
+//! sleeps the cap and resets the window instead of giving up — a dead
+//! peer may be restarted any moment, and the queue stays bounded
+//! regardless.
+
+use std::io::Write;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::node::{OutQueue, Shared};
+use crate::fault::codec::Frame;
+use crate::fault::{Supervisor, SupervisorPolicy, Verdict};
+
+/// Connect to `peer` within the configured timeout. The `peer.connect`
+/// failpoint injects refusal here — upstream of the real socket — so
+/// chaos tests exercise the genuine backoff path.
+fn connect(shared: &Shared, peer: usize) -> std::io::Result<TcpStream> {
+    crate::failpoint!("peer.connect", {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::ConnectionRefused,
+            "injected peer.connect",
+        ));
+    });
+    let addrs = shared.cfg.peers[peer].to_socket_addrs()?;
+    let mut last = std::io::Error::new(std::io::ErrorKind::AddrNotAvailable, "no address");
+    for addr in addrs {
+        match TcpStream::connect_timeout(&addr, shared.cfg.timeout) {
+            Ok(s) => {
+                let _ = s.set_nodelay(true);
+                let _ = s.set_write_timeout(Some(shared.cfg.timeout));
+                return Ok(s);
+            }
+            Err(e) => last = e,
+        }
+    }
+    Err(last)
+}
+
+/// Write one encoded frame. The `peer.send` failpoint injects a broken
+/// pipe, indistinguishable from a peer dying mid-write.
+fn send_bytes(stream: &mut TcpStream, bytes: &[u8]) -> std::io::Result<()> {
+    crate::failpoint!("peer.send", {
+        return Err(std::io::Error::new(std::io::ErrorKind::BrokenPipe, "injected peer.send"));
+    });
+    stream.write_all(bytes)?;
+    stream.flush()
+}
+
+/// Discard everything queued (stale relative to the snapshot we are
+/// about to send) and keep the depth gauge honest.
+fn drain(rx: &Receiver<Arc<Vec<u8>>>, out: &OutQueue) {
+    while rx.try_recv().is_ok() {
+        decrement_depth(out);
+    }
+}
+
+fn decrement_depth(out: &OutQueue) {
+    // `fetch_update` instead of `fetch_sub`: the producer's
+    // try_send/fetch_add pair is not atomic with ours, so clamp at 0
+    // rather than wrapping the gauge to u64::MAX.
+    let _ = out.depth.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| {
+        Some(d.saturating_sub(1))
+    });
+}
+
+/// Sleep the supervisor's verdict in small slices so shutdown stays
+/// prompt. `Poison` sleeps the cap and resets — transport workers are
+/// never permanently poisoned (see module docs).
+fn backoff(shared: &Shared, sup: &mut Supervisor, seed: u64) {
+    let d = match sup.on_failure() {
+        Verdict::Restart(d) => d,
+        Verdict::Poison => {
+            *sup = Supervisor::new(SupervisorPolicy::default(), seed);
+            SupervisorPolicy::default().backoff_cap
+        }
+    };
+    let deadline = std::time::Instant::now() + d;
+    while std::time::Instant::now() < deadline {
+        if shared.quit.load(Ordering::Relaxed) {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// The sender loop for one peer. Owns the receive side of the bounded
+/// outbound queue created in [`super::node::ClusterNode::start`].
+pub(crate) fn run_sender(shared: Arc<Shared>, peer: usize, rx: Receiver<Arc<Vec<u8>>>) {
+    let node_id = shared.cfg.node_id;
+    let seed = 0x5e4d ^ ((node_id as u64) << 16) ^ peer as u64;
+    let mut sup = Supervisor::new(SupervisorPolicy::default(), seed);
+    let hello = Frame::Hello { node: node_id as u32 }.encode();
+    let heartbeat = Frame::Heartbeat { node: node_id as u32 }.encode();
+    let hb_wait = Duration::from_millis(shared.cfg.hb_ms);
+    let pm = &shared.metrics.peers[peer];
+    let out = shared.outs[peer]
+        .as_ref()
+        // PANIC-OK: start() creates a queue for every peer it spawns a
+        // sender for; a missing one is a construction bug.
+        .expect("sender spawned without an out queue");
+
+    'reconnect: while !shared.quit.load(Ordering::Relaxed) {
+        let mut stream = match connect(&shared, peer) {
+            Ok(s) => s,
+            Err(_) => {
+                pm.send_errors.inc();
+                backoff(&shared, &mut sup, seed);
+                continue;
+            }
+        };
+        pm.reconnects.inc();
+
+        // Hello, then the full-state resync every fresh connection
+        // starts with. Clear the overflow flag first: the snapshot we
+        // are about to send supersedes whatever was lost.
+        out.needs_resync.store(false, Ordering::Relaxed);
+        drain(&rx, out);
+        let mut frames = vec![Arc::new(hello.clone())];
+        frames.extend(shared.snapshot_owned_fulls());
+        pm.full_syncs.inc();
+        for f in &frames {
+            if send_bytes(&mut stream, f).is_err() {
+                pm.send_errors.inc();
+                backoff(&shared, &mut sup, seed);
+                continue 'reconnect;
+            }
+            pm.sent.inc();
+        }
+
+        // Drain queued frames; heartbeat on idle. Any error or
+        // overflow flag tears the connection down for a fresh resync.
+        loop {
+            if shared.quit.load(Ordering::Relaxed) {
+                return;
+            }
+            if out.needs_resync.load(Ordering::Relaxed) {
+                // Queue overflowed: deltas were dropped, the stream is
+                // no longer trustworthy. Reconnect with a snapshot.
+                continue 'reconnect;
+            }
+            let bytes = match rx.recv_timeout(hb_wait) {
+                Ok(bytes) => {
+                    decrement_depth(out);
+                    bytes
+                }
+                Err(RecvTimeoutError::Timeout) => Arc::new(heartbeat.clone()),
+                Err(RecvTimeoutError::Disconnected) => return,
+            };
+            if send_bytes(&mut stream, &bytes).is_err() {
+                pm.send_errors.inc();
+                backoff(&shared, &mut sup, seed);
+                continue 'reconnect;
+            }
+            pm.sent.inc();
+        }
+    }
+}

@@ -362,14 +362,15 @@ fn serve_connection(server: &Server, cfg: &HttpConfig, mut stream: TcpStream, ci
         served += 1;
         let req_id = REQ_IDS.fetch_add(1, Ordering::Relaxed) + 1;
         let t0 = Instant::now();
-        let (status, ctype, body, ridx) = {
+        let (status, ctype, body, ridx, extra) = {
             let _sp_req = crate::span_arg!("http.request", req_id);
             crate::failpoint!("http.dispatch");
             dispatch(server, &req)
         };
         let close = req.close
             || (cfg.max_requests_per_conn > 0 && served >= cfg.max_requests_per_conn);
-        let write_ok = write_response(&mut stream, status, ctype, &body, close).is_ok();
+        let write_ok =
+            write_response_with(&mut stream, status, ctype, &body, close, &extra).is_ok();
         let elapsed = t0.elapsed();
         http.record(ridx, status, elapsed);
         if let Some(slow_ms) = cfg.slow_ms {
@@ -496,68 +497,69 @@ fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
 }
 
 /// Route a parsed request to its handler. Returns
-/// `(status, content-type, body, route index)`.
-fn dispatch(server: &Server, req: &RawRequest) -> (u16, &'static str, String, usize) {
+/// `(status, content-type, body, route index, extra header lines)`.
+fn dispatch(server: &Server, req: &RawRequest) -> (u16, &'static str, String, usize, Vec<String>) {
     let route = Route::parse(&req.target);
     let ridx = HttpMetrics::route_index(route);
     let http = &server.metrics.http;
+    let none: Vec<String> = Vec::new();
     match (req.method.as_str(), route) {
         ("POST", Some(Route::Predict)) => match handle_predict(server, &req.body) {
-            Ok(body) => (200, "application/json", body, ridx),
+            Ok((body, extra)) => (200, "application/json", body, ridx, extra),
             Err((status, msg)) => {
                 http.error(if status >= 500 {
                     HttpErrClass::Internal
                 } else {
                     HttpErrClass::BadRequest
                 });
-                (status, "application/json", error_body(&msg), ridx)
+                (status, "application/json", error_body(&msg), ridx, none)
             }
         },
         ("POST", Some(Route::Ingest)) => match handle_ingest(server, &req.body) {
-            Ok(body) => (200, "application/json", body, ridx),
+            Ok(body) => (200, "application/json", body, ridx, none),
             Err((status, msg)) => {
                 http.error(if status >= 500 {
                     HttpErrClass::Internal
                 } else {
                     HttpErrClass::BadRequest
                 });
-                (status, "application/json", error_body(&msg), ridx)
+                (status, "application/json", error_body(&msg), ridx, none)
             }
         },
         ("GET", Some(Route::Health)) => {
             let (healthy, body) = server.health();
             if healthy {
-                (200, "application/json", body, ridx)
+                (200, "application/json", body, ridx, none)
             } else {
                 // Per-cause 503 accounting: the probe answered, but the
                 // deployment is degraded (stale refresh, poisoned
                 // worker, or still recovering).
                 http.error(HttpErrClass::Degraded);
-                (503, "application/json", body, ridx)
+                (503, "application/json", body, ridx, none)
             }
         }
         ("GET", Some(Route::Failpoints)) => match server.handle_failpoints(&req.target) {
-            Ok(body) => (200, "application/json", body, ridx),
+            Ok(body) => (200, "application/json", body, ridx, none),
             Err(msg) => {
                 http.error(HttpErrClass::BadRequest);
-                (400, "application/json", error_body(&msg), ridx)
+                (400, "application/json", error_body(&msg), ridx, none)
             }
         },
         ("GET", Some(r)) => match server.handle_path(&req.target) {
-            Some(text) => (200, get_content_type(r, &req.target), text, ridx),
+            Some(text) => (200, get_content_type(r, &req.target), text, ridx, none),
             None if matches!(r, Route::Predict | Route::Ingest) => {
                 http.error(HttpErrClass::BadRequest);
-                (405, "application/json", error_body("use POST with a JSON body"), ridx)
+                (405, "application/json", error_body("use POST with a JSON body"), ridx, none)
             }
-            None => (404, "application/json", error_body("no payload for this route"), ridx),
+            None => (404, "application/json", error_body("no payload for this route"), ridx, none),
         },
         (_, None) => {
             http.error(HttpErrClass::UnknownRoute);
-            (404, "application/json", error_body("unknown route"), ridx)
+            (404, "application/json", error_body("unknown route"), ridx, none)
         }
         (_, Some(_)) => {
             http.error(HttpErrClass::BadRequest);
-            (405, "application/json", error_body("method not allowed"), ridx)
+            (405, "application/json", error_body("method not allowed"), ridx, none)
         }
     }
 }
@@ -576,7 +578,11 @@ fn get_content_type(route: Route, target: &str) -> &'static str {
 /// row-major array of `k * dim` coordinates, or an array of `k`
 /// per-point rows. Every point is submitted before any reply is
 /// awaited, so one HTTP request becomes (at most) one batcher flush.
-fn handle_predict(server: &Server, body: &[u8]) -> Result<String, (u16, String)> {
+/// On cluster servers the answer comes from the local merged replica
+/// view; when any point's owner node is down the response carries an
+/// `X-Msgp-Staleness: <ms>` header bounding how old the replica data
+/// backing it may be (the max across the batch).
+fn handle_predict(server: &Server, body: &[u8]) -> Result<(String, Vec<String>), (u16, String)> {
     let doc = parse_json_body(body)?;
     let pts = doc
         .get("points")
@@ -602,13 +608,33 @@ fn handle_predict(server: &Server, body: &[u8]) -> Result<String, (u16, String)>
         return Err((400, format!("need a multiple of dim={dim} coordinates, got {}", flat.len())));
     }
     let n = flat.len() / dim;
+    let mut means = Vec::with_capacity(n);
+    let mut vars = Vec::with_capacity(n);
+    if server.cluster().is_some() {
+        // Cluster predictions answer inline from the local merged slot
+        // (never over the network — a down peer cannot hang us), with
+        // the staleness bound aggregated across the batch.
+        let mut staleness: Option<u64> = None;
+        for point in flat.chunks(dim) {
+            let (p, stale) = server
+                .cluster_predict(point)
+                .ok_or_else(|| (500, "cluster predict unavailable".to_string()))?;
+            if let Some(ms) = stale {
+                staleness = Some(staleness.map_or(ms, |cur| cur.max(ms)));
+            }
+            means.push(Json::Num(p.mean));
+            vars.push(Json::Num(p.var));
+        }
+        let body =
+            Json::obj(vec![("mean", Json::Arr(means)), ("var", Json::Arr(vars))]).to_string();
+        let extra = staleness.map(|ms| format!("X-Msgp-Staleness: {ms}")).into_iter().collect();
+        return Ok((body, extra));
+    }
     let mut pending = Vec::with_capacity(n);
     for point in flat.chunks(dim) {
         let rx = server.submit(point.to_vec()).map_err(|e| (500, e.to_string()))?;
         pending.push(rx);
     }
-    let mut means = Vec::with_capacity(n);
-    let mut vars = Vec::with_capacity(n);
     for rx in pending {
         match rx.recv() {
             Ok(Ok(p)) => {
@@ -619,7 +645,7 @@ fn handle_predict(server: &Server, body: &[u8]) -> Result<String, (u16, String)>
             Err(_) => return Err((500, "server dropped reply".to_string())),
         }
     }
-    Ok(Json::obj(vec![("mean", Json::Arr(means)), ("var", Json::Arr(vars))]).to_string())
+    Ok((Json::obj(vec![("mean", Json::Arr(means)), ("var", Json::Arr(vars))]).to_string(), Vec::new()))
 }
 
 /// `POST /ingest` body: `{"xs": [...], "ys": [...], "flush": bool}`.

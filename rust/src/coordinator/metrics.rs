@@ -20,8 +20,19 @@ use crate::obs::metrics::{Counter, Gauge, HistogramSnapshot, LogHistogram, PromW
 
 /// Route label values for the per-route HTTP families, indexed by
 /// [`HttpMetrics::route_index`]. The last slot aggregates unknown paths.
-pub const HTTP_ROUTE_NAMES: [&str; 9] =
-    ["predict", "ingest", "metrics", "models", "shards", "healthz", "trace", "failpoints", "other"];
+pub const HTTP_ROUTE_NAMES: [&str; 11] = [
+    "predict",
+    "ingest",
+    "metrics",
+    "models",
+    "shards",
+    "healthz",
+    "trace",
+    "failpoints",
+    "cluster",
+    "peers",
+    "other",
+];
 
 /// `class` label values of `http_errors_total`, indexed by
 /// [`HttpErrClass`] discriminants.
@@ -113,7 +124,7 @@ pub struct HttpMetrics {
     pub slow_total: Counter,
     /// Per-route latency + status counters, indexed like
     /// [`HTTP_ROUTE_NAMES`].
-    pub routes: [HttpRoute; 9],
+    pub routes: [HttpRoute; 11],
     /// Failure counters, indexed like [`HTTP_ERROR_CLASSES`].
     pub errors: [Counter; 9],
 }
@@ -145,7 +156,9 @@ impl HttpMetrics {
             Some(Route::Health) => 5,
             Some(Route::Trace) => 6,
             Some(Route::Failpoints) => 7,
-            None => 8,
+            Some(Route::Cluster) => 8,
+            Some(Route::Peers) => 9,
+            None => 10,
         }
     }
 
@@ -203,6 +216,29 @@ pub struct ShardMetrics {
     /// Points currently held in this shard's reservoir (re-optimization
     /// snapshot pool; single-writer like `last_refresh_us`).
     pub reservoir_points: Gauge,
+}
+
+/// Per-peer replication counters for cluster deployments (one entry
+/// per peer node, indexed by node id — the self slot stays zero; see
+/// [`crate::cluster`]). All wait-free atomics.
+#[derive(Debug, Default)]
+pub struct PeerMetrics {
+    /// `1` while the peer's heartbeat is fresh, `0` once failure
+    /// detection declares it down (per-peer `degraded_mode` analog).
+    pub up: Gauge,
+    /// Frames waiting in this peer's bounded outbound queue.
+    pub queue_depth: Gauge,
+    /// Frames successfully written to this peer.
+    pub sent: Counter,
+    /// Send/connect failures against this peer (each triggers backoff
+    /// and a reconnect-with-resync).
+    pub send_errors: Counter,
+    /// Connections (re-)established to this peer; the first session is
+    /// counted too, so `reconnects - 1` is the retry tally.
+    pub reconnects: Counter,
+    /// Full-state snapshots shipped to this peer (connection resync and
+    /// rejoin catch-up).
+    pub full_syncs: Counter,
 }
 
 /// Serving metrics registry. All methods are thread-safe and wait-free.
@@ -307,6 +343,18 @@ pub struct Metrics {
     /// Fault tolerance: sequence number of the most recent checkpoint
     /// written or restored (monotone per process lifetime).
     pub ckpt_last_seq: Gauge,
+    /// Cluster replication: frames received from peers (any kind).
+    pub peer_frames_recv_total: Counter,
+    /// Cluster replication: delta/full frames applied to replicas.
+    pub peer_deltas_applied_total: Counter,
+    /// Cluster replication: delta/full frames ignored by the epoch
+    /// watermark (replays, reordered retries, stale grids).
+    pub peer_deltas_ignored_total: Counter,
+    /// Cluster replication: heartbeats received from peers.
+    pub peer_heartbeats_total: Counter,
+    /// Cluster replication: per-peer counters, indexed by node id
+    /// (empty outside cluster mode; the self slot stays zero).
+    pub peers: Vec<PeerMetrics>,
     /// Sharded serving: per-shard counters (empty on unsharded servers).
     pub shards: Vec<ShardMetrics>,
     /// HTTP front-door counters (zero until an
@@ -325,6 +373,16 @@ impl Metrics {
     pub fn with_shards(n_shards: usize) -> Self {
         Metrics {
             shards: (0..n_shards).map(|_| ShardMetrics::default()).collect(),
+            ..Default::default()
+        }
+    }
+
+    /// Fresh metrics for a cluster node: `n_shards` per-shard blocks
+    /// plus `n_peers` per-peer replication blocks (indexed by node id).
+    pub fn with_cluster(n_shards: usize, n_peers: usize) -> Self {
+        Metrics {
+            shards: (0..n_shards).map(|_| ShardMetrics::default()).collect(),
+            peers: (0..n_peers).map(|_| PeerMetrics::default()).collect(),
             ..Default::default()
         }
     }
@@ -485,6 +543,28 @@ impl Metrics {
             self.ckpt_restores_total.get(),
             self.ckpt_last_seq.get(),
         ));
+        if !self.peers.is_empty() {
+            s.push_str(&format!(
+                " peer_frames_recv_total={} peer_deltas_applied_total={} \
+                 peer_deltas_ignored_total={} peer_heartbeats_total={}",
+                self.peer_frames_recv_total.get(),
+                self.peer_deltas_applied_total.get(),
+                self.peer_deltas_ignored_total.get(),
+                self.peer_heartbeats_total.get(),
+            ));
+            for (i, p) in self.peers.iter().enumerate() {
+                s.push_str(&format!(
+                    " peer[{i}] up={} queue_depth={} sent={} send_errors={} reconnects={} \
+                     full_syncs={}",
+                    p.up.get(),
+                    p.queue_depth.get(),
+                    p.sent.get(),
+                    p.send_errors.get(),
+                    p.reconnects.get(),
+                    p.full_syncs.get(),
+                ));
+            }
+        }
         for (i, sh) in self.shards.iter().enumerate() {
             s.push_str(&format!(
                 " shard[{i}] ingested={} halo={} refreshes={} cg_iters={} last_refresh_us={} \
@@ -727,6 +807,81 @@ impl Metrics {
                 "shard_reservoir_points",
                 "Points in this shard's reservoir.",
                 &|s| s.reservoir_points.get(),
+            );
+        }
+        if !self.peers.is_empty() {
+            let cluster_counters: [(&str, &str, u64); 4] = [
+                (
+                    "peer_frames_recv_total",
+                    "Replication frames received from peers.",
+                    self.peer_frames_recv_total.get(),
+                ),
+                (
+                    "peer_deltas_applied_total",
+                    "Delta/full frames applied to replicas.",
+                    self.peer_deltas_applied_total.get(),
+                ),
+                (
+                    "peer_deltas_ignored_total",
+                    "Delta/full frames ignored by the epoch watermark.",
+                    self.peer_deltas_ignored_total.get(),
+                ),
+                (
+                    "peer_heartbeats_total",
+                    "Heartbeats received from peers.",
+                    self.peer_heartbeats_total.get(),
+                ),
+            ];
+            for (name, help, v) in cluster_counters {
+                scalar(&mut w, "counter", name, help, v);
+            }
+            let labels: Vec<Vec<(&str, String)>> =
+                (0..self.peers.len()).map(|i| vec![("peer", i.to_string())]).collect();
+            let family = |w: &mut PromWriter,
+                          kind: &str,
+                          name: &str,
+                          help: &str,
+                          get: &dyn Fn(&PeerMetrics) -> u64| {
+                let samples: Vec<(&[(&str, String)], u64)> = self
+                    .peers
+                    .iter()
+                    .zip(labels.iter())
+                    .map(|(p, l)| (&l[..], get(p)))
+                    .collect();
+                match kind {
+                    "counter" => w.counter(name, help, &samples),
+                    _ => w.gauge(name, help, &samples),
+                }
+            };
+            family(&mut w, "gauge", "peer_up", "1 while the peer's heartbeat is fresh.", &|p| {
+                p.up.get()
+            });
+            family(&mut w, "gauge", "peer_queue_depth", "Frames queued to this peer.", &|p| {
+                p.queue_depth.get()
+            });
+            family(&mut w, "counter", "peer_sent_total", "Frames written to this peer.", &|p| {
+                p.sent.get()
+            });
+            family(
+                &mut w,
+                "counter",
+                "peer_send_errors_total",
+                "Send/connect failures against this peer.",
+                &|p| p.send_errors.get(),
+            );
+            family(
+                &mut w,
+                "counter",
+                "peer_reconnects_total",
+                "Connections established to this peer (first included).",
+                &|p| p.reconnects.get(),
+            );
+            family(
+                &mut w,
+                "counter",
+                "peer_full_syncs_total",
+                "Full-state snapshots shipped to this peer.",
+                &|p| p.full_syncs.get(),
             );
         }
         self.render_http(&mut w, &scalar);
@@ -992,9 +1147,11 @@ mod tests {
             (Some(Route::Health), "healthz"),
             (Some(Route::Trace), "trace"),
             (Some(Route::Failpoints), "failpoints"),
+            (Some(Route::Cluster), "cluster"),
+            (Some(Route::Peers), "peers"),
             (None, "other"),
         ];
-        let mut seen = [false; 9];
+        let mut seen = [false; 11];
         for (r, name) in routes {
             let i = HttpMetrics::route_index(r);
             assert_eq!(HTTP_ROUTE_NAMES[i], name);
@@ -1074,5 +1231,38 @@ mod tests {
         assert!(text.contains("worker_restarts_total{worker=\"shard\"} 0"), "{text}");
         assert!(text.contains("degraded_mode 1"), "{text}");
         assert!(text.contains("ckpt_last_seq 41"), "{text}");
+    }
+
+    #[test]
+    fn peer_families_render_in_summary_and_prometheus() {
+        let m = Metrics::with_cluster(4, 3);
+        assert_eq!(m.shards.len(), 4);
+        m.peers[1].up.store(1, Ordering::Relaxed);
+        m.peers[1].sent.fetch_add(12, Ordering::Relaxed);
+        m.peers[2].send_errors.fetch_add(3, Ordering::Relaxed);
+        m.peers[2].reconnects.fetch_add(2, Ordering::Relaxed);
+        m.peer_frames_recv_total.fetch_add(40, Ordering::Relaxed);
+        m.peer_deltas_applied_total.fetch_add(30, Ordering::Relaxed);
+        m.peer_deltas_ignored_total.fetch_add(5, Ordering::Relaxed);
+        m.peer_heartbeats_total.fetch_add(9, Ordering::Relaxed);
+
+        let s = m.summary();
+        assert!(s.contains("peer_frames_recv_total=40"), "{s}");
+        assert!(s.contains("peer_deltas_applied_total=30"), "{s}");
+        assert!(s.contains("peer_deltas_ignored_total=5"), "{s}");
+        assert!(s.contains("peer_heartbeats_total=9"), "{s}");
+        assert!(s.contains("peer[1] up=1"), "{s}");
+        assert!(s.contains("send_errors=3"), "{s}");
+        // Non-cluster metrics emit no peer clauses.
+        assert!(!Metrics::with_shards(2).summary().contains("peer["), "no peers expected");
+
+        let text = m.render_prometheus();
+        assert!(text.contains("peer_up{peer=\"1\"} 1"), "{text}");
+        assert!(text.contains("peer_up{peer=\"0\"} 0"), "{text}");
+        assert!(text.contains("peer_sent_total{peer=\"1\"} 12"), "{text}");
+        assert!(text.contains("peer_send_errors_total{peer=\"2\"} 3"), "{text}");
+        assert!(text.contains("peer_reconnects_total{peer=\"2\"} 2"), "{text}");
+        assert!(text.contains("peer_frames_recv_total 40"), "{text}");
+        assert!(!Metrics::new().render_prometheus().contains("peer_up"), "no peer families");
     }
 }

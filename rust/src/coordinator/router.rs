@@ -75,6 +75,13 @@ pub enum Route {
     /// Failpoint inspection and (re)configuration
     /// (`?set=name:action@prob`, `?clear=1`; see [`crate::fault`]).
     Failpoints,
+    /// Cluster introspection (cluster servers: node id, per-shard
+    /// ownership + point counts, replication epochs; see
+    /// [`crate::cluster`]).
+    Cluster,
+    /// Peer membership + health (cluster servers: per-peer liveness,
+    /// heartbeat age, queue depth, reconnect counters).
+    Peers,
 }
 
 /// Rendering requested for the `/metrics` route.
@@ -142,6 +149,8 @@ impl Route {
             "/healthz" | "healthz" | "/health" | "health" => Some(Route::Health),
             "/trace" | "trace" => Some(Route::Trace),
             "/failpoints" | "failpoints" => Some(Route::Failpoints),
+            "/cluster" | "cluster" => Some(Route::Cluster),
+            "/peers" | "peers" => Some(Route::Peers),
             _ => None,
         }
     }
@@ -275,6 +284,9 @@ mod tests {
         assert_eq!(Route::parse("/trace"), Some(Route::Trace));
         assert_eq!(Route::parse("/failpoints"), Some(Route::Failpoints));
         assert_eq!(Route::parse("/failpoints?clear=1"), Some(Route::Failpoints));
+        assert_eq!(Route::parse("/cluster"), Some(Route::Cluster));
+        assert_eq!(Route::parse("/peers"), Some(Route::Peers));
+        assert_eq!(Route::parse("/peers/"), Some(Route::Peers));
         assert_eq!(Route::parse("/nope"), None);
     }
 

@@ -14,6 +14,7 @@ use super::batcher::{self, BatcherConfig, IngestBatch, Job, Prediction, Request}
 use super::metrics::{Metrics, WorkerKind};
 use super::router::{metrics_format, query_flag, query_param, EngineSpec, MetricsFormat, Route};
 use super::state::{ModelSlot, ServingModel};
+use crate::cluster::ClusterNode;
 use crate::fault::{
     self, Checkpoint, CkptConfig, CkptTrigger, Supervisor, SupervisorPolicy, Verdict,
 };
@@ -37,6 +38,10 @@ pub struct Server {
     pub slot: Option<Arc<ModelSlot>>,
     /// The sharded trainer facade (sharded servers only).
     sharded: Option<Arc<ShardedTrainer>>,
+    /// The cluster node (multi-process servers only): predictions are
+    /// answered synchronously from its merged slot, ingest routes to
+    /// its owned stripe, and `/cluster` + `/peers` introspect it.
+    cluster: Option<Arc<ClusterNode>>,
     dim: usize,
     streaming: bool,
 }
@@ -148,9 +153,42 @@ impl Server {
             metrics,
             slot: Some(slot),
             sharded: None,
+            cluster: None,
             dim,
             streaming,
         }
+    }
+
+    /// Serve a running [`ClusterNode`] behind the standard front door:
+    /// predictions answer synchronously from the node's merged local
+    /// model (never a network hop), `/ingest` feeds the node's owned
+    /// shard stripe, `/flush` cuts + ships + publishes, and the
+    /// `/cluster` and `/peers` routes expose membership, replica, and
+    /// transport state. The server shares the node's metrics registry,
+    /// so `/metrics` carries the `peer_*` families.
+    pub fn start_cluster(node: Arc<ClusterNode>) -> Server {
+        crate::obs::trace::init_from_env();
+        crate::obs::log::init_from_env();
+        fault::init_from_env();
+        let metrics = node.metrics();
+        let slot = node.slot();
+        let dim = node.dim();
+        Server {
+            tx: None,
+            handle: None,
+            ingest_handle: None,
+            metrics,
+            slot: Some(slot),
+            sharded: None,
+            cluster: Some(node),
+            dim,
+            streaming: true,
+        }
+    }
+
+    /// The cluster node, when this is a cluster server.
+    pub fn cluster(&self) -> Option<&Arc<ClusterNode>> {
+        self.cluster.as_ref()
     }
 
     /// Start a sharded server: predictions flow through a batcher that
@@ -181,6 +219,7 @@ impl Server {
             metrics,
             slot: None,
             sharded: Some(trainer),
+            cluster: None,
             dim,
             streaming: true,
         }
@@ -260,7 +299,7 @@ impl Server {
             reasons.push("checkpoint recovery replay in progress".to_string());
         }
         let healthy = reasons.is_empty();
-        let body = Json::obj(vec![
+        let mut pairs = vec![
             (
                 "status",
                 Json::Str(if healthy { "ok" } else { "unhealthy" }.to_string()),
@@ -295,8 +334,13 @@ impl Server {
                 "ingested_points_total",
                 Json::Num(self.metrics.ingested_points_total.get() as f64),
             ),
-        ])
-        .to_string();
+        ];
+        if let Some(node) = &self.cluster {
+            pairs.push(("node", Json::Num(node.node_id() as f64)));
+            pairs.push(("peers_down", Json::Num(node.peers_down() as f64)));
+            pairs.push(("recovering", Json::Bool(node.recovering())));
+        }
+        let body = Json::obj(pairs).to_string();
         (healthy, body)
     }
 
@@ -364,8 +408,23 @@ impl Server {
                 }
             }
             Route::Failpoints => self.handle_failpoints(path).ok(),
+            Route::Cluster => self.cluster.as_ref().map(|n| n.cluster_summary().to_string()),
+            Route::Peers => self.cluster.as_ref().map(|n| n.peers_summary().to_string()),
             Route::Predict | Route::Ingest | Route::Models => None,
         }
+    }
+
+    /// Predict with the cluster's bounded-staleness report: the usual
+    /// prediction plus `Some(age_ms)` when the point's owner node is
+    /// down and the answer came from a local replica (the HTTP layer
+    /// surfaces it as `X-Msgp-Staleness`). `None` on non-cluster
+    /// servers.
+    pub fn cluster_predict(&self, x: &[f64]) -> Option<(Prediction, Option<u64>)> {
+        let node = self.cluster.as_ref()?;
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        let (mean, var, staleness_ms) = node.predict_one(x);
+        self.metrics.completed.fetch_add(1, Ordering::Relaxed);
+        Some((Prediction { mean, var }, staleness_ms))
     }
 
     /// Submit a point; returns a receiver for the reply.
@@ -373,6 +432,14 @@ impl Server {
         anyhow::ensure!(x.len() == self.dim, "point dim {} vs model dim {}", x.len(), self.dim);
         let (rtx, rrx) = mpsc::sync_channel(1);
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        if let Some(node) = &self.cluster {
+            // Cluster predictions are always local (the merged replica
+            // view) and never block on the network, so answer inline.
+            let (mean, var, _staleness) = node.predict_one(&x);
+            let _ = rtx.send(Ok(Prediction { mean, var }));
+            self.metrics.completed.fetch_add(1, Ordering::Relaxed);
+            return Ok(rrx);
+        }
         self.tx
             .as_ref()
             // PANIC-OK: `tx` is Some until shutdown_inner, which takes
@@ -410,6 +477,11 @@ impl Server {
             xs.iter().all(|v| v.is_finite()) && ys.iter().all(|v| v.is_finite()),
             "ingest rejects non-finite coordinates/targets"
         );
+        if let Some(node) = &self.cluster {
+            // Cluster ingest keeps only the points whose owner shard
+            // lives on this node; callers fan the stream to every node.
+            return Ok(node.ingest(&xs, &ys));
+        }
         if let Some(t) = &self.sharded {
             // Sharded ingest bypasses the batch queue: the facade routes
             // per shard and blocks until every owning worker acks.
@@ -423,6 +495,10 @@ impl Server {
     /// ingest).
     pub fn flush_stream(&self) -> anyhow::Result<usize> {
         anyhow::ensure!(self.streaming, "server has no stream trainer (use start_online)");
+        if let Some(node) = &self.cluster {
+            node.flush();
+            return Ok(0);
+        }
         if let Some(t) = &self.sharded {
             t.flush();
             return Ok(0);

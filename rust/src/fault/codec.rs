@@ -545,6 +545,246 @@ pub fn load_newest(path: &Path) -> Option<(Checkpoint, PathBuf)> {
     None
 }
 
+// ---------------------------------------------------------------------
+// Cluster wire frames
+// ---------------------------------------------------------------------
+
+/// Magic prefix of a peer-replication frame (distinct from the
+/// checkpoint magic so a frame can never be mistaken for a file).
+pub const FRAME_MAGIC: &[u8; 8] = b"MSGPFRAM";
+
+/// Frame payload cap (64 MiB): a `len` beyond this is treated as
+/// corruption instead of an allocation request.
+const FRAME_MAX_PAYLOAD: u64 = 64 * 1024 * 1024;
+
+/// One peer-replication message (see `docs/CLUSTER.md`). The statistic
+/// payloads reuse the checkpoint ski block byte-for-byte, wrapped in a
+/// `FRAME_MAGIC | version u32 | kind u8 | len u64 | payload | fnv1a64`
+/// envelope, so a delta survives the same corruption battery as a
+/// checkpoint.
+#[derive(Clone, Debug)]
+pub enum Frame {
+    /// Connection preamble: the sending node introduces itself.
+    Hello {
+        /// Sender's node id.
+        node: u32,
+    },
+    /// Liveness beacon sent when the outbound queue idles.
+    Heartbeat {
+        /// Sender's node id.
+        node: u32,
+    },
+    /// Additive statistic increment for one shard: the receiver folds
+    /// `ski` into its replica via `accumulate_shifted`. `epoch` is the
+    /// owner's cut counter; the receiver applies the frame only when
+    /// `epoch` exceeds its per-shard watermark, so replays and
+    /// reordered retries are no-ops.
+    Delta {
+        /// Owning node of `shard`.
+        origin: u32,
+        /// Global shard id.
+        shard: u32,
+        /// Owner's cut counter at the time this delta was cut.
+        epoch: u64,
+        /// The increment, represented as statistics on the shard's
+        /// local grid (scalars are increments, not totals).
+        ski: Box<IncrementalSki>,
+    },
+    /// Full-state snapshot of one shard (connection resync and rejoin
+    /// catch-up). Replaces the receiver's replica when `epoch` exceeds
+    /// its watermark.
+    Full {
+        /// Owning node of `shard`.
+        origin: u32,
+        /// Global shard id.
+        shard: u32,
+        /// Owner's cut counter covering this snapshot.
+        epoch: u64,
+        /// The complete accumulator on the shard's local grid.
+        ski: Box<IncrementalSki>,
+    },
+    /// A rejoining node asks a peer for `Full` frames of every shard
+    /// the peer knows (its own and its replicas).
+    SyncRequest {
+        /// Requester's node id.
+        node: u32,
+    },
+    /// Terminates a `SyncRequest` response stream.
+    SyncDone {
+        /// Responder's node id.
+        node: u32,
+        /// Number of `Full` frames that preceded this marker.
+        shards: u32,
+    },
+}
+
+impl Frame {
+    fn kind(&self) -> u8 {
+        match self {
+            Frame::Hello { .. } => 0,
+            Frame::Heartbeat { .. } => 1,
+            Frame::Delta { .. } => 2,
+            Frame::Full { .. } => 3,
+            Frame::SyncRequest { .. } => 4,
+            Frame::SyncDone { .. } => 5,
+        }
+    }
+
+    /// Human-readable frame kind (logs and metrics labels).
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Frame::Hello { .. } => "hello",
+            Frame::Heartbeat { .. } => "heartbeat",
+            Frame::Delta { .. } => "delta",
+            Frame::Full { .. } => "full",
+            Frame::SyncRequest { .. } => "sync_request",
+            Frame::SyncDone { .. } => "sync_done",
+        }
+    }
+
+    /// Serialize to the framed wire format (envelope + payload +
+    /// checksum).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc { buf: Vec::new() };
+        match self {
+            Frame::Hello { node } | Frame::Heartbeat { node } | Frame::SyncRequest { node } => {
+                e.u32(*node);
+            }
+            Frame::SyncDone { node, shards } => {
+                e.u32(*node);
+                e.u32(*shards);
+            }
+            Frame::Delta { origin, shard, epoch, ski }
+            | Frame::Full { origin, shard, epoch, ski } => {
+                e.u32(*origin);
+                e.u32(*shard);
+                e.u64(*epoch);
+                e.ski(ski);
+            }
+        }
+        let payload = e.buf;
+        let mut out = Vec::with_capacity(payload.len() + 29);
+        out.extend_from_slice(FRAME_MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.push(self.kind());
+        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        let sum = fnv1a64(&payload);
+        out.extend_from_slice(&payload);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    /// Parse one framed message, validating magic, version, length,
+    /// checksum, and every structural invariant of the payload.
+    pub fn decode(bytes: &[u8]) -> Result<Frame, CodecError> {
+        if bytes.len() < 8 || &bytes[..8] != FRAME_MAGIC {
+            return Err(CodecError::BadMagic);
+        }
+        if bytes.len() < 21 {
+            return Err(CodecError::Truncated);
+        }
+        // PANIC-OK: fixed 4-byte slice of a length-checked buffer.
+        let version = u32::from_le_bytes(bytes[8..12].try_into().expect("4 bytes"));
+        if version != VERSION {
+            return Err(CodecError::BadVersion(version));
+        }
+        let kind = bytes[12];
+        // PANIC-OK: fixed 8-byte slice of a length-checked buffer.
+        let plen = u64::from_le_bytes(bytes[13..21].try_into().expect("8 bytes"));
+        if plen > FRAME_MAX_PAYLOAD {
+            return Err(CodecError::Malformed(format!("implausible frame length {plen}")));
+        }
+        let plen = plen as usize;
+        let Some(end) = plen.checked_add(21) else {
+            return Err(CodecError::Truncated);
+        };
+        if bytes.len() < end + 8 {
+            return Err(CodecError::Truncated);
+        }
+        let payload = &bytes[21..end];
+        // PANIC-OK: fixed 8-byte slice of a length-checked buffer.
+        let sum = u64::from_le_bytes(bytes[end..end + 8].try_into().expect("8 bytes"));
+        if fnv1a64(payload) != sum {
+            return Err(CodecError::ChecksumMismatch);
+        }
+        let mut d = Dec { b: payload, pos: 0 };
+        let frame = match kind {
+            0 => Frame::Hello { node: d.u32()? },
+            1 => Frame::Heartbeat { node: d.u32()? },
+            4 => Frame::SyncRequest { node: d.u32()? },
+            5 => Frame::SyncDone { node: d.u32()?, shards: d.u32()? },
+            2 | 3 => {
+                let origin = d.u32()?;
+                let shard = d.u32()?;
+                let epoch = d.u64()?;
+                let ski = Box::new(d.ski()?);
+                if kind == 2 {
+                    Frame::Delta { origin, shard, epoch, ski }
+                } else {
+                    Frame::Full { origin, shard, epoch, ski }
+                }
+            }
+            t => return Err(CodecError::Malformed(format!("unknown frame kind {t}"))),
+        };
+        if d.pos != payload.len() {
+            return Err(CodecError::Malformed(format!(
+                "{} trailing frame bytes",
+                payload.len() - d.pos
+            )));
+        }
+        Ok(frame)
+    }
+}
+
+/// Write one frame to a stream (a TCP socket with a write timeout; the
+/// caller treats any error as a dead connection and resyncs after
+/// reconnecting).
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> std::io::Result<()> {
+    w.write_all(&frame.encode())?;
+    w.flush()
+}
+
+/// Read one frame from a stream. `Ok(None)` on clean EOF at a frame
+/// boundary; mid-frame EOF, timeouts, and corruption are errors (the
+/// caller drops the connection, and the peer full-resyncs on
+/// reconnect).
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>, CodecError> {
+    let mut head = [0u8; 21];
+    let mut got = 0usize;
+    while got < head.len() {
+        match r.read(&mut head[got..]) {
+            Ok(0) => {
+                return if got == 0 { Ok(None) } else { Err(CodecError::Truncated) };
+            }
+            Ok(k) => got += k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(CodecError::Io(e)),
+        }
+    }
+    if &head[..8] != FRAME_MAGIC {
+        return Err(CodecError::BadMagic);
+    }
+    // PANIC-OK: fixed 8-byte slice of a fixed-size header buffer.
+    let plen = u64::from_le_bytes(head[13..21].try_into().expect("8 bytes"));
+    if plen > FRAME_MAX_PAYLOAD {
+        return Err(CodecError::Malformed(format!("implausible frame length {plen}")));
+    }
+    let rest = plen as usize + 8;
+    let mut buf = Vec::with_capacity(head.len() + rest);
+    buf.extend_from_slice(&head);
+    buf.resize(head.len() + rest, 0);
+    let mut pos = head.len();
+    while pos < buf.len() {
+        match r.read(&mut buf[pos..]) {
+            Ok(0) => return Err(CodecError::Truncated),
+            Ok(k) => pos += k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(CodecError::Io(e)),
+        }
+    }
+    Frame::decode(&buf).map(Some)
+}
+
 /// Checkpointing configuration, from the environment:
 /// `MSGP_CKPT_DIR` enables it (directory is created if missing);
 /// `MSGP_CKPT_EVERY_POINTS` (default 4096) and `MSGP_CKPT_EVERY_MS`
@@ -591,6 +831,12 @@ impl CkptConfig {
     /// Checkpoint file path for shard `id`.
     pub fn shard_path(&self, id: usize) -> Option<PathBuf> {
         self.dir.as_ref().map(|d| d.join(format!("ski-shard{id}.ckpt")))
+    }
+
+    /// Checkpoint file path for cluster node `id` (all shards the node
+    /// owns, in shard order).
+    pub fn node_path(&self, id: usize) -> Option<PathBuf> {
+        self.dir.as_ref().map(|d| d.join(format!("ski-node{id}.ckpt")))
     }
 }
 
@@ -848,5 +1094,132 @@ mod tests {
     fn default_probe_count_is_checkpointable() {
         let cfg = MsgpConfig::default();
         assert!(cfg.n_var_samples <= 4096, "codec probe-count bound too tight");
+    }
+
+    /// Every frame kind round-trips bit-exactly through the wire codec.
+    #[test]
+    fn frames_round_trip() {
+        let ski = sample_ski(11, 2, 30);
+        let frames = vec![
+            Frame::Hello { node: 3 },
+            Frame::Heartbeat { node: 0 },
+            Frame::SyncRequest { node: 2 },
+            Frame::SyncDone { node: 1, shards: 7 },
+            Frame::Delta { origin: 1, shard: 5, epoch: 42, ski: Box::new(ski.clone()) },
+            Frame::Full { origin: 0, shard: 2, epoch: u64::MAX, ski: Box::new(ski.clone()) },
+        ];
+        for f in &frames {
+            let back = Frame::decode(&f.encode()).expect("decode");
+            assert_eq!(back.kind_name(), f.kind_name());
+            match (f, &back) {
+                (Frame::Hello { node: a }, Frame::Hello { node: b })
+                | (Frame::Heartbeat { node: a }, Frame::Heartbeat { node: b })
+                | (Frame::SyncRequest { node: a }, Frame::SyncRequest { node: b }) => {
+                    assert_eq!(a, b)
+                }
+                (
+                    Frame::SyncDone { node: a, shards: sa },
+                    Frame::SyncDone { node: b, shards: sb },
+                ) => {
+                    assert_eq!((a, sa), (b, sb))
+                }
+                (
+                    Frame::Delta { origin: o1, shard: s1, epoch: e1, ski: k1 },
+                    Frame::Delta { origin: o2, shard: s2, epoch: e2, ski: k2 },
+                )
+                | (
+                    Frame::Full { origin: o1, shard: s1, epoch: e1, ski: k1 },
+                    Frame::Full { origin: o2, shard: s2, epoch: e2, ski: k2 },
+                ) => {
+                    assert_eq!((o1, s1, e1), (o2, s2, e2));
+                    assert_ski_eq(k1, k2);
+                }
+                _ => panic!("frame variant changed in round trip"),
+            }
+        }
+    }
+
+    /// Frame corruption battery: flipped bytes, truncation at every
+    /// prefix, wrong magic/version/kind, and implausible lengths all
+    /// fail with a typed error — never a panic, never a wrong decode.
+    #[test]
+    fn corrupted_frames_fail_cleanly() {
+        let good =
+            Frame::Delta { origin: 0, shard: 1, epoch: 9, ski: Box::new(sample_ski(7, 1, 25)) }
+                .encode();
+        assert!(matches!(Frame::decode(b"NOTAFRAM rest"), Err(CodecError::BadMagic)));
+        let mut v = good.clone();
+        v[8] ^= 0xFF; // version field
+        assert!(matches!(Frame::decode(&v), Err(CodecError::BadVersion(_))));
+        let mut k = good.clone();
+        k[12] = 200; // frame kind
+        assert!(matches!(Frame::decode(&k), Err(CodecError::Malformed(_))));
+        let mut l = good.clone();
+        l[13..21].copy_from_slice(&u64::MAX.to_le_bytes()); // payload length
+        assert!(matches!(Frame::decode(&l), Err(CodecError::Malformed(_))));
+        for cut in 0..good.len() {
+            assert!(Frame::decode(&good[..cut]).is_err(), "truncation at {cut} must fail");
+        }
+        for i in 21..good.len() {
+            let mut bad = good.clone();
+            bad[i] ^= 0x10;
+            assert!(Frame::decode(&bad).is_err(), "payload flip at byte {i} must fail");
+        }
+    }
+
+    /// Stream framing: several frames written back-to-back read out in
+    /// order, then a clean EOF yields `None`; a mid-frame EOF errors.
+    #[test]
+    fn read_frame_handles_streams_and_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Hello { node: 1 }).expect("write");
+        write_frame(&mut buf, &Frame::Heartbeat { node: 1 }).expect("write");
+        write_frame(
+            &mut buf,
+            &Frame::Delta { origin: 1, shard: 0, epoch: 3, ski: Box::new(sample_ski(9, 2, 12)) },
+        )
+        .expect("write");
+        let full_len = buf.len();
+        let mut r = std::io::Cursor::new(buf);
+        assert!(matches!(read_frame(&mut r), Ok(Some(Frame::Hello { node: 1 }))));
+        assert!(matches!(read_frame(&mut r), Ok(Some(Frame::Heartbeat { node: 1 }))));
+        assert!(matches!(read_frame(&mut r), Ok(Some(Frame::Delta { epoch: 3, .. }))));
+        assert!(matches!(read_frame(&mut r), Ok(None)), "clean EOF is None");
+        // Truncate mid-frame: the reader must error, not hang or None.
+        let trunc = r.into_inner()[..full_len - 5].to_vec();
+        let mut r = std::io::Cursor::new(trunc);
+        let _ = read_frame(&mut r).expect("first frame intact");
+        let _ = read_frame(&mut r).expect("second frame intact");
+        assert!(read_frame(&mut r).is_err(), "mid-frame EOF must error");
+    }
+
+    /// A delta cut from two accumulator states re-applies onto a copy of
+    /// the older state and lands bit-close to the newer one (the
+    /// replication invariant: ship diffs, add them, converge).
+    #[test]
+    fn delta_cut_and_apply_converges() {
+        let mut newer = sample_ski(21, 2, 40);
+        let older = newer.clone();
+        let mut rng = Rng::new(77);
+        for i in 0..25 {
+            let x = [rng.uniform_in(-1.0, 1.0), rng.uniform_in(-1.0, 1.0)];
+            newer.ingest(&x, (i as f64 * 0.2).sin());
+        }
+        let delta = crate::cluster::diff_ski(&newer, &older).expect("same grid, diffable");
+        // Round-trip the delta through the wire format first.
+        let frame = Frame::Delta { origin: 0, shard: 0, epoch: 1, ski: Box::new(delta) };
+        let Frame::Delta { ski: delta, .. } = Frame::decode(&frame.encode()).expect("decode")
+        else {
+            panic!("kind changed");
+        };
+        let mut replica = older.clone();
+        replica.accumulate_shifted(&delta);
+        assert_eq!(replica.n(), newer.n());
+        for (a, b) in replica.wty().iter().zip(newer.wty()) {
+            assert!((a - b).abs() < 1e-12, "wty drift {a} vs {b}");
+        }
+        for (a, b) in replica.bands().iter().zip(newer.bands()) {
+            assert!((a - b).abs() < 1e-12, "band drift {a} vs {b}");
+        }
     }
 }

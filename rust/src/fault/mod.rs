@@ -18,16 +18,20 @@
 //!   poison-after-N-failures-in-a-window verdict that flips `/healthz`
 //!   to 503 instead of restart-looping forever.
 //! * [`codec`] — the versioned, length-prefixed, checksummed binary
-//!   encoding of checkpoints (the first cut of the ROADMAP direction-2
-//!   wire format), atomic tmp+fsync+rename writes with rotation, and
-//!   newest-valid recovery.
+//!   encoding of checkpoints and peer-replication [`codec::Frame`]s
+//!   (the ROADMAP direction-2 wire format, now live in
+//!   [`crate::cluster`]), atomic tmp+fsync+rename writes with rotation,
+//!   and newest-valid recovery.
 //!
-//! Operational reference: `docs/RELIABILITY.md`.
+//! Operational reference: `docs/RELIABILITY.md` and `docs/CLUSTER.md`.
 
 pub mod codec;
 pub mod failpoint;
 pub mod supervisor;
 
-pub use codec::{load, load_newest, write_atomic, Checkpoint, CkptConfig, CkptTrigger, CodecError};
+pub use codec::{
+    load, load_newest, read_frame, write_atomic, write_frame, Checkpoint, CkptConfig, CkptTrigger,
+    CodecError, Frame,
+};
 pub use failpoint::{armed, clear_all, configure, hit, init_from_env, snapshot, FpStatus};
 pub use supervisor::{Supervisor, SupervisorPolicy, Verdict};

@@ -109,6 +109,16 @@
 //!   triggers, recovered newest-valid at startup — a SIGKILL'd process
 //!   restarts bit-compatible with the uninterrupted run. See
 //!   `docs/RELIABILITY.md`.
+//! * **Multi-process clustering** ([`cluster`]): each node owns an
+//!   interleaved stripe of the shard slabs and streams framed,
+//!   checksummed deltas of the additive statistics to its peers over
+//!   plain TCP — epoch-watermarked idempotent application, bounded
+//!   outbound queues whose overflow (like any send error) triggers
+//!   reconnect-with-full-resync, heartbeat failure detection with
+//!   per-peer `peer_*` metrics, bounded-staleness serving from local
+//!   replicas when an owner is down (`X-Msgp-Staleness`), and
+//!   restart-mid-stream recovery (own checkpoint → `SyncRequest`
+//!   catch-up from any peer). See `docs/CLUSTER.md`.
 //! * **In-tree correctness analyzer** ([`analysis`] + the `msgp-lint`
 //!   binary): a dependency-free static-analysis gate over the crate's
 //!   own source enforcing the invariants `rustc` cannot — audited
@@ -141,6 +151,7 @@ pub mod kernels;
 pub mod solver;
 pub mod opt;
 pub mod gp;
+pub mod cluster;
 pub mod coordinator;
 pub mod stream;
 pub mod shard;

@@ -148,6 +148,24 @@ impl ShardPlan {
         s.min(self.shards() - 1)
     }
 
+    /// Owning cluster node of shard `s` in an `nodes`-node deployment:
+    /// shards are striped round-robin (`s % nodes`) so every node owns
+    /// an interleaved set of slabs and losing one node degrades
+    /// coverage evenly instead of blacking out a contiguous region.
+    /// See [`crate::cluster`].
+    #[inline]
+    pub fn node_of(&self, shard: usize, nodes: usize) -> usize {
+        assert!(nodes >= 1, "need at least one node");
+        shard % nodes
+    }
+
+    /// Owning cluster node of point `x`: [`Self::owner_of`] composed
+    /// with [`Self::node_of`].
+    #[inline]
+    pub fn owner_node(&self, x: &[f64], nodes: usize) -> usize {
+        self.node_of(self.owner_of(x), nodes)
+    }
+
     /// Inclusive grid-point index range `[start, end]` of shard `s`'s
     /// local grid (owned slab + halo, clamped to the box).
     pub fn local_range(&self, s: usize) -> (usize, usize) {
@@ -355,5 +373,25 @@ mod tests {
     #[should_panic(expected = "don't fit")]
     fn too_many_shards_panic() {
         ShardPlan::new(grid_1d(17), 8, 4, 0);
+    }
+
+    #[test]
+    fn node_striping_is_round_robin_and_total() {
+        let p = ShardPlan::new(grid_1d(101), 6, 4, 2);
+        for nodes in 1..=4usize {
+            let mut owned = vec![0usize; nodes];
+            for s in 0..p.shards() {
+                let n = p.node_of(s, nodes);
+                assert!(n < nodes);
+                assert_eq!(n, s % nodes);
+                owned[n] += 1;
+            }
+            // Striping is near-even: ownership counts differ by <= 1.
+            let (lo, hi) = (owned.iter().min().unwrap(), owned.iter().max().unwrap());
+            assert!(hi - lo <= 1, "{owned:?}");
+        }
+        // Point routing composes owner_of with the stripe.
+        let x = [50.0];
+        assert_eq!(p.owner_node(&x, 3), p.node_of(p.owner_of(&x), 3));
     }
 }

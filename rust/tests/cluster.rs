@@ -1,0 +1,453 @@
+//! Multi-node cluster chaos suite: three in-process nodes on loopback
+//! TCP, driven through packet drops (failpoints), a peer kill, and a
+//! restart-mid-stream — predictions must match a single-process merge
+//! of the same stream to 1e-8 and must never hang.
+//!
+//! The failpoint registry is process-global, so every test serializes
+//! on one static mutex (same discipline as `tests/robustness.rs`).
+
+#![cfg(not(miri))] // thread/socket-heavy; far beyond Miri's budget
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use msgp::cluster::{ClusterConfig, ClusterNode};
+use msgp::coordinator::http::{HttpConfig, HttpServer};
+use msgp::coordinator::Server;
+use msgp::data::gen_stress_1d;
+use msgp::fault::{self, CkptConfig};
+use msgp::gp::msgp::{KernelSpec, MsgpConfig};
+use msgp::grid::{Grid, GridAxis};
+use msgp::kernels::{KernelType, ProductKernel};
+use msgp::shard::{merge_owned, ShardPlan};
+use msgp::stream::{IncrementalSki, StreamConfig, StreamTrainer};
+
+fn guard() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn se_kernel() -> KernelSpec {
+    KernelSpec::Product(ProductKernel::iso(KernelType::SE, 1, 1.0, 1.0))
+}
+
+fn stream_cfg() -> StreamConfig {
+    StreamConfig {
+        msgp: MsgpConfig { n_per_dim: vec![128], n_var_samples: 4, ..Default::default() },
+        refresh_every: 1_000_000,
+        ..Default::default()
+    }
+}
+
+fn test_plan() -> ShardPlan {
+    ShardPlan::new(Grid::new(vec![GridAxis::span(-12.0, 13.0, 128)]), 6, 4, 2)
+}
+
+/// Per-test scratch directory, removed on drop.
+struct ScratchDir(PathBuf);
+
+impl ScratchDir {
+    fn new(tag: &str) -> Self {
+        let dir = std::env::temp_dir().join(format!("msgp-cluster-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).expect("create scratch dir");
+        ScratchDir(dir)
+    }
+}
+
+impl Drop for ScratchDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// Tight timings so chaos tests converge in seconds, not minutes.
+fn node_cfg(id: usize, peers: Vec<String>, ckpt_dir: Option<&PathBuf>) -> ClusterConfig {
+    let mut cfg = ClusterConfig::new(id, peers);
+    cfg.timeout = Duration::from_millis(500);
+    cfg.ship_every = 48;
+    cfg.ship_ms = 25;
+    cfg.hb_ms = 50;
+    cfg.ckpt = CkptConfig { dir: ckpt_dir.cloned(), every_points: 64, every_ms: 500 };
+    cfg
+}
+
+/// Pre-bind ephemeral listeners so the membership table carries real
+/// ports before any node starts, then start one node per listener.
+fn start_cluster(n: usize, ckpt_dir: Option<&PathBuf>) -> (Vec<Arc<ClusterNode>>, Vec<String>) {
+    let listeners: Vec<TcpListener> =
+        (0..n).map(|_| TcpListener::bind("127.0.0.1:0").expect("bind ephemeral")).collect();
+    let peers: Vec<String> =
+        listeners.iter().map(|l| l.local_addr().expect("local addr").to_string()).collect();
+    let nodes = listeners
+        .into_iter()
+        .enumerate()
+        .map(|(id, l)| {
+            let cfg = node_cfg(id, peers.clone(), ckpt_dir);
+            ClusterNode::start(se_kernel(), 0.01, stream_cfg(), test_plan(), cfg, Some(l))
+                .expect("start cluster node")
+        })
+        .collect();
+    (nodes, peers)
+}
+
+/// Feed one batch to every node; each keeps its stripe. Returns the
+/// cluster-wide accepted count (each point lands on exactly one node).
+fn fan_out(nodes: &[Arc<ClusterNode>], xs: &[f64], ys: &[f64]) -> usize {
+    nodes.iter().map(|n| n.ingest(xs, ys)).sum()
+}
+
+/// Points this node can see: its owned accumulators plus every replica.
+fn total_points(node: &ClusterNode) -> usize {
+    let j = node.cluster_summary();
+    let count = |key: &str| -> f64 {
+        j.get(key)
+            .and_then(|v| v.as_arr())
+            .map(|rows| rows.iter().filter_map(|r| r.get("n").and_then(|n| n.as_f64())).sum())
+            .unwrap_or(0.0)
+    };
+    (count("owned") + count("replicas")) as usize
+}
+
+fn wait_for(mut cond: impl FnMut() -> bool, what: &str, timeout: Duration) {
+    let deadline = Instant::now() + timeout;
+    while Instant::now() < deadline {
+        if cond() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    panic!("timed out waiting for {what}");
+}
+
+/// The single-process parity reference: per-shard accumulators with the
+/// cluster's exact seeds, each point ingested once into its owner,
+/// merged over the global grid — the same statistics pipeline the
+/// sharded engine uses for whole-domain snapshots.
+fn reference_predict(xs: &[f64], ys: &[f64], probe: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let plan = test_plan();
+    let scfg = stream_cfg();
+    let ns = scfg.msgp.n_var_samples.max(1);
+    let seed = scfg.msgp.seed;
+    let mut parts: Vec<IncrementalSki> = (0..plan.shards())
+        .map(|s| IncrementalSki::new(plan.local_grid(s), ns, 1, seed ^ (2 * s as u64)))
+        .collect();
+    for (i, &y) in ys.iter().enumerate() {
+        let x = &xs[i..i + 1];
+        parts[plan.owner_of(x)].ingest(x, y);
+    }
+    let merged = merge_owned(plan.global().clone(), seed, &parts);
+    let mut trainer = StreamTrainer::from_stats(se_kernel(), 0.01, scfg, merged);
+    trainer.serving_model().predict_batch(probe)
+}
+
+fn probe_points() -> Vec<f64> {
+    (0..60).map(|i| -9.0 + 0.3 * i as f64).collect()
+}
+
+fn assert_parity(node: &ClusterNode, probe: &[f64], rm: &[f64], rv: &[f64], tag: &str) {
+    for (i, &x) in probe.iter().enumerate() {
+        let (m, v, _) = node.predict_one(&[x]);
+        assert!(
+            (m - rm[i]).abs() < 1e-8,
+            "{tag}: node {} mean at x={x}: {m} vs {}",
+            node.node_id(),
+            rm[i]
+        );
+        assert!(
+            (v - rv[i]).abs() < 1e-8,
+            "{tag}: node {} var at x={x}: {v} vs {}",
+            node.node_id(),
+            rv[i]
+        );
+    }
+}
+
+/// An interior x whose owner shard is striped onto `node` (of `nodes`).
+fn point_owned_by(node: usize, nodes: usize) -> f64 {
+    let plan = test_plan();
+    let mut x = -9.5;
+    while x < 10.0 {
+        if plan.node_of(plan.owner_of(&[x]), nodes) == node {
+            return x;
+        }
+        x += 0.5;
+    }
+    panic!("no interior point owned by node {node}");
+}
+
+/// Happy path: three nodes each ingest their stripe of the stream,
+/// deltas replicate, and every node's local merged model matches the
+/// single-process reference to 1e-8 — with no staleness reported while
+/// every peer is up.
+#[test]
+fn three_node_cluster_matches_single_process_merge() {
+    let _g = guard();
+    fault::clear_all();
+    let data = gen_stress_1d(900, 0.05, 17);
+    let (nodes, _) = start_cluster(3, None);
+    let mut accepted = 0;
+    for c in 0..9 {
+        let lo = c * 100;
+        accepted += fan_out(&nodes, &data.x[lo..lo + 100], &data.y[lo..lo + 100]);
+    }
+    assert_eq!(accepted, 900, "every point must land on exactly one node");
+    for n in &nodes {
+        n.flush();
+    }
+    wait_for(
+        || nodes.iter().all(|n| total_points(n) == 900),
+        "full replication on every node",
+        Duration::from_secs(15),
+    );
+    for n in &nodes {
+        n.flush(); // publish the final replica view synchronously
+    }
+    let probe = probe_points();
+    let (rm, rv) = reference_predict(&data.x, &data.y, &probe);
+    for node in &nodes {
+        assert_parity(node, &probe, &rm, &rv, "steady state");
+        let (_, _, stale) = node.predict_one(&[probe[0]]);
+        assert!(stale.is_none(), "all peers up: no staleness bound expected");
+    }
+    for n in &nodes {
+        n.shutdown();
+    }
+}
+
+/// Packet-drop chaos: injected send/receive faults tear connections
+/// mid-stream; every teardown reconnects with a full resync, so the
+/// cluster still converges to exact parity once the faults clear.
+#[test]
+fn packet_drop_chaos_heals_via_reconnect_resync() {
+    let _g = guard();
+    fault::clear_all();
+    let data = gen_stress_1d(600, 0.05, 29);
+    let (nodes, _) = start_cluster(3, None);
+    // ~20% of frame writes break the pipe, ~5% of receive polls drop
+    // the connection — both indistinguishable from real network faults.
+    fault::configure("peer.send=error@0.2; peer.recv=error@0.05").expect("valid spec");
+    let mut accepted = 0;
+    for c in 0..4 {
+        let lo = c * 100;
+        accepted += fan_out(&nodes, &data.x[lo..lo + 100], &data.y[lo..lo + 100]);
+        std::thread::sleep(Duration::from_millis(30));
+    }
+    fault::clear_all();
+    for c in 4..6 {
+        let lo = c * 100;
+        accepted += fan_out(&nodes, &data.x[lo..lo + 100], &data.y[lo..lo + 100]);
+    }
+    assert_eq!(accepted, 600);
+    for n in &nodes {
+        n.flush();
+    }
+    wait_for(
+        || nodes.iter().all(|n| total_points(n) == 600),
+        "post-chaos replication",
+        Duration::from_secs(30),
+    );
+    for n in &nodes {
+        n.flush();
+    }
+    let probe = probe_points();
+    let (rm, rv) = reference_predict(&data.x, &data.y, &probe);
+    for node in &nodes {
+        assert_parity(node, &probe, &rm, &rv, "post packet-drop");
+    }
+    // The chaos must actually have bitten — and been repaired by full
+    // resyncs beyond each connection's initial one.
+    let send_errors: u64 = nodes
+        .iter()
+        .flat_map(|n| (0..3).map(move |p| n.metrics().peers[p].send_errors.get()))
+        .sum();
+    let full_syncs: u64 = nodes
+        .iter()
+        .flat_map(|n| (0..3).map(move |p| n.metrics().peers[p].full_syncs.get()))
+        .sum();
+    assert!(send_errors > 0, "injected faults must surface as send errors");
+    assert!(full_syncs > 6, "repair requires resyncs beyond the 6 initial connections");
+    for n in &nodes {
+        n.shutdown();
+    }
+}
+
+/// Kill one node mid-stream, keep serving (with a staleness bound for
+/// its shards, and zero hangs), restart it on the same address, let it
+/// restore its checkpoint + catch up over `SyncRequest`, re-send what
+/// it missed, and finish the stream — full parity on all three nodes.
+#[test]
+fn peer_kill_restart_midstream_recovers_with_parity() {
+    let _g = guard();
+    fault::clear_all();
+    let scratch = ScratchDir::new("restart");
+    let data = gen_stress_1d(900, 0.05, 43);
+    let (mut nodes, peers) = start_cluster(3, Some(&scratch.0));
+    let mut accepted = 0;
+    for c in 0..3 {
+        let lo = c * 100;
+        accepted += fan_out(&nodes, &data.x[lo..lo + 100], &data.y[lo..lo + 100]);
+    }
+    for n in &nodes {
+        n.flush();
+    }
+    wait_for(
+        || nodes.iter().all(|n| total_points(n) == 300),
+        "segment A replication",
+        Duration::from_secs(15),
+    );
+    // Kill node 2: threads stop, its listener closes, heartbeats cease.
+    nodes[2].shutdown();
+    wait_for(
+        || nodes[0].peers_down() >= 1 && nodes[1].peers_down() >= 1,
+        "heartbeat failure detection",
+        Duration::from_secs(10),
+    );
+    // Survivors keep answering instantly — serving is always local. A
+    // point owned by the dead node carries the staleness bound; a point
+    // owned locally does not.
+    let x_dead = point_owned_by(2, 3);
+    let x_live = point_owned_by(0, 3);
+    let (m, v, stale) = nodes[0].predict_one(&[x_dead]);
+    assert!(m.is_finite() && v.is_finite());
+    assert!(stale.is_some(), "owner down must report a staleness bound");
+    assert!(nodes[0].predict_one(&[x_live]).2.is_none(), "own shard is never stale");
+    // Segment B lands while node 2 is down: survivors keep their
+    // stripes, node 2's stripe is lost until it returns.
+    let survivors = [nodes[0].clone(), nodes[1].clone()];
+    let mut seg_b = 0;
+    for c in 3..6 {
+        let lo = c * 100;
+        seg_b += fan_out(&survivors, &data.x[lo..lo + 100], &data.y[lo..lo + 100]);
+    }
+    assert!(seg_b < 300, "the dead node's stripe must be missing from segment B");
+    // Restart node 2 on its old address. Delay its outbound connects a
+    // beat so the recovering window is deterministically observable.
+    fault::configure("peer.connect=sleep(300)").expect("valid spec");
+    let node2 = ClusterNode::start(
+        se_kernel(),
+        0.01,
+        stream_cfg(),
+        test_plan(),
+        node_cfg(2, peers.clone(), Some(&scratch.0)),
+        None, // re-binds peers[2] itself
+    )
+    .expect("rebind node 2 on its old address");
+    assert!(node2.recovering(), "a restarted node must begin in recovery");
+    assert_eq!(
+        node2.metrics().ckpt_restores_total.get(),
+        1,
+        "own checkpoint must restore before peer catch-up"
+    );
+    fault::clear_all();
+    nodes[2] = node2;
+    wait_for(|| !nodes[2].recovering(), "SyncRequest catch-up to complete", Duration::from_secs(15));
+    wait_for(
+        || nodes[0].peers_down() == 0 && nodes[1].peers_down() == 0,
+        "liveness to recover",
+        Duration::from_secs(10),
+    );
+    // Re-send the missed segment to the rejoined node only: it keeps
+    // exactly its stripe, so nothing is double-counted cluster-wide.
+    let missed = nodes[2].ingest(&data.x[300..600], &data.y[300..600]);
+    assert_eq!(seg_b + missed, 300, "resend must recover exactly the lost stripe");
+    accepted += seg_b + missed;
+    for c in 6..9 {
+        let lo = c * 100;
+        accepted += fan_out(&nodes, &data.x[lo..lo + 100], &data.y[lo..lo + 100]);
+    }
+    assert_eq!(accepted, 900);
+    for n in &nodes {
+        n.flush();
+    }
+    wait_for(
+        || nodes.iter().all(|n| total_points(n) == 900),
+        "post-restart replication",
+        Duration::from_secs(30),
+    );
+    for n in &nodes {
+        n.flush();
+    }
+    let probe = probe_points();
+    let (rm, rv) = reference_predict(&data.x, &data.y, &probe);
+    for node in &nodes {
+        assert_parity(node, &probe, &rm, &rv, "post restart");
+    }
+    assert!(nodes[0].predict_one(&[x_dead]).2.is_none(), "staleness clears once the owner is back");
+    for n in &nodes {
+        n.shutdown();
+    }
+}
+
+fn raw_request(addr: &str, req: &str) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect http front door");
+    s.set_read_timeout(Some(Duration::from_secs(10))).expect("read timeout");
+    s.write_all(req.as_bytes()).expect("write request");
+    let mut out = Vec::new();
+    let _ = s.read_to_end(&mut out);
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+fn raw_get(addr: &str, path: &str) -> String {
+    raw_request(addr, &format!("GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n"))
+}
+
+fn raw_post(addr: &str, path: &str, body: &str) -> String {
+    raw_request(
+        addr,
+        &format!(
+            "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
+/// The HTTP front door over a cluster node: `/cluster` and `/peers`
+/// answer, `/predict` serves inline, and once a peer dies the response
+/// grows an `X-Msgp-Staleness` header instead of hanging or erroring.
+#[test]
+fn http_front_door_reports_staleness_when_a_peer_dies() {
+    let _g = guard();
+    fault::clear_all();
+    let data = gen_stress_1d(400, 0.05, 61);
+    let (nodes, _) = start_cluster(2, None);
+    let accepted = fan_out(&nodes, &data.x, &data.y);
+    assert_eq!(accepted, 400);
+    for n in &nodes {
+        n.flush();
+    }
+    wait_for(
+        || nodes.iter().all(|n| total_points(n) == 400),
+        "two-node replication",
+        Duration::from_secs(15),
+    );
+    let server = Arc::new(Server::start_cluster(nodes[0].clone()));
+    let http = HttpServer::bind(server, "127.0.0.1:0", HttpConfig::default()).expect("bind http");
+    let addr = http.local_addr().to_string();
+
+    let resp = raw_get(&addr, "/cluster");
+    assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+    assert!(resp.contains("\"owned\"") && resp.contains("\"replicas\""), "{resp}");
+    let resp = raw_get(&addr, "/peers");
+    assert!(resp.contains("\"send_errors\""), "{resp}");
+
+    let x_peer = point_owned_by(1, 2);
+    let body = format!("{{\"points\": [{x_peer}]}}");
+    let resp = raw_post(&addr, "/predict", &body);
+    assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+    assert!(!resp.contains("X-Msgp-Staleness"), "peer alive: no staleness header: {resp}");
+
+    nodes[1].shutdown();
+    wait_for(|| nodes[0].peers_down() == 1, "peer death detection", Duration::from_secs(10));
+    let resp = raw_post(&addr, "/predict", &body);
+    assert!(resp.starts_with("HTTP/1.1 200"), "predict must answer, not hang: {resp}");
+    assert!(resp.contains("X-Msgp-Staleness:"), "owner down: staleness header required: {resp}");
+    let resp = raw_get(&addr, "/healthz");
+    assert!(resp.contains("\"peers_down\""), "{resp}");
+
+    http.shutdown();
+    nodes[0].shutdown();
+}

@@ -279,6 +279,47 @@ fn corrupt_checkpoints_are_ignored_and_the_server_starts_clean() {
     server.shutdown();
 }
 
+/// A corrupt *primary* checkpoint with a valid rotation restores from
+/// `ski.ckpt.1` instead of cold-starting: the checksum rejects the torn
+/// primary, `load_newest` falls back, the restore is recorded, and the
+/// rotated statistics serve with full parity.
+#[test]
+fn corrupt_primary_falls_back_to_rotated_checkpoint() {
+    let _g = guard();
+    let _env = EnvReset::new();
+    let scratch = ScratchDir::new("rotated");
+    std::env::set_var("MSGP_CKPT_DIR", &scratch.0);
+    let data = gen_stress_1d(600, 0.05, 47);
+    let server_a = online_server(1_000_000);
+    let k = server_a.ingest(data.x.clone(), data.y.clone()).unwrap();
+    assert_eq!(k, 600);
+    server_a.flush_stream().unwrap();
+    let p_a = server_a.predict(vec![1.5]).unwrap();
+    server_a.shutdown(); // persists the final statistics as ski.ckpt
+    let primary = scratch.0.join("ski.ckpt");
+    assert!(primary.exists(), "shutdown checkpoint missing");
+    // Simulate the torn-write crash window: the good bytes sit in the
+    // rotation slot, the newest file is garbage.
+    std::fs::rename(&primary, scratch.0.join("ski.ckpt.1")).unwrap();
+    std::fs::write(&primary, b"MSGPCKPT torn mid-write").unwrap();
+    let server_b = online_server(1_000_000);
+    assert_eq!(
+        server_b.metrics.ckpt_restores_total.get(),
+        1,
+        "fallback restore from the rotation must be recorded"
+    );
+    server_b.flush_stream().unwrap();
+    let p_b = server_b.predict(vec![1.5]).unwrap();
+    assert!(
+        (p_a.mean - p_b.mean).abs() < 1e-10,
+        "rotated restore must serve the checkpointed statistics: {} vs {}",
+        p_a.mean,
+        p_b.mean
+    );
+    assert!((p_a.var - p_b.var).abs() < 1e-10, "{} vs {}", p_a.var, p_b.var);
+    server_b.shutdown();
+}
+
 /// Sharded crash-restore: every worker persists `[own, halo]` at
 /// graceful shutdown and replays them on restart — the restored fleet's
 /// statistics and served predictions match the original to 1e-10.
