@@ -146,7 +146,7 @@ fn main() {
         let batch = 64usize;
         let ship = bench_fn(&format!("ship_apply batch={batch}"), min_time, 200, || {
             let (xs, ys) = gen_batch(&mut rng, batch);
-            expected += nodes[0].ingest(&xs, &ys);
+            expected += nodes[0].ingest(&xs, &ys).expect("past initial sync");
             nodes[0].flush();
             spin_until(|| replica_points(&nodes[1]) >= expected, "replica to catch up");
         });
@@ -167,7 +167,8 @@ fn main() {
         let n_points = if full { 20_000 } else { 4_000 };
         let mut rng = Rng::new(37);
         let (xs, ys) = gen_batch(&mut rng, n_points);
-        let applied = nodes[0].ingest(&xs, &ys) + nodes[1].ingest(&xs, &ys);
+        let applied = nodes[0].ingest(&xs, &ys).expect("past initial sync")
+            + nodes[1].ingest(&xs, &ys).expect("past initial sync");
         assert_eq!(applied, n_points);
         for n in &nodes {
             n.flush();

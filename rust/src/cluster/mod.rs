@@ -40,7 +40,7 @@ use crate::shard::ShardPlan;
 use crate::stream::IncrementalSki;
 use crate::util::Rng;
 
-pub use node::ClusterNode;
+pub use node::{ClusterNode, Recovering};
 
 /// Cluster membership + transport knobs (see `docs/CLUSTER.md` for the
 /// environment-variable reference).

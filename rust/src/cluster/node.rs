@@ -157,9 +157,14 @@ impl Shared {
     /// Full-state frames for every owned shard at the current epoch —
     /// what a (re)connecting sender replays before any delta.
     pub(crate) fn snapshot_owned_fulls(&self) -> Vec<Arc<Vec<u8>>> {
-        let epoch = self.epoch.load(Ordering::Relaxed);
         let origin = self.cfg.node_id as u32;
         let owned = self.owned.lock().unwrap_or_else(|e| e.into_inner());
+        // The epoch must be read under the `owned` lock (it is only
+        // advanced while `owned` is held): a load taken before the lock
+        // could stamp this Full older than the state it snapshots, and
+        // the concurrently cut delta at the newer epoch would then pass
+        // the receiver's watermark and be double-applied.
+        let epoch = self.epoch.load(Ordering::Relaxed);
         owned
             .skis
             .iter()
@@ -312,6 +317,14 @@ impl Shared {
                 return Ok(());
             }
             let mut owned = self.owned.lock().unwrap_or_else(|e| e.into_inner());
+            // Re-check under the lock: `recovering` can clear while we
+            // wait for it, and `ingest` admits points as soon as it
+            // does (also under this lock) — adopting a peer snapshot
+            // after that would silently overwrite them.
+            if self.metrics.recovering.get() != 1 {
+                self.metrics.peer_deltas_ignored_total.inc();
+                return Ok(());
+            }
             if let Some(os) = owned.skis.iter_mut().find(|o| o.shard == shard) {
                 if epoch > os.synced_epoch {
                     os.prev = ski.clone();
@@ -442,6 +455,25 @@ impl Shared {
         self.metrics.record_refresh(t0.elapsed());
     }
 }
+
+/// Error returned by [`ClusterNode::ingest`] while the node is still
+/// catching up after a (re)start. Points accepted in that window would
+/// be silently lost — catch-up adoption overwrites the owned
+/// accumulators with a peer replica that cannot contain them, and
+/// deltas cut at epochs at or below the peers' watermarks are discarded
+/// as replays — so the node refuses them instead (the HTTP front door
+/// answers 503, mirroring `/healthz`). Callers gate on
+/// [`ClusterNode::recovering`] and retry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Recovering;
+
+impl std::fmt::Display for Recovering {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("node is recovering (catching up from peers); retry once /healthz clears")
+    }
+}
+
+impl std::error::Error for Recovering {}
 
 /// Handle to a running cluster node (see the [`super`] module docs).
 pub struct ClusterNode {
@@ -592,13 +624,21 @@ impl ClusterNode {
 
     /// Ingest a flat batch, keeping only points whose owner shard this
     /// node owns (callers fan the stream to every node; each keeps its
-    /// stripe). Returns the locally accepted count.
-    pub fn ingest(&self, xs: &[f64], ys: &[f64]) -> usize {
+    /// stripe). Returns the locally accepted count, or [`Recovering`]
+    /// while the node is still catching up — accepting points then
+    /// would lose them to the catch-up adoption (see [`Recovering`]).
+    pub fn ingest(&self, xs: &[f64], ys: &[f64]) -> Result<usize, Recovering> {
         let sh = &self.shared;
         let dim = sh.plan.global().dim();
         let nodes = sh.nodes();
         let mut accepted = 0usize;
         let mut owned = sh.owned.lock().unwrap_or_else(|e| e.into_inner());
+        // Checked under the `owned` lock, like the catch-up adoption in
+        // `apply_full`: `recovering` only ever transitions 1 -> 0, so
+        // once a point is admitted here no adoption can overwrite it.
+        if sh.metrics.recovering.get() == 1 {
+            return Err(Recovering);
+        }
         for (i, &y) in ys.iter().enumerate() {
             let x = &xs[i * dim..(i + 1) * dim];
             let s = sh.plan.owner_of(x);
@@ -621,7 +661,7 @@ impl ClusterNode {
             }
             sh.dirty.store(true, Ordering::Relaxed);
         }
-        accepted
+        Ok(accepted)
     }
 
     /// Synchronously cut + ship pending increments and publish a fresh
@@ -829,7 +869,13 @@ fn run_listener(shared: Arc<Shared>, listener: TcpListener) {
 /// the error lost.
 fn run_receiver(shared: Arc<Shared>, mut stream: TcpStream) {
     let _ = stream.set_nonblocking(false);
-    let _ = stream.set_read_timeout(Some(shared.cfg.timeout));
+    // The read timeout must comfortably exceed the sender's heartbeat
+    // cadence, whatever the knob combination: with `hb_ms >= timeout`
+    // every idle connection would otherwise time out between
+    // heartbeats and collapse into a perpetual reconnect + full-resync
+    // loop.
+    let idle = Duration::from_millis(shared.cfg.hb_ms.saturating_mul(4));
+    let _ = stream.set_read_timeout(Some(shared.cfg.timeout.max(idle)));
     let mut from: Option<u32> = None;
     loop {
         if shared.quit.load(Ordering::Relaxed) {
@@ -871,6 +917,10 @@ fn run_monitor(shared: Arc<Shared>) {
     let sync_req = Arc::new(Frame::SyncRequest { node: node_id as u32 }.encode());
     let sync_req_every = Duration::from_millis(shared.cfg.hb_ms * 4);
     let mut last_sync_req: Option<Instant> = None;
+    // After a publish panic, defer only the next publish attempt — the
+    // liveness gauges, deadline cuts, and SyncRequest re-broadcast must
+    // keep ticking through the backoff window.
+    let mut publish_retry_at: Option<Instant> = None;
     while !shared.quit.load(Ordering::Relaxed) {
         std::thread::sleep(Duration::from_millis(20));
         if shared.metrics.recovering.get() == 1
@@ -905,24 +955,29 @@ fn run_monitor(shared: Arc<Shared>) {
                 shared.cut_and_ship(&mut owned);
             }
         }
-        if shared.dirty.swap(false, Ordering::Relaxed) {
+        if !publish_retry_at.is_some_and(|t| Instant::now() < t)
+            && shared.dirty.swap(false, Ordering::Relaxed)
+        {
             let sh = shared.clone();
             if catch_unwind(AssertUnwindSafe(|| sh.publish_now())).is_err() {
                 shared.dirty.store(true, Ordering::Relaxed);
-                match sup.on_failure() {
+                let delay = match sup.on_failure() {
                     Verdict::Restart(d) => {
                         crate::log_warn!("cluster node {node_id}: publish panicked; retry in {d:?}");
-                        std::thread::sleep(d);
+                        d
                     }
                     Verdict::Poison => {
                         // Serving continues on the last good model; a
                         // transport peer may recover and change the
                         // inputs, so reset rather than stop forever.
                         crate::log_warn!("cluster node {node_id}: publish poisoned; backing off");
-                        std::thread::sleep(SupervisorPolicy::default().backoff_cap);
                         sup = Supervisor::new(SupervisorPolicy::default(), 0xC105 ^ node_id as u64);
+                        SupervisorPolicy::default().backoff_cap
                     }
-                }
+                };
+                publish_retry_at = Some(Instant::now() + delay);
+            } else {
+                publish_retry_at = None;
             }
         }
     }

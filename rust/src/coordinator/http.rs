@@ -661,7 +661,16 @@ fn handle_ingest(server: &Server, body: &[u8]) -> Result<String, (u16, String)> 
         }
         0
     } else {
-        server.ingest(xs, ys).map_err(|e| (400, e.to_string()))?
+        server.ingest(xs, ys).map_err(|e| {
+            // A recovering cluster node refuses ingest (accepted points
+            // would be lost to catch-up adoption): that is 503 retry
+            // territory, mirroring `/healthz`, not a caller error.
+            if e.downcast_ref::<crate::cluster::Recovering>().is_some() {
+                (503, e.to_string())
+            } else {
+                (400, e.to_string())
+            }
+        })?
     };
     if flush {
         server.flush_stream().map_err(|e| (400, e.to_string()))?;

@@ -480,7 +480,11 @@ impl Server {
         if let Some(node) = &self.cluster {
             // Cluster ingest keeps only the points whose owner shard
             // lives on this node; callers fan the stream to every node.
-            return Ok(node.ingest(&xs, &ys));
+            // While the node is catching up after a restart this fails
+            // with `cluster::Recovering` (the HTTP front door maps it
+            // to 503): accepted points would be lost to the catch-up
+            // adoption, so the caller must gate on recovery and retry.
+            return node.ingest(&xs, &ys).map_err(anyhow::Error::new);
         }
         if let Some(t) = &self.sharded {
             // Sharded ingest bypasses the batch queue: the facade routes

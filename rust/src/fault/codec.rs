@@ -1218,8 +1218,10 @@ mod tests {
         for (a, b) in replica.wty().iter().zip(newer.wty()) {
             assert!((a - b).abs() < 1e-12, "wty drift {a} vs {b}");
         }
-        for (a, b) in replica.bands().iter().zip(newer.bands()) {
-            assert!((a - b).abs() < 1e-12, "band drift {a} vs {b}");
+        for (ba, bb) in replica.bands().iter().zip(newer.bands()) {
+            for (a, b) in ba.iter().zip(bb) {
+                assert!((a - b).abs() < 1e-12, "band drift {a} vs {b}");
+            }
         }
     }
 }

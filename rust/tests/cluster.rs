@@ -82,7 +82,7 @@ fn start_cluster(n: usize, ckpt_dir: Option<&PathBuf>) -> (Vec<Arc<ClusterNode>>
         (0..n).map(|_| TcpListener::bind("127.0.0.1:0").expect("bind ephemeral")).collect();
     let peers: Vec<String> =
         listeners.iter().map(|l| l.local_addr().expect("local addr").to_string()).collect();
-    let nodes = listeners
+    let nodes: Vec<Arc<ClusterNode>> = listeners
         .into_iter()
         .enumerate()
         .map(|(id, l)| {
@@ -91,13 +91,22 @@ fn start_cluster(n: usize, ckpt_dir: Option<&PathBuf>) -> (Vec<Arc<ClusterNode>>
                 .expect("start cluster node")
         })
         .collect();
+    // Fresh nodes begin `recovering` until their first SyncDone, and
+    // ingest is refused in that window — wait out the initial sync
+    // before the tests drive traffic (real clients gate the same way,
+    // see docs/CLUSTER.md).
+    wait_for(
+        || nodes.iter().all(|n| !n.recovering()),
+        "initial cluster sync",
+        Duration::from_secs(15),
+    );
     (nodes, peers)
 }
 
 /// Feed one batch to every node; each keeps its stripe. Returns the
 /// cluster-wide accepted count (each point lands on exactly one node).
 fn fan_out(nodes: &[Arc<ClusterNode>], xs: &[f64], ys: &[f64]) -> usize {
-    nodes.iter().map(|n| n.ingest(xs, ys)).sum()
+    nodes.iter().map(|n| n.ingest(xs, ys).expect("node not recovering")).sum()
 }
 
 /// Points this node can see: its owned accumulators plus every replica.
@@ -337,6 +346,12 @@ fn peer_kill_restart_midstream_recovers_with_parity() {
     )
     .expect("rebind node 2 on its old address");
     assert!(node2.recovering(), "a restarted node must begin in recovery");
+    // Ingest is refused until catch-up completes: points accepted now
+    // would be silently overwritten by the adopted peer snapshot.
+    assert!(
+        node2.ingest(&data.x[300..301], &data.y[300..301]).is_err(),
+        "a recovering node must refuse ingest, not silently lose points"
+    );
     assert_eq!(
         node2.metrics().ckpt_restores_total.get(),
         1,
@@ -352,7 +367,8 @@ fn peer_kill_restart_midstream_recovers_with_parity() {
     );
     // Re-send the missed segment to the rejoined node only: it keeps
     // exactly its stripe, so nothing is double-counted cluster-wide.
-    let missed = nodes[2].ingest(&data.x[300..600], &data.y[300..600]);
+    let missed =
+        nodes[2].ingest(&data.x[300..600], &data.y[300..600]).expect("recovery has completed");
     assert_eq!(seg_b + missed, 300, "resend must recover exactly the lost stripe");
     accepted += seg_b + missed;
     for c in 6..9 {
